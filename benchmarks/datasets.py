@@ -1,0 +1,50 @@
+"""Benchmark dataset registry — offline analogues of the paper's suite
+(DESIGN.md §9): the paper's own Synthetic(α,β) generator exactly, plus
+matched-statistics stand-ins for MNIST / FEMNIST / Shakespeare."""
+from __future__ import annotations
+
+from repro.configs.paper_models import LSTM, MCLR, MLP, SmallModelConfig
+import dataclasses
+
+from repro.data.federated import FederatedData, stack_devices
+from repro.data.synthetic import (char_stream, gaussian_image_like,
+                                  synthetic_alpha_beta)
+
+MCLR62 = dataclasses.replace(MCLR, name="mclr62", n_classes=62)
+LSTM20 = dataclasses.replace(LSTM, name="lstm20", vocab=20, n_classes=20,
+                             seq_len=10)
+
+
+def load(name: str, seed: int = 0):
+    """Returns (model_cfg, FederatedData, target_accuracy)."""
+    if name == "synthetic_iid":
+        devs = synthetic_alpha_beta(seed, 30, 0.0, 0.0, iid=True,
+                                    mean_size=120)
+        # NOTE: our offline generator's iid variant has lower SNR than the
+        # paper's (no per-device model mismatch to exploit); 0.50 is the
+        # plateau all methods approach
+        return MCLR, stack_devices(devs, seed=seed), 0.50
+    if name == "synthetic_1_1":
+        devs = synthetic_alpha_beta(seed, 30, 1.0, 1.0, mean_size=120)
+        return MCLR, stack_devices(devs, seed=seed), 0.70
+    if name == "mnist_like":
+        devs = gaussian_image_like(seed, 100, n_classes=10, mean_size=60,
+                                   classes_per_device=2, noise=3.0)
+        return MCLR, stack_devices(devs, seed=seed), 0.70
+    if name == "femnist_like":
+        devs = gaussian_image_like(seed, 60, n_classes=62, mean_size=60,
+                                   classes_per_device=3, noise=2.5)
+        return MCLR62, stack_devices(devs, seed=seed), 0.60
+    if name == "shakespeare_like":
+        # LSTM rounds are ~100x MCLR cost on 1 CPU (scan autodiff inside
+        # the prox solver); vocab/seq scaled to stay tractable AND
+        # learnable with this data volume (centralized plateau ~0.31,
+        # majority class 0.13)
+        devs = char_stream(seed, 24, vocab=20, seq_len=10, mean_size=40,
+                           n_classes=20)
+        return LSTM20, stack_devices(devs, seed=seed), 0.18
+    raise KeyError(name)
+
+
+DATASETS = ("synthetic_iid", "synthetic_1_1", "mnist_like", "femnist_like",
+            "shakespeare_like")

@@ -1,0 +1,85 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode (not
+meaningful to time), so us_per_call times the jit'd pure-jnp oracle at the
+kernel's production shape while `derived` reports the interpret-mode
+max-abs error vs that oracle — correctness + a CPU wall-time anchor."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.folb_aggregate import folb_aggregate
+from repro.kernels.ssm_scan import ssd_scan
+
+
+def _time(fn, *args, n=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+        jax.tree.leaves(out)[0].block_until_ready()
+    return (time.time() - t0) / n * 1e6
+
+
+def bench_kernels() -> List[Tuple[str, float, str]]:
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+
+    # flash attention (scaled-down production tile)
+    B, S, H, KV, d = 1, 512, 4, 2, 128
+    q = jax.random.normal(ks[0], (B, S, H, d), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, KV, d), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, KV, d), jnp.bfloat16)
+    oracle = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    us = _time(oracle, q, k, v)
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                - oracle(q, k, v).astype(jnp.float32))))
+    rows.append(("kernel/flash_attention/512x4x128", us,
+                 f"interpret_err={err:.2e}"))
+
+    # folb aggregate
+    K, D = 8, 1 << 16
+    w = jax.random.normal(ks[3], (D,))
+    deltas = jax.random.normal(ks[4], (K, D)) * 0.1
+    grads = jax.random.normal(ks[5], (K, D))
+    g1 = jnp.mean(grads, 0)
+    pg = jnp.zeros((K,))
+    g1sq = jnp.sum(g1 * g1)
+    oracle = jax.jit(ref.folb_aggregate_ref)
+    us = _time(oracle, w, deltas, grads, g1, pg, g1sq)
+    got, _ = folb_aggregate(w, deltas, grads, g1, pg, g1sq, interpret=True)
+    err = float(jnp.max(jnp.abs(got - oracle(w, deltas, grads, g1, pg,
+                                             g1sq)[0])))
+    rows.append((f"kernel/folb_aggregate/K{K}xD{D}", us,
+                 f"interpret_err={err:.2e}"))
+
+    # ssd scan
+    BH, S2, P, N = 4, 512, 64, 64
+    x = jax.random.normal(ks[6], (BH, S2, P))
+    loga = -jax.nn.softplus(jax.random.normal(ks[7], (BH, S2)))
+    wgt = jax.nn.sigmoid(jax.random.normal(ks[0], (BH, S2)))
+    Bm = jax.random.normal(ks[1], (BH, S2, N))
+    Cm = jax.random.normal(ks[2], (BH, S2, N))
+
+    def oracle_fn(x, loga, wgt, Bm, Cm):
+        def one(xi, ai, wi, bi, ci):
+            y, _ = ref.ssm_scan_ref(xi[:, None], ai[:, None], wi[:, None],
+                                    bi, ci)
+            return y[:, 0]
+        return jax.vmap(one)(x, loga, wgt, Bm, Cm)
+
+    oracle = jax.jit(oracle_fn)
+    us = _time(oracle, x, loga, wgt, Bm, Cm)
+    got = ssd_scan(x, loga, wgt, Bm, Cm, chunk=128, interpret=True)
+    err = float(jnp.max(jnp.abs(got - oracle(x, loga, wgt, Bm, Cm))))
+    rows.append((f"kernel/ssd_scan/BH{BH}xS{S2}", us,
+                 f"interpret_err={err:.2e}"))
+    return rows

@@ -1,0 +1,147 @@
+"""One benchmark per paper table/figure (Sec. VI).
+
+Each function returns a list of CSV rows: (name, us_per_call, derived)
+where us_per_call is the mean wall time of one communication round and
+`derived` is the figure's own metric (rounds-to-accuracy, final loss, ...).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from benchmarks.datasets import DATASETS, load
+from repro.data.federated import stack_devices
+from repro.data.synthetic import gaussian_image_like
+from repro.fed.simulator import FLConfig, run_federated, rounds_to_accuracy
+
+Row = Tuple[str, float, str]
+
+
+def _timed_run(model_cfg, fed, fl, rounds, eval_every=2):
+    import sys
+    print(f"#   running {fl.algo} ({model_cfg.name}, {rounds}r)...",
+          file=sys.stderr, flush=True)
+    t0 = time.time()
+    hist = run_federated(model_cfg, fed, fl, rounds=rounds,
+                         eval_every=eval_every)
+    dt = (time.time() - t0) / rounds * 1e6
+    print(f"#   ... {time.time()-t0:.1f}s", file=sys.stderr, flush=True)
+    return hist, dt
+
+
+def table1_rounds_to_accuracy(rounds: int = 100) -> List[Row]:
+    """Table I: #rounds for each method to reach the dataset's accuracy
+    target (-1 = not reached within budget)."""
+    rows = []
+    for ds in DATASETS:
+        model_cfg, fed, target = load(ds)
+        lstm = ds == "shakespeare_like"
+        r = min(rounds, 40) if lstm else rounds
+        for algo, mu in (("folb", 1.0), ("fednu_direct", 1.0),
+                         ("fedprox", 1.0), ("fedavg", 0.0)):
+            fl = FLConfig(algo=algo, n_selected=10, mu=mu,
+                          lr=0.3 if lstm else 0.05, seed=0,
+                          max_local_steps=10 if lstm else 20)
+            hist, dt = _timed_run(model_cfg, fed, fl, r)
+            r2a = rounds_to_accuracy(hist, target)
+            rows.append((f"table1/{ds}/{algo}", dt,
+                         f"rounds_to_{target:.2f}={r2a};"
+                         f"final_acc={hist['test_acc'][-1]:.3f}"))
+    return rows
+
+
+def fig3_aggregation_vs_mu(rounds: int = 60) -> List[Row]:
+    """Fig. 3: FOLB's aggregation rule vs simple averaging across μ."""
+    model_cfg, fed, _ = load("mnist_like")
+    rows = []
+    for mu in (1e-4, 1e-2, 1.0):
+        for algo in ("folb", "fedprox"):
+            fl = FLConfig(algo=algo, n_selected=10, mu=mu, lr=0.05, seed=0)
+            hist, dt = _timed_run(model_cfg, fed, fl, rounds)
+            rows.append((f"fig3/mu={mu:g}/{algo}", dt,
+                         f"final_loss={hist['train_loss'][-1]:.4f};"
+                         f"final_acc={hist['test_acc'][-1]:.3f}"))
+    return rows
+
+
+def fig5_device_count(rounds: int = 60) -> List[Row]:
+    """Fig. 5: effect of K (devices per round)."""
+    model_cfg, fed, _ = load("mnist_like")
+    rows = []
+    for K in (5, 10, 20):
+        for algo in ("folb", "fedprox"):
+            fl = FLConfig(algo=algo, n_selected=K, mu=0.01, lr=0.05, seed=0)
+            hist, dt = _timed_run(model_cfg, fed, fl, rounds)
+            accs = np.asarray(hist["test_acc"])
+            stability = float(np.maximum(0, accs[:-1] - accs[1:]).max())
+            rows.append((f"fig5/K={K}/{algo}", dt,
+                         f"final_acc={accs[-1]:.3f};max_drop={stability:.3f}"))
+    return rows
+
+
+def fig6_noniid_level(rounds: int = 60) -> List[Row]:
+    """Fig. 6: digits-per-device sweep (1 = most extreme non-IID)."""
+    rows = []
+    for cpd in (1, 2, 5, 10):
+        devs = gaussian_image_like(0, 100, n_classes=10, mean_size=60,
+                                   classes_per_device=cpd)
+        fed = stack_devices(devs, seed=0)
+        from benchmarks.datasets import MCLR
+        for algo in ("folb", "fedprox"):
+            fl = FLConfig(algo=algo, n_selected=10, mu=0.01, lr=0.05, seed=0)
+            hist, dt = _timed_run(MCLR, fed, fl, rounds)
+            rows.append((f"fig6/classes={cpd}/{algo}", dt,
+                         f"final_acc={hist['test_acc'][-1]:.3f}"))
+    return rows
+
+
+def fig11_heterogeneity_psi(rounds: int = 60) -> List[Row]:
+    """Fig. 11: FOLB with/without heterogeneity awareness — ψ sweep;
+    metric = final accuracy and worst round-to-round accuracy drop."""
+    model_cfg, fed, _ = load("synthetic_1_1")
+    rows = []
+    runs = [("folb", 0.0)] + [("folb_het", p) for p in (0.1, 1.0, 10.0)]
+    for algo, psi in runs:
+        fl = FLConfig(algo=algo, n_selected=10, mu=1.0, lr=0.05, psi=psi,
+                      seed=0)
+        hist, dt = _timed_run(model_cfg, fed, fl, rounds, eval_every=1)
+        accs = np.asarray(hist["test_acc"][5:])
+        drop = float(np.maximum(0, accs[:-1] - accs[1:]).max())
+        rows.append((f"fig11/{algo}/psi={psi:g}", dt,
+                     f"final_acc={accs[-1]:.3f};max_drop={drop:.3f}"))
+    return rows
+
+
+def fig2_naive_baselines(rounds: int = 40) -> List[Row]:
+    """Fig. 2: the two naive LB-near-optimal estimators vs FedAvg/FedProx
+    (motivating experiment, Sec. III-D)."""
+    model_cfg, fed, _ = load("mnist_like")
+    rows = []
+    for algo, mu in (("fednu_direct", 1.0), ("fednu_norm", 1.0),
+                     ("fednu_signed", 1.0), ("folb2", 1.0)):
+        fl = FLConfig(algo=algo, n_selected=10, mu=mu, lr=0.05, seed=0)
+        hist, dt = _timed_run(model_cfg, fed, fl, rounds)
+        rows.append((f"fig2/{algo}", dt,
+                     f"final_acc={hist['test_acc'][-1]:.3f};"
+                     f"final_loss={hist['train_loss'][-1]:.4f}"))
+    return rows
+
+
+def beyond_server_opt(rounds: int = 60) -> List[Row]:
+    """Beyond-paper: FOLB composed with FedOpt-style server optimizers
+    (repro.fed.server_opt) — the round aggregate as a pseudo-gradient."""
+    model_cfg, fed, _ = load("synthetic_1_1")
+    rows = []
+    for so, lr in (("sgd", 1.0), ("momentum", 1.0), ("adam", 0.05)):
+        fl = FLConfig(algo="folb", n_selected=10, mu=1.0, lr=0.05,
+                      server_opt=so, server_lr=lr, seed=0)
+        hist, dt = _timed_run(model_cfg, fed, fl, rounds)
+        accs = np.asarray(hist["test_acc"])
+        drop = float(np.maximum(0, accs[:-1] - accs[1:]).max())
+        rows.append((f"beyond/server_opt={so}", dt,
+                     f"final_acc={accs[-1]:.3f};"
+                     f"final_loss={hist['train_loss'][-1]:.4f};"
+                     f"max_drop={drop:.3f}"))
+    return rows

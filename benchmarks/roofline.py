@@ -1,0 +1,87 @@
+"""§Roofline reporting: read the dry-run JSON records (reports/) and emit
+the three-term roofline table per (arch x shape x mesh)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+HEADERS = ("arch", "shape", "mesh", "fits", "mem_GiB", "compute_ms",
+           "memory_ms", "collective_ms", "dominant", "useful_flop_frac")
+
+
+def load_records(report_dir: str = "reports") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(report_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        # §Perf optimized records are stored as opt__<tag>.json next to the
+        # paper-faithful baselines
+        r["variant"] = ("opt" if os.path.basename(path).startswith("opt__")
+                        else "baseline")
+        recs.append(r)
+    return recs
+
+
+def roofline_rows(report_dir: str = "reports") -> List[Dict]:
+    rows = []
+    for r in load_records(report_dir):
+        if "arch" not in r or "multi_pod" not in r:
+            continue   # auxiliary records (e.g. int8-cache §Perf D notes)
+        if r.get("status") == "skip":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": "multi" if r["multi_pod"] else "single",
+                         "status": "skip", "reason": r["reason"]})
+            continue
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": "multi" if r["multi_pod"] else "single",
+                         "status": "error",
+                         "reason": r.get("error", "?")[:80]})
+            continue
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "mesh": "multi" if r["multi_pod"] else "single",
+            "variant": r.get("variant", "baseline"),
+            "status": "ok",
+            "fits": r["fits_hbm"],
+            "mem_GiB": r["bytes_per_device"] / 2**30,
+            "compute_ms": r["compute_s"] * 1e3,
+            "memory_ms": r["memory_s"] * 1e3,
+            "collective_ms": r["collective_s"] * 1e3,
+            "dominant": r["dominant"],
+            "useful_flop_frac": r["useful_flop_frac"],
+        })
+    return rows
+
+
+def format_table(rows: List[Dict]) -> str:
+    out = ["arch,shape,mesh,status,fits,mem_GiB,compute_ms,memory_ms,"
+           "collective_ms,dominant,useful_flop_frac"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"{r['arch']},{r['shape']},{r['mesh']},{r['status']}"
+                       f",,,,,,{r.get('reason','')},")
+            continue
+        out.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},ok,{r['fits']},"
+            f"{r['mem_GiB']:.2f},{r['compute_ms']:.1f},{r['memory_ms']:.1f},"
+            f"{r['collective_ms']:.1f},{r['dominant']},"
+            f"{r['useful_flop_frac']:.3f}")
+    return "\n".join(out)
+
+
+def bench_rows(report_dir: str = "reports"):
+    """CSV rows for benchmarks.run: step-time bound per combo."""
+    rows = []
+    for r in roofline_rows(report_dir):
+        if r["status"] != "ok":
+            continue
+        bound = max(r["compute_ms"], r["memory_ms"], r["collective_ms"])
+        tag = "" if r.get("variant", "baseline") == "baseline" else "/opt"
+        rows.append((f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}{tag}",
+                     bound * 1e3,
+                     f"dominant={r['dominant']};fits={r['fits']};"
+                     f"useful={r['useful_flop_frac']:.3f}"))
+    return rows

@@ -1,0 +1,58 @@
+"""Benchmark harness — one function per paper table/figure plus kernel
+micro-benchmarks and the roofline summary.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only PREFIX]
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call = mean wall time of
+one federated round / one kernel call / roofline step-time bound in us).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer rounds (CI-speed smoke)")
+    ap.add_argument("--only", default=None,
+                    help="run only benchmarks whose name starts with this")
+    ap.add_argument("--reports", default="reports")
+    args = ap.parse_args()
+
+    from benchmarks import kernel_bench, paper_tables, roofline
+
+    rounds = 30 if args.quick else 100
+    fig_rounds = 20 if args.quick else 60
+    suites = [
+        ("table1", lambda: paper_tables.table1_rounds_to_accuracy(rounds)),
+        ("fig2", lambda: paper_tables.fig2_naive_baselines(
+            max(fig_rounds // 2, 10))),
+        ("fig3", lambda: paper_tables.fig3_aggregation_vs_mu(fig_rounds)),
+        ("fig5", lambda: paper_tables.fig5_device_count(fig_rounds)),
+        ("fig6", lambda: paper_tables.fig6_noniid_level(fig_rounds)),
+        ("fig11", lambda: paper_tables.fig11_heterogeneity_psi(fig_rounds)),
+        ("beyond", lambda: paper_tables.beyond_server_opt(fig_rounds)),
+        ("kernel", kernel_bench.bench_kernels),
+        ("roofline", lambda: roofline.bench_rows(args.reports)),
+    ]
+
+    print("name,us_per_call,derived")
+    for prefix, fn in suites:
+        if args.only and not prefix.startswith(args.only):
+            continue
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{prefix}/SUITE_ERROR,0,{e!r}", flush=True)
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}", flush=True)
+        print(f"# suite {prefix}: {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

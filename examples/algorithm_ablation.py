@@ -1,0 +1,58 @@
+"""Scenario: the full algorithm family side-by-side (paper Figs. 2/7/8 +
+the beyond-paper server-optimizer composition).
+
+Runs all eight paper algorithms plus FOLB+server-momentum on Synthetic(1,1)
+and prints a one-screen comparison: rounds-to-target, final accuracy,
+final loss, stability, and the per-round communication cost class.
+
+  PYTHONPATH=src python examples/algorithm_ablation.py
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.configs.paper_models import MCLR
+from repro.data.federated import stack_devices
+from repro.data.synthetic import synthetic_alpha_beta
+from repro.fed.simulator import FLConfig, run_federated, rounds_to_accuracy
+
+ROUNDS, TARGET = 50, 0.70
+
+# (label, config, communication cost per round)
+RUNS = [
+    ("fedavg", FLConfig(algo="fedavg", mu=0.0), "K params"),
+    ("fedprox", FLConfig(algo="fedprox"), "K params"),
+    ("fednu_norm", FLConfig(algo="fednu_norm"), "N scalars + K params"),
+    ("fednu_direct", FLConfig(algo="fednu_direct"), "N grads + K params"),
+    ("fednu_signed", FLConfig(algo="fednu_signed"), "N grads + K params"),
+    ("folb", FLConfig(algo="folb"), "K params + K grads"),
+    ("folb2", FLConfig(algo="folb2"), "2K (Alg. 2 two-set)"),
+    ("folb_het", FLConfig(algo="folb_het", psi=1.0), "K params+grads+gammas"),
+    ("folb+momentum",
+     FLConfig(algo="folb", server_opt="momentum"), "K params + K grads"),
+]
+
+
+def main() -> None:
+    fed = stack_devices(
+        synthetic_alpha_beta(0, 30, 1.0, 1.0, mean_size=120), seed=0)
+    print(f"Synthetic(1,1), N=30 devices, K=10/round, {ROUNDS} rounds, "
+          f"target {TARGET:.0%}\n")
+    print(f"{'algorithm':15s} {'r2a':>5s} {'acc':>6s} {'loss':>7s} "
+          f"{'drop':>6s}  comm/round")
+    for label, fl, comm in RUNS:
+        fl = dataclasses.replace(fl, n_selected=10, lr=0.05, seed=0)
+        h = run_federated(MCLR, fed, fl, rounds=ROUNDS, eval_every=2)
+        accs = np.asarray(h["test_acc"])
+        r2a = rounds_to_accuracy(h, TARGET)
+        drop = float(np.maximum(0, accs[:-1] - accs[1:]).max())
+        print(f"{label:15s} {r2a if r2a >= 0 else '-':>5} {accs[-1]:6.3f} "
+              f"{h['train_loss'][-1]:7.3f} {drop:6.2f}  {comm}")
+    print("\nLB-near-optimal selection (fednu_direct) converges fastest but "
+          "probes all N\ndevices; FOLB gets the best final model at FedAvg's "
+          "communication cost;\nserver momentum (beyond-paper) smooths the "
+          "FOLB trajectory.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Scenario: device heterogeneity (paper Sec. V / Fig. 11).
+
+Devices differ wildly in compute (1..20 local steps per round).  Vanilla
+FOLB weights updates only by gradient alignment; heterogeneity-aware FOLB
+additionally discounts devices that could barely optimize (γ_k), with the
+single line-searched hyper-parameter ψ (Sec. V-B).  This example runs the
+ψ line search the paper describes and compares stability.
+
+  PYTHONPATH=src python examples/heterogeneity_adaptation.py
+"""
+import numpy as np
+
+from repro.configs.paper_models import MCLR
+from repro.core.tuning import PSI_GRID, line_search
+from repro.data.federated import stack_devices
+from repro.data.synthetic import synthetic_alpha_beta
+from repro.fed.simulator import FLConfig, run_federated
+
+ROUNDS = 40
+
+
+def stability(hist):
+    accs = np.asarray(hist["test_acc"][5:])
+    return float(np.maximum(0, accs[:-1] - accs[1:]).max())
+
+
+def main() -> None:
+    devs = synthetic_alpha_beta(0, n_devices=30, alpha=1.0, beta=1.0,
+                                mean_size=100)
+    fed = stack_devices(devs, seed=0)
+
+    base = FLConfig(algo="folb", n_selected=10, mu=1.0, lr=0.05, seed=0)
+    h0 = run_federated(MCLR, fed, base, rounds=ROUNDS, eval_every=1)
+    print(f"vanilla FOLB : final acc {h0['test_acc'][-1]:.3f}, "
+          f"worst round-to-round drop {stability(h0):.3f}")
+
+    def run_psi(psi: float) -> float:
+        fl = FLConfig(algo="folb_het", n_selected=10, mu=1.0, lr=0.05,
+                      psi=psi, seed=0)
+        h = run_federated(MCLR, fed, fl, rounds=ROUNDS, eval_every=1)
+        # figure of merit: accuracy minus instability penalty
+        return h["test_acc"][-1] - stability(h)
+
+    best_psi, scores = line_search(run_psi, PSI_GRID)
+    print("psi line search (Sec. V-B):")
+    for psi, s in scores.items():
+        print(f"  psi={psi:<6g} acc-minus-drop={s:.3f}")
+
+    fl = FLConfig(algo="folb_het", n_selected=10, mu=1.0, lr=0.05,
+                  psi=best_psi, seed=0)
+    h1 = run_federated(MCLR, fed, fl, rounds=ROUNDS, eval_every=1)
+    print(f"FOLB-het ψ={best_psi:g}: final acc {h1['test_acc'][-1]:.3f}, "
+          f"worst drop {stability(h1):.3f}")
+    print("\nheterogeneity-aware aggregation trades a slightly different "
+          "weighting for\nvisibly fewer accuracy collapses (paper Fig. 11).")
+
+
+if __name__ == "__main__":
+    main()

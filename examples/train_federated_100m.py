@@ -1,0 +1,74 @@
+"""End-to-end driver: federated training of a ~100M-parameter dense LM
+with the production round engine (scan-over-clients FOLB), checkpointing,
+and a serving sanity check at the end.
+
+Full run (a few hundred rounds, ~100M params — intended for a real host):
+  PYTHONPATH=src python examples/train_federated_100m.py --rounds 300
+
+CPU smoke (reduced model, runs in ~2 min):
+  PYTHONPATH=src python examples/train_federated_100m.py --smoke
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import io as ckpt_io
+from repro.configs import get_config, n_params
+from repro.fed.distributed import RoundConfig, folb_round
+from repro.launch.train import make_round_batches
+from repro.models import model as model_lib
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=300)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--algo", default="folb")
+    ap.add_argument("--ckpt-dir", default="/tmp/fed100m_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config("fed100m")
+    rounds, clients, seqs, seq_len = args.rounds, 4, 4, 512
+    if args.smoke:
+        cfg = cfg.reduced(n_layers=4, d_model=256)
+        rounds, seqs, seq_len = 8, 2, 128
+    print(f"[e2e] {cfg.name}: {n_params(cfg)/1e6:.1f}M params, "
+          f"{rounds} FOLB rounds x {clients} clients")
+
+    rc = RoundConfig(algo=args.algo, n_clients=clients, local_steps=2,
+                     lr=0.1, mu=0.01, remat=True)
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(lambda p, b: folb_round(cfg, rc, p, b))
+    batches = make_round_batches(cfg, clients, seqs, seq_len, rounds, seed=0)
+
+    t0 = time.time()
+    first = last = None
+    for r, batch in enumerate(batches):
+        params, metrics = step(params, batch)
+        loss = float(metrics["client_loss"])
+        first = first if first is not None else loss
+        last = loss
+        if r % max(1, rounds // 10) == 0 or r == rounds - 1:
+            print(f"[round {r:4d}] loss={loss:.4f} "
+                  f"({(time.time()-t0)/(r+1):.1f}s/round)")
+    print(f"[e2e] loss {first:.4f} -> {last:.4f}")
+    ckpt_io.save_checkpoint(f"{args.ckpt_dir}/step_{rounds}", params,
+                            step=rounds, extra={"arch": cfg.name})
+
+    # serve the trained model
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    logits, cache = model_lib.prefill(cfg, params, {"tokens": toks},
+                                      cache_len=48)
+    out = [jnp.argmax(logits, -1)[:, None].astype(jnp.int32)]
+    for _ in range(7):
+        logits, cache = model_lib.decode_step(cfg, params, cache, out[-1])
+        out.append(jnp.argmax(logits, -1)[:, None].astype(jnp.int32))
+    print("[e2e] greedy continuation:", jnp.concatenate(out, 1)[0].tolist())
+    assert last < first, "training did not reduce loss"
+    print("[e2e] OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Pytree checkpointing: npz payload + json manifest (treedef, shapes,
+dtypes, step metadata).  No external deps; safe for any nested dict/list
+pytree of jnp/np arrays.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params, step: int = 0,
+                    extra: Optional[Dict[str, Any]] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten_with_paths(params)
+    np.savez(os.path.join(path, "arrays.npz"), **flat)
+    treedef = jax.tree_util.tree_structure(params)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "keys": sorted(flat),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def restore_checkpoint(path: str, like) -> Tuple[Any, int]:
+    """Restore into the structure of `like` (a template pytree)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_like = _flatten_with_paths(like)
+    missing = set(flat_like) - set(data.files)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{arr.shape} vs {np.shape(leaf)}")
+        leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["step"]
+
+
+def latest_step(root: str) -> Optional[str]:
+    """Return the newest step directory under `root` (step_<n> naming)."""
+    if not os.path.isdir(root):
+        return None
+    steps = [d for d in os.listdir(root) if d.startswith("step_")]
+    if not steps:
+        return None
+    best = max(steps, key=lambda d: int(d.split("_")[1]))
+    return os.path.join(root, best)

@@ -1,0 +1,32 @@
+"""The paper's own experiment models (Section VI).
+
+These are *not* transformer ArchConfigs — the paper uses multinomial
+logistic regression (MCLR), a 3-layer MLP, and an LSTM.  They are small
+enough for the vmap federated simulator and are defined as simple pytree
+param factories + apply fns in ``repro.models.small``.  Here we only keep
+their hyper-parameter records.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SmallModelConfig:
+    name: str
+    kind: str          # mclr | mlp | lstm
+    n_features: int
+    n_classes: int
+    hidden: int = 0
+    vocab: int = 0     # lstm only
+    seq_len: int = 0   # lstm only
+    embed: int = 0
+
+
+# paper: MNIST / synthetic use MCLR on 784/60-dim features, 10 classes
+MCLR = SmallModelConfig(name="paper-mclr", kind="mclr",
+                        n_features=60, n_classes=10)
+MLP = SmallModelConfig(name="paper-mlp", kind="mlp",
+                       n_features=60, n_classes=10, hidden=128)
+# paper: Sent140 / Shakespeare use an LSTM; character-level next-token
+LSTM = SmallModelConfig(name="paper-lstm", kind="lstm",
+                        n_features=0, n_classes=80, vocab=80,
+                        seq_len=80, hidden=128, embed=64)

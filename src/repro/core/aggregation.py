@@ -1,0 +1,116 @@
+"""Aggregation rules (paper Eq. 2, Eq. 5, IV-A, IV-C, V-B).
+
+Inputs use the *stacked-client* convention: `deltas` and `grads` are pytrees
+whose leaves carry a leading K axis (client index within the sampled
+multiset).  All rules return the new global parameters.
+
+These are the reference (pure-jnp) implementations; ``repro.kernels``
+provides a fused Pallas kernel for the single-set FOLB rule that performs
+the K inner products and the weighted delta reduction in one HBM pass.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree
+
+
+def _stacked_dot(stacked, single) -> jnp.ndarray:
+    """<stacked_k, single> for each k -> (K,) fp32."""
+    return jax.vmap(lambda t: tree.tree_dot(t, single))(stacked)
+
+
+def _weighted_sum(stacked, weights):
+    """sum_k weights[k] * stacked[k], leafwise fp32."""
+    def leaf(x):
+        w = weights.reshape(weights.shape + (1,) * (x.ndim - 1))
+        return jnp.sum(x.astype(jnp.float32) * w, axis=0)
+    return jax.tree.map(leaf, stacked)
+
+
+def mean_of(stacked):
+    """grad-f estimate: (1/K) sum_k stacked[k]  (Eq. IV-A nabla_i f)."""
+    return jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32), axis=0),
+                        stacked)
+
+
+def fedavg_aggregate(w_t, deltas):
+    """Eq. 2: w^{t+1} = w^t + (1/K) sum_k Delta_k (averaging of w_k)."""
+    K = jax.tree.leaves(deltas)[0].shape[0]
+    upd = _weighted_sum(deltas, jnp.full((K,), 1.0 / K))
+    return jax.tree.map(lambda w, u: (w.astype(jnp.float32) + u).astype(w.dtype),
+                        w_t, upd)
+
+
+def signed_aggregate(w_t, deltas, grads, global_grad):
+    """Eq. 5: flip the sign of anti-aligned updates (FedNu + sign rule)."""
+    inner = _stacked_dot(grads, global_grad)
+    K = inner.shape[0]
+    weights = jnp.sign(inner) / K
+    upd = _weighted_sum(deltas, weights)
+    return jax.tree.map(lambda w, u: (w.astype(jnp.float32) + u).astype(w.dtype),
+                        w_t, upd)
+
+
+def folb_weights_single_set(inner: jnp.ndarray) -> jnp.ndarray:
+    """Eq. IV-C weights: w_k = <g_k, g1> / sum_k' |<g_k', g1>|."""
+    denom = jnp.sum(jnp.abs(inner))
+    return inner / jnp.maximum(denom, 1e-30)
+
+
+def folb_single_set(w_t, deltas, grads):
+    """FOLB with S1 = S2 (Eq. IV-C) — the communication-optimal variant the
+    paper evaluates.  Anti-aligned deltas contribute their negative."""
+    g1 = mean_of(grads)
+    inner = _stacked_dot(grads, g1)
+    weights = folb_weights_single_set(inner)
+    upd = _weighted_sum(deltas, weights)
+    return jax.tree.map(lambda w, u: (w.astype(jnp.float32) + u).astype(w.dtype),
+                        w_t, upd)
+
+
+def folb_two_set(w_t, deltas, grads_s1, grads_s2):
+    """FOLB (Alg. 2 / Eq. IV-A): weights from S1 inner products, normalized
+    by the independent S2 estimate."""
+    g1 = mean_of(grads_s1)
+    g2 = mean_of(grads_s2)
+    inner1 = _stacked_dot(grads_s1, g1)
+    denom = jnp.sum(_stacked_dot(grads_s2, g2))
+    weights = inner1 / jnp.where(jnp.abs(denom) > 1e-30, denom, 1e-30)
+    upd = _weighted_sum(deltas, weights)
+    return jax.tree.map(lambda w, u: (w.astype(jnp.float32) + u).astype(w.dtype),
+                        w_t, upd)
+
+
+def folb_het(w_t, deltas, grads, gammas, psi: float):
+    """Heterogeneity-aware FOLB (Eq. V-B):
+    I_k = <g1, g_k> - psi * gamma_k * ||g1||^2;  w_k = I_k / sum|I_k'|."""
+    g1 = mean_of(grads)
+    inner = _stacked_dot(grads, g1)
+    g1_sq = tree.tree_sqnorm(g1)
+    scores = inner - psi * gammas * g1_sq
+    denom = jnp.sum(jnp.abs(scores))
+    weights = scores / jnp.maximum(denom, 1e-30)
+    upd = _weighted_sum(deltas, weights)
+    return jax.tree.map(lambda w, u: (w.astype(jnp.float32) + u).astype(w.dtype),
+                        w_t, upd)
+
+
+def aggregate(rule: str, w_t, deltas, grads=None, grads_s2=None,
+              global_grad=None, gammas=None, psi: float = 0.0):
+    """Dispatch by rule name: mean | signed | folb | folb2 | folb_het."""
+    if rule == "mean":
+        return fedavg_aggregate(w_t, deltas)
+    if rule == "signed":
+        gg = global_grad if global_grad is not None else mean_of(grads)
+        return signed_aggregate(w_t, deltas, grads, gg)
+    if rule == "folb":
+        return folb_single_set(w_t, deltas, grads)
+    if rule == "folb2":
+        return folb_two_set(w_t, deltas, grads, grads_s2)
+    if rule == "folb_het":
+        return folb_het(w_t, deltas, grads, gammas, psi)
+    raise ValueError(f"unknown aggregation rule {rule!r}")

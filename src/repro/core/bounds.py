@@ -1,0 +1,75 @@
+"""Theoretical loss-decrease bounds (Theorem 1, Proposition 1, Definition 1,
+Proposition 2, Theorem 3) — used for diagnostics and for the property tests
+that check the bounds actually hold on strongly-convex problems.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemConstants:
+    """Assumption constants: L-Lipschitz gradients, B-dissimilarity,
+    sigma-bounded Hessians, gamma-inexact solvers, prox weight mu."""
+    L: float
+    B: float
+    sigma: float
+    gamma: float
+    mu: float
+
+    @property
+    def mu_prime(self) -> float:
+        return self.mu - self.sigma
+
+
+def penalty_term(c: ProblemConstants) -> float:
+    """B(L(γ+1)/(μμ′) + γ/μ + BL(1+γ)²/(2μ′²)) — shared by Thm 1 / Prop 1 /
+    Def 1 / Prop 2."""
+    mu, mup, g = c.mu, c.mu_prime, c.gamma
+    return c.B * (c.L * (g + 1) / (mu * mup) + g / mu
+                  + c.B * c.L * (1 + g) ** 2 / (2 * mup ** 2))
+
+
+def theorem1_bound(f_t, expected_inner_sum, grad_sqnorm, K, c: ProblemConstants):
+    """E[f(w^{t+1})] <= f(w^t) - E[sum_{k in S_t} <∇f,∇F_k>]/(Kμ) + pen·||∇f||²."""
+    return f_t - expected_inner_sum / (K * c.mu) + penalty_term(c) * grad_sqnorm
+
+
+def proposition1_bound(f_t, expected_abs_inner_sum, grad_sqnorm, K,
+                       c: ProblemConstants):
+    """Prop. 1 (signed aggregation): inner products replaced by |·|."""
+    return (f_t - expected_abs_inner_sum / (K * c.mu)
+            + penalty_term(c) * grad_sqnorm)
+
+
+def def1_bound(f_t, inner_products, grad_sqnorm, c: ProblemConstants):
+    """Definition 1: LB-near-optimal selection,
+    E-term = sum_k |<∇f,∇F_k>| P_lb_k = sum_k <·>² / sum_k' |<·>|."""
+    a = jnp.abs(inner_products)
+    e_term = jnp.sum(a ** 2) / jnp.maximum(jnp.sum(a), 1e-30)
+    return f_t - e_term / c.mu + penalty_term(c) * grad_sqnorm
+
+
+def proposition2_bound(f_t, inner_products, grad_sqnorm, K, N,
+                       c: ProblemConstants):
+    """Prop. 2 (single-set FOLB): E-term = (K/N) sum_k |<∇f,∇F_k>| / μ."""
+    e_term = (K / N) * jnp.sum(jnp.abs(inner_products))
+    return f_t - e_term / c.mu + penalty_term(c) * grad_sqnorm
+
+
+def theorem3_psi(K: int, c: ProblemConstants) -> float:
+    """ψ = B(L/(μμ′) + 1/μ + 3LB/(2Kμ′²)) — the heterogeneity penalty weight
+    that Sec. V-B folds into a single line-searched hyper-parameter."""
+    mu, mup = c.mu, c.mu_prime
+    return c.B * (c.L / (mu * mup) + 1 / mu + 3 * c.L * c.B / (2 * K * mup ** 2))
+
+
+def theorem3_bound(f_t, expected_score_sum, grad_sqnorm, K,
+                   c: ProblemConstants):
+    """Thm. 3: E-term uses I_k = <∇f,∇F_k> − ψ γ_k ||∇f||²; extra additive
+    penalty (LB²/(2μ′²) + LB/(μμ′))||∇f||²."""
+    mu, mup = c.mu, c.mu_prime
+    pen = (c.L * c.B ** 2 / (2 * mup ** 2) + c.L * c.B / (mu * mup))
+    return f_t - expected_score_sum / (K * mu) + pen * grad_sqnorm

@@ -1,0 +1,52 @@
+"""Device-selection distributions (paper Sec. III).
+
+All distributions return a length-N probability vector P^t; sampling draws
+a size-K **multiset with replacement** (footnote 1 of the paper: K repeated
+categorical trials).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def uniform_probs(n: int) -> jnp.ndarray:
+    return jnp.full((n,), 1.0 / n)
+
+
+_TINY = 1e-20   # below this the scores carry no signal -> uniform fallback
+
+
+def lb_near_optimal_probs(inner_products: jnp.ndarray) -> jnp.ndarray:
+    """Definition 1: P_k ∝ |<grad f, grad F_k>| given the N inner products."""
+    a = jnp.abs(inner_products)
+    s = jnp.sum(a)
+    n = a.shape[0]
+    return jnp.where(s > _TINY, a / jnp.where(s > _TINY, s, 1.0),
+                     jnp.full((n,), 1.0 / n))
+
+
+def norm_estimate_probs(grad_norms: jnp.ndarray) -> jnp.ndarray:
+    """Sec. III-D2 (Cauchy-Schwarz sub-optimal estimate): P_k ∝ ||grad F_k||."""
+    s = jnp.sum(grad_norms)
+    n = grad_norms.shape[0]
+    return jnp.where(s > _TINY, grad_norms / jnp.where(s > _TINY, s, 1.0),
+                     jnp.full((n,), 1.0 / n))
+
+
+def het_aware_scores(inner_products: jnp.ndarray, gammas: jnp.ndarray,
+                     psi: float, global_grad_sqnorm: jnp.ndarray) -> jnp.ndarray:
+    """Sec. V: I_k = <grad f, grad F_k> - psi * gamma_k * ||grad f||^2."""
+    return inner_products - psi * gammas * global_grad_sqnorm
+
+
+def het_aware_probs(inner_products, gammas, psi, global_grad_sqnorm):
+    """P_lbh (Sec. V): P_k ∝ |I_k|."""
+    return lb_near_optimal_probs(
+        het_aware_scores(inner_products, gammas, psi, global_grad_sqnorm))
+
+
+def sample_multiset(key, probs: jnp.ndarray, k: int) -> jnp.ndarray:
+    """K categorical draws with replacement -> (K,) int32 client ids."""
+    return jax.random.categorical(
+        key, jnp.log(jnp.maximum(probs, 1e-30)), shape=(k,)).astype(jnp.int32)

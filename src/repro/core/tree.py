@@ -1,0 +1,73 @@
+"""Pytree linear algebra used throughout the FL core.
+
+All reductions are performed in fp32 regardless of leaf dtype (aggregation
+weights are scalars; precision there is cheap and matters).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_dot(a, b) -> jnp.ndarray:
+    """<a, b> over all leaves, fp32 accumulate.
+
+    NOTE: implemented as multiply+sum (not vdot) deliberately — vdot
+    flattens its operands, and GSPMD cannot reshape a sharded array to 1-D
+    without replicating it first (measured: 10 GiB/device of gathered
+    parameter copies on a 256-chip mesh).  Elementwise multiply keeps the
+    operands' sharding and the reduction lowers to a local sum + scalar
+    all-reduce."""
+    leaves = jax.tree.map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)),
+        a, b)
+    return jax.tree.reduce(jnp.add, leaves, jnp.zeros((), jnp.float32))
+
+
+def tree_sqnorm(a) -> jnp.ndarray:
+    return tree_dot(a, a)
+
+
+def tree_norm(a) -> jnp.ndarray:
+    return jnp.sqrt(tree_sqnorm(a))
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * s).astype(x.dtype), a)
+
+
+def tree_axpy(s, x, y):
+    """y + s * x, computed leafwise in fp32, cast back to y's dtypes."""
+    return jax.tree.map(
+        lambda xl, yl: (yl.astype(jnp.float32)
+                        + s * xl.astype(jnp.float32)).astype(yl.dtype), x, y)
+
+
+def tree_zeros_like(a, dtype=None):
+    return jax.tree.map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), a)
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_size(a) -> int:
+    return sum(x.size for x in jax.tree.leaves(a))
+
+
+def tree_stack(trees):
+    """Stack a list of identically-structured trees along a new axis 0."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_index(tree, i):
+    return jax.tree.map(lambda x: x[i], tree)

@@ -1,0 +1,35 @@
+"""Hyper-parameter line search (paper Sec. V-B / VI-A): exponential grids
+for μ and ψ, selected by best end-of-budget metric on short runs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence, Tuple
+
+MU_GRID: Sequence[float] = (1e-4, 1e-3, 1e-2, 1e-1, 1.0)
+PSI_GRID: Sequence[float] = (1e-1, 1.0, 10.0, 100.0)
+
+
+def line_search(run_fn: Callable[[float], float],
+                grid: Sequence[float],
+                maximize: bool = True) -> Tuple[float, Dict[float, float]]:
+    """Evaluate run_fn over an exponential grid; return (best_value, scores).
+
+    run_fn maps a hyper-parameter value to a scalar figure of merit (e.g.
+    final test accuracy of a short federated run)."""
+    scores = {v: float(run_fn(v)) for v in grid}
+    pick = max if maximize else min
+    best = pick(scores, key=scores.get)
+    return best, scores
+
+
+def joint_search(run_fn: Callable[[float, float], float],
+                 mu_grid: Sequence[float] = MU_GRID,
+                 psi_grid: Sequence[float] = PSI_GRID,
+                 maximize: bool = True):
+    """Two-stage search: tune μ with ψ = 0, then ψ at the chosen μ —
+    the procedure the paper describes for FOLB-het."""
+    mu_best, mu_scores = line_search(lambda m: run_fn(m, 0.0), mu_grid,
+                                     maximize)
+    psi_best, psi_scores = line_search(lambda p: run_fn(mu_best, p),
+                                       psi_grid, maximize)
+    return (mu_best, psi_best), {"mu": mu_scores, "psi": psi_scores}

@@ -1,0 +1,91 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels run in interpret mode (``interpret=True``
+executes the kernel body in Python for correctness); on TPU the same
+pallas_call compiles to Mosaic.  ``INTERPRET`` flips the default.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import folb_aggregate as _folb
+from repro.kernels import slstm_scan as _slstm
+from repro.kernels import ssm_scan as _ssd
+from repro.core import tree as tree_lib
+
+INTERPRET = jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "sliding_window",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True, sliding_window: int = 0,
+                    block_q: int = _fa.DEFAULT_BLOCK_Q,
+                    block_k: int = _fa.DEFAULT_BLOCK_K):
+    return _fa.flash_attention(q, k, v, causal=causal,
+                               sliding_window=sliding_window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, loga, w, Bm, Cm, chunk: int = 128):
+    return _ssd.ssd_scan(x, loga, w, Bm, Cm, chunk=chunk,
+                         interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads", "chunk"))
+def slstm_scan(xg, r, n_heads: int, chunk: int = 256):
+    return _slstm.slstm_scan(xg, r, n_heads, chunk=chunk,
+                             interpret=INTERPRET)
+
+
+@jax.jit
+def folb_aggregate_flat(w, deltas, grads, g1, psi_gamma, g1_sq
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    return _folb.folb_aggregate(w, deltas, grads, g1, psi_gamma, g1_sq,
+                                interpret=INTERPRET)
+
+
+def folb_aggregate_tree(params, deltas_stacked, grads_stacked,
+                        psi_gammas=None) -> Tuple:
+    """Pytree front-end: ravel the pytrees into flat (K, D) buffers (padding
+    D to the kernel tile), run the fused kernel, unravel.  Matches
+    repro.core.aggregation.folb_single_set / folb_het."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    K = jax.tree_util.tree_leaves(deltas_stacked)[0].shape[0]
+
+    def flat(tree_, lead=False):
+        ls = jax.tree_util.tree_leaves(tree_)
+        if lead:
+            return jnp.concatenate(
+                [l.reshape(K, -1).astype(jnp.float32) for l in ls], axis=1)
+        return jnp.concatenate(
+            [l.reshape(-1).astype(jnp.float32) for l in ls])
+
+    w = flat(params)
+    D = w.shape[0]
+    pad = (-D) % _folb.TILE_D
+    deltas = flat(deltas_stacked, lead=True)
+    grads = flat(grads_stacked, lead=True)
+    if pad:
+        w = jnp.pad(w, (0, pad))
+        deltas = jnp.pad(deltas, ((0, 0), (0, pad)))
+        grads = jnp.pad(grads, ((0, 0), (0, pad)))
+    g1 = jnp.mean(grads, axis=0)
+    g1_sq = jnp.sum(g1 * g1)
+    pg = (jnp.zeros((K,), jnp.float32) if psi_gammas is None
+          else psi_gammas.astype(jnp.float32))
+    new_flat, scores = folb_aggregate_flat(w, deltas, grads, g1, pg, g1_sq)
+    new_flat = new_flat[:D]
+    out_leaves = []
+    off = 0
+    for l in leaves:
+        n = l.size
+        out_leaves.append(new_flat[off:off + n].reshape(l.shape).astype(l.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out_leaves), scores

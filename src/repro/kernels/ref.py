@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the
+interpret-mode kernels are validated against in tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def folb_aggregate_ref(w: jnp.ndarray, deltas: jnp.ndarray,
+                       grads: jnp.ndarray, g1: jnp.ndarray,
+                       psi_gamma: jnp.ndarray, g1_sq: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused FOLB single-set aggregation over flattened parameters.
+
+    w:        (D,)   current global parameters
+    deltas:   (K, D) client deltas  Δw_k
+    grads:    (K, D) client gradients ∇F_k(w^t)
+    g1:       (D,)   global-gradient estimate (mean of grads)
+    psi_gamma:(K,)   ψ·γ_k  (zeros -> plain FOLB, Eq. IV-C)
+    g1_sq:    ()     ||g1||²
+
+    Returns (w_new, scores) with
+      I_k   = <grads_k, g1> − ψγ_k ||g1||²           (Eq. V-B)
+      w_new = w + Σ_k I_k Δ_k / Σ_k |I_k|
+    """
+    inner = jnp.einsum("kd,d->k", grads.astype(jnp.float32),
+                       g1.astype(jnp.float32))
+    scores = inner - psi_gamma.astype(jnp.float32) * g1_sq.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(jnp.abs(scores)), 1e-30)
+    upd = jnp.einsum("k,kd->d", scores / denom, deltas.astype(jnp.float32))
+    return (w.astype(jnp.float32) + upd).astype(w.dtype), scores
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True,
+                        sliding_window: int = 0) -> jnp.ndarray:
+    """Reference attention.  q: (B, Sq, H, d); k/v: (B, Sk, KV, d) with
+    H % KV == 0 (GQA).  fp32 softmax."""
+    B, Sq, H, d = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, d)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (d ** 0.5)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if sliding_window:
+        mask &= kpos > qpos - sliding_window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, d).astype(q.dtype)
+
+
+def ssm_scan_ref(x: jnp.ndarray, loga: jnp.ndarray, w: jnp.ndarray,
+                 Bm: jnp.ndarray, Cm: jnp.ndarray,
+                 h0: jnp.ndarray = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential reference of the SSD recurrence (single head group).
+
+    x: (S, H, P); loga/w: (S, H); Bm/Cm: (S, N); h0: (H, P, N).
+    h_t = exp(loga_t) h_{t-1} + w_t B_t x_t^T;  y_t = C_t · h_t.
+    """
+    S, H, P = x.shape
+    N = Bm.shape[-1]
+    h = jnp.zeros((H, P, N), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        xt, at, wt, bt, ct = inp
+        h = (h * jnp.exp(at)[:, None, None]
+             + wt[:, None, None] * jnp.einsum("hp,n->hpn", xt, bt))
+        y = jnp.einsum("n,hpn->hp", ct, h)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h,
+                         (x.astype(jnp.float32), loga.astype(jnp.float32),
+                          w.astype(jnp.float32), Bm.astype(jnp.float32),
+                          Cm.astype(jnp.float32)))
+    return ys, h

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: sLSTM sequential recurrence (xLSTM scalar memory).
+
+The sLSTM cell is inherently sequential — per timestep a tiny block-
+diagonal matvec (dh x 4dh) plus elementwise gates.  Lowered as jnp ops
+this is a 4096-iteration while loop whose per-step (B, d) tensors round-
+trip HBM (§Perf A: 72 TiB/round measured on xlstm-1.3b train_4k by per-op
+accounting — the dominant HBM term).  This kernel keeps the cell state
+(h, c, n) in VMEM scratch for the WHOLE sequence and streams only the
+precomputed input projections xg in and the hidden outputs out:
+
+    traffic = S·4dh (read) + S·dh (write) per (batch, head) pair
+            = the roofline floor for this recurrence.
+
+Grid: (B*H, n_chunks); chunks are sequential so the state persists in
+scratch; per chunk a fori_loop walks the timesteps with the per-head
+recurrent matrix resident in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _slstm_kernel(xg_ref, r_ref, out_ref, h_ref, c_ref, n_ref, *,
+                  chunk: int, dh: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+
+    r = r_ref[0].astype(jnp.float32)                     # (dh, 4dh)
+
+    def step(t, _):
+        xg = xg_ref[0, t].astype(jnp.float32)            # (4dh,)
+        h = h_ref[0]                                     # (dh,)
+        g = xg + h @ r                                   # (4dh,)
+        z = jnp.tanh(g[:dh])
+        i = jax.nn.sigmoid(g[dh:2 * dh])
+        f = jax.nn.sigmoid(g[2 * dh:3 * dh])
+        o = jax.nn.sigmoid(g[3 * dh:])
+        c = f * c_ref[0] + i * z
+        n = f * n_ref[0] + i
+        h_new = o * c / jnp.maximum(n, 1e-6)
+        c_ref[0] = c
+        n_ref[0] = n
+        h_ref[0] = h_new
+        out_ref[0, t] = h_new.astype(out_ref.dtype)
+        return ()
+
+    jax.lax.fori_loop(0, chunk, step, ())
+
+
+def slstm_scan(xg: jnp.ndarray, r: jnp.ndarray, n_heads: int,
+               chunk: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """xg: (B, S, 4d) gate preactivations (input part); r: (H, dh, 4dh)
+    per-head recurrent weights.  Returns hidden states (B, S, d).
+
+    Gate layout matches repro.models.xlstm._slstm_cell: the 4d axis is
+    [z, i, f, o] x (H, dh)."""
+    B, S, d4 = xg.shape
+    d = d4 // 4
+    H = n_heads
+    dh = d // H
+    assert S % chunk == 0, (S, chunk)
+    # regroup gates per head: (B, S, 4, H, dh) -> (B*H, S, 4*dh)
+    xgh = xg.reshape(B, S, 4, H, dh).transpose(0, 3, 1, 2, 4) \
+            .reshape(B * H, S, 4 * dh)
+    kernel = functools.partial(_slstm_kernel, chunk=chunk, dh=dh)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, S // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 4 * dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, dh, 4 * dh), lambda b, c: (b % H, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dh), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, dh), xg.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, dh), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xgh, r)
+    return out.reshape(B, H, S, dh).transpose(0, 2, 1, 3).reshape(B, S, d)

@@ -1,0 +1,185 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # LICM hoists per-iteration bf16->f32 converts of remat-saved residual
+    # stacks out of backward while-loops, storing every activation
+    # checkpoint in f32 (2x HBM; measured +9.6 GiB/device on
+    # starcoder2-7b train_4k).  On TPU the memory-optimal choice is to
+    # keep the stacks bf16 and convert per slice.
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion")
+
+"""Multi-pod dry run: lower + compile every (architecture x input-shape)
+combination on the production mesh, with NO device allocation (AOT on
+ShapeDtypeStructs), and extract the roofline quantities.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-coder-33b \
+      --shape train_4k [--multi-pod] [--out reports/]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+The XLA_FLAGS assignment above MUST stay the first statement of this module
+(before any jax import) — jax locks the device count at first init.  The
+512 placeholder host devices exist ONLY here; tests and benchmarks see the
+real single CPU device.
+"""
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCHS, get_config, n_active_params, n_params  # noqa: E402
+from repro.fed.distributed import RoundConfig  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch import mesh as mesh_lib  # noqa: E402
+from repro.launch import shapes as shapes_lib  # noqa: E402
+from repro.launch import steps as steps_lib  # noqa: E402
+
+
+def dry_run(arch: str, shape_name: str, multi_pod: bool = False,
+            rc: Optional[RoundConfig] = None,
+            verbose: bool = True,
+            hlo_path: Optional[str] = None) -> Dict[str, Any]:
+    """Lower + compile one combo; return the roofline record."""
+    cfg = get_config(arch)
+    shape = shapes_lib.SHAPES[shape_name]
+    ok, why = shapes_lib.combo_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skip", "reason": why}
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    rc = rc or RoundConfig()
+    t0 = time.time()
+    fn, args = steps_lib.build_step(cfg, mesh, shape_name, rc)
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    if hlo_path:
+        import zstandard
+        with open(hlo_path, "wb") as f:
+            f.write(zstandard.ZstdCompressor(level=3).compress(
+                text.encode()))
+    rep = hlo_analysis.analyze(text)
+
+    peak = mesh_lib.PEAK_FLOPS_BF16
+    hbm_bw = mesh_lib.HBM_BW
+    ici = mesh_lib.ICI_BW
+    compute_t = rep.flops / peak                     # per chip (SPMD module)
+    memory_t = rep.hbm_bytes / hbm_bw
+    coll_t = rep.collective_link_bytes / ici
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": coll_t}
+    dominant = max(terms, key=terms.get)
+
+    # useful-FLOPs denominator: 6·N·D (training: fwd+bwd over all round
+    # grad evals); 2·N_active·D for inference
+    D_tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                     else 1)
+    n_act = n_active_params(cfg)
+    if shape.kind == "train":
+        grad_evals = 1 + rc.local_steps  # pass1 grad + local steps (pass2)
+        model_flops = 6.0 * n_act * D_tokens * grad_evals
+    else:
+        model_flops = 2.0 * n_act * D_tokens
+    model_flops_per_chip = model_flops / n_chips
+
+    record = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "status": "ok",
+        "n_chips": n_chips,
+        "mesh": list(mesh.devices.shape),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "bytes_per_device": int(getattr(mem, "temp_size_in_bytes", 0)
+                                + getattr(mem, "argument_size_in_bytes", 0)
+                                + getattr(mem, "output_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "arg_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "out_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+        "fits_hbm": bool(
+            getattr(mem, "temp_size_in_bytes", 0)
+            + max(getattr(mem, "argument_size_in_bytes", 0),
+                  getattr(mem, "output_size_in_bytes", 0))
+            < mesh_lib.CHIP_HBM_BYTES),
+        "xla_cost_flops_once": float(cost.get("flops", -1)),
+        "flops_per_chip": rep.flops,
+        "hbm_bytes_per_chip": rep.hbm_bytes,
+        "collective_bytes": {k: float(v)
+                             for k, v in rep.collective_bytes.items()},
+        "collective_counts": rep.collective_counts,
+        "collective_link_bytes": rep.collective_link_bytes,
+        "compute_s": compute_t, "memory_s": memory_t, "collective_s": coll_t,
+        "dominant": dominant.replace("_s", ""),
+        "n_params": n_params(cfg), "n_active_params": n_act,
+        "model_flops_per_chip": model_flops_per_chip,
+        "useful_flop_frac": (model_flops_per_chip / rep.flops
+                             if rep.flops else 0.0),
+        "step_time_bound_s": max(terms.values()),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} "
+              f"({'multi' if multi_pod else 'single'}-pod): "
+              f"compile {t_compile:.0f}s, "
+              f"mem/dev {record['bytes_per_device']/2**30:.2f} GiB "
+              f"(fits={record['fits_hbm']}), dominant={record['dominant']}, "
+              f"compute {compute_t*1e3:.1f}ms | mem {memory_t*1e3:.1f}ms | "
+              f"coll {coll_t*1e3:.1f}ms")
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(shapes_lib.SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="all assigned archs x all shapes")
+    ap.add_argument("--out", default="reports")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--algo", default="folb")
+    args = ap.parse_args()
+
+    rc = RoundConfig(algo=args.algo, n_clients=args.clients,
+                     local_steps=args.local_steps)
+    archs = ARCHS[:10] if args.all or not args.arch else [args.arch]
+    shapes = list(shapes_lib.SHAPES) if args.all or not args.shape \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[dryrun] {tag}: cached, skipping")
+                    continue
+                try:
+                    rec = dry_run(arch, shape, multi_pod=mp, rc=rc,
+                                  hlo_path=os.path.join(
+                                      args.out, tag + ".hlo.zst"))
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                    print(f"[dryrun] {tag} FAILED: {e!r}")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,385 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's built-in ``compiled.cost_analysis()`` visits every computation ONCE —
+a 62-layer model lowered through ``lax.scan`` reports the FLOPs of a single
+layer (verified empirically; see EXPERIMENTS.md §Dry-run methodology).  This
+module re-derives roofline quantities by walking the post-SPMD-partitioning
+HLO text with while-loop ``known_trip_count`` multipliers:
+
+  * flops            — 2·M·N·K for every ``dot`` (and convolution MACs),
+                       scaled by the product of enclosing loop trip counts.
+  * hbm_bytes        — Σ over *top-level* instructions (fusion internals
+                       excluded: they never touch HBM) of operand + result
+                       bytes.  A no-cache-reuse roofline proxy.
+  * collective_bytes — per collective type, with ring-algorithm link-cost
+                       factors (all-reduce moves ~2× its payload per link).
+
+Because the module is the SPMD-partitioned per-device program, all numbers
+are *per chip* — exactly what the roofline terms need.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# Top-level ops skipped in hbm-byte counting under the TPU-fusion assumption:
+# the dry-run compiles with the CPU backend whose fusion is far weaker than
+# TPU's — elementwise/layout chains that stay top-level here would be fused
+# into their producers/consumers on TPU, so charging their operands+results
+# double-counts traffic.  (Their traffic is still represented by the
+# counted neighbors: dots, fusions, slices, collectives.)
+_TPU_FUSABLE = frozenset({
+    "add", "subtract", "multiply", "divide", "negate", "abs", "exponential",
+    "exponential-minus-one", "log", "log-plus-one", "tanh", "logistic",
+    "sqrt", "rsqrt", "power", "maximum", "minimum", "compare", "select",
+    "and", "or", "not", "xor", "convert", "broadcast", "copy", "transpose",
+    "reshape", "reverse", "iota", "clamp", "sign", "floor", "ceil",
+    "round-nearest-afz", "reduce", "map", "concatenate", "pad", "slice",
+})
+
+# effective bytes-per-link factors (ring algorithms, large group limit)
+_LINK_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of all array shapes appearing in an HLO type string
+    (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    out_type: str
+    body: str                      # full RHS text
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]         # instr/param name -> output type string
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        mc = _COMP_RE.match(line)
+        if mc and stripped.endswith("{"):
+            cur = Computation(mc.group(1), [], {})
+            comps[cur.name] = cur
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, rhs = mi.group(1), mi.group(2)
+        # rhs = "<type> <opcode>(<operands>), attrs..."
+        m2 = re.match(r"((?:\([^)]*\)|[\w\[\],{}]+)+)\s+([\w\-]+)\(", rhs)
+        if not m2:
+            continue
+        out_type, opcode = m2.group(1), m2.group(2)
+        paren = rhs[m2.end() - 1:]
+        depth, i = 0, 0
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        arg_text = paren[1:i]
+        operands = _OPERAND_RE.findall(arg_text)
+        instr = Instr(name, opcode, out_type, rhs, operands)
+        cur.instrs.append(instr)
+        cur.shapes[name] = out_type
+        # parameters: "%p = f32[..]{..} parameter(0)" handled like any instr
+    return comps
+
+
+def _attr(body: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", body)
+    return m.group(1) if m else None
+
+
+def _trip_count(body: str) -> int:
+    m = re.search(r'known_trip_count..{"n":"(\d+)"', body)
+    return int(m.group(1)) if m else 1
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    out_elems = shape_elems(ins.out_type)
+    lhs_name = ins.operands[0] if ins.operands else None
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.body)
+    if not (lhs_name and m and lhs_name in comp.shapes):
+        return 0.0
+    lhs_shape = _SHAPE_RE.search(comp.shapes[lhs_name])
+    if not lhs_shape:
+        return 0.0
+    dims = [int(d) for d in lhs_shape.group(2).split(",") if d]
+    k = 1
+    for ci in m.group(1).split(","):
+        if ci:
+            k *= dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(comp: Computation, ins: Instr) -> float:
+    # MACs ~= out_elems * prod(kernel spatial+input feature dims) * 2
+    rhs_name = ins.operands[1] if len(ins.operands) > 1 else None
+    if not rhs_name or rhs_name not in comp.shapes:
+        return 0.0
+    ksh = _SHAPE_RE.search(comp.shapes[rhs_name])
+    if not ksh:
+        return 0.0
+    kdims = [int(d) for d in ksh.group(2).split(",") if d]
+    out_elems = shape_elems(ins.out_type)
+    import numpy as np
+    return 2.0 * out_elems * (np.prod(kdims[:-1]) if kdims else 1)
+
+
+def _operand_read_bytes(comps: Dict[str, "Computation"], comp: "Computation",
+                        ins: Instr) -> float:
+    """Bytes read from operands.  For fusions, an operand consumed only via
+    dynamic-slice/gather inside the fused computation is charged the slice
+    size, not the full array — otherwise a scan body that dynamic-slices its
+    stacked layer weights would be billed the whole stack every iteration."""
+    slice_reads: Dict[int, float] = {}
+    if ins.opcode == "fusion":
+        callee_name = _attr(ins.body, "calls")
+        callee = comps.get(callee_name) if callee_name else None
+        if callee is not None:
+            # map parameter index -> parameter instr name
+            param_names = {}
+            for sub in callee.instrs:
+                if sub.opcode == "parameter":
+                    m = re.search(r"parameter\((\d+)\)", sub.body)
+                    if m:
+                        param_names[sub.name] = int(m.group(1))
+            consumers: Dict[int, List[Tuple[Instr, int]]] = {}
+            for sub in callee.instrs:
+                for oi, o in enumerate(sub.operands):
+                    if o in param_names:
+                        consumers.setdefault(param_names[o],
+                                             []).append((sub, oi))
+            for idx, subs in consumers.items():
+                # operand touched only via slicing reads or in-place
+                # dynamic-update-slice writes (operand 0 of the dus):
+                # charge the slice/update size, not the full buffer — a
+                # backward scan that dus-appends into a (S, ...) stack
+                # otherwise gets billed quadratically (measured 76 TiB
+                # phantom traffic on xlstm sLSTM).
+                ok = subs and all(
+                    s.opcode in ("dynamic-slice", "gather", "slice")
+                    or (s.opcode == "dynamic-update-slice" and oi == 0)
+                    for s, oi in subs)
+                if ok:
+                    total_b = 0
+                    for s, oi in subs:
+                        if s.opcode == "dynamic-update-slice":
+                            upd = (callee.shapes.get(s.operands[1], "")
+                                   if len(s.operands) > 1 else "")
+                            total_b += shape_bytes(upd)
+                        else:
+                            total_b += shape_bytes(s.out_type)
+                    slice_reads[idx] = total_b
+    total = 0.0
+    for i, o in enumerate(ins.operands):
+        if i in slice_reads:
+            total += slice_reads[i]
+        else:
+            total += shape_bytes(comp.shapes.get(o, ""))
+    return total
+
+
+def _fusion_output_bytes(comps: Dict[str, "Computation"], ins: Instr,
+                         default: float) -> float:
+    """If the fused computation's root is a dynamic-update-slice (possibly
+    behind converts/bitcasts), the fusion writes in place: charge the
+    update size instead of the whole output buffer."""
+    callee_name = _attr(ins.body, "calls")
+    callee = comps.get(callee_name) if callee_name else None
+    if callee is None or not callee.instrs:
+        return default
+    cur = callee.instrs[-1]
+    seen = 0
+    while cur.opcode in ("convert", "bitcast", "copy") and cur.operands \
+            and seen < 4:
+        nxt = [i for i in callee.instrs if i.name == cur.operands[0]]
+        if not nxt:
+            return default
+        cur = nxt[0]
+        seen += 1
+    if cur.opcode == "dynamic-update-slice" and len(cur.operands) > 1:
+        return shape_bytes(callee.shapes.get(cur.operands[1], "")) or default
+    return default
+
+
+@dataclasses.dataclass
+class CostReport:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_link_bytes: float = 0.0
+    collective_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "CostReport", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.collective_link_bytes += other.collective_link_bytes * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0) + v * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = (self.collective_counts.get(k, 0)
+                                         + int(v * mult))
+
+
+def analyze(text: str, entry: Optional[str] = None,
+            tpu_fusion: bool = True) -> CostReport:
+    comps = parse_module(text)
+    # find entry computation
+    entry_name = entry
+    if entry_name is None:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+        entry_name = m.group(1) if m else next(iter(comps))
+    memo: Dict[str, CostReport] = {}
+
+    def comp_cost(name: str, count_bytes: bool) -> CostReport:
+        key = name + ("#b" if count_bytes else "#f")
+        if key in memo:
+            return memo[key]
+        rep = CostReport()
+        comp = comps.get(name)
+        if comp is None:
+            memo[key] = rep
+            return rep
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "dot":
+                rep.flops += _dot_flops(comp, ins)
+            elif op == "convolution":
+                rep.flops += _conv_flops(comp, ins)
+            base = op.replace("-start", "")
+            if base in COLLECTIVES:
+                payload = shape_bytes(ins.out_type)
+                if base == "reduce-scatter":
+                    payload = sum(shape_bytes(comp.shapes.get(o, ""))
+                                  for o in ins.operands)
+                rep.collective_bytes[base] = (
+                    rep.collective_bytes.get(base, 0) + payload)
+                rep.collective_counts[base] = (
+                    rep.collective_counts.get(base, 0) + 1)
+                rep.collective_link_bytes += payload * _LINK_FACTOR[base]
+            if op == "while":
+                body = _attr(ins.body, "body")
+                cond = _attr(ins.body, "condition")
+                n = _trip_count(ins.body)
+                if body:
+                    rep.add(comp_cost(body, count_bytes), n)
+                if cond:
+                    rep.add(comp_cost(cond, count_bytes), n)
+            elif op in ("call", "async-start"):
+                callee = _attr(ins.body, "to_apply") or _attr(ins.body, "calls")
+                if callee:
+                    rep.add(comp_cost(callee, count_bytes))
+            elif op == "fusion":
+                callee = _attr(ins.body, "calls")
+                if callee:
+                    # descend for flops only; fusion internals don't hit HBM
+                    inner = comp_cost(callee, False)
+                    rep.flops += inner.flops
+                    rep.collective_link_bytes += inner.collective_link_bytes
+                    for k, v in inner.collective_bytes.items():
+                        rep.collective_bytes[k] = (
+                            rep.collective_bytes.get(k, 0) + v)
+            elif op == "conditional":
+                branches = re.findall(r"(?:branch_computations=\{([^}]*)\}|"
+                                      r"(?:true|false)_computation=%([\w.\-]+))",
+                                      ins.body)
+                names: List[str] = []
+                for grp in branches:
+                    if grp[0]:
+                        names += _OPERAND_RE.findall(grp[0]) or [
+                            s.strip().lstrip("%") for s in grp[0].split(",")]
+                    if grp[1]:
+                        names.append(grp[1])
+                if names:   # charge the max-cost branch
+                    subs = [comp_cost(n, count_bytes) for n in names]
+                    best = max(subs, key=lambda r: r.flops + r.hbm_bytes)
+                    rep.add(best)
+            skip = {"parameter", "constant", "tuple", "get-tuple-element",
+                    "bitcast", "while", "call", "conditional"}
+            if tpu_fusion:
+                skip = skip | _TPU_FUSABLE
+            if count_bytes and op not in skip:
+                if op == "dynamic-update-slice":
+                    # in-place update: traffic = the written slice (read
+                    # update + write), NOT the full destination buffer
+                    upd = (shape_bytes(comp.shapes.get(ins.operands[1], ""))
+                           if len(ins.operands) > 1 else 0)
+                    rep.hbm_bytes += 2 * upd
+                elif op in ("dynamic-slice", "gather"):
+                    # read slice + write result
+                    rep.hbm_bytes += 2 * shape_bytes(ins.out_type)
+                elif op == "scatter":
+                    upd = (shape_bytes(comp.shapes.get(ins.operands[2], ""))
+                           if len(ins.operands) > 2 else
+                           shape_bytes(ins.out_type))
+                    rep.hbm_bytes += 2 * upd
+                else:
+                    b = shape_bytes(ins.out_type)
+                    if op == "fusion":
+                        b = _fusion_output_bytes(comps, ins, b)
+                    reads = _operand_read_bytes(comps, comp, ins)
+                    rep.hbm_bytes += b + reads
+        memo[key] = rep
+        return rep
+
+    return comp_cost(entry_name, True)

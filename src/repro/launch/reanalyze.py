@@ -1,0 +1,67 @@
+"""Re-run the trip-count-aware HLO analysis over saved dry-run HLO dumps
+(reports/*.hlo.zst) without recompiling, refreshing the roofline fields of
+the matching JSON records.  Used when the analyzer's cost model changes.
+
+  PYTHONPATH=src python -m repro.launch.reanalyze --out reports
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import zstandard
+
+from repro.launch import hlo_analysis
+from repro.launch import mesh as mesh_lib
+
+
+def reanalyze_record(json_path: str) -> bool:
+    hlo_path = json_path.replace(".json", ".hlo.zst")
+    if not os.path.exists(hlo_path):
+        return False
+    with open(json_path) as f:
+        rec = json.load(f)
+    if rec.get("status") != "ok":
+        return False
+    with open(hlo_path, "rb") as f:
+        text = zstandard.ZstdDecompressor().decompress(f.read()).decode()
+    rep = hlo_analysis.analyze(text)
+    compute_t = rep.flops / mesh_lib.PEAK_FLOPS_BF16
+    memory_t = rep.hbm_bytes / mesh_lib.HBM_BW
+    coll_t = rep.collective_link_bytes / mesh_lib.ICI_BW
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": coll_t}
+    rec.update({
+        "flops_per_chip": rep.flops,
+        "hbm_bytes_per_chip": rep.hbm_bytes,
+        "collective_bytes": {k: float(v)
+                             for k, v in rep.collective_bytes.items()},
+        "collective_counts": rep.collective_counts,
+        "collective_link_bytes": rep.collective_link_bytes,
+        "compute_s": compute_t, "memory_s": memory_t, "collective_s": coll_t,
+        "dominant": max(terms, key=terms.get).replace("_s", ""),
+        "useful_flop_frac": (rec["model_flops_per_chip"] / rep.flops
+                             if rep.flops else 0.0),
+        "step_time_bound_s": max(terms.values()),
+    })
+    with open(json_path, "w") as f:
+        json.dump(rec, f, indent=2)
+    return True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="reports")
+    args = ap.parse_args()
+    n = 0
+    for path in sorted(glob.glob(os.path.join(args.out, "*.json"))):
+        if reanalyze_record(path):
+            n += 1
+            print(f"[reanalyze] {os.path.basename(path)}")
+    print(f"[reanalyze] refreshed {n} records")
+
+
+if __name__ == "__main__":
+    main()

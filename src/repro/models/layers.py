@@ -1,0 +1,110 @@
+"""Shared neural-net building blocks (pure jnp, functional, pytree params)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------- norms
+
+def init_norm(cfg, key, d: int) -> Params:
+    p = {"scale": jnp.ones((d,), _dtype(cfg))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), _dtype(cfg))
+    return p
+
+
+def apply_norm(cfg, p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    # barrier before the fp32 upcast: prevents XLA from hoisting the convert
+    # into the remat residual-stack write, which would store all activation
+    # checkpoints in f32 instead of bf16 (2x memory; measured on
+    # starcoder2-7b train_4k: 4.8 GiB vs 2.25 GiB per layer stack).
+    x = jax.lax.optimization_barrier(x)
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- linear
+
+def init_linear(cfg, key, d_in: int, d_out: int, scale: float = None) -> Params:
+    scale = scale if scale is not None else d_in ** -0.5
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    return {"w": w.astype(_dtype(cfg))}
+
+
+def apply_linear(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["w"]
+
+
+# ---------------------------------------------------------------- MLP / GLU
+
+def init_mlp(cfg, key, d: int, d_ff: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": init_linear(cfg, k1, d, d_ff),
+         "down": init_linear(cfg, k2, d_ff, d)}
+    if cfg.act in ("silu", "geglu"):
+        p["gate"] = init_linear(cfg, k3, d, d_ff)
+    return p
+
+
+def apply_mlp(cfg, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    up = apply_linear(p["up"], x)
+    if cfg.act == "silu":
+        h = jax.nn.silu(apply_linear(p["gate"], x)) * up
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(apply_linear(p["gate"], x)) * up
+    else:  # gelu
+        h = jax.nn.gelu(up)
+    return apply_linear(p["down"], h)
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope_freqs(cfg, head_dim: int) -> jnp.ndarray:
+    half = head_dim // 2
+    return cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(cfg, x: jnp.ndarray, positions: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(cfg, hd)                          # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]                  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- embeddings
+
+def init_embed(cfg, key) -> Params:
+    w = jax.random.normal(key, (cfg.vocab, cfg.d_model), jnp.float32) * 0.02
+    return {"w": w.astype(_dtype(cfg))}
+
+
+def embed_tokens(p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["w"], tokens, axis=0)
+
+
+def logits_from_hidden(cfg, params, h: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return h @ params["embed"]["w"].T
+    return apply_linear(params["lm_head"], h)

@@ -1,0 +1,94 @@
+"""The paper's experiment models (Sec. VI): multinomial logistic regression
+(MCLR), 3-layer MLP, and a character LSTM.  Small pytree params + apply fns
+for the vmap federated simulator.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import SmallModelConfig
+
+Params = Dict[str, Any]
+
+
+def init_small(cfg: SmallModelConfig, key) -> Params:
+    if cfg.kind == "mclr":
+        return {"w": jnp.zeros((cfg.n_features, cfg.n_classes)),
+                "b": jnp.zeros((cfg.n_classes,))}
+    if cfg.kind == "mlp":
+        k1, k2, k3 = jax.random.split(key, 3)
+        s1 = cfg.n_features ** -0.5
+        s2 = cfg.hidden ** -0.5
+        return {
+            "w1": jax.random.normal(k1, (cfg.n_features, cfg.hidden)) * s1,
+            "b1": jnp.zeros((cfg.hidden,)),
+            "w2": jax.random.normal(k2, (cfg.hidden, cfg.hidden)) * s2,
+            "b2": jnp.zeros((cfg.hidden,)),
+            "w3": jax.random.normal(k3, (cfg.hidden, cfg.n_classes)) * s2,
+            "b3": jnp.zeros((cfg.n_classes,)),
+        }
+    if cfg.kind == "lstm":
+        k1, k2, k3 = jax.random.split(key, 3)
+        se = cfg.embed ** -0.5
+        sh = cfg.hidden ** -0.5
+        return {
+            "embed": jax.random.normal(k1, (cfg.vocab, cfg.embed)) * 0.1,
+            "wx": jax.random.normal(k2, (cfg.embed, 4 * cfg.hidden)) * se,
+            "wh": jax.random.normal(k3, (cfg.hidden, 4 * cfg.hidden)) * sh,
+            "b": jnp.zeros((4 * cfg.hidden,)),
+            "head_w": jnp.zeros((cfg.hidden, cfg.n_classes)),
+            "head_b": jnp.zeros((cfg.n_classes,)),
+        }
+    raise ValueError(cfg.kind)
+
+
+def logits_small(cfg: SmallModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.kind == "mclr":
+        return x @ p["w"] + p["b"]
+    if cfg.kind == "mlp":
+        h = jax.nn.relu(x @ p["w1"] + p["b1"])
+        h = jax.nn.relu(h @ p["w2"] + p["b2"])
+        return h @ p["w3"] + p["b3"]
+    if cfg.kind == "lstm":
+        # x: (B, T) int tokens; classify from final hidden state
+        emb = jnp.take(p["embed"], x.astype(jnp.int32), axis=0)  # (B,T,E)
+        B = x.shape[0]
+        h0 = jnp.zeros((B, cfg.hidden))
+        c0 = jnp.zeros((B, cfg.hidden))
+
+        def step(carry, e_t):
+            h, c = carry
+            g = e_t @ p["wx"] + h @ p["wh"] + p["b"]
+            i, f, o, z = jnp.split(g, 4, axis=-1)
+            c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(z)
+            h = jax.nn.sigmoid(o) * jnp.tanh(c)
+            return (h, c), None
+
+        (h, _), _ = jax.lax.scan(step, (h0, c0), jnp.moveaxis(emb, 1, 0))
+        return h @ p["head_w"] + p["head_b"]
+    raise ValueError(cfg.kind)
+
+
+def small_loss(cfg: SmallModelConfig, p: Params, batch: Dict) -> jnp.ndarray:
+    """Mean cross-entropy over a batch {'x': features/tokens, 'y': labels}.
+
+    Supports an optional per-example weight mask 'mask' (for padded client
+    datasets inside vmap).
+    """
+    logits = logits_small(cfg, p, batch["x"])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, batch["y"][:, None].astype(jnp.int32),
+                             axis=-1)[:, 0]
+    mask = batch.get("mask", jnp.ones_like(ll))
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def small_accuracy(cfg: SmallModelConfig, p: Params, batch: Dict) -> jnp.ndarray:
+    logits = logits_small(cfg, p, batch["x"])
+    pred = jnp.argmax(logits, axis=-1)
+    mask = batch.get("mask", jnp.ones(batch["y"].shape[0]))
+    correct = (pred == batch["y"]).astype(jnp.float32) * mask
+    return jnp.sum(correct) / jnp.maximum(jnp.sum(mask), 1.0)

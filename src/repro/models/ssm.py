@@ -1,0 +1,208 @@
+"""Mamba2 (SSD) block — chunked parallel scan, TPU-friendly.
+
+The selective-state-space recurrence  h_t = a_t * h_{t-1} + dt_t B_t x_t^T,
+y_t = C_t h_t + D x_t  is evaluated with the standard chunked SSD
+decomposition: O(chunk^2) intra-chunk einsums (MXU-friendly) plus a short
+`lax.scan` over chunk boundary states.  Decode is the 1-step recurrence.
+
+Shapes: heads H = d_inner / head_dim; A is a scalar decay per head
+(ngroups = 1, B/C shared across heads, as in Mamba2).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Params = Dict[str, Any]
+
+
+def d_inner_of(cfg) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def n_ssm_heads(cfg) -> int:
+    return d_inner_of(cfg) // cfg.ssm.head_dim
+
+
+def init_mamba2(cfg, key) -> Params:
+    s = cfg.ssm
+    d, di = cfg.d_model, d_inner_of(cfg)
+    H = n_ssm_heads(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    # fused input projection: x, z (gate), B, C, dt
+    proj_out = 2 * di + 2 * s.d_state + H
+    return {
+        "in_proj": layers.init_linear(cfg, ks[0], d, proj_out),
+        "out_proj": layers.init_linear(cfg, ks[1], di, d),
+        "conv_w": (jax.random.normal(ks[2], (s.d_conv, di), jnp.float32)
+                   * s.d_conv ** -0.5).astype(dt),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+    }
+
+
+def _split_proj(cfg, zxbcdt: jnp.ndarray):
+    s = cfg.ssm
+    di = d_inner_of(cfg)
+    H = n_ssm_heads(cfg)
+    z, x, Bm, Cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + s.d_state, 2 * di + 2 * s.d_state], axis=-1)
+    del H
+    return z, x, Bm, Cm, dt
+
+
+def _causal_conv(cfg, w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv, x: (B,S,di), w: (K,di)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return jax.nn.silu(out)
+
+
+def pick_chunk(S: int, target: int) -> int:
+    """Largest chunk <= target that divides S (worst case 1)."""
+    c = min(target, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a: (..., T) per-step log decays -> (..., T, T) lower-triangular
+    cumulative sums L[t, s] = sum_{r=s+1..t} a_r (NEG_INF above diagonal)."""
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    L = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, L, -jnp.inf)
+
+
+def ssd_chunked(x, loga, w, Bm, Cm, chunk: int,
+                init_state=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked linear recurrence (SSD / gated linear attention).
+
+        h_t = exp(loga_t) * h_{t-1} + w_t * B_t x_t^T
+        y_t = C_t . h_t
+
+    x:    (B, S, H, P)    head inputs (mamba2: conv'd x; mLSTM: values)
+    loga: (B, S, H)       per-step log decay (mamba2: dt*A; mLSTM: log f)
+    w:    (B, S, H)       input weights (mamba2: dt; mLSTM: input gate i)
+    Bm:   (B, S, G, N)    input maps, G in {1, H} groups (mamba2: B; mLSTM: k)
+    Cm:   (B, S, G, N)    output maps (mamba2: C; mLSTM: q)
+    returns y: (B, S, H, P), final_state: (B, H, P, N)
+    """
+    B, S, H, P = x.shape
+    G, N = Bm.shape[-2], Bm.shape[-1]
+    hg = H // G
+    nc = S // chunk
+
+    def per_chunk(arr, trailing):
+        return jnp.moveaxis(arr.reshape((B, nc, chunk) + trailing), 1, 0)
+
+    xs = (per_chunk(x, (G, hg, P)), per_chunk(w, (G, hg)),
+          per_chunk(Bm, (G, N)), per_chunk(Cm, (G, N)),
+          per_chunk(loga, (G, hg)))
+    h0 = (jnp.zeros((B, G, hg, P, N), jnp.float32) if init_state is None
+          else init_state.reshape(B, G, hg, P, N).astype(jnp.float32))
+
+    def body(h, inp):
+        xc, wc, Bc, Cc, a = inp                    # leading dims (B, T, ...)
+        a_h = jnp.moveaxis(a, 1, -1)               # (B,G,hg,T)
+        L = jnp.exp(_segsum(a_h))                  # (B,G,hg,T,T)
+        # intra-chunk term
+        scores = jnp.einsum("btgn,bsgn->bgts", Cc, Bc)
+        y = jnp.einsum("bgts,bghts,bsgh,bsghp->btghp", scores, L, wc, xc)
+        # inter-chunk contribution from the entering state
+        decay_in = jnp.exp(jnp.cumsum(a_h, axis=-1))          # (B,G,hg,T)
+        y = y + jnp.einsum("btgn,bghpn,bght->btghp", Cc, h, decay_in)
+        # state update: h' = exp(sum a) h + sum_s exp(sum_{r>s} a) w_s B_s x_s
+        decay_to_end = jnp.exp(
+            jnp.cumsum(a_h[..., ::-1], axis=-1)[..., ::-1] - a_h)
+        state = jnp.einsum("bghs,bsgh,bsgn,bsghp->bghpn",
+                           decay_to_end, wc, Bc, xc)
+        chunk_decay = jnp.exp(jnp.sum(a_h, axis=-1))          # (B,G,hg)
+        h_new = h * chunk_decay[..., None, None] + state
+        return h_new, y
+
+    h_final, ys = jax.lax.scan(jax.checkpoint(body), h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P)
+    return y, h_final.reshape(B, H, P, N)
+
+
+def _mamba2_apply(cfg, p: Params, u: jnp.ndarray):
+    s = cfg.ssm
+    H, P = n_ssm_heads(cfg), s.head_dim
+    zxbcdt = layers.apply_linear(p["in_proj"], u)
+    z, x_raw, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+    x = _causal_conv(cfg, p["conv_w"], x_raw)
+    B_, S_, _ = x.shape
+    xh = x.reshape(B_, S_, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    loga = dt * A[None, None, :]
+    y, h_final = ssd_chunked(xh.astype(jnp.float32), loga, dt,
+                             Bm.astype(jnp.float32)[:, :, None, :],
+                             Cm.astype(jnp.float32)[:, :, None, :],
+                             pick_chunk(S_, s.chunk))
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = (y.reshape(B_, S_, H * P) * jax.nn.silu(z.astype(jnp.float32)))
+    out = layers.apply_linear(p["out_proj"], y.astype(u.dtype))
+    return out, h_final, x_raw
+
+
+def mamba2_forward(cfg, p: Params, u: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence Mamba2 block. u: (B, S, d_model)."""
+    return _mamba2_apply(cfg, p, u)[0]
+
+
+def mamba2_prefill(cfg, p: Params, u: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence forward + decode-ready state."""
+    out, h_final, x_raw = _mamba2_apply(cfg, p, u)
+    K = cfg.ssm.d_conv
+    conv_state = x_raw[:, x_raw.shape[1] - (K - 1):, :].astype(jnp.float32)
+    return out, {"ssm": h_final.astype(jnp.float32), "conv": conv_state}
+
+
+# ------------------------------------------------------------- decode
+
+def init_mamba_state(cfg, batch: int, dtype=jnp.float32) -> Dict:
+    s = cfg.ssm
+    H, P = n_ssm_heads(cfg), s.head_dim
+    return {
+        "ssm": jnp.zeros((batch, H, P, s.d_state), dtype),
+        "conv": jnp.zeros((batch, s.d_conv - 1, d_inner_of(cfg)), dtype),
+    }
+
+
+def mamba2_decode(cfg, p: Params, u: jnp.ndarray, state: Dict
+                  ) -> Tuple[jnp.ndarray, Dict]:
+    """One-token step. u: (B, 1, d_model)."""
+    s = cfg.ssm
+    H, P = n_ssm_heads(cfg), s.head_dim
+    zxbcdt = layers.apply_linear(p["in_proj"], u[:, 0])
+    z, x, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+    # conv over (state || x)
+    hist = jnp.concatenate(
+        [state["conv"], x[:, None, :].astype(state["conv"].dtype)], axis=1)
+    w = p["conv_w"]
+    xc = jnp.einsum("bkd,kd->bd", hist, w.astype(hist.dtype))
+    xc = jax.nn.silu(xc)
+    new_conv = hist[:, 1:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A[None, :])                               # (B,H)
+    xh = xc.reshape(-1, H, P).astype(jnp.float32)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm.astype(jnp.float32), xh)
+    h = state["ssm"] * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), h)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(-1, H * P) * jax.nn.silu(z.astype(jnp.float32))
+    out = layers.apply_linear(p["out_proj"], y.astype(u.dtype)[:, None, :])
+    return out, {"ssm": h, "conv": new_conv}

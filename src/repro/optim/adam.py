@@ -1,0 +1,61 @@
+"""Adam / SGD-with-momentum server optimizers (for server-side adaptive FL
+variants and for the centralized-baseline comparisons)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params):
+    return {}
+
+
+def sgd_update(params, grads, state, lr: float):
+    new = jax.tree.map(
+        lambda w, g: (w.astype(jnp.float32)
+                      - lr * g.astype(jnp.float32)).astype(w.dtype),
+        params, grads)
+    return new, state
+
+
+def momentum_init(params):
+    return {"m": jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)}
+
+
+def momentum_update(params, grads, state, lr: float, beta: float = 0.9):
+    m = jax.tree.map(lambda mv, g: beta * mv + g.astype(jnp.float32),
+                     state["m"], grads)
+    new = jax.tree.map(
+        lambda w, mv: (w.astype(jnp.float32) - lr * mv).astype(w.dtype),
+        params, m)
+    return new, {"m": m}
+
+
+def adam_init(params):
+    z = lambda: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    return {"m": z(), "v": z(), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr: float, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda mv, g: b1 * mv + (1 - b1) * g.astype(jnp.float32),
+                     state["m"], grads)
+    v = jax.tree.map(
+        lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state["v"], grads)
+    mh = jax.tree.map(lambda x: x / (1 - b1 ** t.astype(jnp.float32)), m)
+    vh = jax.tree.map(lambda x: x / (1 - b2 ** t.astype(jnp.float32)), v)
+    new = jax.tree.map(
+        lambda w, mm, vv: (w.astype(jnp.float32)
+                           - lr * mm / (jnp.sqrt(vv) + eps)).astype(w.dtype),
+        params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+OPTIMIZERS: Dict[str, Tuple[Callable, Callable]] = {
+    "sgd": (sgd_init, sgd_update),
+    "momentum": (momentum_init, momentum_update),
+    "adam": (adam_init, adam_update),
+}

@@ -1,0 +1,27 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(lr: float, total_steps: int, warmup: int = 0, floor: float = 0.0):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1),
+                        0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return lr * jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def inverse_sqrt(lr: float, warmup: int = 100):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        return lr * jnp.minimum((step + 1) / warmup,
+                                (warmup / jnp.maximum(step + 1, 1)) ** 0.5)
+    return fn

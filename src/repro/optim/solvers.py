@@ -1,0 +1,72 @@
+"""Local solvers for the device update step.
+
+FedProx/FOLB devices minimize  h_k(w, w^t) = F_k(w) + (μ/2)||w − w^t||²
+(Eq. 3) with any local optimizer; we provide (prox-)gradient-descent with a
+configurable step count, which realises the paper's γ-inexact solver
+(Assumption 4).  ``gamma_of`` computes the per-device inexactness
+γ_k = ||∇h_k(w_k^{t+1}, w^t)|| / ||∇h_k(w^t, w^t)||  (Sec. V-A) that the
+heterogeneity-aware aggregation consumes.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree
+
+
+def prox_grad(loss_grad_fn: Callable, w, w_ref, mu: float):
+    """∇h_k(w, w_ref) = ∇F_k(w) + μ (w − w_ref)."""
+    g = loss_grad_fn(w)
+    return jax.tree.map(
+        lambda gl, wl, rl: gl.astype(jnp.float32)
+        + mu * (wl.astype(jnp.float32) - rl.astype(jnp.float32)),
+        g, w, w_ref)
+
+
+def prox_sgd(loss_grad_fn: Callable, w_ref, lr: float, mu: float,
+             n_steps, max_steps: int):
+    """Run up to `max_steps` prox-gradient steps, masking steps >= n_steps
+    (device computational heterogeneity: each device only affords n_steps).
+
+    loss_grad_fn: w -> ∇F_k(w) (pytree).  n_steps may be a traced scalar.
+    Returns w_k^{t+1}.
+    """
+    def body(w, i):
+        g = prox_grad(loss_grad_fn, w, w_ref, mu)
+        live = (i < n_steps).astype(jnp.float32)
+        w = jax.tree.map(
+            lambda wl, gl: (wl.astype(jnp.float32) - lr * live * gl
+                            ).astype(wl.dtype), w, g)
+        return w, None
+
+    w, _ = jax.lax.scan(body, w_ref, jnp.arange(max_steps))
+    return w
+
+
+def gamma_of(loss_grad_fn: Callable, w_new, w_ref, mu: float) -> jnp.ndarray:
+    """γ_k = ||∇h(w_new, w_ref)|| / ||∇h(w_ref, w_ref)||, clipped to [0, 1].
+
+    Note ∇h(w_ref, w_ref) = ∇F_k(w_ref)."""
+    gn = tree.tree_norm(prox_grad(loss_grad_fn, w_new, w_ref, mu))
+    g0 = tree.tree_norm(loss_grad_fn(w_ref))
+    return jnp.clip(gn / jnp.maximum(g0, 1e-12), 0.0, 1.0)
+
+
+def local_update(loss_fn: Callable, w_ref, batch: Dict, lr: float, mu: float,
+                 n_steps, max_steps: int) -> Tuple[Dict, Dict, jnp.ndarray]:
+    """One device's round contribution.
+
+    Returns (delta_k, grad_k, gamma_k) where grad_k = ∇F_k(w^t) is the local
+    gradient at the *reference* point (what FOLB communicates along with the
+    updated parameters).
+    """
+    grad_fn = jax.grad(lambda w: loss_fn(w, batch))
+    g_ref = grad_fn(w_ref)
+    w_new = prox_sgd(grad_fn, w_ref, lr, mu, n_steps, max_steps)
+    gamma = gamma_of(grad_fn, w_new, w_ref, mu)
+    delta = tree.tree_sub(
+        tree.tree_cast(w_new, jnp.float32), tree.tree_cast(w_ref, jnp.float32))
+    return delta, g_ref, gamma

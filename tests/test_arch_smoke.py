@@ -1,0 +1,158 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch at
+reduced scale (2 layers, d_model<=512, <=4 experts) runs one forward/train
+step on CPU with correct output shapes and no NaNs; decode-capable archs
+additionally run prefill + decode and check consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED, get_config, n_params
+from repro.fed.distributed import RoundConfig, folb_round
+from repro.models import model
+
+B, S = 2, 32
+
+
+def _batch(cfg, key, b=B, s=S):
+    batch = {"labels": jax.random.randint(key, (b, s), 0, cfg.vocab)}
+    if cfg.family == "audio" or cfg.frontend_positions == -1:
+        batch["frontend"] = jax.random.normal(key, (b, s, cfg.d_model))
+    else:
+        batch["tokens"] = jax.random.randint(
+            jax.random.fold_in(key, 1), (b, s), 0, cfg.vocab)
+        if cfg.frontend_positions > 0:
+            batch["frontend"] = jax.random.normal(
+                key, (b, cfg.frontend_positions, cfg.d_model))
+    return batch
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(42)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+class TestArchSmoke:
+    def test_forward_shapes_and_finite(self, arch, key):
+        cfg = get_config(arch).reduced()
+        params = model.init_params(cfg, key)
+        batch = _batch(cfg, key)
+        logits, aux = model.forward(cfg, params, batch)
+        assert logits.shape == (B, S, cfg.vocab)
+        assert bool(jnp.isfinite(logits).all())
+        assert bool(jnp.isfinite(aux))
+
+    def test_train_step_decreases_loss(self, arch, key):
+        """One FOLB round on the reduced config must run and reduce the
+        client loss (lr tuned small; just checks trainability)."""
+        cfg = get_config(arch).reduced()
+        params = model.init_params(cfg, key)
+        K = 2
+        batch = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            _batch(cfg, key), _batch(cfg, jax.random.fold_in(key, 9)))
+        rc = RoundConfig(algo="folb", n_clients=K, local_steps=2,
+                         lr=0.05, mu=0.01, remat=True)
+        new_params, metrics = folb_round(cfg, rc, params, batch)
+        assert bool(jnp.isfinite(metrics["client_loss"]))
+        l0 = model.loss_fn(cfg, params, jax.tree.map(lambda x: x[0], batch))
+        l1 = model.loss_fn(cfg, new_params,
+                           jax.tree.map(lambda x: x[0], batch))
+        assert float(l1) < float(l0)
+
+    def test_grad_no_nans(self, arch, key):
+        cfg = get_config(arch).reduced()
+        params = model.init_params(cfg, key)
+        batch = _batch(cfg, key)
+        g = jax.grad(lambda p: model.loss_fn(cfg, p, batch, remat=True))(params)
+        for leaf in jax.tree.leaves(g):
+            assert bool(jnp.isfinite(leaf).all())
+
+
+DECODERS = [a for a in ASSIGNED if get_config(a).supports_decode]
+
+
+@pytest.mark.parametrize("arch", DECODERS)
+def test_prefill_decode_consistency(arch, key):
+    """decode_step after an (S-1)-token prefill must reproduce the
+    full-forward logits at the last position (numerical tolerance: the two
+    paths use different chunkings)."""
+    cfg = get_config(arch).reduced()
+    params = model.init_params(cfg, key)
+    batch = _batch(cfg, key)
+    full_logits, _ = model.forward(cfg, params, batch)
+
+    pre = {k: (v[:, :S - 1] if k in ("tokens", "labels") else v)
+           for k, v in batch.items()}
+    _, cache = model.prefill(cfg, params, pre, cache_len=S)
+    step_logits, _ = model.decode_step(
+        cfg, params, cache, batch["tokens"][:, S - 1:S])
+    err = float(jnp.max(jnp.abs(step_logits - full_logits[:, -1])))
+    assert err < 0.05, f"{arch}: decode/forward divergence {err}"
+
+
+@pytest.mark.parametrize("arch", DECODERS)
+def test_decode_many_steps_finite(arch, key):
+    cfg = get_config(arch).reduced()
+    params = model.init_params(cfg, key)
+    cache = model.init_cache(cfg, B, 64)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    step = jax.jit(lambda p, c, t: model.decode_step(cfg, p, c, t))
+    for _ in range(8):
+        logits, cache = step(params, cache, tok)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_all_archs_registered():
+    assert len(ASSIGNED) == 10
+    for a in ASSIGNED:
+        cfg = get_config(a)
+        assert n_params(cfg) > 0
+        assert cfg.source
+
+
+def test_param_counts_in_expected_range():
+    """Analytic parameter counts should be near the published sizes."""
+    expected = {
+        "deepseek-coder-33b": (30e9, 36e9),
+        "mixtral-8x7b": (43e9, 50e9),
+        "deepseek-moe-16b": (14e9, 19e9),
+        "starcoder2-7b": (6e9, 8.5e9),
+        "granite-20b": (18e9, 23e9),
+        "gemma-7b": (7e9, 10e9),
+        "phi-3-vision-4.2b": (3.3e9, 4.8e9),
+        "zamba2-2.7b": (2.2e9, 3.4e9),
+        "xlstm-1.3b": (1.0e9, 2.2e9),  # block-diag qkv; see DESIGN.md §9
+        "hubert-xlarge": (0.8e9, 1.3e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = n_params(get_config(arch))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+@pytest.mark.parametrize("arch", ["starcoder2-7b", "gemma-7b", "mixtral-8x7b"])
+def test_quantized_kv_decode_close(arch, key):
+    """int8 KV cache (beyond-paper serving feature, §Perf D): decode logits
+    within ~1% of the full-precision path."""
+    cfg = get_config(arch).reduced()
+    params = model.init_params(cfg, key)
+    batch = _batch(cfg, key)
+    full, _ = model.forward(cfg, params, batch)
+    pre = {k: (v[:, :S - 1] if k in ("tokens", "labels") else v)
+           for k, v in batch.items()}
+    _, cache = model.prefill(cfg, params, pre, cache_len=S, quantize_kv=True)
+    dec, cache2 = model.decode_step(cfg, params, cache,
+                                    batch["tokens"][:, S - 1:S])
+    scale = float(jnp.abs(full[:, -1]).max())
+    assert float(jnp.abs(dec - full[:, -1]).max()) < 0.05 * scale + 0.05
+    # cache leaves are int8 + f16 scales
+    assert cache["kv"]["k"].dtype == jnp.int8
+    assert cache["kv"]["k_scale"].dtype == jnp.float16
+    # continued decode stays finite
+    tok = jnp.argmax(dec, -1)[:, None].astype(jnp.int32)
+    for _ in range(4):
+        dec, cache2 = model.decode_step(cfg, params, cache2, tok)
+        tok = jnp.argmax(dec, -1)[:, None].astype(jnp.int32)
+    assert bool(jnp.isfinite(dec).all())

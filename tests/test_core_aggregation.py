@@ -1,0 +1,172 @@
+"""Unit + property tests for the FOLB core: selection distributions,
+aggregation rules, and their invariants (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation, bounds, selection, tree
+
+K, D = 5, 16
+
+
+def _stacked(key, k=K, d=D, scale=1.0):
+    return {"a": jax.random.normal(key, (k, d)) * scale,
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (k, 4)) * scale}
+
+
+def _params(key, d=D):
+    return {"a": jax.random.normal(key, (d,)),
+            "b": jax.random.normal(jax.random.fold_in(key, 7), (4,))}
+
+
+class TestSelection:
+    def test_uniform(self):
+        p = selection.uniform_probs(10)
+        assert np.allclose(np.asarray(p), 0.1)
+
+    def test_lb_near_optimal_normalizes(self):
+        inner = jnp.asarray([1.0, -2.0, 3.0, 0.0])
+        p = selection.lb_near_optimal_probs(inner)
+        assert np.isclose(float(jnp.sum(p)), 1.0)
+        # ordered by |inner product|
+        assert p[2] > p[1] > p[0] > p[3]
+
+    def test_all_zero_inner_falls_back_to_uniform(self):
+        p = selection.lb_near_optimal_probs(jnp.zeros(4))
+        assert np.allclose(np.asarray(p), 0.25)
+
+    @given(st.lists(st.floats(-1e3, 1e3), min_size=2, max_size=32))
+    @settings(max_examples=50, deadline=None)
+    def test_probs_valid_distribution(self, vals):
+        p = np.asarray(selection.lb_near_optimal_probs(jnp.asarray(vals)))
+        assert (p >= 0).all()
+        assert np.isclose(p.sum(), 1.0, atol=1e-5)
+
+    def test_sample_multiset_with_replacement(self):
+        key = jax.random.PRNGKey(0)
+        probs = jnp.asarray([0.999, 0.001])
+        ids = selection.sample_multiset(key, probs, 8)
+        assert ids.shape == (8,)
+        assert (np.asarray(ids) == 0).sum() >= 6  # heavy mass wins
+
+    def test_het_aware_scores(self):
+        s = selection.het_aware_scores(
+            jnp.asarray([1.0, 1.0]), jnp.asarray([0.0, 1.0]), 0.5,
+            jnp.asarray(2.0))
+        assert np.allclose(np.asarray(s), [1.0, 0.0])
+
+
+class TestAggregation:
+    def test_fedavg_is_mean(self, rng):
+        w = _params(rng)
+        deltas = _stacked(rng)
+        new = aggregation.fedavg_aggregate(w, deltas)
+        exp = w["a"] + jnp.mean(deltas["a"], axis=0)
+        assert np.allclose(np.asarray(new["a"]), np.asarray(exp), atol=1e-5)
+
+    def test_folb_weights_sum_abs_one(self, rng):
+        grads = _stacked(rng)
+        g1 = aggregation.mean_of(grads)
+        inner = jax.vmap(lambda g: tree.tree_dot(g, g1))(grads)
+        weights = aggregation.folb_weights_single_set(inner)
+        assert np.isclose(float(jnp.sum(jnp.abs(weights))), 1.0, atol=1e-5)
+
+    def test_folb_aligned_clients_reduce_to_weighted_mean(self, rng):
+        """If all clients share the same gradient, FOLB weights are 1/K."""
+        g = _params(rng)
+        grads = jax.tree.map(lambda x: jnp.stack([x] * K), g)
+        g1 = aggregation.mean_of(grads)
+        inner = jax.vmap(lambda gg: tree.tree_dot(gg, g1))(grads)
+        weights = aggregation.folb_weights_single_set(inner)
+        assert np.allclose(np.asarray(weights), 1.0 / K, atol=1e-5)
+
+    def test_folb_flips_anti_aligned(self, rng):
+        """A client whose gradient opposes the consensus gets a negative
+        weight (its delta is subtracted) — Sec. IV-C."""
+        base = _params(rng)
+        grads = jax.tree.map(lambda x: jnp.stack([x, x, x, x, -3.9 * x]), base)
+        g1 = aggregation.mean_of(grads)
+        inner = np.asarray(jax.vmap(
+            lambda gg: tree.tree_dot(gg, g1))(grads))
+        w = np.asarray(aggregation.folb_weights_single_set(jnp.asarray(inner)))
+        assert (w[:4] > 0).all() and w[4] < 0
+
+    def test_signed_aggregate_matches_eq5(self, rng):
+        w = _params(rng)
+        deltas = _stacked(rng)
+        grads = _stacked(jax.random.fold_in(rng, 3))
+        gg = _params(jax.random.fold_in(rng, 4))
+        new = aggregation.signed_aggregate(w, deltas, grads, gg)
+        inner = np.asarray(jax.vmap(lambda g: tree.tree_dot(g, gg))(grads))
+        exp = np.asarray(w["a"]) + (np.sign(inner)[:, None]
+                                    * np.asarray(deltas["a"])).sum(0) / K
+        assert np.allclose(np.asarray(new["a"]), exp, atol=1e-4)
+
+    def test_folb_het_zero_psi_equals_folb(self, rng):
+        w = _params(rng)
+        deltas = _stacked(rng, scale=0.1)
+        grads = _stacked(jax.random.fold_in(rng, 3))
+        gam = jnp.ones((K,)) * 0.5
+        a = aggregation.folb_single_set(w, deltas, grads)
+        b = aggregation.folb_het(w, deltas, grads, gam, psi=0.0)
+        for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            assert np.allclose(np.asarray(la), np.asarray(lb), atol=1e-6)
+
+    def test_folb_two_set_runs(self, rng):
+        w = _params(rng)
+        new = aggregation.folb_two_set(
+            w, _stacked(rng, scale=0.1), _stacked(jax.random.fold_in(rng, 2)),
+            _stacked(jax.random.fold_in(rng, 5)))
+        assert jax.tree.structure(new) == jax.tree.structure(w)
+        assert all(np.isfinite(np.asarray(l)).all()
+                   for l in jax.tree.leaves(new))
+
+    @given(st.integers(1, 8), st.floats(0.01, 10.0))
+    @settings(max_examples=20, deadline=None)
+    def test_aggregate_dispatch_finite(self, k, scale):
+        key = jax.random.PRNGKey(k)
+        w = _params(key)
+        deltas = _stacked(key, k=k, scale=scale)
+        grads = _stacked(jax.random.fold_in(key, 2), k=k, scale=scale)
+        for rule in ("mean", "signed", "folb", "folb_het"):
+            new = aggregation.aggregate(
+                rule, w, deltas, grads=grads,
+                gammas=jnp.full((k,), 0.5), psi=0.1)
+            assert all(np.isfinite(np.asarray(l)).all()
+                       for l in jax.tree.leaves(new))
+
+
+class TestBounds:
+    C = bounds.ProblemConstants(L=2.0, B=1.5, sigma=0.5, gamma=0.3, mu=2.0)
+
+    def test_mu_prime_positive(self):
+        assert self.C.mu_prime == 1.5
+
+    def test_penalty_positive(self):
+        assert bounds.penalty_term(self.C) > 0
+
+    def test_prop1_stronger_than_thm1(self):
+        """|inner| >= inner => Prop-1 bound <= Thm-1 bound."""
+        inner = jnp.asarray([1.0, -2.0, 0.5])
+        t1 = bounds.theorem1_bound(1.0, float(jnp.sum(inner)), 0.3, 3, self.C)
+        p1 = bounds.proposition1_bound(
+            1.0, float(jnp.sum(jnp.abs(inner))), 0.3, 3, self.C)
+        assert p1 <= t1
+
+    def test_def1_bound_dominates_uniform_expectation(self):
+        """Def. 1's selection beats the uniform-average E-term
+        (Cauchy-Schwarz argument in Sec. III-C)."""
+        inner = jnp.asarray([3.0, 0.1, 0.1, 0.1])
+        a = jnp.abs(inner)
+        lb_term = float(jnp.sum(a ** 2) / jnp.sum(a))
+        uniform_term = float(jnp.mean(a))
+        assert lb_term >= uniform_term
+
+    def test_theorem3_psi_formula(self):
+        psi = bounds.theorem3_psi(10, self.C)
+        c = self.C
+        exp = c.B * (c.L / (c.mu * c.mu_prime) + 1 / c.mu
+                     + 3 * c.L * c.B / (2 * 10 * c.mu_prime ** 2))
+        assert np.isclose(psi, exp)

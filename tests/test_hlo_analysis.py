@@ -1,0 +1,107 @@
+"""Unit tests for the trip-count-aware HLO analyzer — the §Roofline
+methodology itself (repro.launch.hlo_analysis)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def compile_text(fn, *shapes):
+    args = [jax.ShapeDtypeStruct(s, d) for s, d in shapes]
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+class TestShapeParsing:
+    @pytest.mark.parametrize("s,b", [
+        ("f32[2,3]", 24), ("bf16[8]", 16), ("pred[4]", 4),
+        ("(f32[2], s32[3])", 20), ("f32[]", 4), ("u8[1024]", 1024)])
+    def test_shape_bytes(self, s, b):
+        assert H.shape_bytes(s) == b
+
+    def test_shape_elems(self):
+        assert H.shape_elems("f32[2,3,4]{2,1,0}") == 24
+
+
+class TestFlopCounting:
+    def test_matmul_flops_exact(self):
+        txt = compile_text(lambda a, b: a @ b,
+                           ((32, 64), jnp.float32), ((64, 16), jnp.float32))
+        rep = H.analyze(txt)
+        assert rep.flops == 2 * 32 * 64 * 16
+
+    def test_scan_trip_count_multiplies(self):
+        def f(w, x):
+            def body(h, wl):
+                return jnp.tanh(h @ wl), None
+            h, _ = jax.lax.scan(body, x, w)
+            return h
+
+        flops = {}
+        for L in (2, 16):
+            txt = compile_text(f, ((L, 32, 32), jnp.float32),
+                               ((4, 32), jnp.float32))
+            flops[L] = H.analyze(txt).flops
+        assert flops[16] == 8 * flops[2]
+        assert flops[2] == 2 * (2 * 4 * 32 * 32)
+
+    def test_nested_scan(self):
+        def f(w, x):
+            def outer(h, wg):
+                def inner(h2, wl):
+                    return h2 @ wl, None
+                h2, _ = jax.lax.scan(inner, h, wg)
+                return h2, None
+            h, _ = jax.lax.scan(outer, x, w)
+            return h
+
+        txt = compile_text(f, ((3, 4, 16, 16), jnp.float32),
+                           ((2, 16), jnp.float32))
+        rep = H.analyze(txt)
+        assert rep.flops == 3 * 4 * (2 * 2 * 16 * 16)
+
+
+class TestByteCounting:
+    def test_per_layer_bytes_constant(self):
+        """Slice-aware accounting: the scan body reads one layer's weights,
+        not the whole stack (regression for the 27 TiB phantom)."""
+        def f(w, x):
+            def body(h, wl):
+                return jnp.tanh(h @ wl), None
+            h, _ = jax.lax.scan(body, x, w)
+            return h
+
+        per_layer = {}
+        for L in (4, 32):
+            txt = compile_text(f, ((L, 64, 64), jnp.float32),
+                               ((8, 64), jnp.float32))
+            per_layer[L] = H.analyze(txt).hbm_bytes / L
+        assert per_layer[32] < 1.3 * per_layer[4]
+
+    def test_dus_charged_update_size(self):
+        """A scan stacking its outputs must be charged O(S*slice), not
+        O(S*stack) (regression for the 72 TiB sLSTM phantom)."""
+        def f(x):
+            def body(c, xt):
+                return c, jnp.tanh(xt)
+            _, ys = jax.lax.scan(body, 0.0, x)
+            return ys
+
+        small = H.analyze(compile_text(f, ((64, 128), jnp.float32))).hbm_bytes
+        big = H.analyze(compile_text(f, ((512, 128), jnp.float32))).hbm_bytes
+        # linear, not quadratic, in S
+        assert big < 10 * small
+
+
+class TestCollectives:
+    def test_no_collectives_single_device(self):
+        txt = compile_text(lambda a: a * 2, ((8,), jnp.float32))
+        rep = H.analyze(txt)
+        assert rep.collective_link_bytes == 0
+        assert rep.collective_counts == {}
+
+    def test_trip_count_parse(self):
+        assert H._trip_count(
+            'while(%t), body=%b, backend_config={"known_trip_count":'
+            '{"n":"62"}}') == 62
+        assert H._trip_count("while(%t), body=%b") == 1

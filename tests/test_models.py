@@ -1,0 +1,190 @@
+"""Unit + property tests for model components: attention equivalences,
+SSD recurrence, MoE dispatch conservation, checkpoint round-trip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import attention, layers, moe, ssm
+from repro.models.ssm import ssd_chunked
+
+
+class TestAttention:
+    def _qkv(self, cfg, key, B=2, S=128):
+        hd = cfg.resolved_head_dim
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, S, cfg.n_heads, hd))
+        k = jax.random.normal(ks[1], (B, S, cfg.n_kv_heads, hd))
+        v = jax.random.normal(ks[2], (B, S, cfg.n_kv_heads, hd))
+        return q, k, v
+
+    def test_chunked_equals_direct(self):
+        cfg = get_config("starcoder2-7b").reduced()
+        q, k, v = self._qkv(cfg, jax.random.PRNGKey(0), S=256)
+        mask = attention.make_mask(cfg, 256, 256)
+        direct = attention._attend(cfg, q, k, v, mask)
+        chunked = attention._attend_chunked(cfg, q, k, v, block=64)
+        assert float(jnp.max(jnp.abs(direct - chunked))) < 1e-4
+
+    def test_sliding_window_mask(self):
+        cfg = get_config("mixtral-8x7b").reduced()
+        assert cfg.sliding_window == 64
+        m = np.asarray(attention.make_mask(cfg, 256, 256))
+        assert m[100, 100] and m[100, 37]
+        assert not m[100, 36]          # outside window
+        assert not m[100, 101]         # future
+
+    def test_ring_buffer_decode_equals_full_decode(self):
+        """SWA ring-buffer cache must give the same logits as a full cache
+        once positions are within the window."""
+        cfg = get_config("mixtral-8x7b").reduced()
+        from repro.models import model as model_lib
+        params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+        B, S = 1, 48   # < window 64: ring not yet wrapping
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+        full, _ = model_lib.forward(cfg, params, {"tokens": toks})
+        _, cache = model_lib.prefill(cfg, params, {"tokens": toks[:, :-1]},
+                                     cache_len=S)
+        dec, _ = model_lib.decode_step(cfg, params, cache, toks[:, -1:])
+        assert float(jnp.max(jnp.abs(dec - full[:, -1]))) < 0.05
+
+    def test_gqa_grouping_order(self):
+        """Repeating kv to full heads must match the grouped einsum."""
+        cfg = get_config("starcoder2-7b").reduced()
+        q, k, v = self._qkv(cfg, jax.random.PRNGKey(2), S=64)
+        mask = attention.make_mask(cfg, 64, 64)
+        grouped = attention._attend(cfg, q, k, v, mask)
+        G = cfg.n_heads // cfg.n_kv_heads
+        kr = jnp.repeat(k, G, axis=2)
+        vr = jnp.repeat(v, G, axis=2)
+        repeated = attention._attend(cfg, q, kr, vr, mask)
+        assert float(jnp.max(jnp.abs(grouped - repeated))) < 1e-5
+
+
+class TestSSD:
+    @given(st.integers(1, 3), st.integers(2, 4), st.sampled_from([8, 16]))
+    @settings(max_examples=10, deadline=None)
+    def test_chunked_matches_sequential(self, B, H, chunk):
+        S, P, N = 32, 4, 4
+        ks = jax.random.split(jax.random.PRNGKey(B * H * chunk), 5)
+        x = jax.random.normal(ks[0], (B, S, H, P))
+        loga = -jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+        w = jax.nn.sigmoid(jax.random.normal(ks[2], (B, S, H)))
+        Bm = jax.random.normal(ks[3], (B, S, 1, N))
+        Cm = jax.random.normal(ks[4], (B, S, 1, N))
+        y, hf = ssd_chunked(x, loga, w, Bm, Cm, chunk)
+        # sequential
+        h = jnp.zeros((B, H, P, N))
+        ys = []
+        for t in range(S):
+            h = (h * jnp.exp(loga[:, t])[..., None, None]
+                 + w[:, t][..., None, None]
+                 * jnp.einsum("bhp,bn->bhpn", x[:, t], Bm[:, t, 0]))
+            ys.append(jnp.einsum("bn,bhpn->bhp", Cm[:, t, 0], h))
+        y_ref = jnp.stack(ys, 1)
+        assert float(jnp.max(jnp.abs(y - y_ref))) < 1e-4
+        assert float(jnp.max(jnp.abs(hf - h))) < 1e-4
+
+    def test_mamba_decode_continues_prefill(self):
+        cfg = get_config("zamba2-2.7b").reduced()
+        key = jax.random.PRNGKey(0)
+        p = ssm.init_mamba2(cfg, key)
+        B, S = 2, 33
+        u = jax.random.normal(key, (B, S, cfg.d_model)) * 0.1
+        full = ssm.mamba2_forward(cfg, p, u)
+        out_pre, state = ssm.mamba2_prefill(cfg, p, u[:, :S - 1])
+        out_dec, _ = ssm.mamba2_decode(cfg, p, u[:, S - 1:], state)
+        err = float(jnp.max(jnp.abs(out_dec[:, 0] - full[:, -1])))
+        assert err < 1e-3, err
+
+
+class TestMoE:
+    def test_dispatch_conserves_tokens_when_capacity_ample(self):
+        cfg = get_config("mixtral-8x7b").reduced()
+        key = jax.random.PRNGKey(0)
+        p = moe.init_moe(cfg, key)
+        x = jax.random.normal(key, (2, 16, cfg.d_model)) * 0.1
+        out, aux = moe.moe_forward(cfg, p, x)
+        assert out.shape == x.shape
+        assert bool(jnp.isfinite(out).all()) and float(aux) >= 0
+
+    def test_capacity_formula(self):
+        cfg = get_config("mixtral-8x7b")
+        c = moe.capacity(cfg, 4096)
+        assert c == int(4096 * 2 * 1.25 / 8)
+
+    def test_shared_experts_path(self):
+        cfg = get_config("deepseek-moe-16b").reduced()
+        assert cfg.moe.n_shared_experts == 1
+        p = moe.init_moe(cfg, jax.random.PRNGKey(1))
+        x = jax.random.normal(jax.random.PRNGKey(2), (1, 8, cfg.d_model))
+        out, _ = moe.moe_forward(cfg, p, x)
+        assert bool(jnp.isfinite(out).all())
+
+    def test_router_gradient_flows(self):
+        cfg = get_config("mixtral-8x7b").reduced()
+        p = moe.init_moe(cfg, jax.random.PRNGKey(3))
+        x = jax.random.normal(jax.random.PRNGKey(4), (1, 16, cfg.d_model))
+
+        def loss(p_):
+            out, aux = moe.moe_forward(cfg, p_, x)
+            return jnp.sum(out.astype(jnp.float32) ** 2) + aux
+
+        g = jax.grad(loss)(p)
+        assert float(jnp.abs(g["router"]["w"]).sum()) > 0
+
+
+class TestLayers:
+    @given(st.sampled_from(["rmsnorm", "layernorm"]))
+    @settings(max_examples=6, deadline=None)
+    def test_norm_invariants(self, kind):
+        import dataclasses
+        cfg = dataclasses.replace(get_config("fed100m"), norm=kind)
+        p = layers.init_norm(cfg, jax.random.PRNGKey(0), 32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 32)) * 5
+        y = layers.apply_norm(cfg, p, x)
+        if kind == "layernorm":
+            assert np.allclose(np.asarray(jnp.mean(y, -1)), 0, atol=1e-3)
+        assert np.allclose(np.asarray(jnp.mean(y ** 2, -1)), 1, atol=0.1)
+
+    def test_rope_preserves_norm_and_relative_phase(self):
+        cfg = get_config("fed100m")
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, 64))
+        pos = jnp.arange(8)[None]
+        y = layers.apply_rope(cfg, x, pos)
+        assert np.allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                           np.asarray(jnp.linalg.norm(x, axis=-1)), atol=1e-3)
+        # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+        q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 64))
+        k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 64))
+        def dot_at(i, j):
+            qi = layers.apply_rope(cfg, q, jnp.asarray([[i]]))
+            kj = layers.apply_rope(cfg, k, jnp.asarray([[j]]))
+            return float(jnp.sum(qi * kj))
+        assert np.isclose(dot_at(3, 1), dot_at(10, 8), atol=1e-3)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        from repro.checkpoint import io as ckpt
+        from repro.models import model as model_lib
+        cfg = get_config("fed100m").reduced(n_layers=2, d_model=64)
+        params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+        ckpt.save_checkpoint(str(tmp_path / "step_5"), params, step=5,
+                             extra={"arch": cfg.name})
+        like = jax.tree.map(jnp.zeros_like, params)
+        restored, step = ckpt.restore_checkpoint(str(tmp_path / "step_5"), like)
+        assert step == 5
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+            assert np.allclose(np.asarray(a), np.asarray(b))
+        assert ckpt.latest_step(str(tmp_path)).endswith("step_5")
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        from repro.checkpoint import io as ckpt
+        params = {"w": jnp.ones((4,))}
+        ckpt.save_checkpoint(str(tmp_path / "step_1"), params, 1)
+        with pytest.raises(ValueError):
+            ckpt.restore_checkpoint(str(tmp_path / "step_1"),
+                                    {"w": jnp.ones((5,))})
