@@ -1,10 +1,13 @@
 """Benchmark harness — one function per paper table/figure plus kernel
-micro-benchmarks and the roofline summary.
+micro-benchmarks, the roofline summary, and the time-to-accuracy sweep.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only PREFIX]
 
 Prints ``name,us_per_call,derived`` CSV (us_per_call = mean wall time of
 one federated round / one kernel call / roofline step-time bound in us).
+The `tta` suite additionally writes a ``BENCH_fed.json`` artifact
+(rounds- and seconds-to-target-accuracy per algorithm) so the perf
+trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -20,12 +23,30 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="run only benchmarks whose name starts with this")
     ap.add_argument("--reports", default="reports")
+    ap.add_argument("--bench-json", default="BENCH_fed.json",
+                    help="path of the cross-PR perf artifact")
     args = ap.parse_args()
 
-    from benchmarks import kernel_bench, paper_tables, roofline
+    from benchmarks import (kernel_bench, paper_tables, roofline,
+                            time_to_accuracy)
 
     rounds = 30 if args.quick else 100
     fig_rounds = 20 if args.quick else 60
+
+    # fixed round budget regardless of --quick: the artifact must be
+    # comparable across PRs, and fedbuff needs ~50 aggregations to target
+    tta_rounds = 60
+
+    def tta_rows():
+        results = time_to_accuracy.time_to_accuracy_results(tta_rounds)
+        path = time_to_accuracy.write_bench_json(results, args.bench_json)
+        print(f"# wrote {path}", file=sys.stderr)
+        return [(f"tta/{r['name']}",
+                 r["host_seconds"] / tta_rounds * 1e6,
+                 f"rounds_to_{r['target_acc']}={r['rounds_to_acc']};"
+                 f"secs_to_{r['target_acc']}={r['secs_to_acc']:.2f};"
+                 f"final_acc={r['final_acc']:.3f}") for r in results]
+
     suites = [
         ("table1", lambda: paper_tables.table1_rounds_to_accuracy(rounds)),
         ("fig2", lambda: paper_tables.fig2_naive_baselines(
@@ -35,6 +56,7 @@ def main() -> None:
         ("fig6", lambda: paper_tables.fig6_noniid_level(fig_rounds)),
         ("fig11", lambda: paper_tables.fig11_heterogeneity_psi(fig_rounds)),
         ("beyond", lambda: paper_tables.beyond_server_opt(fig_rounds)),
+        ("tta", tta_rows),
         ("kernel", kernel_bench.bench_kernels),
         ("roofline", lambda: roofline.bench_rows(args.reports)),
     ]

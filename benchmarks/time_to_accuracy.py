@@ -1,0 +1,141 @@
+"""Time-to-accuracy sweep: sync vs deadline-async vs FedBuff FOLB.
+
+The paper's Table I counts rounds; under device heterogeneity the right
+metric is simulated wall-clock seconds to the accuracy target.  All runs
+share one seeded heterogeneous fleet and one non-IID Synthetic(1,1)
+cohort, so differences are purely scheduling + aggregation policy:
+
+  fedavg/sync        — round barrier, waits for every straggler
+  folb/sync          — paper FOLB, same barrier
+  folb/deadline      — deadline-aware FOLB: round cut at the p90 expected
+                       latency (drops only the extreme straggler tail),
+                       stragglers carry over as staleness-discounted
+                       late arrivals
+  folb/fedbuff       — buffered fully-async FOLB with staleness discount
+
+A note on the deadline choice: device latency scales with local dataset
+size, so an aggressive deadline (say p60) systematically excludes the
+big-data devices that dominate the p_k-weighted objective and caps final
+accuracy — the classic deadline-bias failure.  p90 cuts only the 25x
+stragglers and preserves convergence while shrinking every round from
+max-latency to the deadline.
+
+Emits rows for the CSV harness and a ``BENCH_fed.json`` artifact with
+rounds- and seconds-to-target per algorithm so the perf trajectory is
+tracked across PRs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+N_DEVICES = 30
+TARGET_ACC = 0.8
+SEED = 0
+STRAGGLER_FRAC = 0.3
+STRAGGLER_SLOWDOWN = 25.0
+DEADLINE_QUANTILE = 0.9
+
+
+def setup_sweep():
+    """The one shared sweep setting (also used by
+    examples/async_heterogeneity.py — keep them in lockstep so the example
+    reproduces the tracked BENCH_fed.json numbers).
+
+    Returns (model_cfg, fed, fleet, deadline_seconds)."""
+    from repro.configs.paper_models import MCLR
+    from repro.data.federated import stack_devices
+    from repro.data.synthetic import synthetic_alpha_beta
+    from repro.models import small
+    from repro.sysmodel import (expected_latencies, heterogeneous_fleet,
+                                round_cost_for)
+    fed = stack_devices(
+        synthetic_alpha_beta(SEED, N_DEVICES, 1.0, 1.0, mean_size=60),
+        seed=SEED)
+    fleet = heterogeneous_fleet(SEED, N_DEVICES,
+                                straggler_frac=STRAGGLER_FRAC,
+                                straggler_slowdown=STRAGGLER_SLOWDOWN)
+    params = small.init_small(MCLR, jax.random.PRNGKey(SEED))
+    cost = round_cost_for(MCLR, params)
+    lat = expected_latencies(fleet, cost, mean_steps=10.5,
+                             n_examples=np.asarray(fed.mask.sum(1)))
+    return MCLR, fed, fleet, float(np.quantile(lat, DEADLINE_QUANTILE))
+
+
+def time_to_accuracy_results(rounds: int = 60) -> List[Dict]:
+    """Run the sweep; one result dict per (algo, engine)."""
+    from repro.fed.async_engine import AsyncFLConfig, run_async
+    from repro.fed.simulator import (FLConfig, rounds_to_accuracy,
+                                     run_federated, seconds_to_accuracy)
+    model_cfg, fed, fleet, deadline = setup_sweep()
+
+    runs = []
+    for algo, mu in (("fedavg", 0.0), ("folb", 1.0)):
+        fl = FLConfig(algo=algo, n_selected=10, mu=mu, lr=0.05, seed=SEED)
+        runs.append((f"{algo}/sync", lambda fl=fl: run_federated(
+            model_cfg, fed, fl, rounds=rounds, eval_every=1, fleet=fleet)))
+    afl_dl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=10,
+                           mu=1.0, lr=0.05, deadline=deadline,
+                           staleness_alpha=0.5, seed=SEED)
+    runs.append(("folb/deadline", lambda: run_async(
+        model_cfg, fed, afl_dl, fleet, rounds=rounds, eval_every=1)))
+    afl_fb = AsyncFLConfig(mode="fedbuff", algo="folb", mu=1.0, lr=0.05,
+                           buffer_size=5, concurrency=10,
+                           staleness_alpha=0.5, seed=SEED)
+    runs.append(("folb/fedbuff", lambda: run_async(
+        model_cfg, fed, afl_fb, fleet, rounds=rounds, eval_every=1)))
+
+    results = []
+    for name, fn in runs:
+        t0 = time.time()
+        h = fn()
+        results.append({
+            "name": name,
+            "algo": name.split("/")[0],
+            "engine": name.split("/")[1],
+            "rounds_to_acc": rounds_to_accuracy(h, TARGET_ACC),
+            "secs_to_acc": seconds_to_accuracy(h, TARGET_ACC),
+            "final_acc": h["test_acc"][-1],
+            "final_wall_clock": h["wall_clock"][-1],
+            "target_acc": TARGET_ACC,
+            "host_seconds": round(time.time() - t0, 2),
+        })
+    return results
+
+
+def write_bench_json(results: List[Dict], path: str = "BENCH_fed.json"
+                     ) -> str:
+    """Write the cross-PR perf artifact."""
+    payload = {
+        "benchmark": "time_to_accuracy",
+        "dataset": f"synthetic(1,1) x {N_DEVICES} devices",
+        "model": "paper-mclr",
+        "fleet": {"n": N_DEVICES, "seed": SEED,
+                  "straggler_frac": STRAGGLER_FRAC,
+                  "straggler_slowdown": STRAGGLER_SLOWDOWN},
+        "target_acc": TARGET_ACC,
+        "results": results,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return os.path.abspath(path)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--out", default="BENCH_fed.json")
+    args = ap.parse_args()
+    res = time_to_accuracy_results(args.rounds)
+    for r in res:
+        print(f"{r['name']}: rounds_to_acc={r['rounds_to_acc']} "
+              f"secs_to_acc={r['secs_to_acc']:.1f} "
+              f"final_acc={r['final_acc']:.3f}")
+    print("wrote", write_bench_json(res, args.out))

@@ -99,9 +99,77 @@ def folb_het(w_t, deltas, grads, gammas, psi: float):
                         w_t, upd)
 
 
+def staleness_discounts(tau: jnp.ndarray, alpha: float) -> jnp.ndarray:
+    """FedBuff-style polynomial staleness discount s(τ) = (1 + τ)^{−α}.
+
+    τ counts server model versions elapsed since the client pulled its
+    reference parameters; α = 0 disables the discount exactly (the factor
+    is the constant 1.0, bit-for-bit)."""
+    return jnp.power(1.0 + tau.astype(jnp.float32), -alpha)
+
+
+def _masked_mean_of(stacked, mask: jnp.ndarray):
+    """Mean over the clients with mask == 1 (arrived before the deadline)."""
+    m = mask.astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(m), 1.0)
+    return jax.tree.map(
+        lambda x: jnp.tensordot(m, x.astype(jnp.float32), axes=1) / n,
+        stacked)
+
+
+def folb_staleness(w_t, deltas, grads, tau, alpha: float = 0.0,
+                   gammas=None, psi: float = 0.0, mask=None):
+    """Staleness-discounted heterogeneity-aware FOLB (async engines).
+
+    Extends the Eq. V-B score with the FedBuff discount:
+        I_k = (<g_k, g1> − ψ γ_k ||g1||²) · (1 + τ_k)^{−α}
+    and normalizes over the arrived set only (`mask`, optional): a client
+    that missed the deadline contributes neither to g1 nor to the weights.
+    With τ = 0, α = 0, ψ = 0 and full mask this is `folb_single_set`.
+    """
+    g1 = mean_of(grads) if mask is None else _masked_mean_of(grads, mask)
+    inner = _stacked_dot(grads, g1)
+    scores = inner
+    if psi != 0.0 and gammas is not None:
+        scores = scores - psi * gammas * tree.tree_sqnorm(g1)
+    scores = scores * staleness_discounts(tau, alpha)
+    if mask is not None:
+        scores = scores * mask.astype(jnp.float32)
+    denom = jnp.sum(jnp.abs(scores))
+    weights = scores / jnp.maximum(denom, 1e-30)
+    upd = _weighted_sum(deltas, weights)
+    return jax.tree.map(lambda w, u: (w.astype(jnp.float32) + u).astype(w.dtype),
+                        w_t, upd)
+
+
+def mean_staleness(w_t, deltas, tau, alpha: float = 0.0, mask=None):
+    """Staleness-discounted FedAvg: a discounted mean over arrived clients.
+
+    w^{t+1} = w^t + Σ_k s(τ_k) m_k Δ_k / Σ_k s(τ_k) m_k.
+    """
+    disc = staleness_discounts(tau, alpha)
+    if mask is not None:
+        disc = disc * mask.astype(jnp.float32)
+    weights = disc / jnp.maximum(jnp.sum(disc), 1e-30)
+    upd = _weighted_sum(deltas, weights)
+    return jax.tree.map(lambda w, u: (w.astype(jnp.float32) + u).astype(w.dtype),
+                        w_t, upd)
+
+
 def aggregate(rule: str, w_t, deltas, grads=None, grads_s2=None,
-              global_grad=None, gammas=None, psi: float = 0.0):
-    """Dispatch by rule name: mean | signed | folb | folb2 | folb_het."""
+              global_grad=None, gammas=None, psi: float = 0.0,
+              tau=None, alpha: float = 0.0, mask=None):
+    """Dispatch by rule name:
+    mean | signed | folb | folb2 | folb_het | folb_stale | mean_stale."""
+    if rule == "folb_stale":
+        t = tau if tau is not None else jnp.zeros(
+            jax.tree.leaves(deltas)[0].shape[0], jnp.float32)
+        return folb_staleness(w_t, deltas, grads, t, alpha=alpha,
+                              gammas=gammas, psi=psi, mask=mask)
+    if rule == "mean_stale":
+        t = tau if tau is not None else jnp.zeros(
+            jax.tree.leaves(deltas)[0].shape[0], jnp.float32)
+        return mean_staleness(w_t, deltas, t, alpha=alpha, mask=mask)
     if rule == "mean":
         return fedavg_aggregate(w_t, deltas)
     if rule == "signed":

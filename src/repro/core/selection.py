@@ -46,6 +46,38 @@ def het_aware_probs(inner_products, gammas, psi, global_grad_sqnorm):
         het_aware_scores(inner_products, gammas, psi, global_grad_sqnorm))
 
 
+def deadline_feasible_weights(expected_latency: jnp.ndarray, deadline: float,
+                              softness: float = 0.0) -> jnp.ndarray:
+    """Smooth probability-of-making-the-deadline proxy per device.
+
+    σ((deadline − ℓ_k) / s): ≈1 for devices whose expected round latency
+    ℓ_k is comfortably inside the deadline, ≈0 for hopeless stragglers.
+    The sigmoid (rather than a hard cut) keeps borderline devices sampleable
+    — their realized latency is stochastic in the local-step draw.
+    An infinite deadline weights every device 1.
+    """
+    lat = jnp.asarray(expected_latency, jnp.float32)
+    if not jnp.isfinite(deadline):
+        return jnp.ones_like(lat)
+    s = softness if softness > 0.0 else max(float(deadline), 1e-9) / 8.0
+    return jax.nn.sigmoid((deadline - lat) / s)
+
+
+def latency_aware_probs(scores: jnp.ndarray, expected_latency: jnp.ndarray,
+                        deadline: float, softness: float = 0.0) -> jnp.ndarray:
+    """Deadline/latency-aware selection: P_k ∝ |I_k| · σ((D − ℓ_k)/s).
+
+    `scores` are the learning-utility scores (inner products, or the Sec. V
+    heterogeneity-aware I_k; pass ones for pure latency-aware sampling);
+    the feasibility weight turns the ψγ-style penalty idea into an actual
+    scheduling signal.  Falls back to uniform when everything is hopeless
+    (all weighted scores ~ 0), via the same guard as Definition 1.
+    """
+    w = jnp.abs(jnp.asarray(scores, jnp.float32)) * deadline_feasible_weights(
+        expected_latency, deadline, softness)
+    return lb_near_optimal_probs(w)
+
+
 def sample_multiset(key, probs: jnp.ndarray, k: int) -> jnp.ndarray:
     """K categorical draws with replacement -> (K,) int32 client ids."""
     return jax.random.categorical(

@@ -1,0 +1,311 @@
+"""Asynchronous federated execution engine over the system model.
+
+The third execution engine (alongside the sync vmap simulator and the
+O(1)-memory distributed round engine): FOLB driven by simulated wall-clock
+time instead of a round counter.  Two modes:
+
+  deadline — FedCS-style barriered rounds with a per-round deadline D.
+             The server dispatches K devices, aggregates whatever arrives
+             by D, and closes the round.  Stragglers are NOT discarded:
+             their uploads land in a later round and join that round's
+             aggregation with staleness τ = rounds elapsed, discounted by
+             (1 + τ)^{-α} inside the FOLB score (Eq. V-B extended) — the
+             ψγ heterogeneity penalty becomes an actual scheduling signal.
+             With D = ∞ every device arrives, τ ≡ 0, and the round math
+             dispatches to the *same* fused sync round as the vmap
+             simulator, so the two engines agree bit-for-bit.
+
+  fedbuff  — buffered fully-async (Nguyen et al., FedBuff): `concurrency`
+             devices run at all times; the server aggregates every
+             `buffer_size` arrivals; each update is discounted by its
+             version staleness.  No global barrier exists — progress is
+             measured purely on the virtual clock.
+
+Device latency, bandwidth, and availability come from a
+``repro.sysmodel.DeviceFleet``; selection can be latency-aware
+(P ∝ |I_k|·σ((D − ℓ_k)/s), `repro.core.selection.latency_aware_probs`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, selection
+from repro.data.federated import FederatedData
+from repro.fed import simulator
+from repro.models import small
+from repro.sysmodel import (DeviceFleet, EventQueue, VirtualClock,
+                            device_latencies, expected_latencies,
+                            plan_sync_round, round_cost_for)
+
+ASYNC_MODES = ("deadline", "fedbuff")
+# aggregation bases the async engine can run (the sync-parity fast path
+# additionally requires the algo to exist in the sync simulator)
+ASYNC_ALGOS = ("fedavg", "fedprox", "folb", "folb_het")
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncFLConfig:
+    mode: str = "deadline"        # deadline | fedbuff
+    algo: str = "folb"            # fedavg | fedprox | folb | folb_het
+    n_selected: int = 10          # K dispatched per round (deadline mode)
+    mu: float = 1.0
+    lr: float = 0.05
+    max_local_steps: int = 20
+    het_steps: bool = True
+    deadline: float = math.inf    # seconds per round (deadline mode)
+    buffer_size: int = 10         # M: aggregate every M arrivals (fedbuff)
+    concurrency: int = 20         # in-flight devices (fedbuff)
+    staleness_alpha: float = 0.0  # (1+τ)^{-α} score discount; 0 = off
+    psi: float = 0.0              # Sec. V heterogeneity penalty weight
+    latency_aware: bool = False   # deadline-aware selection probabilities
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.mode in ASYNC_MODES, self.mode
+        assert self.algo in ASYNC_ALGOS, self.algo
+
+    def sync_config(self) -> simulator.FLConfig:
+        """The synchronous FLConfig whose round math this config reduces to
+        when every device arrives on time with zero staleness."""
+        return simulator.FLConfig(
+            algo=self.algo, n_selected=self.n_selected, mu=self.mu,
+            lr=self.lr, max_local_steps=self.max_local_steps,
+            het_steps=self.het_steps, psi=self.psi, seed=self.seed)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _compute_updates(model_cfg, fl: simulator.FLConfig, params, data, ids,
+                     n_steps):
+    """Local updates for the dispatched multiset (vmap over devices)."""
+    return simulator._local_updates(model_cfg, params, data, ids, n_steps, fl)
+
+
+def _gather(stacked, idx: np.ndarray):
+    return jax.tree.map(lambda x: x[jnp.asarray(idx)], stacked)
+
+
+def _concat(trees: List[Any]):
+    if len(trees) == 1:
+        return trees[0]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *trees)
+
+
+@dataclasses.dataclass
+class _PendingUpdate:
+    """A straggler upload in flight: aggregated when its arrival time
+    passes, with staleness counted in server rounds/versions."""
+    arrival: float
+    version: int            # server version its reference params came from
+    delta: Any
+    grad: Any
+    gamma: jnp.ndarray
+
+
+def _apply_aggregation(afl: AsyncFLConfig, params, deltas, grads, gammas,
+                       tau: jnp.ndarray):
+    """Staleness-discounted aggregation over the arrived set."""
+    if afl.algo in ("fedavg", "fedprox"):
+        return aggregation.mean_staleness(params, deltas, tau,
+                                          alpha=afl.staleness_alpha)
+    psi = afl.psi if afl.algo == "folb_het" else 0.0
+    return aggregation.folb_staleness(params, deltas, grads, tau,
+                                      alpha=afl.staleness_alpha,
+                                      gammas=gammas, psi=psi)
+
+
+def run_async(model_cfg, fed: FederatedData, afl: AsyncFLConfig,
+              fleet: DeviceFleet, rounds: int,
+              init_key: Optional[jax.Array] = None,
+              eval_every: int = 1) -> simulator.FedRunResult:
+    """Run `rounds` server aggregations of async FOLB on the system model.
+
+    In deadline mode a "round" is one deadline-barriered aggregation; in
+    fedbuff mode it is one buffer flush (M arrivals).  History carries the
+    simulated wall-clock at every eval point, so time-to-accuracy is
+    directly comparable with fleet-timestamped synchronous runs.
+    """
+    assert fleet.n_devices == fed.n_devices, (fleet.n_devices, fed.n_devices)
+    key = init_key if init_key is not None else jax.random.PRNGKey(afl.seed)
+    params = small.init_small(model_cfg, key)
+    train = {"x": jnp.asarray(fed.x), "y": jnp.asarray(fed.y),
+             "mask": jnp.asarray(fed.mask)}
+    test = {"x": jnp.asarray(fed.test_x), "y": jnp.asarray(fed.test_y),
+            "mask": jnp.asarray(fed.test_mask)}
+    p = jnp.asarray(fed.p)
+    sizes = np.asarray(fed.mask.sum(axis=1))
+    cost = round_cost_for(model_cfg, params,
+                          uploads_gradient="folb" in afl.algo)
+
+    hist: Dict[str, List[float]] = {
+        "round": [], "wall_clock": [], "train_loss": [], "train_acc": [],
+        "test_acc": [], "n_arrived": [], "stale_mean": []}
+
+    def record(t: int, clock_now: float, n_arrived: int, stale_mean: float,
+               cur_params):
+        tr_loss, tr_acc = simulator.eval_global(model_cfg, cur_params, train, p)
+        _, te_acc = simulator.eval_global(model_cfg, cur_params, test, p)
+        hist["round"].append(t)
+        hist["wall_clock"].append(float(clock_now))
+        hist["train_loss"].append(float(tr_loss))
+        hist["train_acc"].append(float(tr_acc))
+        hist["test_acc"].append(float(te_acc))
+        hist["n_arrived"].append(float(n_arrived))
+        hist["stale_mean"].append(float(stale_mean))
+
+    if afl.mode == "deadline":
+        params = _run_deadline(model_cfg, afl, fleet, cost, sizes, train, p,
+                               key, params, rounds, eval_every, record)
+    else:
+        params = _run_fedbuff(model_cfg, afl, fleet, cost, sizes, train,
+                              key, params, rounds, eval_every, record)
+    return simulator.FedRunResult(history=hist, params=params)
+
+
+# ------------------------------------------------------------- deadline mode
+
+def _run_deadline(model_cfg, afl, fleet, cost, sizes, train, p, key, params,
+                  rounds, eval_every, record):
+    sync_fl = afl.sync_config()
+    N = fleet.n_devices
+    K = afl.n_selected
+    clock = VirtualClock()
+    pending: List[_PendingUpdate] = []
+    exp_lat = jnp.asarray(expected_latencies(fleet, cost, mean_steps=(
+        (1 + afl.max_local_steps) / 2.0 if afl.het_steps
+        else float(afl.max_local_steps)), n_examples=sizes))
+
+    for t in range(rounds):
+        # identical device-capability protocol as the sync engine: the
+        # shared step-draw helper and the jax key split sequence match
+        # run_federated exactly, so the D = ∞ limit samples the same devices
+        # with the same local-step budgets.
+        n_steps = simulator.local_step_draws(t, K, afl)
+        key, sub = jax.random.split(key)
+        k_sel, _ = jax.random.split(sub)
+        if afl.latency_aware:
+            probs = selection.latency_aware_probs(
+                jnp.ones((N,)), exp_lat, afl.deadline)
+        else:
+            probs = selection.uniform_probs(N)
+        ids = selection.sample_multiset(k_sel, probs, K)
+        ids_np = np.asarray(ids)
+
+        plan = plan_sync_round(fleet, ids_np, np.asarray(n_steps), cost,
+                               start=clock.now, deadline=afl.deadline,
+                               n_examples=sizes[ids_np])
+        due = [pu for pu in pending if pu.arrival <= plan.round_end]
+
+        if plan.arrived.all() and not due and not afl.latency_aware:
+            # sync-parity fast path: every dispatched device made the
+            # deadline and no stale upload joins, so every τ is 0 and the
+            # (1+τ)^{-α} discount is the constant 1.0 for ANY α — the round
+            # is EXACTLY one synchronous round; reuse the simulator's fused
+            # round (same jitted computation => bit-for-bit agreement in
+            # the D = ∞ limit, and ~3x less host time per round).
+            params, _ = simulator.fl_round(
+                model_cfg, sync_fl, params, train, p, sub, n_steps)
+            n_arrived, stale_mean = K, 0.0
+        else:
+            deltas, grads, gammas = _compute_updates(
+                model_cfg, sync_fl, params, train, ids, n_steps)
+            arrived_idx = np.flatnonzero(plan.arrived)
+            missed_idx = np.flatnonzero(~plan.arrived)
+            parts_d = [_gather(deltas, arrived_idx)] if len(arrived_idx) else []
+            parts_g = [_gather(grads, arrived_idx)] if len(arrived_idx) else []
+            parts_gam = ([gammas[jnp.asarray(arrived_idx)]]
+                         if len(arrived_idx) else [])
+            taus = [np.zeros(len(arrived_idx))] if len(arrived_idx) else []
+            for pu in due:
+                parts_d.append(pu.delta)
+                parts_g.append(pu.grad)
+                parts_gam.append(pu.gamma)
+                taus.append(np.asarray([t - pu.version], dtype=np.float64))
+            pending = [pu for pu in pending if pu.arrival > plan.round_end]
+            for i in missed_idx:  # straggler: lands in a later round
+                pending.append(_PendingUpdate(
+                    arrival=float(plan.arrival[i]), version=t,
+                    delta=_gather(deltas, np.asarray([i])),
+                    grad=_gather(grads, np.asarray([i])),
+                    gamma=gammas[jnp.asarray([i])]))
+            n_arrived = len(arrived_idx) + len(due)
+            if n_arrived > 0:
+                tau = jnp.asarray(np.concatenate(taus), jnp.float32)
+                stale_mean = float(tau.mean())
+                params = _apply_aggregation(
+                    afl, params, _concat(parts_d), _concat(parts_g),
+                    jnp.concatenate(parts_gam), tau)
+            else:
+                stale_mean = 0.0  # empty round: deadline passed, no uploads
+        clock.advance_to(plan.round_end)
+        if t % eval_every == 0 or t == rounds - 1:
+            record(t, clock.now, n_arrived, stale_mean, params)
+    return params
+
+
+# -------------------------------------------------------------- fedbuff mode
+
+def _run_fedbuff(model_cfg, afl, fleet, cost, sizes, train, key, params,
+                 rounds, eval_every, record):
+    N = fleet.n_devices
+    clock = VirtualClock()
+    events = EventQueue()
+    exp_lat = jnp.asarray(expected_latencies(fleet, cost, mean_steps=(
+        (1 + afl.max_local_steps) / 2.0 if afl.het_steps
+        else float(afl.max_local_steps)), n_examples=sizes))
+    version = 0
+    n_dispatched = 0
+    buffer: List[_PendingUpdate] = []
+
+    def dispatch(at: float):
+        """Start one device on the CURRENT params at time `at`."""
+        nonlocal key, n_dispatched
+        step_rng = np.random.default_rng(20_000 + n_dispatched)
+        steps = int(step_rng.integers(1, afl.max_local_steps + 1)) \
+            if afl.het_steps else afl.max_local_steps
+        key, sub = jax.random.split(key)
+        if afl.latency_aware and math.isfinite(afl.deadline):
+            probs = selection.latency_aware_probs(
+                jnp.ones((N,)), exp_lat, afl.deadline)
+        else:
+            probs = selection.uniform_probs(N)
+        cid = int(np.asarray(selection.sample_multiset(sub, probs, 1))[0])
+        n_dispatched += 1
+        ids = jnp.asarray([cid], jnp.int32)
+        n_steps = jnp.asarray([steps], jnp.int32)
+        delta, grad, gamma = _compute_updates(
+            model_cfg, afl.sync_config(), params, train, ids, n_steps)
+        begin = float(fleet.next_online(np.asarray([cid]), at)[0])
+        lat = float(device_latencies(
+            fleet, np.asarray([cid]), np.asarray([steps]), cost,
+            n_examples=sizes[[cid]])[0])
+        events.push(begin + lat, "arrival", update=_PendingUpdate(
+            arrival=begin + lat, version=version, delta=delta, grad=grad,
+            gamma=gamma))
+
+    for _ in range(afl.concurrency):
+        dispatch(clock.now)
+
+    for t in range(rounds):
+        while len(buffer) < afl.buffer_size:
+            ev = events.pop()
+            clock.advance_to(ev.time)
+            buffer.append(ev.payload["update"])
+            dispatch(clock.now)  # keep `concurrency` devices in flight
+        flush, buffer = buffer[:afl.buffer_size], buffer[afl.buffer_size:]
+        tau = jnp.asarray([version - pu.version for pu in flush], jnp.float32)
+        params = _apply_aggregation(
+            afl, params,
+            _concat([pu.delta for pu in flush]),
+            _concat([pu.grad for pu in flush]),
+            jnp.concatenate([pu.gamma for pu in flush]), tau)
+        version += 1
+        if t % eval_every == 0 or t == rounds - 1:
+            record(t, clock.now, afl.buffer_size, float(tau.mean()), params)
+    return params

@@ -54,6 +54,20 @@ class FLConfig:
         assert self.algo in ALGOS, self.algo
 
 
+def local_step_draws(t: int, k: int, cfg) -> jnp.ndarray:
+    """Device-capability protocol (paper Sec. VI-A): per-round local-step
+    budgets drawn from a round-indexed numpy seed so every compared
+    algorithm — and both the sync and async engines; the bit-for-bit
+    parity depends on sharing this exact draw — sees identical device
+    capabilities.  `cfg` is any config with het_steps/max_local_steps
+    (FLConfig or AsyncFLConfig)."""
+    step_rng = np.random.default_rng(10_000 + t)
+    if cfg.het_steps:
+        return jnp.asarray(step_rng.integers(
+            1, cfg.max_local_steps + 1, k), jnp.int32)
+    return jnp.full((k,), cfg.max_local_steps, jnp.int32)
+
+
 def _client_batch(data, ids):
     return {"x": data["x"][ids], "y": data["y"][ids], "mask": data["mask"][ids]}
 
@@ -113,6 +127,7 @@ def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps):
         else:
             new = aggregation.fedavg_aggregate(params, deltas)
         diag["probs_entropy"] = -jnp.sum(probs * jnp.log(probs + 1e-12))
+        diag["ids"] = ids
         return new, diag
 
     probs = selection.uniform_probs(N)
@@ -132,11 +147,13 @@ def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps):
                 model_cfg, p, {"x": x, "y": y, "mask": m}))(params)
         )(batch2["x"], batch2["y"], batch2["mask"])
         new = aggregation.folb_two_set(params, deltas, grads, grads_s2)
+        diag["ids2"] = ids2
     elif fl.algo == "folb_het":
         new = aggregation.folb_het(params, deltas, grads, gammas, fl.psi)
     else:
         raise ValueError(fl.algo)
     diag["gamma_mean"] = jnp.mean(gammas)
+    diag["ids"] = ids
     return new, diag
 
 
@@ -154,12 +171,45 @@ def eval_global(model_cfg, params, data, p_weights):
     return jnp.sum(losses * p_weights), jnp.sum(accs * p_weights)
 
 
+@dataclasses.dataclass
+class FedRunResult:
+    """Round history + final parameters.
+
+    The scalar time-series live in `history` (Dict[str, List[float]]); the
+    final parameter pytree is a separate field instead of being smuggled
+    into the history dict.  Mapping-style reads (`result["test_acc"]`)
+    delegate to `history` so plotting/benchmark code treats it like the
+    plain dict it used to receive.
+    """
+    history: Dict[str, List[float]]
+    params: Any
+
+    def __getitem__(self, key: str) -> List[float]:
+        return self.history[key]
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.history
+
+    def get(self, key: str, default=None):
+        return self.history.get(key, default)
+
+    def keys(self):
+        return self.history.keys()
+
+
 def run_federated(model_cfg, fed: FederatedData, fl: FLConfig, rounds: int,
                   init_key: Optional[jax.Array] = None,
-                  eval_every: int = 1) -> Dict[str, List[float]]:
+                  eval_every: int = 1, fleet=None) -> FedRunResult:
     """Python-loop driver.  Heterogeneous local-step draws are generated from
     a round-indexed numpy seed so all compared algorithms see identical
-    device capabilities (paper Sec. VI-A)."""
+    device capabilities (paper Sec. VI-A).
+
+    With a `repro.sysmodel.DeviceFleet`, each synchronous round is also
+    timestamped on the simulated wall-clock: the round costs as much time
+    as its slowest selected device (full barrier, no deadline), and the
+    cumulative clock is recorded in history["wall_clock"] at eval points —
+    making sync runs comparable to the async engine on one time axis.
+    """
     key = init_key if init_key is not None else jax.random.PRNGKey(fl.seed)
     params = small.init_small(model_cfg, key)
     train = {"x": jnp.asarray(fed.x), "y": jnp.asarray(fed.y),
@@ -170,19 +220,60 @@ def run_federated(model_cfg, fed: FederatedData, fl: FLConfig, rounds: int,
 
     hist: Dict[str, List[float]] = {"round": [], "train_loss": [],
                                     "test_acc": [], "train_acc": []}
+    cost = probe_cost = sizes = None
+    if fleet is not None:
+        from repro.sysmodel import RoundCost, plan_sync_round, round_cost_for
+        assert fleet.n_devices == fed.n_devices, \
+            (fleet.n_devices, fed.n_devices)
+        cost = round_cost_for(model_cfg, params,
+                              uploads_gradient="folb" in fl.algo
+                              or "fednu" in fl.algo)
+        # a gradient probe (fednu baselines, folb2's S2 set): one fwd+bwd
+        # pass over the local data, then upload the gradient (1x params)
+        probe_cost = RoundCost(
+            flops_per_step_example=cost.flops_per_step_example,
+            down_bytes=cost.down_bytes, up_bytes=cost.down_bytes)
+        sizes = np.asarray(fed.mask.sum(axis=1))
+        hist["wall_clock"] = []
+    clock_now = 0.0
     from repro.fed import server_opt as sopt
     so_cfg = sopt.ServerOptConfig(kind=fl.server_opt, lr=fl.server_lr)
     so_state = sopt.init_server_state(so_cfg, params)
     use_server_opt = fl.server_opt != "sgd" or fl.server_lr != 1.0
     for t in range(rounds):
-        step_rng = np.random.default_rng(10_000 + t)   # shared across algos
-        if fl.het_steps:
-            n_steps = jnp.asarray(step_rng.integers(
-                1, fl.max_local_steps + 1, fl.n_selected), jnp.int32)
-        else:
-            n_steps = jnp.full((fl.n_selected,), fl.max_local_steps, jnp.int32)
+        n_steps = local_step_draws(t, fl.n_selected, fl)
         key, sub = jax.random.split(key)
-        new_params, _ = fl_round(model_cfg, fl, params, train, p, sub, n_steps)
+        new_params, diag = fl_round(model_cfg, fl, params, train, p, sub,
+                                    n_steps)
+        if fleet is not None:
+            start = clock_now
+            phase_cost = cost
+            if fl.algo.startswith("fednu"):
+                # the naive baselines first probe ALL N devices for their
+                # gradients — the defining communication cost the paper's
+                # FOLB avoids; the server can only sample after the slowest
+                # probe lands.  Selected devices already hold w^t and have
+                # uploaded ∇F_k, so the update phase costs only local
+                # compute + the delta upload.
+                all_ids = np.arange(fleet.n_devices)
+                probe = plan_sync_round(fleet, all_ids, np.ones(len(all_ids)),
+                                        probe_cost, start=start,
+                                        n_examples=sizes)
+                start = probe.round_end
+                phase_cost = RoundCost(
+                    flops_per_step_example=cost.flops_per_step_example,
+                    down_bytes=0.0, up_bytes=probe_cost.down_bytes)
+            ids = np.asarray(diag["ids"])
+            plan = plan_sync_round(fleet, ids, np.asarray(n_steps),
+                                   phase_cost, start=start,
+                                   n_examples=sizes[ids])
+            clock_now = plan.round_end
+            if "ids2" in diag:   # folb2 contacts a second K-device set
+                ids2 = np.asarray(diag["ids2"])
+                plan2 = plan_sync_round(fleet, ids2, np.ones(len(ids2)),
+                                        probe_cost, start=start,
+                                        n_examples=sizes[ids2])
+                clock_now = max(clock_now, plan2.round_end)
         if use_server_opt:
             delta = jax.tree.map(
                 lambda n, w: n.astype(jnp.float32) - w.astype(jnp.float32),
@@ -198,14 +289,26 @@ def run_federated(model_cfg, fed: FederatedData, fl: FLConfig, rounds: int,
             hist["train_loss"].append(float(tr_loss))
             hist["train_acc"].append(float(tr_acc))
             hist["test_acc"].append(float(te_acc))
-    hist["params"] = params
-    return hist
+            if fleet is not None:
+                hist["wall_clock"].append(clock_now)
+    return FedRunResult(history=hist, params=params)
 
 
-def rounds_to_accuracy(hist: Dict[str, List[float]], target: float) -> int:
+def rounds_to_accuracy(hist, target: float) -> int:
     """Table-I metric: first round whose test accuracy reaches `target`
-    (-1 if never)."""
+    (-1 if never).  Accepts a history mapping or a FedRunResult."""
     for r, acc in zip(hist["round"], hist["test_acc"]):
         if acc >= target:
             return r
     return -1
+
+
+def seconds_to_accuracy(hist, target: float) -> float:
+    """Time-to-accuracy: simulated wall-clock seconds until test accuracy
+    first reaches `target` (-1.0 if never).  Requires a run that recorded
+    history["wall_clock"] (fleet-timestamped sync run or the async engine).
+    """
+    for s, acc in zip(hist["wall_clock"], hist["test_acc"]):
+        if acc >= target:
+            return float(s)
+    return -1.0

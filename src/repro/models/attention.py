@@ -172,11 +172,11 @@ def _attend_auto(cfg, q, k, v, q_offset: int = 0) -> jnp.ndarray:
         # replicated fallback for indivisible heads; the barrier keeps the
         # replication all-gather on the bf16 values (GSPMD otherwise sinks
         # the reshard past the fp32 upcast, doubling gather traffic).
-        q = jax.lax.optimization_barrier(
+        q = shard_ctx.barrier(
             shard_ctx.constrain(q, "batch", None, None, None))
-        k = jax.lax.optimization_barrier(
+        k = shard_ctx.barrier(
             shard_ctx.constrain(k, "batch", None, None, None))
-        v = jax.lax.optimization_barrier(
+        v = shard_ctx.barrier(
             shard_ctx.constrain(v, "batch", None, None, None))
     if S > CHUNK_THRESHOLD and S % CHUNK_BLOCK == 0:
         out = _attend_chunked(cfg, q, k, v, q_offset)

@@ -6,6 +6,8 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
+from repro.sharding import context as shard_ctx
+
 Params = Dict[str, Any]
 
 
@@ -27,7 +29,7 @@ def apply_norm(cfg, p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray
     # into the remat residual-stack write, which would store all activation
     # checkpoints in f32 instead of bf16 (2x memory; measured on
     # starcoder2-7b train_4k: 4.8 GiB vs 2.25 GiB per layer stack).
-    x = jax.lax.optimization_barrier(x)
+    x = shard_ctx.barrier(x)
     xf = x.astype(jnp.float32)
     if cfg.norm == "layernorm":
         mu = jnp.mean(xf, axis=-1, keepdims=True)

@@ -153,7 +153,7 @@ def _scan_blocks(cfg, kind: str, stacked: Params, x: jnp.ndarray,
         # residual-checkpoint stack costs HBM/model_parallel instead of a
         # full copy; the backward pass all-gathers one layer at a time.
         h = shard_ctx.constrain(h, "batch", None, "model")
-        h = jax.lax.optimization_barrier(h)
+        h = shard_ctx.barrier(h)
         return (h, aux + a), None
 
     L = jax.tree.leaves(stacked)[0].shape[0]

@@ -25,7 +25,13 @@ def momentum_init(params):
 
 
 def momentum_update(params, grads, state, lr: float, beta: float = 0.9):
-    m = jax.tree.map(lambda mv, g: beta * mv + g.astype(jnp.float32),
+    """Dampened heavy ball: m = βm + (1−β)g.
+
+    The dampening keeps ||step|| on the scale of one pseudo-gradient, so
+    lr=1.0 composes with the unit-scale federated round delta; undampened
+    accumulation (m = βm + g) amplifies the steady-state step by 1/(1−β)
+    — a 10x overshoot at β=0.9 that stalls the server update."""
+    m = jax.tree.map(lambda mv, g: beta * mv + (1 - beta) * g.astype(jnp.float32),
                      state["m"], grads)
     new = jax.tree.map(
         lambda w, mv: (w.astype(jnp.float32) - lr * mv).astype(w.dtype),

@@ -91,3 +91,19 @@ def constrain(x, *spec):
 
 def model_axis_size() -> int:
     return axis_size("model")
+
+
+@jax.custom_jvp
+def barrier(x):
+    """``optimization_barrier`` with an identity autodiff rule.
+
+    The primitive has no differentiation rule on the pinned jaxlib, but every
+    use in this codebase is a pure scheduling fence (keep a reshard / dtype
+    convert from being hoisted), so identity tangents are exact.  The barrier
+    still applies to the primal inside jit."""
+    return jax.lax.optimization_barrier(x)
+
+
+@barrier.defjvp
+def _barrier_jvp(primals, tangents):
+    return barrier(primals[0]), tangents[0]

@@ -1,0 +1,34 @@
+"""System model for wall-clock federated simulation (Sec. V protocol).
+
+The paper's claim is *time*-to-accuracy under compute/communication
+heterogeneity, but a round-synchronous simulator only counts rounds.  This
+package supplies the missing system layer:
+
+  profiles   — per-device capability profiles (FLOPS, link bandwidth,
+               periodic availability windows) and seeded fleet generators
+  latency    — a cost model mapping (model, local steps, payload bytes) and
+               a profile to simulated seconds
+  clock      — virtual wall-clock + deterministic event queue
+  scheduler  — round planning: dispatch/arrival times, deadline cuts,
+               straggler identification
+
+``repro.fed.async_engine`` builds deadline-based and buffered-async
+(FedBuff-style) FOLB on top of these pieces; ``repro.fed.simulator`` uses
+the same cost model to timestamp its synchronous rounds so sync and async
+engines are comparable on one wall-clock axis.
+"""
+from repro.sysmodel.clock import Event, EventQueue, VirtualClock
+from repro.sysmodel.latency import (RoundCost, device_latencies,
+                                    expected_latencies, flops_per_local_step,
+                                    param_bytes, round_cost_for)
+from repro.sysmodel.profiles import (DeviceFleet, DeviceProfile,
+                                     fleet_summary, heterogeneous_fleet,
+                                     uniform_fleet)
+from repro.sysmodel.scheduler import RoundPlan, plan_sync_round
+
+__all__ = [
+    "DeviceFleet", "DeviceProfile", "Event", "EventQueue", "RoundCost",
+    "RoundPlan", "VirtualClock", "device_latencies", "expected_latencies",
+    "fleet_summary", "flops_per_local_step", "heterogeneous_fleet",
+    "param_bytes", "plan_sync_round", "round_cost_for", "uniform_fleet",
+]

@@ -1,0 +1,73 @@
+"""Virtual wall-clock and deterministic event queue.
+
+The event queue breaks time ties by insertion sequence number, so two
+clients finishing at exactly the same simulated instant are always served
+in dispatch order — the whole simulation stays bit-reproducible for a
+fixed seed regardless of heap internals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Dict, List, Optional
+
+
+@dataclasses.dataclass(order=True)
+class Event:
+    time: float
+    seq: int
+    kind: str = dataclasses.field(compare=False)
+    payload: Dict[str, Any] = dataclasses.field(compare=False,
+                                                default_factory=dict)
+
+
+class VirtualClock:
+    """Monotonic simulated time in seconds."""
+
+    def __init__(self, start: float = 0.0):
+        self._now = float(start)
+
+    @property
+    def now(self) -> float:
+        return self._now
+
+    def advance_to(self, t: float) -> None:
+        if t < self._now - 1e-12:
+            raise ValueError(f"clock cannot go backwards: {t} < {self._now}")
+        self._now = max(self._now, float(t))
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError(f"negative time step {dt}")
+        self._now += float(dt)
+
+
+class EventQueue:
+    """Min-heap of Events with FIFO tie-breaking."""
+
+    def __init__(self):
+        self._heap: List[Event] = []
+        self._seq = 0
+
+    def push(self, time: float, kind: str, **payload: Any) -> Event:
+        ev = Event(time=float(time), seq=self._seq, kind=kind,
+                   payload=payload)
+        self._seq += 1
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)
+
+    def peek_time(self) -> Optional[float]:
+        return self._heap[0].time if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def pop_until(self, t: float) -> List[Event]:
+        """Pop every event with time <= t, in order."""
+        out = []
+        while self._heap and self._heap[0].time <= t:
+            out.append(heapq.heappop(self._heap))
+        return out

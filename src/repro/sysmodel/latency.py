@@ -1,0 +1,84 @@
+"""Latency cost model: (model, payload, profile) -> simulated seconds.
+
+Compute cost is counted per example per local prox-SGD step as
+forward + backward ≈ 3x the forward matmul FLOPs.  Communication cost is
+payload bytes over the device's link.  FOLB uploads both the parameter
+delta Δ_k and the reference gradient ∇F_k(w^t), so its uplink payload is
+2x the parameter size — the cost model makes the algorithm's
+communication footprint part of the benchmark instead of a footnote.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs.paper_models import SmallModelConfig
+from repro.sysmodel.profiles import DeviceFleet
+
+
+def flops_per_local_step(cfg: SmallModelConfig) -> float:
+    """FLOPs per example per local optimizer step (fwd + bwd)."""
+    if cfg.kind == "mclr":
+        fwd = 2.0 * cfg.n_features * cfg.n_classes
+    elif cfg.kind == "mlp":
+        fwd = 2.0 * (cfg.n_features * cfg.hidden + cfg.hidden * cfg.hidden
+                     + cfg.hidden * cfg.n_classes)
+    elif cfg.kind == "lstm":
+        per_t = 2.0 * 4 * cfg.hidden * (cfg.embed + cfg.hidden)
+        fwd = cfg.seq_len * per_t + 2.0 * cfg.hidden * cfg.n_classes
+    else:
+        raise ValueError(cfg.kind)
+    return 3.0 * fwd
+
+
+def param_bytes(params) -> int:
+    """Serialized byte size of a parameter pytree."""
+    return int(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params)))
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundCost:
+    """Per-round cost constants shared by every device."""
+    flops_per_step_example: float   # compute per example per local step
+    down_bytes: float               # server -> device (global model)
+    up_bytes: float                 # device -> server (delta [+ gradient])
+
+
+def round_cost_for(model_cfg: SmallModelConfig, params,
+                   uploads_gradient: bool = True) -> RoundCost:
+    pb = float(param_bytes(params))
+    return RoundCost(
+        flops_per_step_example=flops_per_local_step(model_cfg),
+        down_bytes=pb,
+        up_bytes=pb * (2.0 if uploads_gradient else 1.0))
+
+
+def device_latencies(fleet: DeviceFleet, ids: np.ndarray,
+                     n_steps: np.ndarray, cost: RoundCost,
+                     n_examples: Optional[np.ndarray] = None) -> np.ndarray:
+    """Seconds from dispatch to upload completion for each selected device.
+
+    `n_examples[i]` is device ids[i]'s local dataset size (defaults to 1 —
+    cost per step already includes the per-example factor).  Availability
+    gaps are handled by the scheduler, not here.
+    """
+    ids = np.asarray(ids)
+    n_steps = np.asarray(n_steps, dtype=np.float64)
+    ex = np.ones_like(n_steps) if n_examples is None \
+        else np.asarray(n_examples, dtype=np.float64)
+    compute = n_steps * ex * cost.flops_per_step_example / fleet.flops[ids]
+    comm = cost.down_bytes / fleet.down_bw[ids] + cost.up_bytes / fleet.up_bw[ids]
+    return compute + comm
+
+
+def expected_latencies(fleet: DeviceFleet, cost: RoundCost,
+                       mean_steps: float,
+                       n_examples: Optional[np.ndarray] = None) -> np.ndarray:
+    """Expected round latency for EVERY device (selection-time estimate:
+    the server knows profiles but not the realized local-step draw)."""
+    all_ids = np.arange(fleet.n_devices)
+    steps = np.full(fleet.n_devices, float(mean_steps))
+    return device_latencies(fleet, all_ids, steps, cost, n_examples)

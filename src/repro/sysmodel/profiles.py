@@ -1,0 +1,122 @@
+"""Device capability profiles.
+
+A fleet is a struct-of-arrays over N devices so the latency model can be
+evaluated vectorised with numpy (the system model runs on the host; only
+the learning math runs under jit).  Capabilities follow the measurements
+used by the device-scheduling literature (Perazzone et al., 2201.07912):
+compute speed and link bandwidth are log-normally distributed across
+devices with a heavy straggler tail, and availability is periodic
+(charging / on-wifi windows).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """One device's capabilities (scalar view of a fleet row)."""
+    flops: float          # sustained compute throughput, FLOP/s
+    up_bw: float          # uplink bandwidth, bytes/s
+    down_bw: float        # downlink bandwidth, bytes/s
+    avail_period: float   # availability cycle length in seconds; 0 = always on
+    avail_duty: float     # fraction of each cycle the device is online
+    avail_phase: float    # offset of the online window within the cycle
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceFleet:
+    """N device profiles, struct-of-arrays (all shape (N,) float64)."""
+    flops: np.ndarray
+    up_bw: np.ndarray
+    down_bw: np.ndarray
+    avail_period: np.ndarray
+    avail_duty: np.ndarray
+    avail_phase: np.ndarray
+
+    @property
+    def n_devices(self) -> int:
+        return self.flops.shape[0]
+
+    def profile(self, k: int) -> DeviceProfile:
+        return DeviceProfile(
+            flops=float(self.flops[k]), up_bw=float(self.up_bw[k]),
+            down_bw=float(self.down_bw[k]),
+            avail_period=float(self.avail_period[k]),
+            avail_duty=float(self.avail_duty[k]),
+            avail_phase=float(self.avail_phase[k]))
+
+    # ------------------------------------------------------ availability
+    def online_at(self, ids: np.ndarray, t: float) -> np.ndarray:
+        """Boolean mask: is device `ids[i]` online at absolute time t?"""
+        ids = np.asarray(ids)
+        period = self.avail_period[ids]
+        always = period <= 0.0
+        # guard the modulo for always-on devices
+        safe = np.where(always, 1.0, period)
+        pos = np.mod(t + self.avail_phase[ids], safe)
+        return always | (pos < self.avail_duty[ids] * safe)
+
+    def next_online(self, ids: np.ndarray, t: float) -> np.ndarray:
+        """Earliest time >= t at which each device is online."""
+        ids = np.asarray(ids)
+        period = self.avail_period[ids]
+        always = period <= 0.0
+        safe = np.where(always, 1.0, period)
+        pos = np.mod(t + self.avail_phase[ids], safe)
+        wait = np.where(pos < self.avail_duty[ids] * safe, 0.0, safe - pos)
+        return t + np.where(always, 0.0, wait)
+
+
+def uniform_fleet(n: int, flops: float = 1e9, up_bw: float = 1.25e6,
+                  down_bw: float = 5e6) -> DeviceFleet:
+    """Homogeneous, always-on fleet — the synchronous-parity baseline."""
+    full = np.full(n, 1.0)
+    return DeviceFleet(
+        flops=full * flops, up_bw=full * up_bw, down_bw=full * down_bw,
+        avail_period=np.zeros(n), avail_duty=np.ones(n),
+        avail_phase=np.zeros(n))
+
+
+def heterogeneous_fleet(seed: int, n: int, *,
+                        flops_median: float = 1e9, flops_sigma: float = 0.8,
+                        up_bw_median: float = 1.25e6, bw_sigma: float = 0.7,
+                        down_up_ratio: float = 4.0,
+                        straggler_frac: float = 0.15,
+                        straggler_slowdown: float = 8.0,
+                        avail_frac: float = 0.0,
+                        avail_period: float = 600.0,
+                        avail_duty: float = 0.7) -> DeviceFleet:
+    """Log-normal capability spread with a deliberate straggler tail.
+
+    `straggler_frac` of devices are slowed by `straggler_slowdown` on both
+    compute and uplink (the cross-device correlation observed in real
+    deployments: old phones have both slow SoCs and poor radios).
+    `avail_frac` of devices additionally cycle offline with the given
+    period/duty (phases drawn uniformly).
+    """
+    rng = np.random.default_rng(seed)
+    flops = flops_median * rng.lognormal(0.0, flops_sigma, n)
+    up_bw = up_bw_median * rng.lognormal(0.0, bw_sigma, n)
+    stragglers = rng.random(n) < straggler_frac
+    flops = np.where(stragglers, flops / straggler_slowdown, flops)
+    up_bw = np.where(stragglers, up_bw / straggler_slowdown, up_bw)
+
+    cycled = rng.random(n) < avail_frac
+    period = np.where(cycled, avail_period, 0.0)
+    duty = np.where(cycled, avail_duty, 1.0)
+    phase = np.where(cycled, rng.uniform(0.0, avail_period, n), 0.0)
+    return DeviceFleet(
+        flops=flops, up_bw=up_bw, down_bw=up_bw * down_up_ratio,
+        avail_period=period, avail_duty=duty, avail_phase=phase)
+
+
+def fleet_summary(fleet: DeviceFleet) -> str:
+    q = np.quantile(fleet.flops, [0.1, 0.5, 0.9])
+    return (f"fleet n={fleet.n_devices} "
+            f"flops p10/p50/p90={q[0]:.2e}/{q[1]:.2e}/{q[2]:.2e} "
+            f"up_bw p50={np.median(fleet.up_bw):.2e} "
+            f"cycled={int((fleet.avail_period > 0).sum())}")

@@ -1,0 +1,57 @@
+"""Round scheduling against the device system model.
+
+`plan_sync_round` computes, for one synchronous (deadline-barriered)
+round: when each selected device starts (first availability window at or
+after dispatch), when its upload lands at the server, which devices make
+the deadline, and when the server closes the round.  The async FedBuff
+mode in `repro.fed.async_engine` drives `EventQueue` directly instead —
+there is no global round barrier to plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.sysmodel.latency import RoundCost, device_latencies
+from repro.sysmodel.profiles import DeviceFleet
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundPlan:
+    """Timing of one deadline-barriered round starting at `start`."""
+    start: float
+    arrival: np.ndarray       # (K,) absolute upload-completion times
+    arrived: np.ndarray       # (K,) bool: made the deadline
+    round_end: float          # server closes the round here
+
+    @property
+    def n_arrived(self) -> int:
+        return int(self.arrived.sum())
+
+
+def plan_sync_round(fleet: DeviceFleet, ids: np.ndarray, n_steps: np.ndarray,
+                    cost: RoundCost, start: float,
+                    deadline: float = math.inf,
+                    n_examples: Optional[np.ndarray] = None) -> RoundPlan:
+    """Dispatch `ids` at `start`; the server aggregates whatever has arrived
+    by `start + deadline` (or as soon as everything arrives, if earlier).
+
+    A device begins its download at its first online instant >= start; a
+    device that is offline at dispatch simply starts late — if its window
+    never opens before the deadline it is a straggler like any other.
+    """
+    ids = np.asarray(ids)
+    begin = fleet.next_online(ids, start)
+    lat = device_latencies(fleet, ids, n_steps, cost, n_examples)
+    arrival = begin + lat
+    cutoff = start + deadline
+    arrived = arrival <= cutoff
+    if arrived.all():
+        round_end = float(arrival.max()) if len(arrival) else start
+    else:
+        round_end = cutoff
+    return RoundPlan(start=start, arrival=arrival, arrived=arrived,
+                     round_end=round_end)

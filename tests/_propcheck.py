@@ -1,0 +1,88 @@
+"""Property-test compatibility layer.
+
+The test-suite uses a small subset of the `hypothesis` API (`given`,
+`settings`, and four strategies).  The CI / dev container does not always
+ship hypothesis, so this module re-exports the real package when it is
+importable and otherwise provides a deterministic fallback: each `@given`
+test runs against a fixed number of seeded random examples (plus the
+strategy's boundary values as the first examples).  No shrinking — a
+failing example is reported verbatim by pytest.
+"""
+from __future__ import annotations
+
+try:  # real hypothesis wins when available (e.g. on CI)
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 12   # cap: fallback draws are cheap but not free
+
+    class _Strategy:
+        """A draw function plus optional boundary examples tried first."""
+
+        def __init__(self, draw, boundaries=()):
+            self.draw = draw
+            self.boundaries = tuple(boundaries)
+
+        def example_at(self, rng, i):
+            if i < len(self.boundaries):
+                return self.boundaries[i]
+            return self.draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)),
+                boundaries=(float(min_value), float(max_value)))
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)),
+                boundaries=(int(min_value), int(max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(
+                lambda rng: seq[int(rng.integers(0, len(seq)))],
+                boundaries=(seq[0],))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.draw(rng) for _ in range(n)]
+            bound_rng = np.random.default_rng(0)
+            return _Strategy(draw, boundaries=(
+                [elements.example_at(bound_rng, 0)] * max(min_size, 1),))
+
+    st = _Strategies()
+
+    def settings(max_examples=_FALLBACK_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._pc_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — it would expose __wrapped__ and make
+            # pytest resolve the original signature's strategy parameters as
+            # fixtures.  The (*args) signature hides them.
+            def wrapper(*args, **kwargs):
+                n = min(getattr(fn, "_pc_max_examples", _FALLBACK_EXAMPLES),
+                        _FALLBACK_EXAMPLES)
+                for i in range(n):
+                    rng = np.random.default_rng(0xC0FFEE + i)
+                    vals = [s.example_at(rng, i) for s in strategies]
+                    fn(*args, *vals, **kwargs)
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

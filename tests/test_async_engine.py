@@ -1,0 +1,188 @@
+"""Integration tests for the async execution engine: sync parity in the
+no-heterogeneity limit, deadline/straggler behavior, FedBuff staleness,
+and the staleness-discounted aggregation rules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import MCLR
+from repro.core import aggregation
+from repro.data.federated import stack_devices
+from repro.data.synthetic import synthetic_alpha_beta
+from repro.fed.async_engine import AsyncFLConfig, run_async
+from repro.fed.simulator import (FLConfig, run_federated,
+                                 seconds_to_accuracy)
+from repro.sysmodel import heterogeneous_fleet, uniform_fleet
+
+N_DEV = 20
+
+
+@pytest.fixture(scope="module")
+def fed_data():
+    devs = synthetic_alpha_beta(0, n_devices=N_DEV, alpha=1.0, beta=1.0,
+                                mean_size=60)
+    return stack_devices(devs, seed=0)
+
+
+@pytest.fixture(scope="module")
+def slow_fleet():
+    # strong straggler tail so finite deadlines actually cut devices
+    return heterogeneous_fleet(1, N_DEV, straggler_frac=0.4,
+                               straggler_slowdown=50.0)
+
+
+class TestSyncParity:
+    def test_infinite_deadline_bit_for_bit(self, fed_data):
+        """Acceptance criterion: identical profiles + infinite deadline +
+        zero staleness discount reproduces the sync folb trajectory
+        bit-for-bit on a seeded MCLR run."""
+        fleet = uniform_fleet(N_DEV)
+        fl = FLConfig(algo="folb", n_selected=5, seed=3)
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=5,
+                            seed=3)
+        h_sync = run_federated(MCLR, fed_data, fl, rounds=6, fleet=fleet)
+        h_async = run_async(MCLR, fed_data, afl, fleet, rounds=6)
+        assert h_sync["train_loss"] == h_async["train_loss"]
+        assert h_sync["test_acc"] == h_async["test_acc"]
+        # same cost model, full-barrier rounds: identical wall-clock too
+        assert h_sync["wall_clock"] == h_async["wall_clock"]
+        assert h_async["stale_mean"] == [0.0] * 6
+
+    def test_parity_holds_for_fedavg(self, fed_data):
+        fleet = uniform_fleet(N_DEV)
+        fl = FLConfig(algo="fedavg", mu=0.0, n_selected=5, seed=1)
+        afl = AsyncFLConfig(mode="deadline", algo="fedavg", mu=0.0,
+                            n_selected=5, seed=1)
+        h_sync = run_federated(MCLR, fed_data, fl, rounds=4, fleet=fleet)
+        h_async = run_async(MCLR, fed_data, afl, fleet, rounds=4)
+        assert h_sync["train_loss"] == h_async["train_loss"]
+
+
+class TestDeadlineMode:
+    def test_tight_deadline_drops_and_carries_over(self, fed_data,
+                                                   slow_fleet):
+        from repro.sysmodel import expected_latencies, round_cost_for
+        from repro.models import small
+        params = small.init_small(MCLR, jax.random.PRNGKey(0))
+        cost = round_cost_for(MCLR, params)
+        lat = expected_latencies(slow_fleet, cost, mean_steps=10,
+                                 n_examples=np.asarray(
+                                     fed_data.mask.sum(1)))
+        deadline = float(np.quantile(lat, 0.5))
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=8,
+                            deadline=deadline, staleness_alpha=0.5, seed=0)
+        h = run_async(MCLR, fed_data, afl, slow_fleet, rounds=8)
+        assert all(np.isfinite(h["train_loss"]))
+        # some rounds must lose dispatched devices to the deadline
+        assert min(h["n_arrived"]) < 8
+        # stragglers eventually land as stale updates
+        assert max(h["stale_mean"]) > 0.0
+        # wall clock advances by at most ~deadline per round once cutting
+        assert h["wall_clock"][-1] <= (8 + 1) * deadline + 1e-6
+
+    def test_latency_aware_selection_runs(self, fed_data, slow_fleet):
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=5,
+                            deadline=5.0, latency_aware=True, seed=0)
+        h = run_async(MCLR, fed_data, afl, slow_fleet, rounds=4)
+        assert all(np.isfinite(h["train_loss"]))
+        assert len(h["round"]) == 4
+
+    def test_deadline_folb_converges(self, fed_data, slow_fleet):
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=10,
+                            deadline=1e4, seed=0)
+        h = run_async(MCLR, fed_data, afl, slow_fleet, rounds=20)
+        assert h["train_loss"][-1] < h["train_loss"][0] * 0.8
+        assert seconds_to_accuracy(h, 0.5) > 0
+
+
+class TestFedBuffMode:
+    def test_runs_and_records_staleness(self, fed_data, slow_fleet):
+        afl = AsyncFLConfig(mode="fedbuff", algo="folb", buffer_size=4,
+                            concurrency=8, staleness_alpha=0.5, seed=0)
+        h = run_async(MCLR, fed_data, afl, slow_fleet, rounds=10)
+        assert all(np.isfinite(h["train_loss"]))
+        assert len(h["round"]) == 10
+        # in a fully-async run with 8 in-flight and flushes of 4, some
+        # update must span at least one version bump
+        assert max(h["stale_mean"]) > 0.0
+        # wall clock is monotone
+        assert all(b >= a for a, b in zip(h["wall_clock"],
+                                          h["wall_clock"][1:]))
+
+    def test_fedbuff_deterministic(self, fed_data, slow_fleet):
+        afl = AsyncFLConfig(mode="fedbuff", algo="folb", buffer_size=3,
+                            concurrency=6, seed=5)
+        h1 = run_async(MCLR, fed_data, afl, slow_fleet, rounds=5)
+        h2 = run_async(MCLR, fed_data, afl, slow_fleet, rounds=5)
+        assert h1["train_loss"] == h2["train_loss"]
+        assert h1["wall_clock"] == h2["wall_clock"]
+
+
+class TestStalenessAggregation:
+    K, D = 6, 12
+
+    def _stacked(self, key, scale=1.0):
+        return {"a": jax.random.normal(key, (self.K, self.D)) * scale}
+
+    def test_zero_staleness_equals_folb(self, rng):
+        w = {"a": jax.random.normal(rng, (self.D,))}
+        deltas = self._stacked(jax.random.fold_in(rng, 1), 0.1)
+        grads = self._stacked(jax.random.fold_in(rng, 2))
+        tau = jnp.zeros((self.K,))
+        a = aggregation.folb_single_set(w, deltas, grads)
+        b = aggregation.folb_staleness(w, deltas, grads, tau, alpha=0.7)
+        assert np.allclose(np.asarray(a["a"]), np.asarray(b["a"]), atol=1e-6)
+
+    def test_discount_monotone_in_tau(self):
+        tau = jnp.asarray([0.0, 1.0, 4.0, 16.0])
+        d = np.asarray(aggregation.staleness_discounts(tau, 0.5))
+        assert d[0] == 1.0
+        assert (np.diff(d) < 0).all()
+
+    def test_alpha_zero_discount_is_exactly_one(self):
+        tau = jnp.asarray([0.0, 3.0, 9.0])
+        d = np.asarray(aggregation.staleness_discounts(tau, 0.0))
+        assert (d == 1.0).all()
+
+    def test_stale_update_downweighted(self, rng):
+        w = {"a": jax.random.normal(rng, (self.D,))}
+        deltas = self._stacked(jax.random.fold_in(rng, 1), 0.1)
+        grads = self._stacked(jax.random.fold_in(rng, 2))
+        tau = jnp.asarray([0.0] * (self.K - 1) + [50.0])
+        fresh = aggregation.folb_staleness(w, deltas, grads,
+                                           jnp.zeros((self.K,)), alpha=1.0)
+        stale = aggregation.folb_staleness(w, deltas, grads, tau, alpha=1.0)
+        # the two results must differ: client K's contribution shrank
+        assert not np.allclose(np.asarray(fresh["a"]),
+                               np.asarray(stale["a"]), atol=1e-7)
+
+    def test_mask_excludes_missed_clients(self, rng):
+        w = {"a": jax.random.normal(rng, (self.D,))}
+        deltas = self._stacked(jax.random.fold_in(rng, 1), 0.1)
+        grads = self._stacked(jax.random.fold_in(rng, 2))
+        tau = jnp.zeros((self.K,))
+        mask = jnp.asarray([1.0] * 3 + [0.0] * 3)
+        got = aggregation.folb_staleness(w, deltas, grads, tau, mask=mask)
+        sub = {"a": deltas["a"][:3]}
+        subg = {"a": grads["a"][:3]}
+        exp = aggregation.folb_single_set(w, sub, subg)
+        assert np.allclose(np.asarray(got["a"]), np.asarray(exp["a"]),
+                           atol=1e-5)
+
+    def test_mean_staleness_uniform_is_fedavg(self, rng):
+        w = {"a": jax.random.normal(rng, (self.D,))}
+        deltas = self._stacked(jax.random.fold_in(rng, 1), 0.1)
+        tau = jnp.zeros((self.K,))
+        a = aggregation.fedavg_aggregate(w, deltas)
+        b = aggregation.mean_staleness(w, deltas, tau, alpha=1.0)
+        assert np.allclose(np.asarray(a["a"]), np.asarray(b["a"]), atol=1e-6)
+
+    def test_dispatch_rules(self, rng):
+        w = {"a": jax.random.normal(rng, (self.D,))}
+        deltas = self._stacked(jax.random.fold_in(rng, 1), 0.1)
+        grads = self._stacked(jax.random.fold_in(rng, 2))
+        for rule in ("folb_stale", "mean_stale"):
+            out = aggregation.aggregate(rule, w, deltas, grads=grads,
+                                        tau=jnp.ones((self.K,)), alpha=0.5)
+            assert np.isfinite(np.asarray(out["a"])).all()

@@ -1,0 +1,98 @@
+"""Edge-case coverage for device selection (Sec. III / Sec. V) and the
+deadline/latency-aware distributions used by the async engine."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import selection
+from repro.fed.simulator import rounds_to_accuracy, seconds_to_accuracy
+
+
+class TestLbNearOptimalEdges:
+    def test_all_zero_inner_products_fall_back_to_uniform(self):
+        p = selection.lb_near_optimal_probs(jnp.zeros(7))
+        assert np.allclose(np.asarray(p), 1.0 / 7)
+
+    def test_single_device(self):
+        p = selection.lb_near_optimal_probs(jnp.asarray([0.3]))
+        assert np.allclose(np.asarray(p), 1.0)
+
+    def test_tiny_but_nonzero_signal_falls_back(self):
+        # below the _TINY threshold the scores carry no signal
+        p = selection.lb_near_optimal_probs(jnp.asarray([1e-30, 1e-30]))
+        assert np.allclose(np.asarray(p), 0.5)
+
+    def test_norm_probs_zero_fallback(self):
+        p = selection.norm_estimate_probs(jnp.zeros(4))
+        assert np.allclose(np.asarray(p), 0.25)
+
+
+class TestHetAware:
+    def test_het_aware_probs_with_positive_psi(self):
+        inner = jnp.asarray([2.0, 2.0, 2.0])
+        gammas = jnp.asarray([0.0, 0.5, 1.0])
+        g1_sq = jnp.asarray(2.0)
+        p = np.asarray(selection.het_aware_probs(inner, gammas, 1.0, g1_sq))
+        # scores: 2-0=2, 2-1=1, 2-2=0 -> P = |I|/sum = [2/3, 1/3, 0]
+        assert np.allclose(p, [2 / 3, 1 / 3, 0.0], atol=1e-6)
+        assert np.isclose(p.sum(), 1.0)
+
+    def test_psi_zero_reduces_to_lb_near_optimal(self):
+        inner = jnp.asarray([1.0, -3.0, 2.0])
+        a = selection.het_aware_probs(inner, jnp.ones(3), 0.0,
+                                      jnp.asarray(5.0))
+        b = selection.lb_near_optimal_probs(inner)
+        assert np.allclose(np.asarray(a), np.asarray(b))
+
+    def test_negative_scores_still_valid_distribution(self):
+        # large psi*gamma drives every score negative; P uses |I_k|
+        inner = jnp.asarray([0.1, 0.2])
+        p = np.asarray(selection.het_aware_probs(
+            inner, jnp.ones(2), 10.0, jnp.asarray(1.0)))
+        assert (p >= 0).all() and np.isclose(p.sum(), 1.0)
+
+
+class TestLatencyAware:
+    def test_infinite_deadline_ignores_latency(self):
+        scores = jnp.asarray([1.0, 2.0, 3.0])
+        lat = jnp.asarray([1e9, 1.0, 1e-3])
+        p = selection.latency_aware_probs(scores, lat, math.inf)
+        assert np.allclose(np.asarray(p), np.asarray(
+            selection.lb_near_optimal_probs(scores)))
+
+    def test_hopeless_straggler_gets_no_mass(self):
+        scores = jnp.ones(3)
+        lat = jnp.asarray([0.1, 0.1, 1e4])
+        p = np.asarray(selection.latency_aware_probs(scores, lat, 1.0))
+        assert p[2] < 1e-6
+        assert np.isclose(p[:2].sum(), 1.0, atol=1e-5)
+
+    def test_all_hopeless_falls_back_to_uniform(self):
+        scores = jnp.ones(4)
+        lat = jnp.full((4,), 1e6)
+        p = np.asarray(selection.latency_aware_probs(scores, lat, 1e-3))
+        assert np.allclose(p, 0.25)
+
+    def test_feasible_weights_monotone_in_latency(self):
+        lat = jnp.asarray([0.1, 0.5, 0.9, 2.0])
+        w = np.asarray(selection.deadline_feasible_weights(lat, 1.0))
+        assert (np.diff(w) < 0).all()
+
+
+class TestRoundsToAccuracy:
+    def test_reached(self):
+        h = {"round": [0, 2, 4], "test_acc": [0.1, 0.6, 0.9]}
+        assert rounds_to_accuracy(h, 0.5) == 2
+
+    def test_never_reached_returns_minus_one(self):
+        h = {"round": [0, 1, 2], "test_acc": [0.1, 0.2, 0.3]}
+        assert rounds_to_accuracy(h, 0.95) == -1
+
+    def test_empty_history(self):
+        assert rounds_to_accuracy({"round": [], "test_acc": []}, 0.5) == -1
+
+    def test_seconds_to_accuracy(self):
+        h = {"wall_clock": [1.0, 5.0, 9.0], "test_acc": [0.1, 0.7, 0.9]}
+        assert seconds_to_accuracy(h, 0.5) == 5.0
+        assert seconds_to_accuracy(h, 0.99) == -1.0

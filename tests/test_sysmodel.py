@@ -1,0 +1,180 @@
+"""Unit tests for the wall-clock system model: profiles, latency cost
+model, virtual clock / event queue, and round planning."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import LSTM, MCLR, MLP
+from repro.sysmodel import (DeviceFleet, EventQueue, RoundCost, VirtualClock,
+                            device_latencies, expected_latencies,
+                            flops_per_local_step, heterogeneous_fleet,
+                            param_bytes, plan_sync_round, round_cost_for,
+                            uniform_fleet)
+
+
+class TestProfiles:
+    def test_uniform_fleet_is_homogeneous(self):
+        f = uniform_fleet(8, flops=2e9)
+        assert f.n_devices == 8
+        assert np.allclose(f.flops, 2e9)
+        assert (f.avail_period == 0).all()
+
+    def test_heterogeneous_fleet_deterministic(self):
+        a = heterogeneous_fleet(7, 50)
+        b = heterogeneous_fleet(7, 50)
+        assert np.array_equal(a.flops, b.flops)
+        assert np.array_equal(a.up_bw, b.up_bw)
+
+    def test_straggler_tail(self):
+        f = heterogeneous_fleet(0, 400, straggler_frac=0.25,
+                                straggler_slowdown=10.0)
+        # a quarter of devices are ~10x slower: the p10/p90 spread must be
+        # far wider than the lognormal alone
+        assert np.quantile(f.flops, 0.9) / np.quantile(f.flops, 0.1) > 10
+
+    def test_profile_row_view(self):
+        f = heterogeneous_fleet(0, 4)
+        p = f.profile(2)
+        assert p.flops == float(f.flops[2])
+        assert p.up_bw == float(f.up_bw[2])
+
+    def test_always_on_availability(self):
+        f = uniform_fleet(3)
+        ids = np.arange(3)
+        assert f.online_at(ids, 123.4).all()
+        assert np.allclose(f.next_online(ids, 5.0), 5.0)
+
+    def test_periodic_availability_windows(self):
+        f = DeviceFleet(flops=np.ones(1), up_bw=np.ones(1),
+                        down_bw=np.ones(1), avail_period=np.asarray([10.0]),
+                        avail_duty=np.asarray([0.5]),
+                        avail_phase=np.asarray([0.0]))
+        ids = np.asarray([0])
+        assert f.online_at(ids, 2.0)[0]          # inside [0, 5)
+        assert not f.online_at(ids, 7.0)[0]      # inside [5, 10)
+        assert np.isclose(f.next_online(ids, 7.0)[0], 10.0)
+        assert np.isclose(f.next_online(ids, 3.0)[0], 3.0)
+
+
+class TestLatency:
+    def test_flops_positive_and_ordered(self):
+        # LSTM >> MLP > MCLR per example-step
+        assert flops_per_local_step(LSTM) > flops_per_local_step(MLP) \
+            > flops_per_local_step(MCLR) > 0
+
+    def test_param_bytes(self):
+        import jax.numpy as jnp
+        params = {"w": jnp.zeros((3, 4), jnp.float32),
+                  "b": jnp.zeros((4,), jnp.float32)}
+        assert param_bytes(params) == (12 + 4) * 4
+
+    def test_round_cost_folb_uploads_double(self):
+        import jax.numpy as jnp
+        params = {"w": jnp.zeros((10,), jnp.float32)}
+        c_folb = round_cost_for(MCLR, params, uploads_gradient=True)
+        c_avg = round_cost_for(MCLR, params, uploads_gradient=False)
+        assert c_folb.up_bytes == 2 * c_avg.up_bytes
+        assert c_folb.down_bytes == c_avg.down_bytes
+
+    def test_faster_device_is_faster(self):
+        f = uniform_fleet(2)
+        f = DeviceFleet(flops=np.asarray([1e9, 4e9]), up_bw=f.up_bw,
+                        down_bw=f.down_bw, avail_period=f.avail_period,
+                        avail_duty=f.avail_duty, avail_phase=f.avail_phase)
+        cost = RoundCost(flops_per_step_example=1e6, down_bytes=1e3,
+                         up_bytes=1e3)
+        lat = device_latencies(f, np.asarray([0, 1]), np.asarray([10, 10]),
+                               cost)
+        assert lat[0] > lat[1]
+
+    def test_more_steps_more_time(self):
+        f = uniform_fleet(1)
+        cost = RoundCost(1e6, 1e3, 1e3)
+        l1 = device_latencies(f, np.asarray([0]), np.asarray([1]), cost)
+        l9 = device_latencies(f, np.asarray([0]), np.asarray([9]), cost)
+        assert l9[0] > l1[0]
+
+    def test_expected_latencies_cover_fleet(self):
+        f = heterogeneous_fleet(0, 13)
+        cost = RoundCost(1e6, 1e3, 1e3)
+        lat = expected_latencies(f, cost, mean_steps=10)
+        assert lat.shape == (13,)
+        assert (lat > 0).all()
+
+
+class TestClock:
+    def test_clock_monotonic(self):
+        c = VirtualClock()
+        c.advance(1.5)
+        c.advance_to(2.0)
+        assert c.now == 2.0
+        with pytest.raises(ValueError):
+            c.advance_to(1.0)
+        with pytest.raises(ValueError):
+            c.advance(-1.0)
+
+    def test_event_queue_orders_by_time(self):
+        q = EventQueue()
+        q.push(3.0, "c")
+        q.push(1.0, "a")
+        q.push(2.0, "b")
+        assert [q.pop().kind for _ in range(3)] == ["a", "b", "c"]
+
+    def test_event_queue_fifo_ties(self):
+        q = EventQueue()
+        for i in range(5):
+            q.push(1.0, "e", i=i)
+        assert [q.pop().payload["i"] for _ in range(5)] == [0, 1, 2, 3, 4]
+
+    def test_pop_until(self):
+        q = EventQueue()
+        q.push(1.0, "a")
+        q.push(2.0, "b")
+        q.push(5.0, "c")
+        evs = q.pop_until(2.5)
+        assert [e.kind for e in evs] == ["a", "b"]
+        assert len(q) == 1
+
+
+class TestScheduler:
+    COST = RoundCost(flops_per_step_example=1e7, down_bytes=1e4,
+                     up_bytes=1e4)
+
+    def test_infinite_deadline_everyone_arrives(self):
+        f = heterogeneous_fleet(0, 10)
+        ids = np.arange(10)
+        plan = plan_sync_round(f, ids, np.full(10, 5), self.COST, start=0.0)
+        assert plan.arrived.all()
+        assert np.isclose(plan.round_end, plan.arrival.max())
+
+    def test_tight_deadline_cuts_stragglers(self):
+        f = heterogeneous_fleet(0, 40, straggler_frac=0.4,
+                                straggler_slowdown=50.0)
+        ids = np.arange(40)
+        inf_plan = plan_sync_round(f, ids, np.full(40, 5), self.COST, 0.0)
+        d = float(np.median(inf_plan.arrival))
+        plan = plan_sync_round(f, ids, np.full(40, 5), self.COST, 0.0,
+                               deadline=d)
+        assert 0 < plan.n_arrived < 40
+        assert np.isclose(plan.round_end, d)
+        # cut devices are exactly those whose arrival exceeds the deadline
+        assert np.array_equal(plan.arrived, plan.arrival <= d)
+
+    def test_offline_device_starts_late(self):
+        f = DeviceFleet(
+            flops=np.asarray([1e9, 1e9]), up_bw=np.asarray([1e6, 1e6]),
+            down_bw=np.asarray([1e6, 1e6]),
+            avail_period=np.asarray([0.0, 100.0]),
+            avail_duty=np.asarray([1.0, 0.1]),
+            avail_phase=np.asarray([0.0, 50.0]))  # dev 1 offline at t=0
+        plan = plan_sync_round(f, np.asarray([0, 1]), np.asarray([2, 2]),
+                               self.COST, start=0.0)
+        assert plan.arrival[1] > plan.arrival[0] + 10.0
+
+    def test_round_starts_at_start(self):
+        f = uniform_fleet(3)
+        plan = plan_sync_round(f, np.arange(3), np.full(3, 1), self.COST,
+                               start=42.0, deadline=math.inf)
+        assert plan.start == 42.0
+        assert (plan.arrival > 42.0).all()
