@@ -1,0 +1,110 @@
+"""CI benchmark-regression gate.
+
+Compares a freshly generated ``BENCH_fed.json`` against the committed
+baseline and fails (exit 1) on regression:
+
+  * per tta result (matched by name): simulated ``secs_to_acc`` and
+    ``rounds_to_acc`` may not grow more than ``--tolerance`` (relative);
+    a run that used to reach the target but no longer does is always a
+    regression; ``final_acc`` may not drop more than ``--acc-drop``.
+    These metrics are *simulated* (virtual clock, fixed seeds), so they
+    are deterministic — the tolerance only absorbs small numeric drift
+    from intentional algorithm changes.
+  * dispatch: the scan-engine speedup over the python loop must stay at
+    least ``--min-speedup``.  A ratio (not absolute rounds/sec) so the
+    gate is machine-independent and safe on shared CI runners.
+
+Usage (CI copies the committed artifact aside before the bench overwrites
+it):
+
+    cp BENCH_fed.json bench_baseline.json
+    python -m benchmarks.run --quick --only tta
+    python benchmarks/check_regression.py \
+        --baseline bench_baseline.json --current BENCH_fed.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare(baseline: dict, current: dict, tolerance: float,
+            acc_drop: float, min_speedup: float) -> List[str]:
+    """Return the list of regression messages (empty == gate passes)."""
+    failures: List[str] = []
+    cur_by_name = {r["name"]: r for r in current.get("results", [])}
+    for base in baseline.get("results", []):
+        name = base["name"]
+        cur = cur_by_name.get(name)
+        if cur is None:
+            failures.append(f"{name}: result missing from current artifact")
+            continue
+        for metric in ("secs_to_acc", "rounds_to_acc"):
+            b, c = base.get(metric), cur.get(metric)
+            if b is None or c is None:
+                continue
+            if b < 0:          # baseline never reached target: nothing to gate
+                continue
+            if c < 0:
+                failures.append(
+                    f"{name}: {metric} no longer reaches target "
+                    f"(baseline {b})")
+            elif c > b * (1.0 + tolerance):
+                failures.append(
+                    f"{name}: {metric} regressed {b} -> {c} "
+                    f"(> {tolerance:.0%} tolerance)")
+        b_acc, c_acc = base.get("final_acc"), cur.get("final_acc")
+        if b_acc is not None and c_acc is not None \
+                and c_acc < b_acc - acc_drop:
+            failures.append(
+                f"{name}: final_acc dropped {b_acc:.3f} -> {c_acc:.3f} "
+                f"(> {acc_drop} allowed)")
+
+    base_disp = baseline.get("dispatch")
+    cur_disp = current.get("dispatch")
+    if base_disp is not None:
+        if cur_disp is None:
+            failures.append("dispatch: section missing from current artifact")
+        else:
+            speedup = cur_disp.get("scan_vs_loop_speedup", 0.0)
+            if speedup < min_speedup:
+                failures.append(
+                    f"dispatch: scan_vs_loop_speedup {speedup:.2f} "
+                    f"< required {min_speedup:.2f}")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_fed.json (the reference)")
+    ap.add_argument("--current", required=True,
+                    help="freshly generated BENCH_fed.json")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="relative growth allowed on to-accuracy metrics")
+    ap.add_argument("--acc-drop", type=float, default=0.05,
+                    help="absolute final-accuracy drop allowed")
+    ap.add_argument("--min-speedup", type=float, default=1.0,
+                    help="required scan-vs-python-loop dispatch speedup")
+    args = ap.parse_args()
+
+    failures = compare(_load(args.baseline), _load(args.current),
+                       args.tolerance, args.acc_drop, args.min_speedup)
+    if failures:
+        print("BENCHMARK REGRESSION GATE: FAIL")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print("BENCHMARK REGRESSION GATE: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,93 @@
+"""Dispatch-overhead benchmark: python-loop vs scan-compiled engine.
+
+The python-loop engine pays per-round host overhead: a jit dispatch, a
+key split, a numpy step draw.  The scan engine compiles the whole run
+into one XLA program.  To measure that *dispatch* gap (rather than the
+round's local-SGD math, which is identical in both engines), the round
+here is deliberately light — K = 5 clients, ≤ 2 local steps — the
+dispatch-bound regime of large hyper-parameter sweeps; with the sweep's
+heavy rounds (K = 10, 20 local steps) the CPU round math dominates and
+the whole-run speedup shrinks toward 1x.  Steady state: both engines
+warmed at the measured round count, the scan's one-off compile cost
+reported separately.  Results land in ``BENCH_fed.json``.
+
+The CI regression gate (``benchmarks/check_regression.py``) checks the
+*speedup ratio*, not absolute rounds/sec — machine-independent, so the
+gate is meaningful on shared runners.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+DISPATCH_ROUNDS = 60   # fixed regardless of --quick: artifact comparability
+_REPS = 5              # median-of-5: each rep is ~0.3 s, CI runners are noisy
+
+
+def _median_seconds(fn, reps: int = _REPS) -> float:
+    times = []
+    for _ in range(reps):
+        t0 = time.time()
+        fn()
+        times.append(time.time() - t0)
+    return sorted(times)[len(times) // 2]
+
+
+def dispatch_results(rounds: int = DISPATCH_ROUNDS) -> Dict:
+    """Measure rounds/sec of both engines on the shared tta sweep cohort
+    with a dispatch-bound round (light local work)."""
+    from benchmarks.time_to_accuracy import setup_sweep
+    from repro.fed.scan_engine import run_federated_compiled
+    from repro.fed.simulator import FLConfig, run_federated
+    model_cfg, fed, _fleet, _deadline = setup_sweep()
+    fl = FLConfig(algo="folb", n_selected=5, mu=1.0, lr=0.05,
+                  max_local_steps=2, seed=0)
+
+    # eval only at the endpoints: measure round dispatch, not evaluation
+    def loop_run():
+        return run_federated(model_cfg, fed, fl, rounds=rounds,
+                             eval_every=rounds)
+
+    def scan_run():
+        return run_federated_compiled(model_cfg, fed, fl, rounds=rounds,
+                                      eval_every=rounds)
+
+    loop_run()                      # warm the per-round jit caches
+    t0 = time.time()
+    scan_run()                      # first call compiles the whole run
+    compile_s = time.time() - t0
+    loop_s = _median_seconds(loop_run)
+    scan_s = _median_seconds(scan_run)
+    return {
+        "rounds": rounds,
+        "algo": fl.algo,
+        "n_selected": fl.n_selected,
+        "max_local_steps": fl.max_local_steps,
+        "python_loop_rounds_per_sec": rounds / loop_s,
+        "scan_rounds_per_sec": rounds / scan_s,
+        "scan_first_call_seconds": round(compile_s, 3),
+        "scan_vs_loop_speedup": loop_s / scan_s,
+    }
+
+
+def dispatch_rows(rounds: int = DISPATCH_ROUNDS
+                  ) -> Tuple[List[Tuple[str, float, str]], Dict]:
+    """(CSV rows, json payload) for the run harness."""
+    res = dispatch_results(rounds)
+    us_loop = 1e6 / res["python_loop_rounds_per_sec"]
+    us_scan = 1e6 / res["scan_rounds_per_sec"]
+    rows = [
+        ("tta/dispatch/python_loop", us_loop,
+         f"rounds_per_sec={res['python_loop_rounds_per_sec']:.1f}"),
+        ("tta/dispatch/scan_compiled", us_scan,
+         f"rounds_per_sec={res['scan_rounds_per_sec']:.1f};"
+         f"speedup={res['scan_vs_loop_speedup']:.2f}x;"
+         f"first_call_s={res['scan_first_call_seconds']}"),
+    ]
+    return rows, res
+
+
+if __name__ == "__main__":
+    res = dispatch_results()
+    for k, v in res.items():
+        print(f"{k}: {v}")

@@ -27,8 +27,8 @@ def main() -> None:
                     help="path of the cross-PR perf artifact")
     args = ap.parse_args()
 
-    from benchmarks import (kernel_bench, paper_tables, roofline,
-                            time_to_accuracy)
+    from benchmarks import (dispatch_bench, kernel_bench, paper_tables,
+                            roofline, time_to_accuracy)
 
     rounds = 30 if args.quick else 100
     fig_rounds = 20 if args.quick else 60
@@ -39,13 +39,18 @@ def main() -> None:
 
     def tta_rows():
         results = time_to_accuracy.time_to_accuracy_results(tta_rounds)
-        path = time_to_accuracy.write_bench_json(results, args.bench_json)
+        # persist the TTA sweep before the dispatch bench runs, so a
+        # dispatch failure can't discard the multi-minute sweep results
+        time_to_accuracy.write_bench_json(results, args.bench_json)
+        d_rows, dispatch = dispatch_bench.dispatch_rows()
+        path = time_to_accuracy.write_bench_json(
+            results, args.bench_json, extra={"dispatch": dispatch})
         print(f"# wrote {path}", file=sys.stderr)
         return [(f"tta/{r['name']}",
                  r["host_seconds"] / tta_rounds * 1e6,
                  f"rounds_to_{r['target_acc']}={r['rounds_to_acc']};"
                  f"secs_to_{r['target_acc']}={r['secs_to_acc']:.2f};"
-                 f"final_acc={r['final_acc']:.3f}") for r in results]
+                 f"final_acc={r['final_acc']:.3f}") for r in results] + d_rows
 
     suites = [
         ("table1", lambda: paper_tables.table1_rounds_to_accuracy(rounds)),
@@ -62,6 +67,7 @@ def main() -> None:
     ]
 
     print("name,us_per_call,derived")
+    failed = []
     for prefix, fn in suites:
         if args.only and not prefix.startswith(args.only):
             continue
@@ -70,10 +76,18 @@ def main() -> None:
             rows = fn()
         except Exception as e:  # noqa: BLE001
             print(f"{prefix}/SUITE_ERROR,0,{e!r}", flush=True)
+            failed.append(prefix)
             continue
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}", flush=True)
         print(f"# suite {prefix}: {time.time()-t0:.1f}s", file=sys.stderr)
+    if failed:
+        # nonzero exit so CI can't silently skip the regression gate with a
+        # stale BENCH_fed.json (a crashed tta suite would leave the
+        # committed artifact in place and the gate would pass it against
+        # itself)
+        print(f"# FAILED suites: {','.join(failed)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

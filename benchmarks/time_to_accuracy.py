@@ -29,7 +29,7 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import numpy as np
@@ -108,9 +108,10 @@ def time_to_accuracy_results(rounds: int = 60) -> List[Dict]:
     return results
 
 
-def write_bench_json(results: List[Dict], path: str = "BENCH_fed.json"
-                     ) -> str:
-    """Write the cross-PR perf artifact."""
+def write_bench_json(results: List[Dict], path: str = "BENCH_fed.json",
+                     extra: Optional[Dict] = None) -> str:
+    """Write the cross-PR perf artifact.  `extra` merges additional
+    top-level sections (e.g. the dispatch-overhead numbers)."""
     payload = {
         "benchmark": "time_to_accuracy",
         "dataset": f"synthetic(1,1) x {N_DEVICES} devices",
@@ -121,6 +122,7 @@ def write_bench_json(results: List[Dict], path: str = "BENCH_fed.json"
         "target_acc": TARGET_ACC,
         "results": results,
     }
+    payload.update(extra or {})
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")

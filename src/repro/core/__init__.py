@@ -1,4 +1,5 @@
 """FOLB core — the paper's primary contribution: device-selection
 distributions, gradient-weighted aggregation rules, theory bounds, pytree
 linear algebra, and the ψ/μ hyper-parameter line search."""
-from repro.core import aggregation, bounds, selection, tree, tuning  # noqa: F401
+from repro.core import (aggregation, bounds, flat, selection, tree,  # noqa: F401
+                        tuning)

@@ -10,8 +10,6 @@ the K inner products and the weighted delta reduction in one HBM pass.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -1,0 +1,109 @@
+"""Flat-buffer parameter representation for the compiled execution path.
+
+The pytree aggregation rules in ``repro.core.aggregation`` walk the model
+tree on every round — fine for exploration, but the hot path wants a single
+contiguous fp32 vector: client deltas/grads then stack into dense ``(K, D)``
+buffers that feed the fused Pallas FOLB kernel directly, and whole-run
+``lax.scan`` engines can carry one array instead of a tree.
+
+``FlatSpec`` is the *static* unravel recipe (leaf shapes/dtypes + treedef +
+padding), hashable so it can ride through ``jax.jit`` as a static argument.
+``D_pad`` rounds the parameter count up to the Pallas streaming tile
+(``kernels.folb_aggregate.TILE_D``); the padding lanes are zero and stay
+zero through every aggregation rule (zero delta, zero grad), so
+``unravel(spec, ravel(spec, tree))`` is exact — bit-for-bit — for fp32
+trees and value-preserving (one fp32 round-trip) otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.folb_aggregate import TILE_D
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    """Static recipe for flattening/unflattening one model pytree.
+
+    Hashable (treedef and shape/dtype tuples are hashable), so functions
+    taking a FlatSpec can mark it static under jit.
+    """
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    pad_to: int = TILE_D
+
+    @property
+    def sizes(self) -> Tuple[int, ...]:
+        out = []
+        for s in self.shapes:
+            n = 1
+            for d in s:
+                n *= d
+            out.append(n)
+        return tuple(out)
+
+    @property
+    def D(self) -> int:
+        """Unpadded parameter count."""
+        return sum(self.sizes)
+
+    @property
+    def D_pad(self) -> int:
+        """Parameter count rounded up to the kernel streaming tile."""
+        return self.D + (-self.D) % self.pad_to
+
+
+def spec_of(tree, pad_to: int = TILE_D) -> FlatSpec:
+    """Build the static FlatSpec for a parameter pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return FlatSpec(treedef=treedef,
+                    shapes=tuple(tuple(x.shape) for x in leaves),
+                    dtypes=tuple(jnp.asarray(x).dtype for x in leaves),
+                    pad_to=pad_to)
+
+
+def ravel(spec: FlatSpec, tree) -> jnp.ndarray:
+    """Pytree -> (D_pad,) fp32 vector (zero-padded past D)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    flat = jnp.concatenate(
+        [jnp.asarray(x).reshape(-1).astype(jnp.float32) for x in leaves])
+    pad = spec.D_pad - spec.D
+    return jnp.pad(flat, (0, pad)) if pad else flat
+
+
+def ravel_stacked(spec: FlatSpec, stacked) -> jnp.ndarray:
+    """Pytree with leading client axis K -> (K, D_pad) fp32 buffer."""
+    leaves = jax.tree_util.tree_leaves(stacked)
+    K = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [jnp.asarray(x).reshape(K, -1).astype(jnp.float32) for x in leaves],
+        axis=1)
+    pad = spec.D_pad - spec.D
+    return jnp.pad(flat, ((0, 0), (0, pad))) if pad else flat
+
+
+def unravel(spec: FlatSpec, flat: jnp.ndarray):
+    """(D_pad,) or (D,) vector -> pytree with the spec's shapes/dtypes."""
+    leaves = []
+    off = 0
+    for shape, dtype, n in zip(spec.shapes, spec.dtypes, spec.sizes):
+        leaves.append(flat[off:off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+def unravel_stacked(spec: FlatSpec, flat: jnp.ndarray):
+    """(K, D_pad) buffer -> pytree with a leading K axis per leaf."""
+    K = flat.shape[0]
+    leaves = []
+    off = 0
+    for shape, dtype, n in zip(spec.shapes, spec.dtypes, spec.sizes):
+        leaves.append(
+            flat[:, off:off + n].reshape((K,) + shape).astype(dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)

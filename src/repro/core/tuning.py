@@ -2,8 +2,7 @@
 for μ and ψ, selected by best end-of-budget metric on short runs."""
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Callable, Dict, Sequence, Tuple
 
 MU_GRID: Sequence[float] = (1e-4, 1e-3, 1e-2, 1e-1, 1.0)
 PSI_GRID: Sequence[float] = (1e-1, 1.0, 10.0, 100.0)

@@ -6,7 +6,7 @@ correctness, plus train/test splitting and device-weighted global metrics
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import numpy as np
 

@@ -18,7 +18,7 @@ sequence tasks for the LSTM model.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 import numpy as np
 

@@ -39,6 +39,7 @@ import numpy as np
 from repro.core import aggregation, selection
 from repro.data.federated import FederatedData
 from repro.fed import simulator
+from repro.kernels import ops
 from repro.models import small
 from repro.sysmodel import (DeviceFleet, EventQueue, VirtualClock,
                             device_latencies, expected_latencies,
@@ -65,11 +66,13 @@ class AsyncFLConfig:
     staleness_alpha: float = 0.0  # (1+τ)^{-α} score discount; 0 = off
     psi: float = 0.0              # Sec. V heterogeneity penalty weight
     latency_aware: bool = False   # deadline-aware selection probabilities
+    agg_backend: str = "flat"     # flat (fused Pallas kernel) | pytree
     seed: int = 0
 
     def __post_init__(self):
         assert self.mode in ASYNC_MODES, self.mode
         assert self.algo in ASYNC_ALGOS, self.algo
+        assert self.agg_backend in simulator.AGG_BACKENDS, self.agg_backend
 
     def sync_config(self) -> simulator.FLConfig:
         """The synchronous FLConfig whose round math this config reduces to
@@ -77,7 +80,8 @@ class AsyncFLConfig:
         return simulator.FLConfig(
             algo=self.algo, n_selected=self.n_selected, mu=self.mu,
             lr=self.lr, max_local_steps=self.max_local_steps,
-            het_steps=self.het_steps, psi=self.psi, seed=self.seed)
+            het_steps=self.het_steps, psi=self.psi,
+            agg_backend=self.agg_backend, seed=self.seed)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1))
@@ -115,6 +119,14 @@ def _apply_aggregation(afl: AsyncFLConfig, params, deltas, grads, gammas,
         return aggregation.mean_staleness(params, deltas, tau,
                                           alpha=afl.staleness_alpha)
     psi = afl.psi if afl.algo == "folb_het" else 0.0
+    if afl.agg_backend == "flat":
+        # default hot path: flat (K, D) buffers through the fused Pallas
+        # staleness kernel (interpret mode on CPU)
+        pg = psi * gammas if psi != 0.0 else None
+        new, _ = ops.folb_staleness_tree(params, deltas, grads, tau,
+                                         alpha=afl.staleness_alpha,
+                                         psi_gammas=pg)
+        return new
     return aggregation.folb_staleness(params, deltas, grads, tau,
                                       alpha=afl.staleness_alpha,
                                       gammas=gammas, psi=psi)

@@ -1,0 +1,157 @@
+"""Whole-run compiled federated execution: ``lax.scan`` over rounds.
+
+The python-loop engine (``simulator.run_federated``) pays per-round Python
+dispatch: one jit call, one key split, one numpy step draw, and a host
+round-trip for every communication round.  For the paper-scale models a
+round's actual math is microseconds of work, so dispatch dominates — and
+sweeping schedules/hyper-parameters at scale means thousands of runs.
+
+This engine compiles an entire fixed-schedule federated run into ONE XLA
+program:
+
+  * parameters live as a single flat fp32 buffer (``repro.core.flat``) in
+    the scan carry — no pytree walking between rounds;
+  * selection keys and per-device local-step budgets are pre-drawn on the
+    host with exactly the sequence the python loop consumes (the same
+    ``jax.random.split`` chain and the same round-indexed numpy draws);
+  * each scan step runs the same ``simulator.fl_round`` round math (flat
+    Pallas aggregation by default), emitting the post-round flat params
+    and the sampled device ids as stacked scan outputs.
+
+Evaluation and fleet wall-clock timestamping happen OUTSIDE the scan, on
+the emitted per-round outputs, through the very same jitted
+``simulator.eval_global`` / ``simulator.sync_round_clock`` code the python
+loop uses — which is what makes the two engines agree bit-for-bit on a
+fixed seed (``tests/test_scan_engine.py``).
+
+Memory note: the scan emits the (rounds, D_pad) fp32 parameter trajectory
+so history evaluation can happen post-hoc; at paper scale (D ~ 1e3-1e5)
+this is negligible.  For 100M+ parameter models use
+``repro.fed.distributed`` instead.
+
+Unsupported here (use the python loop): FedOpt-style server optimizers
+(host-side state) and fleet deadlines (host event queue — see
+``repro.fed.async_engine``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flat as flat_lib
+from repro.data.federated import FederatedData
+from repro.fed import simulator
+from repro.models import small
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _split_chain(key, rounds: int):
+    """The python loop's ``key, sub = jax.random.split(key)`` chain as one
+    compiled scan (identical key values — threefry is deterministic —
+    without `rounds` host dispatches)."""
+    def body(k, _):
+        ks = jax.random.split(k)
+        return ks[0], ks[1]
+
+    _, subs = jax.lax.scan(body, key, None, length=rounds)
+    return subs
+
+
+def draw_round_inputs(fl: simulator.FLConfig, rounds: int, init_key):
+    """Pre-draw the per-round (selection key, local-step budgets) sequence.
+
+    Replicates the python-loop engine's host side exactly: the
+    ``key, sub = jax.random.split(key)`` chain and the round-indexed numpy
+    step draws of ``simulator.local_step_draws`` — so a scan over these
+    inputs sees the same randomness as ``run_federated``.
+    """
+    steps = [simulator.local_step_draws(t, fl.n_selected, fl)
+             for t in range(rounds)]
+    return _split_chain(init_key, rounds), jnp.stack(steps)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def scan_rounds(model_cfg, fl: simulator.FLConfig, spec: flat_lib.FlatSpec,
+                w0_flat, data, p_weights, keys, steps):
+    """The whole-run XLA program: scan ``fl_round`` over pre-drawn inputs.
+
+    Returns (final flat params, ys) where ys carries the per-round
+    post-update flat parameter trajectory and the sampled device ids.
+    """
+    def body(w_flat, xs):
+        sub, n_steps = xs
+        params = flat_lib.unravel(spec, w_flat)
+        new_params, diag = simulator.fl_round(
+            model_cfg, fl, params, data, p_weights, sub, n_steps)
+        w_new = flat_lib.ravel(spec, new_params)
+        ys = {"params": w_new, "ids": diag["ids"]}
+        if "ids2" in diag:
+            ys["ids2"] = diag["ids2"]
+        return w_new, ys
+
+    return jax.lax.scan(body, w0_flat, (keys, steps))
+
+
+def run_federated_compiled(model_cfg, fed: FederatedData,
+                           fl: simulator.FLConfig, rounds: int,
+                           init_key: Optional[jax.Array] = None,
+                           eval_every: int = 1,
+                           fleet=None) -> simulator.FedRunResult:
+    """Drop-in replacement for ``run_federated`` on fixed schedules.
+
+    Bit-for-bit identical history on the same seed (shared round math,
+    shared jitted eval, shared fleet cost replay), one XLA dispatch for
+    the whole run instead of one per round.
+    """
+    if fl.server_opt != "sgd" or fl.server_lr != 1.0:
+        raise NotImplementedError(
+            "scan engine runs the paper's plain server update; use "
+            "run_federated for FedOpt-style server optimizers")
+    key = init_key if init_key is not None else jax.random.PRNGKey(fl.seed)
+    params = small.init_small(model_cfg, key)
+    train = {"x": jnp.asarray(fed.x), "y": jnp.asarray(fed.y),
+             "mask": jnp.asarray(fed.mask)}
+    test = {"x": jnp.asarray(fed.test_x), "y": jnp.asarray(fed.test_y),
+            "mask": jnp.asarray(fed.test_mask)}
+    p = jnp.asarray(fed.p)
+
+    spec = flat_lib.spec_of(params)
+    w0 = flat_lib.ravel(spec, params)
+    keys, steps = draw_round_inputs(fl, rounds, key)
+    w_final, ys = scan_rounds(model_cfg, fl, spec, w0, train, p, keys, steps)
+
+    hist = {"round": [], "train_loss": [], "test_acc": [], "train_acc": []}
+    cost = probe_cost = sizes = None
+    if fleet is not None:
+        assert fleet.n_devices == fed.n_devices, \
+            (fleet.n_devices, fed.n_devices)
+        cost, probe_cost, sizes = simulator.fleet_cost_setup(
+            model_cfg, params, fed, fl.algo)
+        hist["wall_clock"] = []
+    clock_now = 0.0
+    ids_all = np.asarray(ys["ids"])
+    ids2_all = np.asarray(ys["ids2"]) if "ids2" in ys else None
+    steps_np = np.asarray(steps)
+    for t in range(rounds):
+        if fleet is not None:
+            clock_now = simulator.sync_round_clock(
+                fleet, cost, probe_cost, sizes, fl.algo, ids_all[t],
+                None if ids2_all is None else ids2_all[t],
+                steps_np[t], clock_now)
+        if t % eval_every == 0 or t == rounds - 1:
+            params_t = flat_lib.unravel(spec, ys["params"][t])
+            tr_loss, tr_acc = simulator.eval_global(model_cfg, params_t,
+                                                    train, p)
+            _, te_acc = simulator.eval_global(model_cfg, params_t, test, p)
+            hist["round"].append(t)
+            hist["train_loss"].append(float(tr_loss))
+            hist["train_acc"].append(float(tr_acc))
+            hist["test_acc"].append(float(te_acc))
+            if fleet is not None:
+                hist["wall_clock"].append(clock_now)
+    return simulator.FedRunResult(history=hist,
+                                  params=flat_lib.unravel(spec, w_final))

@@ -21,7 +21,7 @@ benchmarks.paper_tables.beyond_server_opt.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -29,11 +29,13 @@ import numpy as np
 
 from repro.core import aggregation, selection, tree
 from repro.data.federated import FederatedData
+from repro.kernels import ops
 from repro.models import small
 from repro.optim import solvers
 
 ALGOS = ("fedavg", "fedprox", "fednu_direct", "fednu_signed", "fednu_norm",
          "folb", "folb2", "folb_het")
+AGG_BACKENDS = ("flat", "pytree")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +47,10 @@ class FLConfig:
     max_local_steps: int = 20
     het_steps: bool = True      # random 1..max per device (paper protocol)
     psi: float = 0.0            # heterogeneity penalty weight (folb_het)
+    # aggregation backend for the folb/folb_het hot path: "flat" streams
+    # stacked (K, D) buffers through the fused Pallas kernel (interpret
+    # mode on CPU); "pytree" keeps the reference leafwise rules.
+    agg_backend: str = "flat"
     # beyond-paper: server optimizer over the round aggregate (FedOpt-style)
     server_opt: str = "sgd"     # sgd | momentum | adam
     server_lr: float = 1.0      # 1.0 + sgd == the paper's plain application
@@ -52,6 +58,7 @@ class FLConfig:
 
     def __post_init__(self):
         assert self.algo in ALGOS, self.algo
+        assert self.agg_backend in AGG_BACKENDS, self.agg_backend
 
 
 def local_step_draws(t: int, k: int, cfg) -> jnp.ndarray:
@@ -137,6 +144,13 @@ def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps):
 
     if fl.algo in ("fedavg", "fedprox"):
         new = aggregation.fedavg_aggregate(params, deltas)
+    elif fl.algo in ("folb", "folb_het") and fl.agg_backend == "flat":
+        # default hot path: stack everything into flat (K, D) buffers and
+        # run the fused Pallas aggregation (2 streaming passes instead of
+        # ~2K leafwise reductions)
+        pg = fl.psi * gammas if fl.algo == "folb_het" else None
+        new, _ = ops.folb_aggregate_tree(params, deltas, grads,
+                                         psi_gammas=pg)
     elif fl.algo == "folb":
         new = aggregation.folb_single_set(params, deltas, grads)
     elif fl.algo == "folb2":
@@ -197,6 +211,54 @@ class FedRunResult:
         return self.history.keys()
 
 
+def fleet_cost_setup(model_cfg, params, fed: FederatedData, algo: str):
+    """Cost model pieces for fleet-timestamped runs: (round cost, gradient
+    probe cost, per-device dataset sizes).  Shared by the python-loop and
+    scan-compiled engines so both replay identical wall-clocks."""
+    from repro.sysmodel import RoundCost, round_cost_for
+    cost = round_cost_for(model_cfg, params,
+                          uploads_gradient="folb" in algo or "fednu" in algo)
+    # a gradient probe (fednu baselines, folb2's S2 set): one fwd+bwd
+    # pass over the local data, then upload the gradient (1x params)
+    probe_cost = RoundCost(
+        flops_per_step_example=cost.flops_per_step_example,
+        down_bytes=cost.down_bytes, up_bytes=cost.down_bytes)
+    sizes = np.asarray(fed.mask.sum(axis=1))
+    return cost, probe_cost, sizes
+
+
+def sync_round_clock(fleet, cost, probe_cost, sizes, algo: str,
+                     ids: np.ndarray, ids2: Optional[np.ndarray],
+                     n_steps, clock_now: float) -> float:
+    """Advance the simulated wall-clock by one synchronous round (full
+    barrier: the round costs as much as its slowest selected device)."""
+    from repro.sysmodel import RoundCost, plan_sync_round
+    start = clock_now
+    phase_cost = cost
+    if algo.startswith("fednu"):
+        # the naive baselines first probe ALL N devices for their
+        # gradients — the defining communication cost the paper's
+        # FOLB avoids; the server can only sample after the slowest
+        # probe lands.  Selected devices already hold w^t and have
+        # uploaded ∇F_k, so the update phase costs only local
+        # compute + the delta upload.
+        all_ids = np.arange(fleet.n_devices)
+        probe = plan_sync_round(fleet, all_ids, np.ones(len(all_ids)),
+                                probe_cost, start=start, n_examples=sizes)
+        start = probe.round_end
+        phase_cost = RoundCost(
+            flops_per_step_example=cost.flops_per_step_example,
+            down_bytes=0.0, up_bytes=probe_cost.down_bytes)
+    plan = plan_sync_round(fleet, ids, np.asarray(n_steps), phase_cost,
+                           start=start, n_examples=sizes[ids])
+    clock_now = plan.round_end
+    if ids2 is not None:   # folb2 contacts a second K-device set
+        plan2 = plan_sync_round(fleet, ids2, np.ones(len(ids2)), probe_cost,
+                                start=start, n_examples=sizes[ids2])
+        clock_now = max(clock_now, plan2.round_end)
+    return clock_now
+
+
 def run_federated(model_cfg, fed: FederatedData, fl: FLConfig, rounds: int,
                   init_key: Optional[jax.Array] = None,
                   eval_every: int = 1, fleet=None) -> FedRunResult:
@@ -222,18 +284,10 @@ def run_federated(model_cfg, fed: FederatedData, fl: FLConfig, rounds: int,
                                     "test_acc": [], "train_acc": []}
     cost = probe_cost = sizes = None
     if fleet is not None:
-        from repro.sysmodel import RoundCost, plan_sync_round, round_cost_for
         assert fleet.n_devices == fed.n_devices, \
             (fleet.n_devices, fed.n_devices)
-        cost = round_cost_for(model_cfg, params,
-                              uploads_gradient="folb" in fl.algo
-                              or "fednu" in fl.algo)
-        # a gradient probe (fednu baselines, folb2's S2 set): one fwd+bwd
-        # pass over the local data, then upload the gradient (1x params)
-        probe_cost = RoundCost(
-            flops_per_step_example=cost.flops_per_step_example,
-            down_bytes=cost.down_bytes, up_bytes=cost.down_bytes)
-        sizes = np.asarray(fed.mask.sum(axis=1))
+        cost, probe_cost, sizes = fleet_cost_setup(model_cfg, params, fed,
+                                                   fl.algo)
         hist["wall_clock"] = []
     clock_now = 0.0
     from repro.fed import server_opt as sopt
@@ -246,34 +300,11 @@ def run_federated(model_cfg, fed: FederatedData, fl: FLConfig, rounds: int,
         new_params, diag = fl_round(model_cfg, fl, params, train, p, sub,
                                     n_steps)
         if fleet is not None:
-            start = clock_now
-            phase_cost = cost
-            if fl.algo.startswith("fednu"):
-                # the naive baselines first probe ALL N devices for their
-                # gradients — the defining communication cost the paper's
-                # FOLB avoids; the server can only sample after the slowest
-                # probe lands.  Selected devices already hold w^t and have
-                # uploaded ∇F_k, so the update phase costs only local
-                # compute + the delta upload.
-                all_ids = np.arange(fleet.n_devices)
-                probe = plan_sync_round(fleet, all_ids, np.ones(len(all_ids)),
-                                        probe_cost, start=start,
-                                        n_examples=sizes)
-                start = probe.round_end
-                phase_cost = RoundCost(
-                    flops_per_step_example=cost.flops_per_step_example,
-                    down_bytes=0.0, up_bytes=probe_cost.down_bytes)
-            ids = np.asarray(diag["ids"])
-            plan = plan_sync_round(fleet, ids, np.asarray(n_steps),
-                                   phase_cost, start=start,
-                                   n_examples=sizes[ids])
-            clock_now = plan.round_end
-            if "ids2" in diag:   # folb2 contacts a second K-device set
-                ids2 = np.asarray(diag["ids2"])
-                plan2 = plan_sync_round(fleet, ids2, np.ones(len(ids2)),
-                                        probe_cost, start=start,
-                                        n_examples=sizes[ids2])
-                clock_now = max(clock_now, plan2.round_end)
+            clock_now = sync_round_clock(
+                fleet, cost, probe_cost, sizes, fl.algo,
+                np.asarray(diag["ids"]),
+                np.asarray(diag["ids2"]) if "ids2" in diag else None,
+                n_steps, clock_now)
         if use_server_opt:
             delta = jax.tree.map(
                 lambda n, w: n.astype(jnp.float32) - w.astype(jnp.float32),

@@ -21,7 +21,6 @@ sweeps of the full parameter vector into 2.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
@@ -99,6 +98,31 @@ def folb_aggregate(w: jnp.ndarray, deltas: jnp.ndarray, grads: jnp.ndarray,
     """Fused FOLB aggregation; matches kernels.ref.folb_aggregate_ref."""
     inner = folb_scores(grads, g1, interpret=interpret)
     scores = inner - psi_gamma.astype(jnp.float32) * g1_sq.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(jnp.abs(scores)), 1e-30)
+    new_w = folb_apply(w, deltas, scores / denom, interpret=interpret)
+    return new_w, scores
+
+
+def folb_aggregate_stale(w: jnp.ndarray, deltas: jnp.ndarray,
+                         grads: jnp.ndarray, tau: jnp.ndarray,
+                         alpha: jnp.ndarray, psi_gamma: jnp.ndarray,
+                         mask: jnp.ndarray, interpret: bool = False
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Flat-buffer staleness-discounted FOLB (async engines' hot rule).
+
+    Matches ``core.aggregation.folb_staleness`` on the flattened problem:
+        I_k = (<g_k, g1> − ψγ_k ||g1||²) · (1 + τ_k)^{−α} · m_k
+    with g1 the masked mean of the arrived gradients, reusing the same two
+    streaming Pallas phases as ``folb_aggregate`` (the score/normalize
+    algebra between them is K-sized scalar work).
+    """
+    m = mask.astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(m), 1.0)
+    g1 = jnp.tensordot(m, grads.astype(jnp.float32), axes=1) / n
+    g1_sq = jnp.sum(g1 * g1)
+    inner = folb_scores(grads, g1, interpret=interpret)
+    scores = inner - psi_gamma.astype(jnp.float32) * g1_sq
+    scores = scores * jnp.power(1.0 + tau.astype(jnp.float32), -alpha) * m
     denom = jnp.maximum(jnp.sum(jnp.abs(scores)), 1e-30)
     new_w = folb_apply(w, deltas, scores / denom, interpret=interpret)
     return new_w, scores

@@ -16,7 +16,6 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import folb_aggregate as _folb
 from repro.kernels import slstm_scan as _slstm
 from repro.kernels import ssm_scan as _ssd
-from repro.core import tree as tree_lib
 
 INTERPRET = jax.default_backend() == "cpu"
 
@@ -51,41 +50,53 @@ def folb_aggregate_flat(w, deltas, grads, g1, psi_gamma, g1_sq
                                 interpret=INTERPRET)
 
 
+@jax.jit
+def folb_aggregate_flat_stale(w, deltas, grads, tau, alpha, psi_gamma, mask
+                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Staleness-discounted flat FOLB (masked g1, (1+τ)^{−α} scores);
+    matches core.aggregation.folb_staleness on the flattened problem."""
+    return _folb.folb_aggregate_stale(w, deltas, grads, tau, alpha,
+                                      psi_gamma, mask, interpret=INTERPRET)
+
+
+def _ravel_problem(params, deltas_stacked, grads_stacked, psi_gammas):
+    """Shared flattening for the pytree front-ends: (spec, K, and the flat
+    w/(K,D)-delta/(K,D)-grad/ψγ buffers the kernels consume)."""
+    from repro.core import flat as flat_lib
+    spec = flat_lib.spec_of(params)
+    K = jax.tree_util.tree_leaves(deltas_stacked)[0].shape[0]
+    w = flat_lib.ravel(spec, params)
+    deltas = flat_lib.ravel_stacked(spec, deltas_stacked)
+    grads = flat_lib.ravel_stacked(spec, grads_stacked)
+    pg = (jnp.zeros((K,), jnp.float32) if psi_gammas is None
+          else psi_gammas.astype(jnp.float32))
+    return spec, K, w, deltas, grads, pg
+
+
 def folb_aggregate_tree(params, deltas_stacked, grads_stacked,
                         psi_gammas=None) -> Tuple:
     """Pytree front-end: ravel the pytrees into flat (K, D) buffers (padding
     D to the kernel tile), run the fused kernel, unravel.  Matches
     repro.core.aggregation.folb_single_set / folb_het."""
-    leaves, treedef = jax.tree_util.tree_flatten(params)
-    K = jax.tree_util.tree_leaves(deltas_stacked)[0].shape[0]
-
-    def flat(tree_, lead=False):
-        ls = jax.tree_util.tree_leaves(tree_)
-        if lead:
-            return jnp.concatenate(
-                [l.reshape(K, -1).astype(jnp.float32) for l in ls], axis=1)
-        return jnp.concatenate(
-            [l.reshape(-1).astype(jnp.float32) for l in ls])
-
-    w = flat(params)
-    D = w.shape[0]
-    pad = (-D) % _folb.TILE_D
-    deltas = flat(deltas_stacked, lead=True)
-    grads = flat(grads_stacked, lead=True)
-    if pad:
-        w = jnp.pad(w, (0, pad))
-        deltas = jnp.pad(deltas, ((0, 0), (0, pad)))
-        grads = jnp.pad(grads, ((0, 0), (0, pad)))
+    from repro.core import flat as flat_lib
+    spec, _, w, deltas, grads, pg = _ravel_problem(
+        params, deltas_stacked, grads_stacked, psi_gammas)
     g1 = jnp.mean(grads, axis=0)
     g1_sq = jnp.sum(g1 * g1)
-    pg = (jnp.zeros((K,), jnp.float32) if psi_gammas is None
-          else psi_gammas.astype(jnp.float32))
     new_flat, scores = folb_aggregate_flat(w, deltas, grads, g1, pg, g1_sq)
-    new_flat = new_flat[:D]
-    out_leaves = []
-    off = 0
-    for l in leaves:
-        n = l.size
-        out_leaves.append(new_flat[off:off + n].reshape(l.shape).astype(l.dtype))
-        off += n
-    return jax.tree_util.tree_unflatten(treedef, out_leaves), scores
+    return flat_lib.unravel(spec, new_flat), scores
+
+
+def folb_staleness_tree(params, deltas_stacked, grads_stacked, tau,
+                        alpha: float = 0.0, psi_gammas=None, mask=None
+                        ) -> Tuple:
+    """Pytree front-end for the staleness rule (async engines): ravel, run
+    the fused kernel, unravel.  Matches core.aggregation.folb_staleness."""
+    from repro.core import flat as flat_lib
+    spec, K, w, deltas, grads, pg = _ravel_problem(
+        params, deltas_stacked, grads_stacked, psi_gammas)
+    m = jnp.ones((K,), jnp.float32) if mask is None else mask
+    new_flat, scores = folb_aggregate_flat_stale(
+        w, deltas, grads, tau.astype(jnp.float32),
+        jnp.asarray(alpha, jnp.float32), pg, m)
+    return flat_lib.unravel(spec, new_flat), scores

@@ -17,7 +17,6 @@ from repro.checkpoint import io as ckpt_io
 from repro.configs import get_config
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as model_lib
-from repro.sharding import specs as specs_lib
 from repro.sharding.context import use_sharding
 
 

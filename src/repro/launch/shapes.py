@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.fed.distributed import RoundConfig
-from repro.models import attention, model as model_lib
+from repro.models import model as model_lib
 
 
 @dataclasses.dataclass(frozen=True)

@@ -10,8 +10,7 @@ Each builder returns (jitted_fn, arg ShapeDtypeStructs) so the dry-run can
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -80,7 +79,6 @@ def build_encoder_step(cfg: ArchConfig, mesh: Mesh, shape_name: str):
     batch = shapes_lib.input_specs(cfg, shape_name)
     b_shard = _named(mesh, specs_lib.serve_batch_specs(cfg, batch, mesh))
     b_ax = specs_lib.batch_axis(mesh)
-    repl = NamedSharding(mesh, P())
 
     def step(params, batch):
         with use_sharding(mesh):

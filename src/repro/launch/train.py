@@ -21,7 +21,6 @@ from repro.configs import get_config
 from repro.data.synthetic import token_stream_lm
 from repro.fed.distributed import RoundConfig, folb_round
 from repro.launch.mesh import make_host_mesh
-from repro.launch import steps as steps_lib
 from repro.models import model as model_lib
 from repro.sharding import specs as specs_lib
 from repro.sharding.context import use_sharding

@@ -17,8 +17,7 @@ All functions are pure; `cfg` is static.  Dtype: params in
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

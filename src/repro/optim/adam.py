@@ -2,7 +2,7 @@
 variants and for the centralized-baseline comparisons)."""
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

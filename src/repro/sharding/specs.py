@@ -14,7 +14,7 @@ Mesh contract (repro.launch.mesh):
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

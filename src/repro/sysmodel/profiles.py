@@ -11,8 +11,6 @@ devices with a heavy straggler tail, and availability is periodic
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
-
 import numpy as np
 
 

@@ -1,0 +1,164 @@
+"""Flat-buffer parameter path: ravel/unravel round-trips arbitrary model
+pytrees, and the fused flat FOLB aggregation matches the pytree reference
+rules (folb_single_set / folb_het / folb_staleness) to fp32 tolerance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _propcheck import given, settings, st
+
+from repro.core import aggregation, flat
+from repro.kernels import ops
+
+TOL = 1e-4
+
+
+def _random_pytree(seed: int, depth: int, width: int, dtype):
+    """Deterministic pytree with mixed leaf ranks (0-D through 3-D)."""
+    rng = np.random.default_rng(seed)
+    shapes = [(), (width,), (3, width), (2, 2, width)]
+
+    def build(d):
+        if d == 0:
+            shape = shapes[int(rng.integers(0, len(shapes)))]
+            return jnp.asarray(rng.normal(size=shape), dtype)
+        return {f"k{i}": build(d - 1) for i in range(2)}
+
+    return build(depth)
+
+
+class TestRoundTrip:
+    @given(st.integers(0, 10_000), st.integers(1, 3), st.integers(1, 9),
+           st.sampled_from(["float32", "bfloat16"]))
+    @settings(max_examples=24, deadline=None)
+    def test_ravel_unravel_roundtrip(self, seed, depth, width, dtype):
+        tree = _random_pytree(seed, depth, width, jnp.dtype(dtype))
+        spec = flat.spec_of(tree)
+        assert spec.D_pad % spec.pad_to == 0 and spec.D_pad >= spec.D
+        vec = flat.ravel(spec, tree)
+        assert vec.shape == (spec.D_pad,) and vec.dtype == jnp.float32
+        # padding lanes are zero (aggregation rules keep them zero)
+        assert float(jnp.abs(vec[spec.D:]).sum()) == 0.0
+        back = flat.unravel(spec, vec)
+        assert jax.tree.structure(back) == jax.tree.structure(tree)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            assert a.shape == b.shape and a.dtype == b.dtype
+            # fp32 leaves round-trip bit-for-bit; bf16 via one exact upcast
+            assert (np.asarray(a) == np.asarray(b)).all()
+
+    @given(st.integers(0, 10_000), st.integers(1, 6))
+    @settings(max_examples=12, deadline=None)
+    def test_stacked_roundtrip(self, seed, k):
+        tree = _random_pytree(seed, 2, 5, jnp.float32)
+        stacked = jax.tree.map(
+            lambda x: jnp.stack([x * (i + 1) for i in range(k)]), tree)
+        spec = flat.spec_of(tree)
+        buf = flat.ravel_stacked(spec, stacked)
+        assert buf.shape == (k, spec.D_pad)
+        back = flat.unravel_stacked(spec, buf)
+        for a, b in zip(jax.tree.leaves(stacked), jax.tree.leaves(back)):
+            assert (np.asarray(a) == np.asarray(b)).all()
+
+    def test_spec_is_static_under_jit(self):
+        tree = _random_pytree(0, 2, 4, jnp.float32)
+        spec = flat.spec_of(tree)
+        assert hash(spec) == hash(flat.spec_of(tree))
+        out = jax.jit(flat.unravel, static_argnums=0)(
+            spec, flat.ravel(spec, tree))
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            assert (np.asarray(a) == np.asarray(b)).all()
+
+
+class TestFlatMatchesPytree:
+    def _problem(self, seed, k):
+        params = _random_pytree(seed, 2, 7, jnp.float32)
+        deltas = jax.tree.map(
+            lambda x: jnp.stack([x * 0.1 * (i - 1) for i in range(k)]),
+            params)
+        key = jax.random.PRNGKey(seed)
+        grads = jax.tree.map(
+            lambda x: jax.random.normal(
+                jax.random.fold_in(key, x.size), (k,) + x.shape), params)
+        return params, deltas, grads
+
+    @given(st.integers(0, 10_000), st.integers(2, 8))
+    @settings(max_examples=12, deadline=None)
+    def test_folb_single_set(self, seed, k):
+        params, deltas, grads = self._problem(seed, k)
+        exp = aggregation.folb_single_set(params, deltas, grads)
+        got, _ = ops.folb_aggregate_tree(params, deltas, grads)
+        for a, b in zip(jax.tree.leaves(exp), jax.tree.leaves(got)):
+            assert np.allclose(np.asarray(a), np.asarray(b), atol=TOL)
+
+    @given(st.integers(0, 10_000), st.floats(0.0, 1.0))
+    @settings(max_examples=8, deadline=None)
+    def test_folb_het(self, seed, psi):
+        k = 4
+        params, deltas, grads = self._problem(seed, k)
+        gammas = jnp.linspace(0.1, 0.9, k)
+        exp = aggregation.folb_het(params, deltas, grads, gammas, psi)
+        got, _ = ops.folb_aggregate_tree(params, deltas, grads,
+                                         psi_gammas=psi * gammas)
+        for a, b in zip(jax.tree.leaves(exp), jax.tree.leaves(got)):
+            assert np.allclose(np.asarray(a), np.asarray(b), atol=TOL)
+
+    @given(st.integers(0, 10_000), st.floats(0.0, 2.0))
+    @settings(max_examples=8, deadline=None)
+    def test_folb_staleness(self, seed, alpha):
+        k = 5
+        params, deltas, grads = self._problem(seed, k)
+        tau = jnp.asarray([0.0, 1.0, 3.0, 0.0, 7.0])
+        exp = aggregation.folb_staleness(params, deltas, grads, tau,
+                                         alpha=alpha)
+        got, _ = ops.folb_staleness_tree(params, deltas, grads, tau,
+                                         alpha=alpha)
+        for a, b in zip(jax.tree.leaves(exp), jax.tree.leaves(got)):
+            assert np.allclose(np.asarray(a), np.asarray(b), atol=TOL)
+
+    def test_folb_staleness_masked(self):
+        k = 6
+        params, deltas, grads = self._problem(3, k)
+        tau = jnp.zeros((k,))
+        mask = jnp.asarray([1.0, 1.0, 0.0, 1.0, 0.0, 1.0])
+        exp = aggregation.folb_staleness(params, deltas, grads, tau,
+                                         alpha=0.5, mask=mask)
+        got, _ = ops.folb_staleness_tree(params, deltas, grads, tau,
+                                         alpha=0.5, mask=mask)
+        for a, b in zip(jax.tree.leaves(exp), jax.tree.leaves(got)):
+            assert np.allclose(np.asarray(a), np.asarray(b), atol=TOL)
+
+    def test_folb_staleness_psi(self):
+        k = 4
+        params, deltas, grads = self._problem(11, k)
+        tau = jnp.asarray([0.0, 2.0, 1.0, 4.0])
+        gammas = jnp.asarray([0.2, 0.8, 0.5, 0.3])
+        exp = aggregation.folb_staleness(params, deltas, grads, tau,
+                                         alpha=0.5, gammas=gammas, psi=0.4)
+        got, _ = ops.folb_staleness_tree(params, deltas, grads, tau,
+                                         alpha=0.5, psi_gammas=0.4 * gammas)
+        for a, b in zip(jax.tree.leaves(exp), jax.tree.leaves(got)):
+            assert np.allclose(np.asarray(a), np.asarray(b), atol=TOL)
+
+
+class TestSimulatorBackends:
+    """agg_backend='flat' (default) and 'pytree' run the same algorithm."""
+
+    @pytest.mark.parametrize("algo", ["folb", "folb_het"])
+    def test_backends_agree(self, algo):
+        import dataclasses
+        from repro.configs.paper_models import MCLR
+        from repro.data.federated import stack_devices
+        from repro.data.synthetic import synthetic_alpha_beta
+        from repro.fed.simulator import FLConfig, run_federated
+        fed = stack_devices(
+            synthetic_alpha_beta(0, 12, 1.0, 1.0, mean_size=40), seed=0)
+        fl = FLConfig(algo=algo, n_selected=4, psi=0.1, seed=2)
+        assert fl.agg_backend == "flat"   # the default
+        h_flat = run_federated(MCLR, fed, fl, rounds=3)
+        h_tree = run_federated(
+            MCLR, fed, dataclasses.replace(fl, agg_backend="pytree"),
+            rounds=3)
+        np.testing.assert_allclose(h_flat["train_loss"],
+                                   h_tree["train_loss"], atol=1e-5)
+        np.testing.assert_allclose(h_flat["test_acc"], h_tree["test_acc"],
+                                   atol=1e-5)
