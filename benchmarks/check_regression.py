@@ -13,6 +13,12 @@ baseline and fails (exit 1) on regression:
   * dispatch: the scan-engine speedup over the python loop must stay at
     least ``--min-speedup``.  A ratio (not absolute rounds/sec) so the
     gate is machine-independent and safe on shared CI runners.
+  * kernel: each micro-bench's *calibration-relative* ratio (kernel time
+    divided by a fixed jnp workload timed in the same run — see
+    ``kernel_bench.calibration_us``) may not grow more than
+    ``--kernel-tolerance``.  Absolute kernel microseconds stay ungated:
+    they are meaningless across runner generations, but the ratio cancels
+    the machine and only moves when the kernel itself does more work.
 
 Usage (CI copies the committed artifact aside before the bench overwrites
 it):
@@ -36,7 +42,8 @@ def _load(path: str) -> dict:
 
 
 def compare(baseline: dict, current: dict, tolerance: float,
-            acc_drop: float, min_speedup: float) -> List[str]:
+            acc_drop: float, min_speedup: float,
+            kernel_tolerance: float = 0.75) -> List[str]:
     """Return the list of regression messages (empty == gate passes)."""
     failures: List[str] = []
     cur_by_name = {r["name"]: r for r in current.get("results", [])}
@@ -78,6 +85,29 @@ def compare(baseline: dict, current: dict, tolerance: float,
                 failures.append(
                     f"dispatch: scan_vs_loop_speedup {speedup:.2f} "
                     f"< required {min_speedup:.2f}")
+
+    base_kern = baseline.get("kernel")
+    cur_kern = current.get("kernel")
+    if base_kern is not None:
+        if cur_kern is None:
+            failures.append("kernel: section missing from current artifact")
+        else:
+            cur_entries = cur_kern.get("entries", {})
+            for name, be in base_kern.get("entries", {}).items():
+                ce = cur_entries.get(name)
+                if ce is None:
+                    failures.append(
+                        f"kernel: {name} missing from current artifact")
+                    continue
+                b = be.get("ratio_vs_calibration")
+                c = ce.get("ratio_vs_calibration")
+                if b is None or c is None:
+                    continue
+                if c > b * (1.0 + kernel_tolerance):
+                    failures.append(
+                        f"kernel: {name} calibration-relative ratio "
+                        f"regressed {b:.3f} -> {c:.3f} "
+                        f"(> {kernel_tolerance:.0%} tolerance)")
     return failures
 
 
@@ -93,10 +123,14 @@ def main() -> int:
                     help="absolute final-accuracy drop allowed")
     ap.add_argument("--min-speedup", type=float, default=1.0,
                     help="required scan-vs-python-loop dispatch speedup")
+    ap.add_argument("--kernel-tolerance", type=float, default=0.75,
+                    help="relative growth allowed on calibration-relative "
+                         "kernel microbench ratios")
     args = ap.parse_args()
 
     failures = compare(_load(args.baseline), _load(args.current),
-                       args.tolerance, args.acc_drop, args.min_speedup)
+                       args.tolerance, args.acc_drop, args.min_speedup,
+                       args.kernel_tolerance)
     if failures:
         print("BENCHMARK REGRESSION GATE: FAIL")
         for msg in failures:

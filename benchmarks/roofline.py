@@ -1,14 +1,53 @@
 """§Roofline reporting: read the dry-run JSON records (reports/) and emit
-the three-term roofline table per (arch x shape x mesh)."""
+the three-term roofline table per (arch x shape x mesh), plus the modeled
+bytes-moved account of the fused FOLB aggregation (the server-side hot
+path this repo's bf16 flat buffers halve)."""
 from __future__ import annotations
 
 import glob
 import json
 import os
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 HEADERS = ("arch", "shape", "mesh", "fits", "mem_GiB", "compute_ms",
            "memory_ms", "collective_ms", "dominant", "useful_flop_frac")
+
+
+# ------------------------------------------------- FOLB aggregation roofline
+
+def folb_kd_bytes(K: int, D: int, buf_bytes: int) -> int:
+    """HBM bytes of the two (K, D) streaming sweeps alone (phase-1 grads
+    read + phase-2 deltas read).  This is the part the buffer dtype scales:
+    bf16 is exactly 2x less than fp32."""
+    return 2 * K * D * buf_bytes
+
+
+def folb_agg_bytes(K: int, D: int, buf_bytes: int,
+                   param_bytes: int = 4) -> int:
+    """Total modeled HBM bytes of one fused FOLB aggregation
+    (kernels.folb_aggregate): the two (K, D) sweeps plus the fp32
+    parameter-vector traffic (g1 read, w read, w_new write).  The (K,)
+    score algebra is noise.  K >> 1 makes the total ratio approach the
+    2x of the (K, D) sweeps."""
+    return folb_kd_bytes(K, D, buf_bytes) + 3 * D * param_bytes
+
+
+def folb_agg_rows() -> List[tuple]:
+    """CSV rows: modeled v5e HBM step-time bound of the fused aggregation
+    at representative (K, D) for both buffer dtypes."""
+    from repro.launch.mesh import HBM_BW
+    rows = []
+    for K, D in ((10, 1 << 20), (10, 1 << 27), (32, 1 << 27)):
+        b32 = folb_agg_bytes(K, D, 4)
+        for buf_bytes, tag in ((4, "fp32"), (2, "bf16")):
+            total = folb_agg_bytes(K, D, buf_bytes)
+            kd = folb_kd_bytes(K, D, buf_bytes)
+            rows.append((
+                f"roofline/folb_agg/K{K}xD{D}/{tag}",
+                total / HBM_BW * 1e6,
+                f"kd_MiB={kd / 2**20:.0f};total_MiB={total / 2**20:.0f};"
+                f"bytes_vs_fp32={b32 / total:.2f}x"))
+    return rows
 
 
 def load_records(report_dir: str = "reports") -> List[Dict]:
@@ -73,8 +112,9 @@ def format_table(rows: List[Dict]) -> str:
 
 
 def bench_rows(report_dir: str = "reports"):
-    """CSV rows for benchmarks.run: step-time bound per combo."""
-    rows = []
+    """CSV rows for benchmarks.run: step-time bound per combo, plus the
+    modeled FOLB-aggregation byte account (independent of reports/)."""
+    rows = folb_agg_rows()
     for r in roofline_rows(report_dir):
         if r["status"] != "ok":
             continue

@@ -111,8 +111,20 @@ def time_to_accuracy_results(rounds: int = 60) -> List[Dict]:
 def write_bench_json(results: List[Dict], path: str = "BENCH_fed.json",
                      extra: Optional[Dict] = None) -> str:
     """Write the cross-PR perf artifact.  `extra` merges additional
-    top-level sections (e.g. the dispatch-overhead numbers)."""
+    top-level sections (e.g. the dispatch-overhead numbers).  Sections
+    this writer doesn't own (e.g. the `kernel` section merged by
+    ``benchmarks.run --only kernel``) are preserved from an existing
+    artifact, so suite ordering can't silently drop them."""
+    preserved = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                preserved = {k: v for k, v in json.load(f).items()
+                             if k == "kernel"}
+        except (OSError, ValueError):
+            preserved = {}
     payload = {
+        **preserved,
         "benchmark": "time_to_accuracy",
         "dataset": f"synthetic(1,1) x {N_DEVICES} devices",
         "model": "paper-mclr",

@@ -2,17 +2,28 @@
 
 The pytree aggregation rules in ``repro.core.aggregation`` walk the model
 tree on every round — fine for exploration, but the hot path wants a single
-contiguous fp32 vector: client deltas/grads then stack into dense ``(K, D)``
+contiguous vector: client deltas/grads then stack into dense ``(K, D)``
 buffers that feed the fused Pallas FOLB kernel directly, and whole-run
 ``lax.scan`` engines can carry one array instead of a tree.
 
 ``FlatSpec`` is the *static* unravel recipe (leaf shapes/dtypes + treedef +
-padding), hashable so it can ride through ``jax.jit`` as a static argument.
-``D_pad`` rounds the parameter count up to the Pallas streaming tile
-(``kernels.folb_aggregate.TILE_D``); the padding lanes are zero and stay
-zero through every aggregation rule (zero delta, zero grad), so
+padding + buffer dtype), hashable so it can ride through ``jax.jit`` as a
+static argument.  ``D_pad`` rounds the parameter count up to the Pallas
+streaming tile (``kernels.folb_aggregate.TILE_D``, or a multiple of it when
+the buffer is sharded over a device mesh); the padding lanes are zero and
+stay zero through every aggregation rule (zero delta, zero grad), so
 ``unravel(spec, ravel(spec, tree))`` is exact — bit-for-bit — for fp32
-trees and value-preserving (one fp32 round-trip) otherwise.
+trees under the default fp32 buffer dtype and value-preserving (one fp32
+round-trip) otherwise.
+
+Buffer dtype (``buf_dtype``): parameters must survive the scan-carry
+round-trip exactly, so they stay fp32.  Gradient/delta buffers only feed
+the FOLB kernels — which upcast tile-by-tile and accumulate in fp32 VMEM —
+so they can be stored in bf16, halving the ``(K, D)`` HBM traffic that is
+nearly all of FOLB's server-side cost at transformer scale.  A bf16 buffer
+holds round-to-nearest-even bf16 values: the ravel→unravel round-trip of an
+fp32 tree is then one bf16 rounding per element (relative error ≤ 2^-9 +
+subnormal underflow below ~1e-38; see tests/test_flat.py for the bound).
 """
 from __future__ import annotations
 
@@ -29,13 +40,14 @@ from repro.kernels.folb_aggregate import TILE_D
 class FlatSpec:
     """Static recipe for flattening/unflattening one model pytree.
 
-    Hashable (treedef and shape/dtype tuples are hashable), so functions
-    taking a FlatSpec can mark it static under jit.
+    Hashable (treedef, shape/dtype tuples and the buffer dtype are
+    hashable), so functions taking a FlatSpec can mark it static under jit.
     """
     treedef: Any
     shapes: Tuple[Tuple[int, ...], ...]
     dtypes: Tuple[Any, ...]
     pad_to: int = TILE_D
+    buf_dtype: Any = jnp.dtype(jnp.float32)
 
     @property
     def sizes(self) -> Tuple[int, ...]:
@@ -58,31 +70,38 @@ class FlatSpec:
         return self.D + (-self.D) % self.pad_to
 
 
-def spec_of(tree, pad_to: int = TILE_D) -> FlatSpec:
+def spec_of(tree, pad_to: int = TILE_D, buf_dtype=jnp.float32) -> FlatSpec:
     """Build the static FlatSpec for a parameter pytree."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return FlatSpec(treedef=treedef,
                     shapes=tuple(tuple(x.shape) for x in leaves),
                     dtypes=tuple(jnp.asarray(x).dtype for x in leaves),
-                    pad_to=pad_to)
+                    pad_to=pad_to,
+                    buf_dtype=jnp.dtype(buf_dtype))
+
+
+def with_buf_dtype(spec: FlatSpec, buf_dtype) -> FlatSpec:
+    """The same unravel recipe targeting a different buffer dtype (e.g. the
+    bf16 grad/delta variant of an fp32 parameter spec)."""
+    return dataclasses.replace(spec, buf_dtype=jnp.dtype(buf_dtype))
 
 
 def ravel(spec: FlatSpec, tree) -> jnp.ndarray:
-    """Pytree -> (D_pad,) fp32 vector (zero-padded past D)."""
+    """Pytree -> (D_pad,) buf_dtype vector (zero-padded past D)."""
     leaves = jax.tree_util.tree_leaves(tree)
     flat = jnp.concatenate(
-        [jnp.asarray(x).reshape(-1).astype(jnp.float32) for x in leaves])
+        [jnp.asarray(x).reshape(-1).astype(spec.buf_dtype) for x in leaves])
     pad = spec.D_pad - spec.D
     return jnp.pad(flat, (0, pad)) if pad else flat
 
 
 def ravel_stacked(spec: FlatSpec, stacked) -> jnp.ndarray:
-    """Pytree with leading client axis K -> (K, D_pad) fp32 buffer."""
+    """Pytree with leading client axis K -> (K, D_pad) buf_dtype buffer."""
     leaves = jax.tree_util.tree_leaves(stacked)
     K = leaves[0].shape[0]
     flat = jnp.concatenate(
-        [jnp.asarray(x).reshape(K, -1).astype(jnp.float32) for x in leaves],
-        axis=1)
+        [jnp.asarray(x).reshape(K, -1).astype(spec.buf_dtype)
+         for x in leaves], axis=1)
     pad = spec.D_pad - spec.D
     return jnp.pad(flat, ((0, 0), (0, pad))) if pad else flat
 

@@ -67,12 +67,14 @@ class AsyncFLConfig:
     psi: float = 0.0              # Sec. V heterogeneity penalty weight
     latency_aware: bool = False   # deadline-aware selection probabilities
     agg_backend: str = "flat"     # flat (fused Pallas kernel) | pytree
+    agg_dtype: str = "bfloat16"   # (K, D) buffer storage dtype (flat only)
     seed: int = 0
 
     def __post_init__(self):
         assert self.mode in ASYNC_MODES, self.mode
         assert self.algo in ASYNC_ALGOS, self.algo
         assert self.agg_backend in simulator.AGG_BACKENDS, self.agg_backend
+        assert self.agg_dtype in simulator.AGG_DTYPES, self.agg_dtype
 
     def sync_config(self) -> simulator.FLConfig:
         """The synchronous FLConfig whose round math this config reduces to
@@ -81,7 +83,8 @@ class AsyncFLConfig:
             algo=self.algo, n_selected=self.n_selected, mu=self.mu,
             lr=self.lr, max_local_steps=self.max_local_steps,
             het_steps=self.het_steps, psi=self.psi,
-            agg_backend=self.agg_backend, seed=self.seed)
+            agg_backend=self.agg_backend, agg_dtype=self.agg_dtype,
+            seed=self.seed)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1))
@@ -113,19 +116,22 @@ class _PendingUpdate:
 
 
 def _apply_aggregation(afl: AsyncFLConfig, params, deltas, grads, gammas,
-                       tau: jnp.ndarray):
+                       tau: jnp.ndarray, mesh=None):
     """Staleness-discounted aggregation over the arrived set."""
     if afl.algo in ("fedavg", "fedprox"):
         return aggregation.mean_staleness(params, deltas, tau,
                                           alpha=afl.staleness_alpha)
     psi = afl.psi if afl.algo == "folb_het" else 0.0
     if afl.agg_backend == "flat":
-        # default hot path: flat (K, D) buffers through the fused Pallas
-        # staleness kernel (interpret mode on CPU)
+        # default hot path: flat (K, D) buffers (bf16 storage unless
+        # agg_dtype overrides) through the fused Pallas staleness kernel
+        # (interpret mode on CPU), D-sharded when a mesh is given
         pg = psi * gammas if psi != 0.0 else None
         new, _ = ops.folb_staleness_tree(params, deltas, grads, tau,
                                          alpha=afl.staleness_alpha,
-                                         psi_gammas=pg)
+                                         psi_gammas=pg,
+                                         buf_dtype=jnp.dtype(afl.agg_dtype),
+                                         mesh=mesh)
         return new
     return aggregation.folb_staleness(params, deltas, grads, tau,
                                       alpha=afl.staleness_alpha,
@@ -135,7 +141,7 @@ def _apply_aggregation(afl: AsyncFLConfig, params, deltas, grads, gammas,
 def run_async(model_cfg, fed: FederatedData, afl: AsyncFLConfig,
               fleet: DeviceFleet, rounds: int,
               init_key: Optional[jax.Array] = None,
-              eval_every: int = 1) -> simulator.FedRunResult:
+              eval_every: int = 1, mesh=None) -> simulator.FedRunResult:
     """Run `rounds` server aggregations of async FOLB on the system model.
 
     In deadline mode a "round" is one deadline-barriered aggregation; in
@@ -173,25 +179,35 @@ def run_async(model_cfg, fed: FederatedData, afl: AsyncFLConfig,
 
     if afl.mode == "deadline":
         params = _run_deadline(model_cfg, afl, fleet, cost, sizes, train, p,
-                               key, params, rounds, eval_every, record)
+                               key, params, rounds, eval_every, record,
+                               mesh=mesh)
     else:
         params = _run_fedbuff(model_cfg, afl, fleet, cost, sizes, train,
-                              key, params, rounds, eval_every, record)
+                              key, params, rounds, eval_every, record,
+                              mesh=mesh)
     return simulator.FedRunResult(history=hist, params=params)
 
 
 # ------------------------------------------------------------- deadline mode
 
 def _run_deadline(model_cfg, afl, fleet, cost, sizes, train, p, key, params,
-                  rounds, eval_every, record):
+                  rounds, eval_every, record, mesh=None):
     sync_fl = afl.sync_config()
     N = fleet.n_devices
     K = afl.n_selected
     clock = VirtualClock()
     pending: List[_PendingUpdate] = []
-    exp_lat = jnp.asarray(expected_latencies(fleet, cost, mean_steps=(
-        (1 + afl.max_local_steps) / 2.0 if afl.het_steps
-        else float(afl.max_local_steps)), n_examples=sizes))
+    exp_lat = jnp.asarray(expected_latencies(
+        fleet, cost, mean_steps=simulator.mean_local_steps(afl),
+        n_examples=sizes))
+    # the latency-aware distribution is static per fleet (expected
+    # latencies don't change round to round): pre-compute it once — the
+    # same vector ``scan_engine.latency_selection_probs`` hands the
+    # compiled engine, which is what lets the scan run this sweep's
+    # selection policy.
+    sel_probs = (selection.latency_aware_probs(
+        jnp.ones((N,)), exp_lat, afl.deadline) if afl.latency_aware
+        else None)
 
     for t in range(rounds):
         # identical device-capability protocol as the sync engine: the
@@ -201,11 +217,8 @@ def _run_deadline(model_cfg, afl, fleet, cost, sizes, train, p, key, params,
         n_steps = simulator.local_step_draws(t, K, afl)
         key, sub = jax.random.split(key)
         k_sel, _ = jax.random.split(sub)
-        if afl.latency_aware:
-            probs = selection.latency_aware_probs(
-                jnp.ones((N,)), exp_lat, afl.deadline)
-        else:
-            probs = selection.uniform_probs(N)
+        probs = sel_probs if sel_probs is not None \
+            else selection.uniform_probs(N)
         ids = selection.sample_multiset(k_sel, probs, K)
         ids_np = np.asarray(ids)
 
@@ -214,15 +227,18 @@ def _run_deadline(model_cfg, afl, fleet, cost, sizes, train, p, key, params,
                                n_examples=sizes[ids_np])
         due = [pu for pu in pending if pu.arrival <= plan.round_end]
 
-        if plan.arrived.all() and not due and not afl.latency_aware:
+        if plan.arrived.all() and not due:
             # sync-parity fast path: every dispatched device made the
             # deadline and no stale upload joins, so every τ is 0 and the
             # (1+τ)^{-α} discount is the constant 1.0 for ANY α — the round
             # is EXACTLY one synchronous round; reuse the simulator's fused
             # round (same jitted computation => bit-for-bit agreement in
-            # the D = ∞ limit, and ~3x less host time per round).
+            # the D = ∞ limit, and ~3x less host time per round).  With
+            # latency-aware selection the pre-computed sel_probs make
+            # fl_round resample the very same ids from the same key.
             params, _ = simulator.fl_round(
-                model_cfg, sync_fl, params, train, p, sub, n_steps)
+                model_cfg, sync_fl, params, train, p, sub, n_steps,
+                sel_probs, mesh=mesh)
             n_arrived, stale_mean = K, 0.0
         else:
             deltas, grads, gammas = _compute_updates(
@@ -252,7 +268,7 @@ def _run_deadline(model_cfg, afl, fleet, cost, sizes, train, p, key, params,
                 stale_mean = float(tau.mean())
                 params = _apply_aggregation(
                     afl, params, _concat(parts_d), _concat(parts_g),
-                    jnp.concatenate(parts_gam), tau)
+                    jnp.concatenate(parts_gam), tau, mesh=mesh)
             else:
                 stale_mean = 0.0  # empty round: deadline passed, no uploads
         clock.advance_to(plan.round_end)
@@ -264,13 +280,13 @@ def _run_deadline(model_cfg, afl, fleet, cost, sizes, train, p, key, params,
 # -------------------------------------------------------------- fedbuff mode
 
 def _run_fedbuff(model_cfg, afl, fleet, cost, sizes, train, key, params,
-                 rounds, eval_every, record):
+                 rounds, eval_every, record, mesh=None):
     N = fleet.n_devices
     clock = VirtualClock()
     events = EventQueue()
-    exp_lat = jnp.asarray(expected_latencies(fleet, cost, mean_steps=(
-        (1 + afl.max_local_steps) / 2.0 if afl.het_steps
-        else float(afl.max_local_steps)), n_examples=sizes))
+    exp_lat = jnp.asarray(expected_latencies(
+        fleet, cost, mean_steps=simulator.mean_local_steps(afl),
+        n_examples=sizes))
     version = 0
     n_dispatched = 0
     buffer: List[_PendingUpdate] = []
@@ -316,7 +332,7 @@ def _run_fedbuff(model_cfg, afl, fleet, cost, sizes, train, key, params,
             afl, params,
             _concat([pu.delta for pu in flush]),
             _concat([pu.grad for pu in flush]),
-            jnp.concatenate([pu.gamma for pu in flush]), tau)
+            jnp.concatenate([pu.gamma for pu in flush]), tau, mesh=mesh)
         version += 1
         if t % eval_every == 0 or t == rounds - 1:
             record(t, clock.now, afl.buffer_size, float(tau.mean()), params)

@@ -46,6 +46,20 @@ class RoundConfig:
     remat_group: int = 1        # checkpoint every N layers (memory knob)
     fsdp_params: bool = False   # shard params over data too (memory vs
                                 # per-layer weight-gather tradeoff; §Perf B)
+    # aggregation route for the FOLB algos:
+    #   "scan" — the original O(1)-in-K two-pass tree accumulation (only
+    #            choice when a (K, D) buffer cannot exist: 10B+ models);
+    #   "flat" — one client sweep emitting bf16 flat deltas/grads, then
+    #            the SAME fused (optionally D-sharded) Pallas aggregation
+    #            every other engine uses (kernels.ops).  O(K·D/2) bytes —
+    #            the right trade at fed100m scale, and it removes this
+    #            engine's duplicated score/weight algebra.
+    agg_backend: str = "scan"   # scan | flat
+    agg_dtype: str = "bfloat16"  # flat-buffer storage dtype (flat only)
+
+    def __post_init__(self):
+        assert self.agg_backend in ("scan", "flat"), self.agg_backend
+        assert self.agg_dtype in ("bfloat16", "float32"), self.agg_dtype
 
     @property
     def effective_mu(self) -> float:
@@ -67,8 +81,19 @@ def _client_slice(batch, k):
     return jax.tree.map(lambda x: x[k], batch)
 
 
+def _gamma(loss_fn, w_new, w_ref, cb, g_ref, mu):
+    """γ_k = ||∇h(w_new)|| / ||∇F_k(w^t)|| (Assumption 4 inexactness)."""
+    gh = jax.tree.map(
+        lambda gl, wl, rl: gl.astype(jnp.float32)
+        + mu * (wl.astype(jnp.float32) - rl.astype(jnp.float32)),
+        jax.grad(loss_fn)(w_new, cb), w_new, w_ref)
+    return jnp.clip(
+        tree.tree_norm(gh)
+        / jnp.maximum(tree.tree_norm(g_ref), 1e-12), 0.0, 1.0)
+
+
 def folb_round(cfg, rc: RoundConfig, params: Params, batch: Dict,
-               param_shardings=None, acc_shardings=None
+               param_shardings=None, acc_shardings=None, mesh=None
                ) -> Tuple[Params, Dict[str, jnp.ndarray]]:
     """One federated round.  batch leaves: (K, per_client_batch, ...).
 
@@ -77,6 +102,10 @@ def folb_round(cfg, rc: RoundConfig, params: Params, batch: Dict,
     iterates.  Scan carries block GSPMD propagation, so without these the
     round's gradient accumulators get replicated (measured: 10 GiB/device
     for a 7B model on a 256-chip mesh).
+
+    mesh: optional flat-buffer mesh (``sharding.specs.folb_mesh``) — only
+    meaningful with ``rc.agg_backend == "flat"``, where it D-shards the
+    shared fused aggregation.
     """
     loss_fn = make_loss_fn(cfg, rc.remat, rc.remat_group)
     vg = jax.value_and_grad(loss_fn)
@@ -97,29 +126,6 @@ def folb_round(cfg, rc: RoundConfig, params: Params, batch: Dict,
             return constrain(t)
         return jax.lax.with_sharding_constraint(t, acc_shardings)
 
-    # ---- pass 1: global-gradient estimate g1 = mean_k grad F_k(w^t)
-    # NOTE ordering: reshard the bf16 gradient into the FSDP accumulator
-    # layout FIRST, then upcast — converting in the parameter layout first
-    # materializes full-size f32 temporaries (3.75 GiB/leaf on mixtral).
-    def p1(carry, cb):
-        gsum, lsum = carry
-        l, g = vg(params, cb)
-        # pin the cotangent in the PARAM layout first: without this the
-        # fsdp constraint propagates backward into the per-layer weight-
-        # cotangent accumulation loop, whose dynamic-update-slice on an
-        # L-sharded stack degenerates to gather-whole-stack-per-layer
-        # (measured 12 TiB/chip/round of all-gathers on mixtral).
-        g = constrain(g)
-        g = _f32(constrain_acc(g))
-        return (constrain_acc(tree.tree_add(gsum, g)), lsum + l), None
-
-    (gsum, loss_sum), _ = jax.lax.scan(
-        p1, (constrain_acc(tree.tree_zeros_like(params, jnp.float32)),
-             jnp.zeros((), jnp.float32)), batch)
-    g1 = constrain_acc(tree.tree_scale(gsum, 1.0 / K))
-    g1_sq = tree.tree_sqnorm(g1)
-
-    # ---- pass 2: local solves + unnormalized FOLB accumulation
     def local_solve(g0, cb):
         """E prox-SGD steps on h_k(w, w^t), entirely in the parameter
         layout and dtype.  Updates in the device dtype (bf16 at scale) are
@@ -146,6 +152,71 @@ def folb_round(cfg, rc: RoundConfig, params: Params, batch: Dict,
             w, _ = jax.lax.scan(body, w, None, length=rc.local_steps - 1)
         return w
 
+    if rc.agg_backend == "flat" and rc.algo in ("folb", "folb_het"):
+        # shared-path reroute: ONE client sweep emits flat bf16 deltas and
+        # grads; g1, the K scores, and the weighted apply all run inside
+        # the same fused (optionally D-sharded) Pallas aggregation every
+        # other engine uses (kernels.ops) — this engine keeps only the
+        # local solves.  The two-pass structure below becomes unnecessary
+        # because the kernel's score phase owns the <∇F_k, g1> reduction.
+        from repro.core import flat as flat_lib
+        from repro.kernels import folb_aggregate as _folb
+        from repro.kernels import ops as kernel_ops
+        pad_to = (_folb.shard_alignment(mesh) if mesh is not None
+                  else _folb.TILE_D)
+        spec = flat_lib.spec_of(params, pad_to=pad_to)
+        bspec = flat_lib.with_buf_dtype(spec, rc.agg_dtype)
+
+        def client(lsum, cb):
+            l, g_k = vg(params, cb)
+            g_k = constrain(g_k)
+            w_new = local_solve(g_k, cb)
+            delta = jax.tree.map(jnp.subtract, w_new, params)
+            gamma = (_gamma(loss_fn, w_new, params, cb, g_k, mu)
+                     if rc.algo == "folb_het"
+                     else jnp.zeros((), jnp.float32))
+            return lsum + l, (flat_lib.ravel(bspec, delta),
+                              flat_lib.ravel(bspec, g_k), gamma)
+
+        loss_sum, (deltas, grads, gammas) = jax.lax.scan(
+            client, jnp.zeros((), jnp.float32), batch)
+        w_flat = flat_lib.ravel(spec, params)
+        pg = rc.psi * gammas if rc.algo == "folb_het" else None
+        new_flat, scores = kernel_ops.folb_aggregate_buffers(
+            w_flat, deltas, grads, psi_gamma=pg, mesh=mesh)
+        # diagnostics-only extra sweep (the kernel keeps its g1 internal)
+        g1_sq = jnp.sum(jnp.mean(grads.astype(jnp.float32), axis=0) ** 2)
+        metrics = {
+            "client_loss": loss_sum / K,
+            "g1_norm": jnp.sqrt(g1_sq),
+            "weight_denom": jnp.sum(jnp.abs(scores)),
+            "scores": scores,
+        }
+        return flat_lib.unravel(spec, new_flat), metrics
+
+    # ---- pass 1: global-gradient estimate g1 = mean_k grad F_k(w^t)
+    # NOTE ordering: reshard the bf16 gradient into the FSDP accumulator
+    # layout FIRST, then upcast — converting in the parameter layout first
+    # materializes full-size f32 temporaries (3.75 GiB/leaf on mixtral).
+    def p1(carry, cb):
+        gsum, lsum = carry
+        l, g = vg(params, cb)
+        # pin the cotangent in the PARAM layout first: without this the
+        # fsdp constraint propagates backward into the per-layer weight-
+        # cotangent accumulation loop, whose dynamic-update-slice on an
+        # L-sharded stack degenerates to gather-whole-stack-per-layer
+        # (measured 12 TiB/chip/round of all-gathers on mixtral).
+        g = constrain(g)
+        g = _f32(constrain_acc(g))
+        return (constrain_acc(tree.tree_add(gsum, g)), lsum + l), None
+
+    (gsum, loss_sum), _ = jax.lax.scan(
+        p1, (constrain_acc(tree.tree_zeros_like(params, jnp.float32)),
+             jnp.zeros((), jnp.float32)), batch)
+    g1 = constrain_acc(tree.tree_scale(gsum, 1.0 / K))
+    g1_sq = tree.tree_sqnorm(g1)
+
+    # ---- pass 2: local solves + unnormalized FOLB accumulation
     def p2(carry, cb):
         acc, denom = carry
         g_k = constrain(jax.grad(loss_fn)(params, cb))  # see p1 note
@@ -162,14 +233,7 @@ def folb_round(cfg, rc: RoundConfig, params: Params, batch: Dict,
             i_k = tree.tree_dot(constrain_acc(g_k), g1)
             score = i_k
             if rc.algo == "folb_het":
-                # γ_k = ||∇h(w_new)|| / ||∇F_k(w^t)||
-                gh = jax.tree.map(
-                    lambda gl, wl, rl: gl.astype(jnp.float32)
-                    + mu * (wl.astype(jnp.float32) - rl.astype(jnp.float32)),
-                    jax.grad(loss_fn)(w_new, cb), w_new, params)
-                gamma = jnp.clip(
-                    tree.tree_norm(gh)
-                    / jnp.maximum(tree.tree_norm(g_k), 1e-12), 0.0, 1.0)
+                gamma = _gamma(loss_fn, w_new, params, cb, g_k, mu)
                 score = i_k - rc.psi * gamma * g1_sq
         acc = constrain_acc(jax.tree.map(
             lambda a, d: a + score * d, acc, delta))

@@ -74,19 +74,24 @@ def draw_round_inputs(fl: simulator.FLConfig, rounds: int, init_key):
     return _split_chain(init_key, rounds), jnp.stack(steps)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+@functools.partial(jax.jit, static_argnums=(0, 1, 2),
+                   static_argnames=("mesh",))
 def scan_rounds(model_cfg, fl: simulator.FLConfig, spec: flat_lib.FlatSpec,
-                w0_flat, data, p_weights, keys, steps):
+                w0_flat, data, p_weights, keys, steps, sel_probs=None, *,
+                mesh=None):
     """The whole-run XLA program: scan ``fl_round`` over pre-drawn inputs.
 
     Returns (final flat params, ys) where ys carries the per-round
     post-update flat parameter trajectory and the sampled device ids.
+    ``sel_probs``/``mesh`` forward to ``fl_round`` (static selection
+    distribution; D-sharded flat aggregation).
     """
     def body(w_flat, xs):
         sub, n_steps = xs
         params = flat_lib.unravel(spec, w_flat)
         new_params, diag = simulator.fl_round(
-            model_cfg, fl, params, data, p_weights, sub, n_steps)
+            model_cfg, fl, params, data, p_weights, sub, n_steps,
+            sel_probs, mesh=mesh)
         w_new = flat_lib.ravel(spec, new_params)
         ys = {"params": w_new, "ids": diag["ids"]}
         if "ids2" in diag:
@@ -96,16 +101,46 @@ def scan_rounds(model_cfg, fl: simulator.FLConfig, spec: flat_lib.FlatSpec,
     return jax.lax.scan(body, w0_flat, (keys, steps))
 
 
+def latency_selection_probs(model_cfg, fed: FederatedData, fl, fleet,
+                            deadline: float) -> jax.Array:
+    """Pre-compute the static latency-aware selection distribution.
+
+    The async deadline engine's ``latency_aware`` sampling distribution
+    P ∝ σ((D − ℓ_k)/s) depends only on the fleet's expected per-device
+    latencies — it is round-invariant.  Computing it once on the host lets
+    the compiled scan engine (and ``run_federated``) run the
+    deadline-FOLB sweep's selection policy; the chain below mirrors
+    ``async_engine._run_deadline`` exactly so the distributions agree
+    bit-for-bit.
+    """
+    import numpy as np
+    from repro.core import selection
+    from repro.sysmodel import expected_latencies, round_cost_for
+    params = small.init_small(model_cfg, jax.random.PRNGKey(
+        getattr(fl, "seed", 0)))
+    cost = round_cost_for(model_cfg, params,
+                          uploads_gradient="folb" in fl.algo)
+    sizes = np.asarray(fed.mask.sum(axis=1))
+    exp_lat = jnp.asarray(expected_latencies(
+        fleet, cost, mean_steps=simulator.mean_local_steps(fl),
+        n_examples=sizes))
+    return selection.latency_aware_probs(
+        jnp.ones((fleet.n_devices,)), exp_lat, deadline)
+
+
 def run_federated_compiled(model_cfg, fed: FederatedData,
                            fl: simulator.FLConfig, rounds: int,
                            init_key: Optional[jax.Array] = None,
                            eval_every: int = 1,
-                           fleet=None) -> simulator.FedRunResult:
+                           fleet=None, sel_probs=None,
+                           mesh=None) -> simulator.FedRunResult:
     """Drop-in replacement for ``run_federated`` on fixed schedules.
 
     Bit-for-bit identical history on the same seed (shared round math,
     shared jitted eval, shared fleet cost replay), one XLA dispatch for
-    the whole run instead of one per round.
+    the whole run instead of one per round.  ``sel_probs`` (e.g. from
+    ``latency_selection_probs``) replaces uniform sampling; ``mesh``
+    shards the flat aggregation's D axis so fed100m-scale models fit.
     """
     if fl.server_opt != "sgd" or fl.server_lr != 1.0:
         raise NotImplementedError(
@@ -122,7 +157,8 @@ def run_federated_compiled(model_cfg, fed: FederatedData,
     spec = flat_lib.spec_of(params)
     w0 = flat_lib.ravel(spec, params)
     keys, steps = draw_round_inputs(fl, rounds, key)
-    w_final, ys = scan_rounds(model_cfg, fl, spec, w0, train, p, keys, steps)
+    w_final, ys = scan_rounds(model_cfg, fl, spec, w0, train, p, keys, steps,
+                              sel_probs, mesh=mesh)
 
     hist = {"round": [], "train_loss": [], "test_acc": [], "train_acc": []}
     cost = probe_cost = sizes = None

@@ -36,6 +36,15 @@ from repro.optim import solvers
 ALGOS = ("fedavg", "fedprox", "fednu_direct", "fednu_signed", "fednu_norm",
          "folb", "folb2", "folb_het")
 AGG_BACKENDS = ("flat", "pytree")
+AGG_DTYPES = ("bfloat16", "float32")
+
+
+def mean_local_steps(cfg) -> float:
+    """Expected local-step budget under the paper's capability protocol
+    (shared by the async engine and the static latency-aware selection
+    precompute, so both derive identical expected latencies)."""
+    return ((1 + cfg.max_local_steps) / 2.0 if cfg.het_steps
+            else float(cfg.max_local_steps))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +60,10 @@ class FLConfig:
     # stacked (K, D) buffers through the fused Pallas kernel (interpret
     # mode on CPU); "pytree" keeps the reference leafwise rules.
     agg_backend: str = "flat"
+    # storage dtype of the flat (K, D) grad/delta buffers: bf16 halves the
+    # HBM streaming traffic (fp32 accumulation stays inside the kernels);
+    # "float32" restores exact-to-pytree buffers.
+    agg_dtype: str = "bfloat16"
     # beyond-paper: server optimizer over the round aggregate (FedOpt-style)
     server_opt: str = "sgd"     # sgd | momentum | adam
     server_lr: float = 1.0      # 1.0 + sgd == the paper's plain application
@@ -59,6 +72,7 @@ class FLConfig:
     def __post_init__(self):
         assert self.algo in ALGOS, self.algo
         assert self.agg_backend in AGG_BACKENDS, self.agg_backend
+        assert self.agg_dtype in AGG_DTYPES, self.agg_dtype
 
 
 def local_step_draws(t: int, k: int, cfg) -> jnp.ndarray:
@@ -108,9 +122,17 @@ def _local_updates(model_cfg, params, data, ids, n_steps, fl: FLConfig):
     return jax.vmap(one)(batch["x"], batch["y"], batch["mask"], n_steps)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1))
-def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps):
-    """One communication round.  Returns (new_params, diagnostics)."""
+@functools.partial(jax.jit, static_argnums=(0, 1),
+                   static_argnames=("mesh",))
+def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps,
+             sel_probs=None, *, mesh=None):
+    """One communication round.  Returns (new_params, diagnostics).
+
+    ``sel_probs`` overrides the uniform selection distribution (e.g. the
+    pre-computed static latency-aware probabilities of a deadline fleet);
+    the fednu baselines ignore it (they derive their own).  ``mesh``
+    (static) shards the flat aggregation's D axis over a device mesh.
+    """
     k_sel, k_sel2 = jax.random.split(key)
     N = data["x"].shape[0]
     K = fl.n_selected
@@ -137,7 +159,7 @@ def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps):
         diag["ids"] = ids
         return new, diag
 
-    probs = selection.uniform_probs(N)
+    probs = selection.uniform_probs(N) if sel_probs is None else sel_probs
     ids = selection.sample_multiset(k_sel, probs, K)
     deltas, grads, gammas = _local_updates(
         model_cfg, params, data, ids, n_steps, fl)
@@ -145,12 +167,15 @@ def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps):
     if fl.algo in ("fedavg", "fedprox"):
         new = aggregation.fedavg_aggregate(params, deltas)
     elif fl.algo in ("folb", "folb_het") and fl.agg_backend == "flat":
-        # default hot path: stack everything into flat (K, D) buffers and
-        # run the fused Pallas aggregation (2 streaming passes instead of
-        # ~2K leafwise reductions)
+        # default hot path: stack everything into flat (K, D) buffers
+        # (bf16 grads/deltas unless agg_dtype says otherwise) and run the
+        # fused Pallas aggregation (2 streaming passes instead of ~2K
+        # leafwise reductions), D-sharded when a mesh is given
         pg = fl.psi * gammas if fl.algo == "folb_het" else None
         new, _ = ops.folb_aggregate_tree(params, deltas, grads,
-                                         psi_gammas=pg)
+                                         psi_gammas=pg,
+                                         buf_dtype=jnp.dtype(fl.agg_dtype),
+                                         mesh=mesh)
     elif fl.algo == "folb":
         new = aggregation.folb_single_set(params, deltas, grads)
     elif fl.algo == "folb2":
@@ -261,7 +286,8 @@ def sync_round_clock(fleet, cost, probe_cost, sizes, algo: str,
 
 def run_federated(model_cfg, fed: FederatedData, fl: FLConfig, rounds: int,
                   init_key: Optional[jax.Array] = None,
-                  eval_every: int = 1, fleet=None) -> FedRunResult:
+                  eval_every: int = 1, fleet=None, sel_probs=None,
+                  mesh=None) -> FedRunResult:
     """Python-loop driver.  Heterogeneous local-step draws are generated from
     a round-indexed numpy seed so all compared algorithms see identical
     device capabilities (paper Sec. VI-A).
@@ -298,7 +324,7 @@ def run_federated(model_cfg, fed: FederatedData, fl: FLConfig, rounds: int,
         n_steps = local_step_draws(t, fl.n_selected, fl)
         key, sub = jax.random.split(key)
         new_params, diag = fl_round(model_cfg, fl, params, train, p, sub,
-                                    n_steps)
+                                    n_steps, sel_probs, mesh=mesh)
         if fleet is not None:
             clock_now = sync_round_clock(
                 fleet, cost, probe_cost, sizes, fl.algo,

@@ -15,6 +15,21 @@ wrapper).
 Phase 2 (``folb_apply``):   grid over D tiles, computing
 w + Σ_k (I_k/Σ|I|)·Δ_k tile-by-tile.
 
+Dtype contract: the ``(K, D)`` grad/delta buffers may be bf16 (the
+bandwidth-optimal storage — see ``core.flat.FlatSpec.buf_dtype``); every
+tile is upcast on load and the VMEM accumulators / the parameter stream
+stay fp32, so halving the HBM traffic costs one bf16 rounding per input
+element and nothing in the reduction.
+
+Sharding: ``folb_aggregate_sharded`` / ``folb_aggregate_stale_sharded``
+run the same two phases under ``shard_map`` with the D axis split over a
+mesh axis — each shard does purely local streaming sweeps and the only
+collective is one (K+1,)-sized ``psum`` (the inner products and ‖g1‖²)
+between the phases; the score/normalize algebra is replicated K-sized
+scalar work.  On a 1-shard mesh the psum is the identity and the local
+shapes equal the global ones, so the sharded path is bit-identical to the
+single-device kernel (tests/test_sharded_agg.py).
+
 Adaptation note (DESIGN.md §4): the paper's TF implementation evaluates
 these as K separate reductions on GPU; on TPU the fusion converts ~2K HBM
 sweeps of the full parameter vector into 2.
@@ -26,8 +41,21 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
-TILE_D = 1024   # lane-aligned (128 x 8) streaming tile
+TILE_D = 1024        # lane-aligned (128 x 8) minimum streaming tile
+_MAX_TILE_D = 1 << 15   # (K, 32768) fp32 block ≈ 1.3 MB VMEM at K = 10
+_INTERPRET_MAX_GRID = 512   # interpret mode unrolls the grid at trace time
+
+
+def _pick_tile(D: int) -> int:
+    """Largest power-of-two multiple of TILE_D that divides D, keeps the
+    grid reasonably short, and fits the VMEM working-set budget."""
+    t = TILE_D
+    while t < _MAX_TILE_D and D % (2 * t) == 0 and D // t > 256:
+        t *= 2
+    return t
 
 
 def _scores_kernel(grads_ref, g1_ref, acc_ref):
@@ -54,15 +82,25 @@ def _apply_kernel(w_ref, deltas_ref, weights_ref, out_ref):
 
 def folb_scores(grads: jnp.ndarray, g1: jnp.ndarray,
                 interpret: bool = False) -> jnp.ndarray:
-    """(K, D), (D,) -> (K,) inner products, single HBM pass."""
+    """(K, D), (D,) -> (K,) inner products, single HBM pass.
+
+    Accepts fp32 or bf16 ``grads``/``g1``; accumulation is fp32 either way.
+    In interpret mode (CPU) the grid is unrolled at trace time, so very
+    long sweeps fall back to an einsum with identical fp32-accumulation
+    semantics (different reduction order only).
+    """
     K, D = grads.shape
-    assert D % TILE_D == 0, D
+    tile = _pick_tile(D)
+    assert D % tile == 0, (D, tile)
+    if interpret and D // tile > _INTERPRET_MAX_GRID:
+        return jnp.einsum("kd,d->k", grads.astype(jnp.float32),
+                          g1.astype(jnp.float32))
     out = pl.pallas_call(
         _scores_kernel,
-        grid=(D // TILE_D,),
+        grid=(D // tile,),
         in_specs=[
-            pl.BlockSpec((K, TILE_D), lambda i: (0, i)),
-            pl.BlockSpec((1, TILE_D), lambda i: (0, i)),
+            pl.BlockSpec((K, tile), lambda i: (0, i)),
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
         ],
         out_specs=pl.BlockSpec((K, 1), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((K, 1), jnp.float32),
@@ -73,18 +111,27 @@ def folb_scores(grads: jnp.ndarray, g1: jnp.ndarray,
 
 def folb_apply(w: jnp.ndarray, deltas: jnp.ndarray, weights: jnp.ndarray,
                interpret: bool = False) -> jnp.ndarray:
-    """(D,), (K, D), (K,) -> (D,) updated parameters, single HBM pass."""
+    """(D,), (K, D), (K,) -> (D,) updated parameters, single HBM pass.
+
+    ``deltas`` may be bf16 (upcast per tile); ``w`` and the output keep
+    ``w.dtype`` with the add performed in fp32.
+    """
     K, D = deltas.shape
-    assert D % TILE_D == 0, D
+    tile = _pick_tile(D)
+    assert D % tile == 0, (D, tile)
+    if interpret and D // tile > _INTERPRET_MAX_GRID:
+        upd = jnp.tensordot(weights.astype(jnp.float32),
+                            deltas.astype(jnp.float32), axes=1)
+        return (w.astype(jnp.float32) + upd).astype(w.dtype)
     out = pl.pallas_call(
         _apply_kernel,
-        grid=(D // TILE_D,),
+        grid=(D // tile,),
         in_specs=[
-            pl.BlockSpec((1, TILE_D), lambda i: (0, i)),
-            pl.BlockSpec((K, TILE_D), lambda i: (0, i)),
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+            pl.BlockSpec((K, tile), lambda i: (0, i)),
             pl.BlockSpec((K, 1), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, TILE_D), lambda i: (0, i)),
+        out_specs=pl.BlockSpec((1, tile), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, D), w.dtype),
         interpret=interpret,
     )(w[None, :], deltas, weights[:, None])
@@ -126,3 +173,82 @@ def folb_aggregate_stale(w: jnp.ndarray, deltas: jnp.ndarray,
     denom = jnp.maximum(jnp.sum(jnp.abs(scores)), 1e-30)
     new_w = folb_apply(w, deltas, scores / denom, interpret=interpret)
     return new_w, scores
+
+
+# ------------------------------------------------------------ D-sharded path
+
+def shard_alignment(mesh, axis: str = "d") -> int:
+    """Flat buffers consumed by the sharded kernels must pad D to a
+    multiple of (shards × TILE_D) so every shard's local sweep is
+    tile-aligned — pass this as ``pad_to`` to ``core.flat.spec_of``."""
+    return TILE_D * mesh.shape[axis]
+
+
+def folb_aggregate_sharded(w: jnp.ndarray, deltas: jnp.ndarray,
+                           grads: jnp.ndarray, psi_gamma: jnp.ndarray,
+                           mesh, axis: str = "d", interpret: bool = False
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """FOLB aggregation with the D axis sharded over ``mesh.shape[axis]``.
+
+    Per shard: a local mean for the g1 slice, the two local Pallas sweeps,
+    and one (K+1,)-sized psum carrying the inner products and ‖g1‖².
+    Computes g1 internally (unlike ``folb_aggregate``) because g1 lives
+    sharded; matches ``ops.folb_aggregate_buffers(mesh=None)`` exactly on a
+    1-shard mesh and to fp32-reduction-order tolerance otherwise.
+    """
+    K, D = grads.shape
+    assert D % shard_alignment(mesh, axis) == 0, (D, dict(mesh.shape))
+
+    def body(w_l, d_l, g_l, pg):
+        g1_l = jnp.mean(g_l.astype(jnp.float32), axis=0)
+        part = jnp.concatenate(
+            [folb_scores(g_l, g1_l, interpret=interpret),
+             jnp.sum(g1_l * g1_l)[None]])
+        tot = jax.lax.psum(part, axis)
+        inner, g1_sq = tot[:-1], tot[-1]
+        scores = inner - pg.astype(jnp.float32) * g1_sq
+        denom = jnp.maximum(jnp.sum(jnp.abs(scores)), 1e-30)
+        new_w_l = folb_apply(w_l, d_l, scores / denom, interpret=interpret)
+        return new_w_l, scores
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(axis), P(None, axis), P(None, axis), P(None)),
+                   out_specs=(P(axis), P(None)),
+                   check_rep=False)
+    return fn(w, deltas, grads, psi_gamma)
+
+
+def folb_aggregate_stale_sharded(w: jnp.ndarray, deltas: jnp.ndarray,
+                                 grads: jnp.ndarray, tau: jnp.ndarray,
+                                 alpha: jnp.ndarray, psi_gamma: jnp.ndarray,
+                                 mask: jnp.ndarray, mesh, axis: str = "d",
+                                 interpret: bool = False
+                                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """D-sharded ``folb_aggregate_stale``: masked-mean g1 slice per shard,
+    local sweeps, one (K+1,)-sized psum — same structure as
+    ``folb_aggregate_sharded`` with the staleness/mask score algebra."""
+    K, D = grads.shape
+    assert D % shard_alignment(mesh, axis) == 0, (D, dict(mesh.shape))
+
+    def body(w_l, d_l, g_l, tau_, alpha_, pg, mask_):
+        m = mask_.astype(jnp.float32)
+        n = jnp.maximum(jnp.sum(m), 1.0)
+        g1_l = jnp.tensordot(m, g_l.astype(jnp.float32), axes=1) / n
+        part = jnp.concatenate(
+            [folb_scores(g_l, g1_l, interpret=interpret),
+             jnp.sum(g1_l * g1_l)[None]])
+        tot = jax.lax.psum(part, axis)
+        inner, g1_sq = tot[:-1], tot[-1]
+        scores = inner - pg.astype(jnp.float32) * g1_sq
+        scores = scores * jnp.power(1.0 + tau_.astype(jnp.float32),
+                                    -alpha_) * m
+        denom = jnp.maximum(jnp.sum(jnp.abs(scores)), 1e-30)
+        new_w_l = folb_apply(w_l, d_l, scores / denom, interpret=interpret)
+        return new_w_l, scores
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(axis), P(None, axis), P(None, axis),
+                             P(None), P(), P(None), P(None)),
+                   out_specs=(P(axis), P(None)),
+                   check_rep=False)
+    return fn(w, deltas, grads, tau, alpha, psi_gamma, mask)

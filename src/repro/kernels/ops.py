@@ -3,6 +3,17 @@
 On this CPU container the kernels run in interpret mode (``interpret=True``
 executes the kernel body in Python for correctness); on TPU the same
 pallas_call compiles to Mosaic.  ``INTERPRET`` flips the default.
+
+The FOLB entry points come in two layers:
+
+  * buffer level (``folb_aggregate_buffers`` / ``folb_staleness_buffers``):
+    operate on pre-raveled flat buffers — fp32 ``(D,)`` params, fp32-or-
+    bf16 ``(K, D)`` grads/deltas — and dispatch to the single-device fused
+    kernel or, given a ``mesh``, the D-sharded ``shard_map`` variant.
+  * pytree level (``folb_aggregate_tree`` / ``folb_staleness_tree``):
+    ravel the pytrees (bf16 grad/delta buffers by default — half the HBM
+    traffic; fp32 accumulation stays inside the kernels), call the buffer
+    level, unravel.
 """
 from __future__ import annotations
 
@@ -18,6 +29,10 @@ from repro.kernels import slstm_scan as _slstm
 from repro.kernels import ssm_scan as _ssd
 
 INTERPRET = jax.default_backend() == "cpu"
+
+# default storage dtype for the (K, D) grad/delta buffers: bf16 halves the
+# streaming traffic that dominates FOLB's server cost; parameters stay fp32
+DEFAULT_BUF_DTYPE = jnp.bfloat16
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "sliding_window",
@@ -43,60 +58,89 @@ def slstm_scan(xg, r, n_heads: int, chunk: int = 256):
                              interpret=INTERPRET)
 
 
-@jax.jit
-def folb_aggregate_flat(w, deltas, grads, g1, psi_gamma, g1_sq
-                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    return _folb.folb_aggregate(w, deltas, grads, g1, psi_gamma, g1_sq,
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def folb_aggregate_buffers(w, deltas, grads, psi_gamma=None, mesh=None
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-set FOLB on flat buffers; ``mesh`` (static) shards D.
+
+    w: (D,) fp32; deltas/grads: (K, D) fp32 or bf16; psi_gamma: (K,) or
+    None.  Matches ``kernels.ref.folb_aggregate_ref`` up to reduction
+    order; on a 1-shard mesh the sharded path is bit-identical to
+    ``mesh=None``.
+    """
+    K = grads.shape[0]
+    pg = (jnp.zeros((K,), jnp.float32) if psi_gamma is None
+          else psi_gamma.astype(jnp.float32))
+    if mesh is not None:
+        return _folb.folb_aggregate_sharded(w, deltas, grads, pg, mesh,
+                                            interpret=INTERPRET)
+    g1 = jnp.mean(grads.astype(jnp.float32), axis=0)
+    g1_sq = jnp.sum(g1 * g1)
+    return _folb.folb_aggregate(w, deltas, grads, g1, pg, g1_sq,
                                 interpret=INTERPRET)
 
 
-@jax.jit
-def folb_aggregate_flat_stale(w, deltas, grads, tau, alpha, psi_gamma, mask
-                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def folb_staleness_buffers(w, deltas, grads, tau, alpha, psi_gamma=None,
+                           mask=None, mesh=None
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Staleness-discounted flat FOLB (masked g1, (1+τ)^{−α} scores);
     matches core.aggregation.folb_staleness on the flattened problem."""
-    return _folb.folb_aggregate_stale(w, deltas, grads, tau, alpha,
-                                      psi_gamma, mask, interpret=INTERPRET)
+    K = grads.shape[0]
+    pg = (jnp.zeros((K,), jnp.float32) if psi_gamma is None
+          else psi_gamma.astype(jnp.float32))
+    m = jnp.ones((K,), jnp.float32) if mask is None else mask
+    tau = tau.astype(jnp.float32)
+    alpha = jnp.asarray(alpha, jnp.float32)
+    if mesh is not None:
+        return _folb.folb_aggregate_stale_sharded(
+            w, deltas, grads, tau, alpha, pg, m, mesh, interpret=INTERPRET)
+    return _folb.folb_aggregate_stale(w, deltas, grads, tau, alpha, pg, m,
+                                      interpret=INTERPRET)
 
 
-def _ravel_problem(params, deltas_stacked, grads_stacked, psi_gammas):
-    """Shared flattening for the pytree front-ends: (spec, K, and the flat
-    w/(K,D)-delta/(K,D)-grad/ψγ buffers the kernels consume)."""
+def _ravel_problem(params, deltas_stacked, grads_stacked, buf_dtype, mesh):
+    """Shared flattening for the pytree front-ends: (spec, flat fp32 w,
+    buf_dtype (K, D) delta/grad buffers).  With a mesh, D pads to the
+    shard-aligned boundary so every shard's local sweep is tile-aligned."""
     from repro.core import flat as flat_lib
-    spec = flat_lib.spec_of(params)
-    K = jax.tree_util.tree_leaves(deltas_stacked)[0].shape[0]
+    pad_to = (_folb.shard_alignment(mesh) if mesh is not None
+              else _folb.TILE_D)
+    spec = flat_lib.spec_of(params, pad_to=pad_to)
+    bspec = flat_lib.with_buf_dtype(spec, buf_dtype)
     w = flat_lib.ravel(spec, params)
-    deltas = flat_lib.ravel_stacked(spec, deltas_stacked)
-    grads = flat_lib.ravel_stacked(spec, grads_stacked)
-    pg = (jnp.zeros((K,), jnp.float32) if psi_gammas is None
-          else psi_gammas.astype(jnp.float32))
-    return spec, K, w, deltas, grads, pg
+    deltas = flat_lib.ravel_stacked(bspec, deltas_stacked)
+    grads = flat_lib.ravel_stacked(bspec, grads_stacked)
+    return spec, w, deltas, grads
 
 
 def folb_aggregate_tree(params, deltas_stacked, grads_stacked,
-                        psi_gammas=None) -> Tuple:
-    """Pytree front-end: ravel the pytrees into flat (K, D) buffers (padding
-    D to the kernel tile), run the fused kernel, unravel.  Matches
-    repro.core.aggregation.folb_single_set / folb_het."""
+                        psi_gammas=None, buf_dtype=DEFAULT_BUF_DTYPE,
+                        mesh=None) -> Tuple:
+    """Pytree front-end: ravel the pytrees into flat (K, D) buffers (bf16
+    by default, padding D to the kernel tile / shard boundary), run the
+    fused — optionally D-sharded — kernel, unravel.  Matches
+    repro.core.aggregation.folb_single_set / folb_het to the buffer
+    dtype's rounding."""
     from repro.core import flat as flat_lib
-    spec, _, w, deltas, grads, pg = _ravel_problem(
-        params, deltas_stacked, grads_stacked, psi_gammas)
-    g1 = jnp.mean(grads, axis=0)
-    g1_sq = jnp.sum(g1 * g1)
-    new_flat, scores = folb_aggregate_flat(w, deltas, grads, g1, pg, g1_sq)
+    spec, w, deltas, grads = _ravel_problem(
+        params, deltas_stacked, grads_stacked, buf_dtype, mesh)
+    new_flat, scores = folb_aggregate_buffers(w, deltas, grads,
+                                              psi_gamma=psi_gammas,
+                                              mesh=mesh)
     return flat_lib.unravel(spec, new_flat), scores
 
 
 def folb_staleness_tree(params, deltas_stacked, grads_stacked, tau,
-                        alpha: float = 0.0, psi_gammas=None, mask=None
-                        ) -> Tuple:
+                        alpha: float = 0.0, psi_gammas=None, mask=None,
+                        buf_dtype=DEFAULT_BUF_DTYPE, mesh=None) -> Tuple:
     """Pytree front-end for the staleness rule (async engines): ravel, run
     the fused kernel, unravel.  Matches core.aggregation.folb_staleness."""
     from repro.core import flat as flat_lib
-    spec, K, w, deltas, grads, pg = _ravel_problem(
-        params, deltas_stacked, grads_stacked, psi_gammas)
-    m = jnp.ones((K,), jnp.float32) if mask is None else mask
-    new_flat, scores = folb_aggregate_flat_stale(
+    spec, w, deltas, grads = _ravel_problem(
+        params, deltas_stacked, grads_stacked, buf_dtype, mesh)
+    new_flat, scores = folb_staleness_buffers(
         w, deltas, grads, tau.astype(jnp.float32),
-        jnp.asarray(alpha, jnp.float32), pg, m)
+        jnp.asarray(alpha, jnp.float32), psi_gamma=psi_gammas, mask=mask,
+        mesh=mesh)
     return flat_lib.unravel(spec, new_flat), scores

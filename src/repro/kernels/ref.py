@@ -34,6 +34,31 @@ def folb_aggregate_ref(w: jnp.ndarray, deltas: jnp.ndarray,
     return (w.astype(jnp.float32) + upd).astype(w.dtype), scores
 
 
+def folb_aggregate_stale_ref(w: jnp.ndarray, deltas: jnp.ndarray,
+                             grads: jnp.ndarray, tau: jnp.ndarray,
+                             alpha, psi_gamma: jnp.ndarray,
+                             mask: jnp.ndarray
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Staleness-discounted FOLB over flattened parameters (the oracle for
+    ``kernels.folb_aggregate.folb_aggregate_stale`` and its sharded
+    variant).  Inputs may be bf16; all arithmetic is fp32:
+      g1    = Σ_k m_k ∇F_k / Σ_k m_k          (masked arrived-set mean)
+      I_k   = (<∇F_k, g1> − ψγ_k ||g1||²) · (1 + τ_k)^{−α} · m_k
+      w_new = w + Σ_k I_k Δ_k / Σ_k |I_k|
+    """
+    m = mask.astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(m), 1.0)
+    g32 = grads.astype(jnp.float32)
+    g1 = jnp.tensordot(m, g32, axes=1) / n
+    inner = jnp.einsum("kd,d->k", g32, g1)
+    scores = inner - psi_gamma.astype(jnp.float32) * jnp.sum(g1 * g1)
+    scores = scores * jnp.power(1.0 + tau.astype(jnp.float32),
+                                -jnp.asarray(alpha, jnp.float32)) * m
+    denom = jnp.maximum(jnp.sum(jnp.abs(scores)), 1e-30)
+    upd = jnp.einsum("k,kd->d", scores / denom, deltas.astype(jnp.float32))
+    return (w.astype(jnp.float32) + upd).astype(w.dtype), scores
+
+
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         causal: bool = True,
                         sliding_window: int = 0) -> jnp.ndarray:

@@ -257,3 +257,21 @@ def fsdp_param_specs(cfg, params_shape, mesh: Mesh) -> Any:
 def to_shardings(mesh: Mesh, spec_tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ----------------------------------------------------- flat FOLB buffer mesh
+
+FLAT_AXIS = "d"   # the flat-buffer D axis (kernels.folb_aggregate sharded)
+
+
+def folb_mesh(n_shards: int = 0) -> Mesh:
+    """1-axis mesh for the D-sharded flat FOLB aggregation: the parameter
+    vector splits over ``FLAT_AXIS``; the (K,) score algebra is replicated.
+    ``n_shards=0`` uses every visible device.  FL clients already
+    parallelize over the data axes, so the flat aggregation gets its own
+    dedicated axis rather than reusing "model" (which tensor-shards 2-D
+    leaves, not the raveled vector)."""
+    devs = jax.devices()
+    n = n_shards or len(devs)
+    assert n <= len(devs), (n, len(devs))
+    return jax.make_mesh((n,), (FLAT_AXIS,), devices=devs[:n])

@@ -1,0 +1,77 @@
+"""Benchmark-regression gate logic and the FOLB bytes-moved model.
+
+Pure-python tests (no kernel timing): the gate's compare() must catch the
+regressions CI relies on it for — including the new calibration-relative
+kernel ratios — and the roofline byte model must show the ~2x (K, D)
+reduction the bf16 buffers exist for."""
+from benchmarks.check_regression import compare
+from benchmarks.roofline import folb_agg_bytes, folb_kd_bytes
+
+
+def _artifact(kernel_ratio=1.0):
+    return {
+        "results": [{"name": "folb/sync", "secs_to_acc": 5.0,
+                     "rounds_to_acc": 10, "final_acc": 0.9}],
+        "dispatch": {"scan_vs_loop_speedup": 1.3},
+        "kernel": {
+            "calibration_us": 1000.0,
+            "entries": {
+                "kernel/folb_aggregate/K8xD65536/bf16": {
+                    "us_per_call": 800.0,
+                    "ratio_vs_calibration": kernel_ratio},
+            },
+        },
+    }
+
+
+class TestKernelGate:
+    def test_passes_when_ratio_stable(self):
+        assert compare(_artifact(1.0), _artifact(1.2), 0.15, 0.05, 1.0,
+                       kernel_tolerance=0.5) == []
+
+    def test_fails_on_ratio_regression(self):
+        fails = compare(_artifact(1.0), _artifact(2.0), 0.15, 0.05, 1.0,
+                        kernel_tolerance=0.5)
+        assert len(fails) == 1 and "calibration-relative" in fails[0]
+
+    def test_fails_on_missing_kernel_entry(self):
+        cur = _artifact(1.0)
+        cur["kernel"]["entries"] = {}
+        fails = compare(_artifact(1.0), cur, 0.15, 0.05, 1.0)
+        assert any("missing" in f for f in fails)
+
+    def test_fails_on_missing_kernel_section(self):
+        cur = _artifact(1.0)
+        del cur["kernel"]
+        fails = compare(_artifact(1.0), cur, 0.15, 0.05, 1.0)
+        assert any("kernel: section missing" in f for f in fails)
+
+    def test_no_kernel_section_in_baseline_is_fine(self):
+        """Pre-kernel-gate baselines (older artifacts) don't fail."""
+        base = _artifact(1.0)
+        del base["kernel"]
+        assert compare(base, _artifact(9.9), 0.15, 0.05, 1.0) == []
+
+    def test_existing_gates_still_fire(self):
+        cur = _artifact(1.0)
+        cur["results"][0]["secs_to_acc"] = 50.0
+        cur["dispatch"]["scan_vs_loop_speedup"] = 0.5
+        fails = compare(_artifact(1.0), cur, 0.15, 0.05, 1.0)
+        assert any("secs_to_acc" in f for f in fails)
+        assert any("dispatch" in f for f in fails)
+
+
+class TestBytesModel:
+    def test_kd_sweep_halves_exactly(self):
+        """The (K, D) streaming sweeps — the dominant term — are exactly
+        2x smaller in bf16 (acceptance criterion)."""
+        for K, D in ((8, 1 << 16), (10, 1 << 27), (32, 1 << 20)):
+            assert folb_kd_bytes(K, D, 4) == 2 * folb_kd_bytes(K, D, 2)
+
+    def test_total_ratio_approaches_two(self):
+        """Total bytes (incl. the fp32 parameter stream) approach 2x as K
+        grows; at the bench shape (K=8) the reduction is already ~1.7x."""
+        r8 = folb_agg_bytes(8, 1 << 16, 4) / folb_agg_bytes(8, 1 << 16, 2)
+        r64 = folb_agg_bytes(64, 1 << 20, 4) / folb_agg_bytes(64, 1 << 20, 2)
+        assert 1.6 < r8 < 2.0 < r64 * 1.05
+        assert r64 > r8

@@ -1,6 +1,8 @@
 """Flat-buffer parameter path: ravel/unravel round-trips arbitrary model
 pytrees, and the fused flat FOLB aggregation matches the pytree reference
-rules (folb_single_set / folb_het / folb_staleness) to fp32 tolerance."""
+rules (folb_single_set / folb_het / folb_staleness) — bit-tight with fp32
+buffers, within one-bf16-rounding accumulation tolerance with the default
+bf16 grad/delta buffers."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,6 +13,11 @@ from repro.core import aggregation, flat
 from repro.kernels import ops
 
 TOL = 1e-4
+# bf16 buffers: grads/deltas are stored with 8 mantissa bits (relative
+# rounding ≤ 2^-9 per element) but all accumulation stays fp32, so on the
+# unit-scale test problems the aggregated update differs from the fp32
+# path by ~|Δ|·2^-8 ≈ 1e-3; 5e-3 gives slack for score-weight coupling.
+BF16_TOL = 5e-3
 
 
 def _random_pytree(seed: int, depth: int, width: int, dtype):
@@ -59,6 +66,40 @@ class TestRoundTrip:
         for a, b in zip(jax.tree.leaves(stacked), jax.tree.leaves(back)):
             assert (np.asarray(a) == np.asarray(b)).all()
 
+    @given(st.integers(0, 10_000), st.integers(1, 3), st.integers(1, 9))
+    @settings(max_examples=16, deadline=None)
+    def test_bf16_roundtrip_error_bound(self, seed, depth, width):
+        """bf16 buffer round-trip of an fp32 tree is one round-to-nearest
+        bf16 rounding per element: |back − x| ≤ 2^-8·|x| (half-ulp is
+        2^-9; 2^-8 covers the exponent boundary cases)."""
+        tree = _random_pytree(seed, depth, width, jnp.float32)
+        spec = flat.spec_of(tree, buf_dtype=jnp.bfloat16)
+        vec = flat.ravel(spec, tree)
+        assert vec.dtype == jnp.bfloat16
+        assert float(jnp.abs(vec[spec.D:].astype(jnp.float32)).sum()) == 0.0
+        back = flat.unravel(spec, vec)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+            assert b.dtype == np.float32
+            assert (np.abs(a - b) <= 2.0 ** -8 * np.abs(a) + 1e-30).all()
+
+    def test_bf16_tree_roundtrip_exact(self):
+        """A tree already in bf16 survives a bf16 buffer bit-for-bit."""
+        tree = _random_pytree(7, 2, 6, jnp.bfloat16)
+        spec = flat.spec_of(tree, buf_dtype=jnp.bfloat16)
+        back = flat.unravel(spec, flat.ravel(spec, tree))
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            assert a.dtype == jnp.bfloat16
+            assert (np.asarray(a) == np.asarray(b)).all()
+
+    def test_with_buf_dtype_keeps_recipe(self):
+        tree = _random_pytree(1, 2, 5, jnp.float32)
+        spec = flat.spec_of(tree)
+        b16 = flat.with_buf_dtype(spec, jnp.bfloat16)
+        assert b16.D == spec.D and b16.D_pad == spec.D_pad
+        assert b16.buf_dtype == jnp.dtype(jnp.bfloat16)
+        assert hash(b16) != hash(spec)   # distinct static jit keys
+
     def test_spec_is_static_under_jit(self):
         tree = _random_pytree(0, 2, 4, jnp.float32)
         spec = flat.spec_of(tree)
@@ -86,7 +127,8 @@ class TestFlatMatchesPytree:
     def test_folb_single_set(self, seed, k):
         params, deltas, grads = self._problem(seed, k)
         exp = aggregation.folb_single_set(params, deltas, grads)
-        got, _ = ops.folb_aggregate_tree(params, deltas, grads)
+        got, _ = ops.folb_aggregate_tree(params, deltas, grads,
+                                         buf_dtype=jnp.float32)
         for a, b in zip(jax.tree.leaves(exp), jax.tree.leaves(got)):
             assert np.allclose(np.asarray(a), np.asarray(b), atol=TOL)
 
@@ -98,7 +140,8 @@ class TestFlatMatchesPytree:
         gammas = jnp.linspace(0.1, 0.9, k)
         exp = aggregation.folb_het(params, deltas, grads, gammas, psi)
         got, _ = ops.folb_aggregate_tree(params, deltas, grads,
-                                         psi_gammas=psi * gammas)
+                                         psi_gammas=psi * gammas,
+                                         buf_dtype=jnp.float32)
         for a, b in zip(jax.tree.leaves(exp), jax.tree.leaves(got)):
             assert np.allclose(np.asarray(a), np.asarray(b), atol=TOL)
 
@@ -111,7 +154,7 @@ class TestFlatMatchesPytree:
         exp = aggregation.folb_staleness(params, deltas, grads, tau,
                                          alpha=alpha)
         got, _ = ops.folb_staleness_tree(params, deltas, grads, tau,
-                                         alpha=alpha)
+                                         alpha=alpha, buf_dtype=jnp.float32)
         for a, b in zip(jax.tree.leaves(exp), jax.tree.leaves(got)):
             assert np.allclose(np.asarray(a), np.asarray(b), atol=TOL)
 
@@ -123,7 +166,8 @@ class TestFlatMatchesPytree:
         exp = aggregation.folb_staleness(params, deltas, grads, tau,
                                          alpha=0.5, mask=mask)
         got, _ = ops.folb_staleness_tree(params, deltas, grads, tau,
-                                         alpha=0.5, mask=mask)
+                                         alpha=0.5, mask=mask,
+                                         buf_dtype=jnp.float32)
         for a, b in zip(jax.tree.leaves(exp), jax.tree.leaves(got)):
             assert np.allclose(np.asarray(a), np.asarray(b), atol=TOL)
 
@@ -135,16 +179,70 @@ class TestFlatMatchesPytree:
         exp = aggregation.folb_staleness(params, deltas, grads, tau,
                                          alpha=0.5, gammas=gammas, psi=0.4)
         got, _ = ops.folb_staleness_tree(params, deltas, grads, tau,
-                                         alpha=0.5, psi_gammas=0.4 * gammas)
+                                         alpha=0.5, psi_gammas=0.4 * gammas,
+                                         buf_dtype=jnp.float32)
         for a, b in zip(jax.tree.leaves(exp), jax.tree.leaves(got)):
             assert np.allclose(np.asarray(a), np.asarray(b), atol=TOL)
 
 
+class TestBf16Buffers:
+    """The default bf16 grad/delta buffers agree with the fp32 path to
+    one-input-rounding accumulation tolerance (fp32 VMEM accumulators)."""
+
+    _problem = TestFlatMatchesPytree._problem
+
+    @given(st.integers(0, 10_000), st.integers(2, 8))
+    @settings(max_examples=12, deadline=None)
+    def test_bf16_vs_fp32_aggregation(self, seed, k):
+        params, deltas, grads = self._problem(seed, k)
+        f32, _ = ops.folb_aggregate_tree(params, deltas, grads,
+                                         buf_dtype=jnp.float32)
+        b16, _ = ops.folb_aggregate_tree(params, deltas, grads)  # default
+        for a, b in zip(jax.tree.leaves(f32), jax.tree.leaves(b16)):
+            assert np.allclose(np.asarray(a), np.asarray(b), atol=BF16_TOL)
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=8, deadline=None)
+    def test_bf16_vs_pytree_reference(self, seed):
+        """End-to-end: bf16 flat path vs the leafwise fp32 reference."""
+        params, deltas, grads = self._problem(seed, 5)
+        exp = aggregation.folb_single_set(params, deltas, grads)
+        got, _ = ops.folb_aggregate_tree(params, deltas, grads)
+        for a, b in zip(jax.tree.leaves(exp), jax.tree.leaves(got)):
+            assert np.allclose(np.asarray(a), np.asarray(b), atol=BF16_TOL)
+
+    def test_bf16_staleness_vs_fp32(self):
+        params, deltas, grads = self._problem(5, 5)
+        tau = jnp.asarray([0.0, 1.0, 3.0, 0.0, 7.0])
+        mask = jnp.asarray([1.0, 1.0, 0.0, 1.0, 1.0])
+        f32, _ = ops.folb_staleness_tree(params, deltas, grads, tau,
+                                         alpha=0.7, mask=mask,
+                                         buf_dtype=jnp.float32)
+        b16, _ = ops.folb_staleness_tree(params, deltas, grads, tau,
+                                         alpha=0.7, mask=mask)
+        for a, b in zip(jax.tree.leaves(f32), jax.tree.leaves(b16)):
+            assert np.allclose(np.asarray(a), np.asarray(b), atol=BF16_TOL)
+
+    def test_scores_relative_error(self):
+        """The (K,) inner-product scores from bf16 inputs stay within
+        ~2^-8 relative of the fp32 scores (fp32 accumulation — the error
+        comes only from input rounding)."""
+        params, deltas, grads = self._problem(9, 6)
+        _, s32 = ops.folb_aggregate_tree(params, deltas, grads,
+                                         buf_dtype=jnp.float32)
+        _, s16 = ops.folb_aggregate_tree(params, deltas, grads)
+        rel = np.abs(np.asarray(s16) - np.asarray(s32)) \
+            / (np.abs(np.asarray(s32)) + 1e-6)
+        assert rel.max() < 3e-2, rel
+
+
 class TestSimulatorBackends:
-    """agg_backend='flat' (default) and 'pytree' run the same algorithm."""
+    """agg_backend='flat' (default, bf16 buffers) and 'pytree' run the same
+    algorithm: fp32 buffers match the pytree rules tightly; the default
+    bf16 buffers track them to accumulation tolerance."""
 
     @pytest.mark.parametrize("algo", ["folb", "folb_het"])
-    def test_backends_agree(self, algo):
+    def test_backends_agree_fp32(self, algo):
         import dataclasses
         from repro.configs.paper_models import MCLR
         from repro.data.federated import stack_devices
@@ -152,7 +250,8 @@ class TestSimulatorBackends:
         from repro.fed.simulator import FLConfig, run_federated
         fed = stack_devices(
             synthetic_alpha_beta(0, 12, 1.0, 1.0, mean_size=40), seed=0)
-        fl = FLConfig(algo=algo, n_selected=4, psi=0.1, seed=2)
+        fl = FLConfig(algo=algo, n_selected=4, psi=0.1, seed=2,
+                      agg_dtype="float32")
         assert fl.agg_backend == "flat"   # the default
         h_flat = run_federated(MCLR, fed, fl, rounds=3)
         h_tree = run_federated(
@@ -162,3 +261,23 @@ class TestSimulatorBackends:
                                    h_tree["train_loss"], atol=1e-5)
         np.testing.assert_allclose(h_flat["test_acc"], h_tree["test_acc"],
                                    atol=1e-5)
+
+    def test_default_bf16_close_to_pytree(self):
+        """The DEFAULT config (flat backend, bf16 buffers) stays within
+        accumulation tolerance of the exact pytree trajectory over
+        multiple compounding rounds."""
+        import dataclasses
+        from repro.configs.paper_models import MCLR
+        from repro.data.federated import stack_devices
+        from repro.data.synthetic import synthetic_alpha_beta
+        from repro.fed.simulator import FLConfig, run_federated
+        fed = stack_devices(
+            synthetic_alpha_beta(0, 12, 1.0, 1.0, mean_size=40), seed=0)
+        fl = FLConfig(algo="folb", n_selected=4, seed=2)
+        assert fl.agg_backend == "flat" and fl.agg_dtype == "bfloat16"
+        h_b16 = run_federated(MCLR, fed, fl, rounds=5)
+        h_tree = run_federated(
+            MCLR, fed, dataclasses.replace(fl, agg_backend="pytree"),
+            rounds=5)
+        np.testing.assert_allclose(h_b16["train_loss"],
+                                   h_tree["train_loss"], atol=5e-3)

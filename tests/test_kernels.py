@@ -113,6 +113,8 @@ class TestFolbAggregate:
         assert float(jnp.max(jnp.abs(got - expected["x"]))) < 1e-4
 
     def test_tree_frontend(self):
+        # fp32 buffers isolate the ravel/pad/unravel plumbing; the default
+        # bf16 buffer dtype is covered by tests/test_flat.py
         from repro.kernels import ops
         from repro.core import aggregation
         key = jax.random.PRNGKey(1)
@@ -124,7 +126,8 @@ class TestFolbAggregate:
         grads = jax.tree.map(
             lambda x: jax.random.normal(jax.random.fold_in(key, 2),
                                         (K,) + x.shape), w)
-        got, _ = ops.folb_aggregate_tree(w, deltas, grads)
+        got, _ = ops.folb_aggregate_tree(w, deltas, grads,
+                                         buf_dtype=jnp.float32)
         exp = aggregation.folb_single_set(w, deltas, grads)
         for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(exp)):
             assert np.allclose(np.asarray(a), np.asarray(b), atol=1e-4)

@@ -1,8 +1,6 @@
 """Scan-compiled engine: the whole-run lax.scan execution path must
 reproduce the python-loop engine bit-for-bit on a fixed seed — history,
 wall-clock, and final parameters — and reject configs it cannot compile."""
-import dataclasses
-
 import jax
 import numpy as np
 import pytest
@@ -101,6 +99,65 @@ class TestParity:
                                         fleet=fleet)
         h_async = run_async(MCLR, fed_data, afl, fleet, rounds=4)
         assert h_scan["train_loss"] == h_async["train_loss"]
+        assert h_scan["wall_clock"] == h_async["wall_clock"]
+
+
+class TestDeadlineSelection:
+    """Deadline-aware scan selection: the async deadline engine's
+    latency-aware sampling distribution is static per fleet, so the
+    pre-computed vector lets the compiled (and python-loop) sync engines
+    run the deadline-FOLB sweep's selection policy."""
+
+    def test_loop_scan_parity_with_sel_probs(self, fed_data):
+        """Custom selection probabilities preserve engine parity."""
+        import jax.numpy as jnp
+        probs = jnp.linspace(1.0, 3.0, N_DEV)
+        probs = probs / probs.sum()
+        fl = FLConfig(algo="folb", n_selected=4, seed=1)
+        h_loop = run_federated(MCLR, fed_data, fl, rounds=3,
+                               sel_probs=probs)
+        h_scan = run_federated_compiled(MCLR, fed_data, fl, rounds=3,
+                                        sel_probs=probs)
+        _assert_bit_for_bit(h_loop, h_scan)
+
+    def test_scan_runs_deadline_folb_sweep_config(self, fed_data):
+        """With every device inside a generous-but-finite deadline, the
+        async latency-aware deadline run IS a sequence of synchronous
+        rounds under the static latency-aware distribution — the scan
+        engine fed the pre-computed probs reproduces it bit-for-bit,
+        simulated wall-clock included."""
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.fed import simulator
+        from repro.fed.async_engine import AsyncFLConfig, run_async
+        from repro.fed.scan_engine import latency_selection_probs
+        from repro.models import small
+        from repro.sysmodel import expected_latencies, round_cost_for
+        fleet = heterogeneous_fleet(2, N_DEV, straggler_frac=0.3,
+                                    straggler_slowdown=4.0)
+        fl = FLConfig(algo="folb", n_selected=5, seed=3)
+        params = small.init_small(MCLR, jax.random.PRNGKey(fl.seed))
+        cost = round_cost_for(MCLR, params, uploads_gradient=True)
+        sizes = np.asarray(fed_data.mask.sum(axis=1))
+        lat = expected_latencies(fleet, cost,
+                                 mean_steps=simulator.mean_local_steps(fl),
+                                 n_examples=sizes)
+        deadline = float(np.max(lat)) * 3.0   # everyone makes it
+
+        probs = latency_selection_probs(MCLR, fed_data, fl, fleet, deadline)
+        assert probs.shape == (N_DEV,)
+        assert float(jnp.std(probs)) > 0.0          # genuinely non-uniform
+        assert abs(float(jnp.sum(probs)) - 1.0) < 1e-6
+
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=5,
+                            latency_aware=True, deadline=deadline,
+                            staleness_alpha=0.5, seed=3)
+        h_async = run_async(MCLR, fed_data, afl, fleet, rounds=4)
+        assert all(n == 5 for n in h_async["n_arrived"])   # no stragglers
+        h_scan = run_federated_compiled(MCLR, fed_data, fl, rounds=4,
+                                        fleet=fleet, sel_probs=probs)
+        assert h_scan["train_loss"] == h_async["train_loss"]
+        assert h_scan["test_acc"] == h_async["test_acc"]
         assert h_scan["wall_clock"] == h_async["wall_clock"]
 
 
