@@ -13,6 +13,10 @@ baseline and fails (exit 1) on regression:
   * dispatch: the scan-engine speedup over the python loop must stay at
     least ``--min-speedup``.  A ratio (not absolute rounds/sec) so the
     gate is machine-independent and safe on shared CI runners.
+  * dispatch.async_*: the compiled ASYNC engines' scan-vs-event-loop
+    speedup (deadline and fedbuff virtual-event scans) must stay at
+    least ``--min-async-speedup`` — the same machine-independent ratio
+    treatment as the sync scan gate.
   * kernel: each micro-bench's *calibration-relative* ratio (kernel time
     divided by a fixed jnp workload timed in the same run — see
     ``kernel_bench.calibration_us``) may not grow more than
@@ -43,7 +47,8 @@ def _load(path: str) -> dict:
 
 def compare(baseline: dict, current: dict, tolerance: float,
             acc_drop: float, min_speedup: float,
-            kernel_tolerance: float = 0.75) -> List[str]:
+            kernel_tolerance: float = 0.75,
+            min_async_speedup: float = 1.0) -> List[str]:
     """Return the list of regression messages (empty == gate passes)."""
     failures: List[str] = []
     cur_by_name = {r["name"]: r for r in current.get("results", [])}
@@ -85,6 +90,21 @@ def compare(baseline: dict, current: dict, tolerance: float,
                 failures.append(
                     f"dispatch: scan_vs_loop_speedup {speedup:.2f} "
                     f"< required {min_speedup:.2f}")
+            # async engines gated only once the baseline records them
+            # (pre-compiled-async artifacts stay green)
+            for name in ("async_deadline", "async_fedbuff"):
+                if name not in base_disp:
+                    continue
+                cur_async = cur_disp.get(name)
+                if cur_async is None:
+                    failures.append(
+                        f"dispatch: {name} missing from current artifact")
+                    continue
+                sp = cur_async.get("scan_vs_loop_speedup", 0.0)
+                if sp < min_async_speedup:
+                    failures.append(
+                        f"dispatch: {name} scan_vs_loop_speedup {sp:.2f} "
+                        f"< required {min_async_speedup:.2f}")
 
     base_kern = baseline.get("kernel")
     cur_kern = current.get("kernel")
@@ -126,11 +146,15 @@ def main() -> int:
     ap.add_argument("--kernel-tolerance", type=float, default=0.75,
                     help="relative growth allowed on calibration-relative "
                          "kernel microbench ratios")
+    ap.add_argument("--min-async-speedup", type=float, default=1.0,
+                    help="required async scan-vs-event-loop dispatch "
+                         "speedup (deadline and fedbuff)")
     args = ap.parse_args()
 
     failures = compare(_load(args.baseline), _load(args.current),
                        args.tolerance, args.acc_drop, args.min_speedup,
-                       args.kernel_tolerance)
+                       args.kernel_tolerance,
+                       min_async_speedup=args.min_async_speedup)
     if failures:
         print("BENCHMARK REGRESSION GATE: FAIL")
         for msg in failures:

@@ -1,18 +1,22 @@
-"""Dispatch-overhead benchmark: python-loop vs scan-compiled engine.
+"""Dispatch-overhead benchmark: python-loop vs scan-compiled engines.
 
-The python-loop engine pays per-round host overhead: a jit dispatch, a
-key split, a numpy step draw.  The scan engine compiles the whole run
-into one XLA program.  To measure that *dispatch* gap (rather than the
-round's local-SGD math, which is identical in both engines), the round
-here is deliberately light — K = 5 clients, ≤ 2 local steps — the
-dispatch-bound regime of large hyper-parameter sweeps; with the sweep's
-heavy rounds (K = 10, 20 local steps) the CPU round math dominates and
-the whole-run speedup shrinks toward 1x.  Steady state: both engines
-warmed at the measured round count, the scan's one-off compile cost
-reported separately.  Results land in ``BENCH_fed.json``.
+The python-loop engines pay per-round host overhead: a jit dispatch, a
+key split, a numpy step draw (the async engines additionally replay
+their host event plan round by round).  The scan engines compile the
+whole run into one XLA program.  To measure that *dispatch* gap (rather
+than the round's local-SGD math, which is identical in both engines),
+the round here is deliberately light — K = 5 clients, ≤ 2 local steps —
+the dispatch-bound regime of large hyper-parameter sweeps; with the
+sweep's heavy rounds (K = 10, 20 local steps) the CPU round math
+dominates and the whole-run speedup shrinks toward 1x.  Steady state:
+both engines warmed at the measured round count, the scan's one-off
+compile cost reported separately.  Results land in ``BENCH_fed.json``:
+the sync engines under ``dispatch``, the async engines (deadline with an
+aggressive straggler-cutting deadline so the masked-slot slow path runs,
+and fedbuff) under ``dispatch.async_deadline`` / ``.async_fedbuff``.
 
 The CI regression gate (``benchmarks/check_regression.py``) checks the
-*speedup ratio*, not absolute rounds/sec — machine-independent, so the
+*speedup ratios*, not absolute rounds/sec — machine-independent, so the
 gate is meaningful on shared runners.
 """
 from __future__ import annotations
@@ -21,6 +25,7 @@ import time
 from typing import Dict, List, Tuple
 
 DISPATCH_ROUNDS = 60   # fixed regardless of --quick: artifact comparability
+ASYNC_ROUNDS = 40      # async rounds cost more host time per round
 _REPS = 5              # median-of-5: each rep is ~0.3 s, CI runners are noisy
 
 
@@ -70,9 +75,70 @@ def dispatch_results(rounds: int = DISPATCH_ROUNDS) -> Dict:
     }
 
 
-def dispatch_rows(rounds: int = DISPATCH_ROUNDS
+def async_dispatch_results(rounds: int = ASYNC_ROUNDS) -> Dict[str, Dict]:
+    """Rounds/sec of the async python event loop vs the virtual-event
+    scan (`run_async_compiled`), per async mode, on the shared sweep
+    cohort with dispatch-bound rounds.
+
+    The deadline run uses an aggressive (p60, light-step) deadline so a
+    good fraction of rounds exercise the masked-slot slow path rather
+    than the fl_round fast path; fedbuff has no fast path.
+    """
+    import jax
+    import numpy as np
+
+    from benchmarks.time_to_accuracy import setup_sweep
+    from repro.fed.async_engine import AsyncFLConfig, run_async
+    from repro.fed.scan_engine import run_async_compiled
+    from repro.models import small
+    from repro.sysmodel import expected_latencies, round_cost_for
+
+    model_cfg, fed, fleet, _ = setup_sweep()
+    params = small.init_small(model_cfg, jax.random.PRNGKey(0))
+    cost = round_cost_for(model_cfg, params)
+    lat = expected_latencies(fleet, cost, mean_steps=1.5,
+                             n_examples=np.asarray(fed.mask.sum(1)))
+    deadline = float(np.quantile(lat, 0.6))
+
+    configs = {
+        "async_deadline": AsyncFLConfig(
+            mode="deadline", algo="folb", n_selected=5, max_local_steps=2,
+            deadline=deadline, staleness_alpha=0.5, seed=0),
+        "async_fedbuff": AsyncFLConfig(
+            mode="fedbuff", algo="folb", buffer_size=5, concurrency=10,
+            max_local_steps=2, staleness_alpha=0.5, seed=0),
+    }
+    out = {}
+    for name, afl in configs.items():
+        def loop_run(afl=afl):
+            return run_async(model_cfg, fed, afl, fleet, rounds=rounds,
+                             eval_every=rounds)
+
+        def scan_run(afl=afl):
+            return run_async_compiled(model_cfg, fed, afl, fleet,
+                                      rounds=rounds, eval_every=rounds)
+
+        loop_run()                  # warm the per-round jit caches
+        t0 = time.time()
+        scan_run()                  # first call compiles the whole run
+        compile_s = time.time() - t0
+        loop_s = _median_seconds(loop_run)
+        scan_s = _median_seconds(scan_run)
+        out[name] = {
+            "rounds": rounds,
+            "python_loop_rounds_per_sec": rounds / loop_s,
+            "scan_rounds_per_sec": rounds / scan_s,
+            "scan_first_call_seconds": round(compile_s, 3),
+            "scan_vs_loop_speedup": loop_s / scan_s,
+        }
+    return out
+
+
+def dispatch_rows(rounds: int = DISPATCH_ROUNDS, include_async: bool = True
                   ) -> Tuple[List[Tuple[str, float, str]], Dict]:
-    """(CSV rows, json payload) for the run harness."""
+    """(CSV rows, json payload) for the run harness.  The payload is the
+    BENCH_fed.json ``dispatch`` section: the sync engine numbers at the
+    top level plus one ``async_<mode>`` subsection per async engine."""
     res = dispatch_results(rounds)
     us_loop = 1e6 / res["python_loop_rounds_per_sec"]
     us_scan = 1e6 / res["scan_rounds_per_sec"]
@@ -84,6 +150,16 @@ def dispatch_rows(rounds: int = DISPATCH_ROUNDS
          f"speedup={res['scan_vs_loop_speedup']:.2f}x;"
          f"first_call_s={res['scan_first_call_seconds']}"),
     ]
+    if include_async:
+        for name, a in async_dispatch_results().items():
+            res[name] = a
+            rows.append((
+                f"tta/dispatch/{name}",
+                1e6 / a["scan_rounds_per_sec"],
+                f"loop_rounds_per_sec={a['python_loop_rounds_per_sec']:.1f};"
+                f"scan_rounds_per_sec={a['scan_rounds_per_sec']:.1f};"
+                f"speedup={a['scan_vs_loop_speedup']:.2f}x;"
+                f"first_call_s={a['scan_first_call_seconds']}"))
     return rows, res
 
 
@@ -91,3 +167,5 @@ if __name__ == "__main__":
     res = dispatch_results()
     for k, v in res.items():
         print(f"{k}: {v}")
+    for name, a in async_dispatch_results().items():
+        print(f"{name}: {a}")

@@ -18,7 +18,10 @@ on any machine.
 The FOLB aggregation is additionally benched at both buffer dtypes (fp32
 and bf16 ``(K, D)`` grads/deltas) with the modeled HBM bytes from
 ``benchmarks.roofline.folb_agg_bytes`` attached — the bandwidth story the
-bf16 flat-buffer path exists for.  (Its wall-time anchor uses fp32
+bf16 flat-buffer path exists for.  The staleness-discounted variant
+(``folb_aggregate_stale`` — the async engines' hot rule, masked slots +
+``(1+τ)^-α`` discounts) gets its own gated entry with the
+``folb_stale_agg_bytes`` model (one extra masked-mean ``(K, D)`` sweep).  (Its wall-time anchor uses fp32
 inputs for both rows: XLA:CPU emulates bf16 matmuls with wildly unstable
 timings, and on CPU the dtype story is carried by the modeled bytes, not
 the clock.)
@@ -34,7 +37,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.folb_aggregate import folb_aggregate
+from repro.kernels.folb_aggregate import folb_aggregate, folb_aggregate_stale
 from repro.kernels.ssm_scan import ssd_scan
 
 FOLB_K, FOLB_D = 8, 1 << 16
@@ -110,6 +113,18 @@ def _folb_problem(dtype):
     return w, deltas, grads, g1, pg, jnp.sum(g1 * g1)
 
 
+def _folb_stale_problem(dtype):
+    """Staleness-kernel inputs at the production shape: two stale late
+    arrivals and two masked-out slots (the fixed-budget contract of the
+    async event plans)."""
+    w, deltas, grads, _, pg, _ = _folb_problem(dtype)
+    K = FOLB_K
+    tau = jnp.asarray([0.0] * (K - 4) + [1.0, 3.0, 0.0, 0.0], jnp.float32)
+    mask = jnp.asarray([1.0] * (K - 2) + [0.0, 0.0], jnp.float32)
+    alpha = jnp.asarray(0.5, jnp.float32)
+    return w, deltas, grads, tau, alpha, pg, mask
+
+
 def _ssd_problem():
     ks = jax.random.split(jax.random.PRNGKey(2), 5)
     BH, S, P, N = 4, 512, 64, 64
@@ -142,6 +157,9 @@ def _timed_workloads() -> Tuple[Tuple[str, object, tuple], ...]:
          jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v)), flash),
         (f"kernel/folb_aggregate/K{FOLB_K}xD{FOLB_D}/fp32",
          jax.jit(ref.folb_aggregate_ref), _folb_problem(jnp.float32)),
+        (f"kernel/folb_aggregate_stale/K{FOLB_K}xD{FOLB_D}/fp32",
+         jax.jit(ref.folb_aggregate_stale_ref),
+         _folb_stale_problem(jnp.float32)),
         ("kernel/ssd_scan/BH4xS512", jax.jit(_ssd_oracle), ssd),
     )
 
@@ -177,6 +195,18 @@ def bench_kernels() -> List[Tuple[str, float, str]]:
         rows.append((f"kernel/folb_aggregate/K{FOLB_K}xD{FOLB_D}/{tag}",
                      us_fp32,
                      f"interpret_err={err:.2e};modeled_MiB={mib:.2f}"))
+
+    # staleness-discounted folb aggregate (the async engines' hot rule;
+    # masked slots + (1+τ)^-α discounts at the same production shape)
+    from benchmarks.roofline import folb_stale_agg_bytes
+    stale_name = f"kernel/folb_aggregate_stale/K{FOLB_K}xD{FOLB_D}/fp32"
+    oracle_s, stale_args = named[stale_name]
+    us_stale = _time(oracle_s, *stale_args)
+    got, _ = folb_aggregate_stale(*stale_args, interpret=True)
+    err = float(jnp.max(jnp.abs(got - oracle_s(*stale_args)[0])))
+    mib = folb_stale_agg_bytes(FOLB_K, FOLB_D, 4) / 2**20
+    rows.append((stale_name, us_stale,
+                 f"interpret_err={err:.2e};modeled_MiB={mib:.2f}"))
 
     # ssd scan
     fn, args = named["kernel/ssd_scan/BH4xS512"]

@@ -32,13 +32,28 @@ def folb_agg_bytes(K: int, D: int, buf_bytes: int,
     return folb_kd_bytes(K, D, buf_bytes) + 3 * D * param_bytes
 
 
+def folb_stale_agg_bytes(K: int, D: int, buf_bytes: int,
+                         param_bytes: int = 4) -> int:
+    """Modeled HBM bytes of one staleness-discounted FOLB aggregation
+    (kernels.folb_aggregate.folb_aggregate_stale — the async engines' hot
+    rule).  Unlike the plain kernel, whose caller hands it a precomputed
+    g1, the stale entry computes the MASKED arrived-set mean internally:
+    one extra (K, D) grads sweep on top of the two streaming phases, so
+    the dtype-scaled traffic is 3·K·D instead of 2·K·D.  The fp32
+    parameter stream (g1 spill/read, w read, w_new write) and the
+    K-sized τ/mask/score algebra are the same."""
+    return 3 * K * D * buf_bytes + 3 * D * param_bytes
+
+
 def folb_agg_rows() -> List[tuple]:
     """CSV rows: modeled v5e HBM step-time bound of the fused aggregation
-    at representative (K, D) for both buffer dtypes."""
+    at representative (K, D) for both buffer dtypes, plus the staleness
+    variant (the async engines' rule — one extra grads sweep)."""
     from repro.launch.mesh import HBM_BW
     rows = []
     for K, D in ((10, 1 << 20), (10, 1 << 27), (32, 1 << 27)):
         b32 = folb_agg_bytes(K, D, 4)
+        s32 = folb_stale_agg_bytes(K, D, 4)
         for buf_bytes, tag in ((4, "fp32"), (2, "bf16")):
             total = folb_agg_bytes(K, D, buf_bytes)
             kd = folb_kd_bytes(K, D, buf_bytes)
@@ -47,6 +62,13 @@ def folb_agg_rows() -> List[tuple]:
                 total / HBM_BW * 1e6,
                 f"kd_MiB={kd / 2**20:.0f};total_MiB={total / 2**20:.0f};"
                 f"bytes_vs_fp32={b32 / total:.2f}x"))
+            stale = folb_stale_agg_bytes(K, D, buf_bytes)
+            rows.append((
+                f"roofline/folb_agg_stale/K{K}xD{D}/{tag}",
+                stale / HBM_BW * 1e6,
+                f"total_MiB={stale / 2**20:.0f};"
+                f"vs_nonstale={stale / total:.2f}x;"
+                f"bytes_vs_fp32={s32 / stale:.2f}x"))
     return rows
 
 

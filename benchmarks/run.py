@@ -6,8 +6,12 @@ micro-benchmarks, the roofline summary, and the time-to-accuracy sweep.
 Prints ``name,us_per_call,derived`` CSV (us_per_call = mean wall time of
 one federated round / one kernel call / roofline step-time bound in us).
 The `tta` suite additionally writes a ``BENCH_fed.json`` artifact
-(rounds- and seconds-to-target-accuracy per algorithm) so the perf
-trajectory is tracked across PRs.
+(rounds- and seconds-to-target-accuracy per algorithm, plus the
+``dispatch`` section's sync AND async scan-vs-loop engine speedups) so
+the perf trajectory is tracked across PRs.
+
+NEVER run this concurrently with pytest or another bench in the same
+container: CPU contention collapses the CI-gated speedup ratios.
 """
 from __future__ import annotations
 

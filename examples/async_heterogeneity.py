@@ -18,20 +18,68 @@ trains MCLR on non-IID Synthetic(1,1) under
 Watch the seconds column: the learning math is identical FOLB throughout
 — the only thing that changes is *when* updates are allowed to arrive,
 which is exactly the axis the paper's Sec. V optimizes.
+
+``--compiled`` additionally runs the async sweep configs through the
+virtual-event scan engine (``run_async_compiled``): the same event
+timeline compiled into one XLA program, bit-for-bit identical histories,
+with the python-loop vs scan host-time comparison printed per mode.
 """
+import argparse
 import pathlib
 import sys
+import time
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
-from benchmarks.time_to_accuracy import (TARGET_ACC, setup_sweep,
+from benchmarks.time_to_accuracy import (SEED, TARGET_ACC, setup_sweep,
                                          time_to_accuracy_results)
 from repro.sysmodel import fleet_summary
 
 ROUNDS = 60
 
 
+def compiled_comparison(rounds: int = ROUNDS) -> None:
+    """Run deadline + fedbuff through both async engines and print the
+    host-time comparison (the simulated history is identical by
+    construction — asserted below)."""
+    from repro.fed.async_engine import AsyncFLConfig, run_async
+    from repro.fed.scan_engine import run_async_compiled
+    model_cfg, fed, fleet, deadline = setup_sweep()
+    configs = {
+        "folb/deadline": AsyncFLConfig(
+            mode="deadline", algo="folb", n_selected=10, mu=1.0, lr=0.05,
+            deadline=deadline, staleness_alpha=0.5, seed=SEED),
+        "folb/fedbuff": AsyncFLConfig(
+            mode="fedbuff", algo="folb", mu=1.0, lr=0.05, buffer_size=5,
+            concurrency=10, staleness_alpha=0.5, seed=SEED),
+    }
+    print(f"\n{'run':>15} {'loop host-s':>12} {'scan host-s':>12} "
+          f"{'speedup':>8} {'bit-for-bit':>12}")
+    for name, afl in configs.items():
+        run_async(model_cfg, fed, afl, fleet, rounds=rounds)   # warm jits
+        t0 = time.time()
+        h_loop = run_async(model_cfg, fed, afl, fleet, rounds=rounds)
+        loop_s = time.time() - t0
+        run_async_compiled(model_cfg, fed, afl, fleet, rounds=rounds)
+        t0 = time.time()
+        h_scan = run_async_compiled(model_cfg, fed, afl, fleet,
+                                    rounds=rounds)
+        scan_s = time.time() - t0
+        same = (h_loop["test_acc"] == h_scan["test_acc"]
+                and h_loop["wall_clock"] == h_scan["wall_clock"]
+                and h_loop["stale_mean"] == h_scan["stale_mean"])
+        print(f"{name:>15} {loop_s:>12.2f} {scan_s:>12.2f} "
+              f"{loop_s / scan_s:>7.2f}x {'yes' if same else 'NO':>12}")
+        assert same, f"{name}: compiled history diverged from the loop"
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--compiled", action="store_true",
+                    help="also run the virtual-event scan engine and "
+                         "print the loop-vs-scan host-time comparison")
+    args = ap.parse_args()
+
     _, _, fleet, deadline = setup_sweep()
     print(fleet_summary(fleet))
     print(f"deadline (p90 expected round latency): {deadline:.3f}s\n")
@@ -44,6 +92,8 @@ def main():
         print(f"{r['name']:>15} {r['rounds_to_acc']:>11d} "
               f"{r['secs_to_acc']:>10.2f} {r['final_acc']:>10.3f} "
               f"{r['final_wall_clock']:>10.1f}s")
+    if args.compiled:
+        compiled_comparison()
 
 
 if __name__ == "__main__":

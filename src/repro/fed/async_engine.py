@@ -21,6 +21,19 @@ time instead of a round counter.  Two modes:
              version staleness.  No global barrier exists — progress is
              measured purely on the virtual clock.
 
+Execution is split into a host-side **event plan** and a device-side
+replay.  Fleet latencies are a deterministic function of the seeded fleet
+and the pre-drawn key chain, so `build_deadline_plan` / `build_fedbuff_plan`
+pre-compute the whole event timeline — dispatch/arrival times, per-round
+due/straggler/missed partitions, fedbuff flush boundaries and staleness
+counters τ — into fixed-width stacked arrays (a static straggler budget
+with masked slots; pending updates live in a fixed **slot pool** addressed
+by plan-assigned indices).  The python loop (`run_async`) replays the plan
+one jitted step per round; the compiled engine
+(`repro.fed.scan_engine.run_async_compiled`) replays the *same* jitted
+step functions inside one `lax.scan` — which is what makes the two
+bit-for-bit identical (params, ids, staleness, wall clock).
+
 Device latency, bandwidth, and availability come from a
 ``repro.sysmodel.DeviceFleet``; selection can be latency-aware
 (P ∝ |I_k|·σ((D − ℓ_k)/s), `repro.core.selection.latency_aware_probs`).
@@ -29,8 +42,9 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import heapq
 import math
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -41,9 +55,9 @@ from repro.data.federated import FederatedData
 from repro.fed import simulator
 from repro.kernels import ops
 from repro.models import small
-from repro.sysmodel import (DeviceFleet, EventQueue, VirtualClock,
-                            device_latencies, expected_latencies,
-                            plan_sync_round, round_cost_for)
+from repro.sysmodel import (DeviceFleet, EventQueue, device_latencies,
+                            expected_latencies, plan_deadline_run,
+                            round_cost_for)
 
 ASYNC_MODES = ("deadline", "fedbuff")
 # aggregation bases the async engine can run (the sync-parity fast path
@@ -87,56 +101,408 @@ class AsyncFLConfig:
             seed=self.seed)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1))
-def _compute_updates(model_cfg, fl: simulator.FLConfig, params, data, ids,
-                     n_steps):
-    """Local updates for the dispatched multiset (vmap over devices)."""
-    return simulator._local_updates(model_cfg, params, data, ids, n_steps, fl)
-
-
-def _gather(stacked, idx: np.ndarray):
-    return jax.tree.map(lambda x: x[jnp.asarray(idx)], stacked)
-
-
-def _concat(trees: List[Any]):
-    if len(trees) == 1:
-        return trees[0]
-    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *trees)
-
-
-@dataclasses.dataclass
-class _PendingUpdate:
-    """A straggler upload in flight: aggregated when its arrival time
-    passes, with staleness counted in server rounds/versions."""
-    arrival: float
-    version: int            # server version its reference params came from
-    delta: Any
-    grad: Any
-    gamma: jnp.ndarray
+def _concat0(a, b):
+    """Concatenate two stacked pytrees along the client axis."""
+    return jax.tree.map(lambda x, y: jnp.concatenate([x, y], axis=0), a, b)
 
 
 def _apply_aggregation(afl: AsyncFLConfig, params, deltas, grads, gammas,
-                       tau: jnp.ndarray, mesh=None):
-    """Staleness-discounted aggregation over the arrived set."""
+                       tau: jnp.ndarray, mask=None, mesh=None):
+    """Staleness-discounted aggregation over the arrived set.
+
+    With `mask` the slot arrays have a static width and invalid slots are
+    excluded by the mask (fixed-budget contract of the event plans); an
+    all-masked budget returns `params` unchanged, bit-exact.
+    """
     if afl.algo in ("fedavg", "fedprox"):
-        return aggregation.mean_staleness(params, deltas, tau,
-                                          alpha=afl.staleness_alpha)
-    psi = afl.psi if afl.algo == "folb_het" else 0.0
-    if afl.agg_backend == "flat":
+        new = aggregation.mean_staleness(params, deltas, tau,
+                                         alpha=afl.staleness_alpha,
+                                         mask=mask)
+    elif afl.agg_backend == "flat":
         # default hot path: flat (K, D) buffers (bf16 storage unless
         # agg_dtype overrides) through the fused Pallas staleness kernel
         # (interpret mode on CPU), D-sharded when a mesh is given
+        psi = afl.psi if afl.algo == "folb_het" else 0.0
         pg = psi * gammas if psi != 0.0 else None
+        if mask is not None:
+            new, _ = ops.folb_staleness_slots_tree(
+                params, deltas, grads, mask, tau,
+                alpha=afl.staleness_alpha, psi_gammas=pg,
+                buf_dtype=jnp.dtype(afl.agg_dtype), mesh=mesh)
+            return new
         new, _ = ops.folb_staleness_tree(params, deltas, grads, tau,
                                          alpha=afl.staleness_alpha,
                                          psi_gammas=pg,
                                          buf_dtype=jnp.dtype(afl.agg_dtype),
                                          mesh=mesh)
         return new
-    return aggregation.folb_staleness(params, deltas, grads, tau,
-                                      alpha=afl.staleness_alpha,
-                                      gammas=gammas, psi=psi)
+    else:
+        psi = afl.psi if afl.algo == "folb_het" else 0.0
+        new = aggregation.folb_staleness(params, deltas, grads, tau,
+                                         alpha=afl.staleness_alpha,
+                                         gammas=gammas, psi=psi, mask=mask)
+    if mask is not None:  # empty budget: params unchanged, bit-exact
+        alive = jnp.sum(mask) > 0.0
+        new = jax.tree.map(lambda n, w: jnp.where(alive, n, w), new, params)
+    return new
 
+
+# ------------------------------------------------------------- event plans
+
+@dataclasses.dataclass(frozen=True)
+class DeadlinePlan:
+    """Host-precomputed timeline of a deadline run (R rounds, K dispatched).
+
+    Pending straggler updates live in a slot pool of `n_slots` rows (+1
+    dump row at index `n_slots` for arrived devices' writes); `store_slot`
+    says where each round stashes its stragglers, `due_slot`/`due_mask`/
+    `due_tau` which (masked, fixed budget `n_due`) pool rows each round
+    aggregates as late arrivals.
+    """
+    keys: np.ndarray        # (R, 2) uint32 round subkeys (the loop's `sub`)
+    ids: np.ndarray         # (R, K) int32 sampled device ids
+    n_steps: np.ndarray     # (R, K) int32 local-step draws
+    arrival: np.ndarray     # (R, K) float64 upload-completion times
+    arrived: np.ndarray     # (R, K) bool made-the-deadline
+    round_end: np.ndarray   # (R,)  float64 server round close
+    fast: np.ndarray        # (R,) bool: all arrived, nothing due -> fl_round
+    store_slot: np.ndarray  # (R, K) int32 pool slot per straggler (dump else)
+    due_slot: np.ndarray    # (R, S) int32 pool slots due this round
+    due_mask: np.ndarray    # (R, S) float32 valid-slot mask
+    due_tau: np.ndarray     # (R, S) float32 staleness in rounds
+    n_arrived: np.ndarray   # (R,) int64 arrived + due count
+    stale_mean: np.ndarray  # (R,) float64 mean τ over the aggregated set
+    n_slots: int            # pool rows (dump row index == n_slots)
+    n_due: int              # S: static late-arrival budget per round
+
+
+@dataclasses.dataclass(frozen=True)
+class FedBuffPlan:
+    """Host-precomputed timeline of a fedbuff run (R flushes of M).
+
+    `seed_*` are the initial `concurrency` dispatches (computed on the
+    initial params, before the first flush); each round then dispatches
+    exactly M devices (one per arrival pop) and flushes M pool rows.
+    """
+    seed_ids: np.ndarray     # (C,) int32
+    seed_steps: np.ndarray   # (C,) int32
+    seed_slots: np.ndarray   # (C,) int32
+    ids: np.ndarray          # (R, M) int32 devices dispatched during round
+    n_steps: np.ndarray      # (R, M) int32
+    store_slot: np.ndarray   # (R, M) int32 pool slot per dispatch
+    flush_slot: np.ndarray   # (R, M) int32 pool rows aggregated this round
+    tau: np.ndarray          # (R, M) float32 version staleness at flush
+    flush_clock: np.ndarray  # (R,) float64 wall clock of the M-th arrival
+    stale_mean: np.ndarray   # (R,) float64
+    n_slots: int             # pool rows (max concurrently live updates)
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _draw_ids_chain(subs, probs, k: int):
+    """The deadline loop's per-round id sampling, batched: for each round
+    subkey, split off the selection key and draw the K-multiset — the same
+    values the eager `sample_multiset(split(sub)[0], probs, K)` sequence
+    produces, in one compiled call."""
+    def one(sub):
+        k_sel, _ = jax.random.split(sub)
+        return selection.sample_multiset(k_sel, probs, k)
+    return jax.vmap(one)(subs)
+
+
+@jax.jit
+def _draw_cids_chain(subs, probs):
+    """The fedbuff loop's per-dispatch device draw, batched."""
+    return jax.vmap(lambda s: selection.sample_multiset(s, probs, 1)[0])(subs)
+
+
+def deadline_selection_probs(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
+                             sizes: np.ndarray):
+    """The static latency-aware selection distribution (or None for
+    uniform).  Expected latencies don't change round to round, so the
+    vector is computed once — the same vector
+    ``scan_engine.latency_selection_probs`` hands the compiled sync
+    engine, which is what lets the scan run this sweep's selection
+    policy."""
+    if not afl.latency_aware:
+        return None
+    exp_lat = jnp.asarray(expected_latencies(
+        fleet, cost, mean_steps=simulator.mean_local_steps(afl),
+        n_examples=sizes))
+    return selection.latency_aware_probs(
+        jnp.ones((fleet.n_devices,)), exp_lat, afl.deadline)
+
+
+def build_deadline_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
+                        sizes: np.ndarray, rounds: int, init_key,
+                        sel_probs=None) -> DeadlinePlan:
+    """Pre-compute the whole deadline-mode event timeline on the host.
+
+    Replicates the per-round host sequence exactly — the
+    ``key, sub = jax.random.split(key)`` chain, the round-indexed numpy
+    step draws, and `plan_sync_round`'s float arithmetic (via the
+    vectorized `plan_deadline_run`) — then simulates the pending-straggler
+    set to assign pool slots and fixed-width masked due budgets.
+    """
+    from repro.fed.scan_engine import _split_chain
+    K = afl.n_selected
+    subs = _split_chain(init_key, rounds)
+    probs = sel_probs if sel_probs is not None \
+        else selection.uniform_probs(fleet.n_devices)
+    ids = np.asarray(_draw_ids_chain(subs, probs, K), np.int32)
+    n_steps = np.stack([np.asarray(simulator.local_step_draws(t, K, afl))
+                        for t in range(rounds)]).astype(np.int32)
+    arrival, arrived, round_end = plan_deadline_run(
+        fleet, ids, n_steps, cost, deadline=afl.deadline, n_examples=sizes)
+
+    pending: List[Dict] = []   # {"arrival", "t0", "slot"} in insertion order
+    free: List[int] = []
+    pool = 0
+    store_slot = np.full((rounds, K), -1, np.int64)
+    due_lists: List[List] = []
+    fast = np.zeros(rounds, bool)
+    n_arrived = np.zeros(rounds, np.int64)
+    stale_sum = np.zeros(rounds)
+    for t in range(rounds):
+        due = [pu for pu in pending if pu["arrival"] <= round_end[t]]
+        if arrived[t].all() and not due:
+            fast[t] = True
+            due_lists.append([])
+            n_arrived[t] = K
+            continue
+        pending = [pu for pu in pending if pu["arrival"] > round_end[t]]
+        # free due slots BEFORE allocating this round's stragglers: the
+        # step function gathers due rows before storing, so same-round
+        # slot reuse is safe
+        for pu in due:
+            heapq.heappush(free, pu["slot"])
+        for i in np.flatnonzero(~arrived[t]):
+            if free:
+                slot = heapq.heappop(free)
+            else:
+                slot = pool
+                pool += 1
+            store_slot[t, i] = slot
+            pending.append({"arrival": arrival[t, i], "t0": t, "slot": slot})
+        due_lists.append([(pu["slot"], t - pu["t0"]) for pu in due])
+        n_arrived[t] = int(arrived[t].sum()) + len(due)
+        stale_sum[t] = float(sum(tau for _, tau in due_lists[-1]))
+    S = max((len(d) for d in due_lists), default=0)
+    due_slot = np.full((rounds, S), pool, np.int64)
+    due_mask = np.zeros((rounds, S), np.float32)
+    due_tau = np.zeros((rounds, S), np.float32)
+    for t, d in enumerate(due_lists):
+        for j, (slot, tau) in enumerate(d):
+            due_slot[t, j] = slot
+            due_mask[t, j] = 1.0
+            due_tau[t, j] = tau
+    store_slot = np.where(store_slot < 0, pool, store_slot)
+    stale_mean = np.where(n_arrived > 0,
+                          stale_sum / np.maximum(n_arrived, 1), 0.0)
+    return DeadlinePlan(
+        keys=np.asarray(subs), ids=ids, n_steps=n_steps, arrival=arrival,
+        arrived=arrived, round_end=round_end, fast=fast,
+        store_slot=store_slot.astype(np.int32),
+        due_slot=due_slot.astype(np.int32), due_mask=due_mask,
+        due_tau=due_tau, n_arrived=n_arrived, stale_mean=stale_mean,
+        n_slots=pool, n_due=S)
+
+
+def build_fedbuff_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
+                       sizes: np.ndarray, rounds: int,
+                       init_key) -> FedBuffPlan:
+    """Pre-compute the whole fedbuff event timeline on the host.
+
+    Device latencies don't depend on parameter values, so the entire
+    dispatch/arrival/flush interleaving — including which pool slot every
+    in-flight update occupies and its staleness at flush — is known before
+    any model math runs.  The key chain, per-dispatch numpy step draws,
+    and (time, seq) event ordering replicate the original event loop
+    exactly.
+    """
+    from repro.fed.scan_engine import _split_chain
+    M, C = afl.buffer_size, afl.concurrency
+    total = C + rounds * M
+    subs = _split_chain(init_key, total)
+    if afl.latency_aware and math.isfinite(afl.deadline):
+        exp_lat = jnp.asarray(expected_latencies(
+            fleet, cost, mean_steps=simulator.mean_local_steps(afl),
+            n_examples=sizes))
+        probs = selection.latency_aware_probs(
+            jnp.ones((fleet.n_devices,)), exp_lat, afl.deadline)
+    else:
+        probs = selection.uniform_probs(fleet.n_devices)
+    cids = np.asarray(_draw_cids_chain(subs, probs), np.int64)
+    steps = np.empty(total, np.int64)
+    for d in range(total):
+        step_rng = np.random.default_rng(20_000 + d)
+        steps[d] = (int(step_rng.integers(1, afl.max_local_steps + 1))
+                    if afl.het_steps else afl.max_local_steps)
+    # one vectorized latency call for every dispatch of the run
+    lats = device_latencies(fleet, cids, steps, cost, n_examples=sizes[cids])
+    always_on = bool((np.asarray(fleet.avail_period) <= 0.0).all())
+
+    events = EventQueue()
+    free: List[int] = []
+    slot_of = np.empty(total, np.int64)
+    version_of = np.empty(total, np.int64)
+
+    # the C seed dispatches all start at t=0 / version 0: vectorized
+    # emission — one next_online call for the whole batch, slots 0..C-1,
+    # one batch push (seq order == per-dispatch push order)
+    begin0 = np.zeros(C) if always_on else fleet.next_online(cids[:C], 0.0)
+    slot_of[:C] = np.arange(C)
+    version_of[:C] = 0
+    events.push_batch(begin0 + lats[:C], "arrival", "d", range(C))
+    pool = C
+    n_dispatched = C
+
+    def do_dispatch(at: float, version: int) -> int:
+        nonlocal n_dispatched, pool
+        d = n_dispatched
+        n_dispatched += 1
+        begin = at if always_on \
+            else float(fleet.next_online(cids[d:d + 1], at)[0])
+        if free:
+            slot = heapq.heappop(free)
+        else:
+            slot = pool
+            pool += 1
+        slot_of[d], version_of[d] = slot, version
+        events.push(begin + lats[d], "arrival", d=d)
+        return d
+    ids = np.empty((rounds, M), np.int64)
+    n_steps = np.empty((rounds, M), np.int64)
+    store_slot = np.empty((rounds, M), np.int64)
+    flush_slot = np.empty((rounds, M), np.int64)
+    tau = np.empty((rounds, M), np.float32)
+    flush_clock = np.empty(rounds, np.float64)
+    for t in range(rounds):
+        flush_d: List[int] = []
+        disp_d: List[int] = []
+        clock = 0.0
+        while len(flush_d) < M:
+            ev = events.pop()
+            clock = ev.time
+            flush_d.append(ev.payload["d"])
+            disp_d.append(do_dispatch(clock, t))  # keep C in flight
+        ids[t] = cids[disp_d]
+        n_steps[t] = steps[disp_d]
+        store_slot[t] = slot_of[disp_d]
+        flush_slot[t] = slot_of[flush_d]
+        tau[t] = t - version_of[flush_d]
+        flush_clock[t] = clock
+        # slots free only AFTER the flush: a dispatch made during this
+        # round can never steal a slot the flush still needs
+        for d in flush_d:
+            heapq.heappush(free, slot_of[d])
+    return FedBuffPlan(
+        seed_ids=cids[:C].astype(np.int32),
+        seed_steps=steps[:C].astype(np.int32),
+        seed_slots=slot_of[:C].astype(np.int32),
+        ids=ids.astype(np.int32), n_steps=n_steps.astype(np.int32),
+        store_slot=store_slot.astype(np.int32),
+        flush_slot=flush_slot.astype(np.int32), tau=tau,
+        flush_clock=flush_clock, stale_mean=tau.mean(axis=1).astype(float),
+        n_slots=pool)
+
+
+# ------------------------------------------------- shared jitted round steps
+
+def pool_init(model_cfg, fl: simulator.FLConfig, params, data, n_rows: int):
+    """Zero pending-update pool with the exact per-row leaf shapes/dtypes
+    of one `_local_updates` output (deltas tree, grads tree, gammas)."""
+    ids = jnp.zeros((1,), jnp.int32)
+    steps = jnp.ones((1,), jnp.int32)
+    d_s, g_s, gam_s = jax.eval_shape(
+        lambda p, dat: simulator._local_updates(model_cfg, p, dat, ids,
+                                                steps, fl), params, data)
+    row = lambda s: jnp.zeros((n_rows,) + s.shape[1:], s.dtype)
+    return (jax.tree.map(row, d_s), jax.tree.map(row, g_s),
+            jnp.zeros((n_rows,), gam_s.dtype))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1), static_argnames=("mesh",))
+def deadline_slow_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
+                       ids, n_steps, arrived_mask, store_slot, due_slot,
+                       due_mask, due_tau, *, mesh=None):
+    """One non-fast deadline round: compute the K dispatched updates,
+    gather this round's due stragglers from the pool, stash this round's
+    misses, and run the fixed-budget masked staleness aggregation.
+
+    Shared verbatim by the python event loop and the compiled scan — the
+    bit-for-bit parity between `run_async` and `run_async_compiled` rests
+    on both replaying this exact program (separate jit graphs of the
+    "same" math are not guaranteed bit-identical).
+    """
+    fl = afl.sync_config()
+    deltas, grads, gammas = simulator._local_updates(
+        model_cfg, params, data, ids, n_steps, fl)
+    pend_d, pend_g, pend_gam = pend
+    # gather due rows BEFORE storing: a slot aggregated this round may be
+    # reallocated to one of this round's stragglers
+    due_d = jax.tree.map(lambda x: x[due_slot], pend_d)
+    due_g = jax.tree.map(lambda x: x[due_slot], pend_g)
+    due_gam = pend_gam[due_slot]
+    # stash this round's stragglers (arrived rows land in the dump slot,
+    # whose contents are only ever read through a masked-out due slot)
+    pend_d = jax.tree.map(lambda b, x: b.at[store_slot].set(x),
+                          pend_d, deltas)
+    pend_g = jax.tree.map(lambda b, x: b.at[store_slot].set(x),
+                          pend_g, grads)
+    pend_gam = pend_gam.at[store_slot].set(gammas)
+    K = ids.shape[0]
+    tau = jnp.concatenate([jnp.zeros((K,), jnp.float32), due_tau])
+    mask = jnp.concatenate([arrived_mask.astype(jnp.float32), due_mask])
+    new_params = _apply_aggregation(
+        afl, params, _concat0(deltas, due_d), _concat0(grads, due_g),
+        jnp.concatenate([gammas, due_gam]), tau, mask=mask, mesh=mesh)
+    return new_params, (pend_d, pend_g, pend_gam)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def fedbuff_seed_pool(model_cfg, afl: AsyncFLConfig, params, pend, data,
+                      ids, n_steps, store_slot):
+    """Compute the initial `concurrency` dispatches on the initial params
+    and stash them in their pool slots (one batched update call)."""
+    deltas, grads, gammas = simulator._local_updates(
+        model_cfg, params, data, ids, n_steps, afl.sync_config())
+    pend_d, pend_g, pend_gam = pend
+    pend_d = jax.tree.map(lambda b, x: b.at[store_slot].set(x),
+                          pend_d, deltas)
+    pend_g = jax.tree.map(lambda b, x: b.at[store_slot].set(x),
+                          pend_g, grads)
+    pend_gam = pend_gam.at[store_slot].set(gammas)
+    return (pend_d, pend_g, pend_gam)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1), static_argnames=("mesh",))
+def fedbuff_round_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
+                       ids, n_steps, store_slot, flush_slot, tau, *,
+                       mesh=None):
+    """One fedbuff flush round: batch-compute the M dispatches made during
+    this round (all reference the current params — the server version only
+    bumps at the flush), store them, then aggregate the M flushed rows.
+
+    Storing happens BEFORE the flush gather: a device dispatched this
+    round can arrive fast enough to be part of this very flush.  Shared
+    verbatim by the python event loop and the compiled scan.
+    """
+    deltas, grads, gammas = simulator._local_updates(
+        model_cfg, params, data, ids, n_steps, afl.sync_config())
+    pend_d, pend_g, pend_gam = pend
+    pend_d = jax.tree.map(lambda b, x: b.at[store_slot].set(x),
+                          pend_d, deltas)
+    pend_g = jax.tree.map(lambda b, x: b.at[store_slot].set(x),
+                          pend_g, grads)
+    pend_gam = pend_gam.at[store_slot].set(gammas)
+    flush_d = jax.tree.map(lambda x: x[flush_slot], pend_d)
+    flush_g = jax.tree.map(lambda x: x[flush_slot], pend_g)
+    new_params = _apply_aggregation(afl, params, flush_d, flush_g,
+                                    pend_gam[flush_slot], tau, mesh=mesh)
+    return new_params, (pend_d, pend_g, pend_gam)
+
+
+# ----------------------------------------------------------- python driver
 
 def run_async(model_cfg, fed: FederatedData, afl: AsyncFLConfig,
               fleet: DeviceFleet, rounds: int,
@@ -193,41 +559,13 @@ def run_async(model_cfg, fed: FederatedData, afl: AsyncFLConfig,
 def _run_deadline(model_cfg, afl, fleet, cost, sizes, train, p, key, params,
                   rounds, eval_every, record, mesh=None):
     sync_fl = afl.sync_config()
-    N = fleet.n_devices
-    K = afl.n_selected
-    clock = VirtualClock()
-    pending: List[_PendingUpdate] = []
-    exp_lat = jnp.asarray(expected_latencies(
-        fleet, cost, mean_steps=simulator.mean_local_steps(afl),
-        n_examples=sizes))
-    # the latency-aware distribution is static per fleet (expected
-    # latencies don't change round to round): pre-compute it once — the
-    # same vector ``scan_engine.latency_selection_probs`` hands the
-    # compiled engine, which is what lets the scan run this sweep's
-    # selection policy.
-    sel_probs = (selection.latency_aware_probs(
-        jnp.ones((N,)), exp_lat, afl.deadline) if afl.latency_aware
-        else None)
-
+    sel_probs = deadline_selection_probs(afl, fleet, cost, sizes)
+    plan = build_deadline_plan(afl, fleet, cost, sizes, rounds, key,
+                               sel_probs)
+    pend = pool_init(model_cfg, sync_fl, params, train, plan.n_slots + 1)
     for t in range(rounds):
-        # identical device-capability protocol as the sync engine: the
-        # shared step-draw helper and the jax key split sequence match
-        # run_federated exactly, so the D = ∞ limit samples the same devices
-        # with the same local-step budgets.
-        n_steps = simulator.local_step_draws(t, K, afl)
-        key, sub = jax.random.split(key)
-        k_sel, _ = jax.random.split(sub)
-        probs = sel_probs if sel_probs is not None \
-            else selection.uniform_probs(N)
-        ids = selection.sample_multiset(k_sel, probs, K)
-        ids_np = np.asarray(ids)
-
-        plan = plan_sync_round(fleet, ids_np, np.asarray(n_steps), cost,
-                               start=clock.now, deadline=afl.deadline,
-                               n_examples=sizes[ids_np])
-        due = [pu for pu in pending if pu.arrival <= plan.round_end]
-
-        if plan.arrived.all() and not due:
+        n_steps = jnp.asarray(plan.n_steps[t])
+        if plan.fast[t]:
             # sync-parity fast path: every dispatched device made the
             # deadline and no stale upload joins, so every τ is 0 and the
             # (1+τ)^{-α} discount is the constant 1.0 for ANY α — the round
@@ -235,45 +573,23 @@ def _run_deadline(model_cfg, afl, fleet, cost, sizes, train, p, key, params,
             # round (same jitted computation => bit-for-bit agreement in
             # the D = ∞ limit, and ~3x less host time per round).  With
             # latency-aware selection the pre-computed sel_probs make
-            # fl_round resample the very same ids from the same key.
+            # fl_round resample the very same ids as the plan from the
+            # same key.
             params, _ = simulator.fl_round(
-                model_cfg, sync_fl, params, train, p, sub, n_steps,
-                sel_probs, mesh=mesh)
-            n_arrived, stale_mean = K, 0.0
+                model_cfg, sync_fl, params, train, p,
+                jnp.asarray(plan.keys[t]), n_steps, sel_probs, mesh=mesh)
         else:
-            deltas, grads, gammas = _compute_updates(
-                model_cfg, sync_fl, params, train, ids, n_steps)
-            arrived_idx = np.flatnonzero(plan.arrived)
-            missed_idx = np.flatnonzero(~plan.arrived)
-            parts_d = [_gather(deltas, arrived_idx)] if len(arrived_idx) else []
-            parts_g = [_gather(grads, arrived_idx)] if len(arrived_idx) else []
-            parts_gam = ([gammas[jnp.asarray(arrived_idx)]]
-                         if len(arrived_idx) else [])
-            taus = [np.zeros(len(arrived_idx))] if len(arrived_idx) else []
-            for pu in due:
-                parts_d.append(pu.delta)
-                parts_g.append(pu.grad)
-                parts_gam.append(pu.gamma)
-                taus.append(np.asarray([t - pu.version], dtype=np.float64))
-            pending = [pu for pu in pending if pu.arrival > plan.round_end]
-            for i in missed_idx:  # straggler: lands in a later round
-                pending.append(_PendingUpdate(
-                    arrival=float(plan.arrival[i]), version=t,
-                    delta=_gather(deltas, np.asarray([i])),
-                    grad=_gather(grads, np.asarray([i])),
-                    gamma=gammas[jnp.asarray([i])]))
-            n_arrived = len(arrived_idx) + len(due)
-            if n_arrived > 0:
-                tau = jnp.asarray(np.concatenate(taus), jnp.float32)
-                stale_mean = float(tau.mean())
-                params = _apply_aggregation(
-                    afl, params, _concat(parts_d), _concat(parts_g),
-                    jnp.concatenate(parts_gam), tau, mesh=mesh)
-            else:
-                stale_mean = 0.0  # empty round: deadline passed, no uploads
-        clock.advance_to(plan.round_end)
+            params, pend = deadline_slow_step(
+                model_cfg, afl, params, pend, train,
+                jnp.asarray(plan.ids[t]), n_steps,
+                jnp.asarray(plan.arrived[t], jnp.float32),
+                jnp.asarray(plan.store_slot[t]),
+                jnp.asarray(plan.due_slot[t]),
+                jnp.asarray(plan.due_mask[t]),
+                jnp.asarray(plan.due_tau[t]), mesh=mesh)
         if t % eval_every == 0 or t == rounds - 1:
-            record(t, clock.now, n_arrived, stale_mean, params)
+            record(t, plan.round_end[t], int(plan.n_arrived[t]),
+                   float(plan.stale_mean[t]), params)
     return params
 
 
@@ -281,59 +597,20 @@ def _run_deadline(model_cfg, afl, fleet, cost, sizes, train, p, key, params,
 
 def _run_fedbuff(model_cfg, afl, fleet, cost, sizes, train, key, params,
                  rounds, eval_every, record, mesh=None):
-    N = fleet.n_devices
-    clock = VirtualClock()
-    events = EventQueue()
-    exp_lat = jnp.asarray(expected_latencies(
-        fleet, cost, mean_steps=simulator.mean_local_steps(afl),
-        n_examples=sizes))
-    version = 0
-    n_dispatched = 0
-    buffer: List[_PendingUpdate] = []
-
-    def dispatch(at: float):
-        """Start one device on the CURRENT params at time `at`."""
-        nonlocal key, n_dispatched
-        step_rng = np.random.default_rng(20_000 + n_dispatched)
-        steps = int(step_rng.integers(1, afl.max_local_steps + 1)) \
-            if afl.het_steps else afl.max_local_steps
-        key, sub = jax.random.split(key)
-        if afl.latency_aware and math.isfinite(afl.deadline):
-            probs = selection.latency_aware_probs(
-                jnp.ones((N,)), exp_lat, afl.deadline)
-        else:
-            probs = selection.uniform_probs(N)
-        cid = int(np.asarray(selection.sample_multiset(sub, probs, 1))[0])
-        n_dispatched += 1
-        ids = jnp.asarray([cid], jnp.int32)
-        n_steps = jnp.asarray([steps], jnp.int32)
-        delta, grad, gamma = _compute_updates(
-            model_cfg, afl.sync_config(), params, train, ids, n_steps)
-        begin = float(fleet.next_online(np.asarray([cid]), at)[0])
-        lat = float(device_latencies(
-            fleet, np.asarray([cid]), np.asarray([steps]), cost,
-            n_examples=sizes[[cid]])[0])
-        events.push(begin + lat, "arrival", update=_PendingUpdate(
-            arrival=begin + lat, version=version, delta=delta, grad=grad,
-            gamma=gamma))
-
-    for _ in range(afl.concurrency):
-        dispatch(clock.now)
-
+    plan = build_fedbuff_plan(afl, fleet, cost, sizes, rounds, key)
+    pend = pool_init(model_cfg, afl.sync_config(), params, train,
+                     plan.n_slots)
+    pend = fedbuff_seed_pool(model_cfg, afl, params, pend, train,
+                             jnp.asarray(plan.seed_ids),
+                             jnp.asarray(plan.seed_steps),
+                             jnp.asarray(plan.seed_slots))
     for t in range(rounds):
-        while len(buffer) < afl.buffer_size:
-            ev = events.pop()
-            clock.advance_to(ev.time)
-            buffer.append(ev.payload["update"])
-            dispatch(clock.now)  # keep `concurrency` devices in flight
-        flush, buffer = buffer[:afl.buffer_size], buffer[afl.buffer_size:]
-        tau = jnp.asarray([version - pu.version for pu in flush], jnp.float32)
-        params = _apply_aggregation(
-            afl, params,
-            _concat([pu.delta for pu in flush]),
-            _concat([pu.grad for pu in flush]),
-            jnp.concatenate([pu.gamma for pu in flush]), tau, mesh=mesh)
-        version += 1
+        params, pend = fedbuff_round_step(
+            model_cfg, afl, params, pend, train,
+            jnp.asarray(plan.ids[t]), jnp.asarray(plan.n_steps[t]),
+            jnp.asarray(plan.store_slot[t]), jnp.asarray(plan.flush_slot[t]),
+            jnp.asarray(plan.tau[t]), mesh=mesh)
         if t % eval_every == 0 or t == rounds - 1:
-            record(t, clock.now, afl.buffer_size, float(tau.mean()), params)
+            record(t, plan.flush_clock[t], afl.buffer_size,
+                   float(plan.stale_mean[t]), params)
     return params

@@ -1,37 +1,43 @@
 """Whole-run compiled federated execution: ``lax.scan`` over rounds.
 
-The python-loop engine (``simulator.run_federated``) pays per-round Python
-dispatch: one jit call, one key split, one numpy step draw, and a host
-round-trip for every communication round.  For the paper-scale models a
+The python-loop engines pay per-round (or, for fedbuff, per-flush) host
+overhead: jit dispatches, key splits, numpy step draws, and host
+round-trips for every communication round.  For the paper-scale models a
 round's actual math is microseconds of work, so dispatch dominates — and
 sweeping schedules/hyper-parameters at scale means thousands of runs.
 
-This engine compiles an entire fixed-schedule federated run into ONE XLA
-program:
+Two compiled drivers:
 
-  * parameters live as a single flat fp32 buffer (``repro.core.flat``) in
-    the scan carry — no pytree walking between rounds;
-  * selection keys and per-device local-step budgets are pre-drawn on the
-    host with exactly the sequence the python loop consumes (the same
-    ``jax.random.split`` chain and the same round-indexed numpy draws);
-  * each scan step runs the same ``simulator.fl_round`` round math (flat
-    Pallas aggregation by default), emitting the post-round flat params
-    and the sampled device ids as stacked scan outputs.
+  * ``run_federated_compiled`` — the synchronous engine: one XLA program
+    scanning ``simulator.fl_round`` over pre-drawn (key, step) inputs,
+    optionally carrying FedOpt-style server-optimizer state (momentum /
+    adam) in the scan carry via the same jitted
+    ``server_opt.server_round_update`` the python loop applies.
+  * ``run_async_compiled`` — the async engine: fleet latencies are a
+    deterministic function of the seeded fleet and the pre-drawn key
+    chain, so the whole event timeline (dispatch/arrival times, per-round
+    due/straggler/missed partitions, fedbuff flush boundaries and τ
+    counters) is pre-computed on the host into fixed-width stacked arrays
+    (``async_engine.build_deadline_plan`` / ``build_fedbuff_plan``) and
+    replayed inside a ``lax.scan`` whose body calls the *same* jitted
+    step functions the python event loop uses (``fl_round`` on sync-parity
+    fast rounds, ``deadline_slow_step`` / ``fedbuff_round_step``
+    otherwise).
 
-Evaluation and fleet wall-clock timestamping happen OUTSIDE the scan, on
-the emitted per-round outputs, through the very same jitted
-``simulator.eval_global`` / ``simulator.sync_round_clock`` code the python
-loop uses — which is what makes the two engines agree bit-for-bit on a
-fixed seed (``tests/test_scan_engine.py``).
+Shared parity discipline: parameters ride the scan carry as a flat fp32
+buffer (``repro.core.flat``; exact ravel/unravel round-trip), pre-drawn
+host inputs replicate the python loops' exact ``jax.random.split`` chains
+and round-indexed numpy draws, and evaluation + wall-clock timestamping
+happen OUTSIDE the scan on the emitted per-round outputs through the very
+same jitted ``simulator.eval_global`` / ``sync_round_clock`` (sync) or
+the host event plan (async) — which is what makes loop and scan agree
+bit-for-bit on a fixed seed (``tests/test_scan_engine.py``,
+``tests/test_async_scan.py``).
 
-Memory note: the scan emits the (rounds, D_pad) fp32 parameter trajectory
+Memory note: the scans emit the (rounds, D_pad) fp32 parameter trajectory
 so history evaluation can happen post-hoc; at paper scale (D ~ 1e3-1e5)
 this is negligible.  For 100M+ parameter models use
 ``repro.fed.distributed`` instead.
-
-Unsupported here (use the python loop): FedOpt-style server optimizers
-(host-side state) and fleet deadlines (host event queue — see
-``repro.fed.async_engine``).
 """
 from __future__ import annotations
 
@@ -44,8 +50,11 @@ import numpy as np
 
 from repro.core import flat as flat_lib
 from repro.data.federated import FederatedData
+from repro.fed import async_engine as async_lib
 from repro.fed import simulator
+from repro.fed import server_opt as sopt
 from repro.models import small
+from repro.sysmodel import round_cost_for
 
 
 @functools.partial(jax.jit, static_argnums=(1,))
@@ -77,28 +86,42 @@ def draw_round_inputs(fl: simulator.FLConfig, rounds: int, init_key):
 @functools.partial(jax.jit, static_argnums=(0, 1, 2),
                    static_argnames=("mesh",))
 def scan_rounds(model_cfg, fl: simulator.FLConfig, spec: flat_lib.FlatSpec,
-                w0_flat, data, p_weights, keys, steps, sel_probs=None, *,
-                mesh=None):
+                w0_flat, data, p_weights, keys, steps, sel_probs=None,
+                so_state0=None, *, mesh=None):
     """The whole-run XLA program: scan ``fl_round`` over pre-drawn inputs.
 
     Returns (final flat params, ys) where ys carries the per-round
     post-update flat parameter trajectory and the sampled device ids.
     ``sel_probs``/``mesh`` forward to ``fl_round`` (static selection
-    distribution; D-sharded flat aggregation).
+    distribution; D-sharded flat aggregation).  With a FedOpt-style
+    server optimizer configured, ``so_state0`` seeds the optimizer state
+    in the scan carry and each round applies the same jitted
+    ``server_round_update`` the python loop uses.
     """
-    def body(w_flat, xs):
+    # the caller encodes the use-a-server-optimizer decision in so_state0
+    # (one source of truth with run_federated_compiled's predicate)
+    so_cfg = sopt.ServerOptConfig(kind=fl.server_opt, lr=fl.server_lr)
+    use_so = so_state0 is not None
+
+    def body(carry, xs):
+        w_flat, so_state = carry if use_so else (carry, None)
         sub, n_steps = xs
         params = flat_lib.unravel(spec, w_flat)
         new_params, diag = simulator.fl_round(
             model_cfg, fl, params, data, p_weights, sub, n_steps,
             sel_probs, mesh=mesh)
+        if use_so:
+            new_params, so_state = sopt.server_round_update(
+                so_cfg, params, so_state, new_params)
         w_new = flat_lib.ravel(spec, new_params)
         ys = {"params": w_new, "ids": diag["ids"]}
         if "ids2" in diag:
             ys["ids2"] = diag["ids2"]
-        return w_new, ys
+        return ((w_new, so_state) if use_so else w_new), ys
 
-    return jax.lax.scan(body, w0_flat, (keys, steps))
+    carry0 = (w0_flat, so_state0) if use_so else w0_flat
+    carry, ys = jax.lax.scan(body, carry0, (keys, steps))
+    return (carry[0] if use_so else carry), ys
 
 
 def latency_selection_probs(model_cfg, fed: FederatedData, fl, fleet,
@@ -110,12 +133,12 @@ def latency_selection_probs(model_cfg, fed: FederatedData, fl, fleet,
     latencies — it is round-invariant.  Computing it once on the host lets
     the compiled scan engine (and ``run_federated``) run the
     deadline-FOLB sweep's selection policy; the chain below mirrors
-    ``async_engine._run_deadline`` exactly so the distributions agree
-    bit-for-bit.
+    ``async_engine.deadline_selection_probs`` exactly so the
+    distributions agree bit-for-bit.
     """
     import numpy as np
     from repro.core import selection
-    from repro.sysmodel import expected_latencies, round_cost_for
+    from repro.sysmodel import expected_latencies
     params = small.init_small(model_cfg, jax.random.PRNGKey(
         getattr(fl, "seed", 0)))
     cost = round_cost_for(model_cfg, params,
@@ -137,15 +160,12 @@ def run_federated_compiled(model_cfg, fed: FederatedData,
     """Drop-in replacement for ``run_federated`` on fixed schedules.
 
     Bit-for-bit identical history on the same seed (shared round math,
-    shared jitted eval, shared fleet cost replay), one XLA dispatch for
-    the whole run instead of one per round.  ``sel_probs`` (e.g. from
-    ``latency_selection_probs``) replaces uniform sampling; ``mesh``
-    shards the flat aggregation's D axis so fed100m-scale models fit.
+    shared jitted eval, shared fleet cost replay, shared jitted server
+    optimizer), one XLA dispatch for the whole run instead of one per
+    round.  ``sel_probs`` (e.g. from ``latency_selection_probs``) replaces
+    uniform sampling; ``mesh`` shards the flat aggregation's D axis so
+    fed100m-scale models fit.
     """
-    if fl.server_opt != "sgd" or fl.server_lr != 1.0:
-        raise NotImplementedError(
-            "scan engine runs the paper's plain server update; use "
-            "run_federated for FedOpt-style server optimizers")
     key = init_key if init_key is not None else jax.random.PRNGKey(fl.seed)
     params = small.init_small(model_cfg, key)
     train = {"x": jnp.asarray(fed.x), "y": jnp.asarray(fed.y),
@@ -157,8 +177,11 @@ def run_federated_compiled(model_cfg, fed: FederatedData,
     spec = flat_lib.spec_of(params)
     w0 = flat_lib.ravel(spec, params)
     keys, steps = draw_round_inputs(fl, rounds, key)
+    so_cfg = sopt.ServerOptConfig(kind=fl.server_opt, lr=fl.server_lr)
+    use_so = fl.server_opt != "sgd" or fl.server_lr != 1.0
+    so_state0 = sopt.init_server_state(so_cfg, params) if use_so else None
     w_final, ys = scan_rounds(model_cfg, fl, spec, w0, train, p, keys, steps,
-                              sel_probs, mesh=mesh)
+                              sel_probs, so_state0, mesh=mesh)
 
     hist = {"round": [], "train_loss": [], "test_acc": [], "train_acc": []}
     cost = probe_cost = sizes = None
@@ -189,5 +212,155 @@ def run_federated_compiled(model_cfg, fed: FederatedData,
             hist["test_acc"].append(float(te_acc))
             if fleet is not None:
                 hist["wall_clock"].append(clock_now)
+    return simulator.FedRunResult(history=hist,
+                                  params=flat_lib.unravel(spec, w_final))
+
+
+# --------------------------------------------------- compiled async engines
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2),
+                   static_argnames=("mesh",))
+def scan_async_deadline(model_cfg, afl, spec: flat_lib.FlatSpec, w0_flat,
+                        pend0, data, p_weights, keys, ids, steps, arrived,
+                        store_slot, due_slot, due_mask, due_tau, fast,
+                        sel_probs=None, *, mesh=None):
+    """Whole-run deadline-mode XLA program.
+
+    Each scan step replays one planned round: sync-parity fast rounds run
+    the very same jitted ``simulator.fl_round`` the python loop calls
+    (under ``lax.cond``), every other round runs the shared
+    ``async_engine.deadline_slow_step`` against the pending-straggler slot
+    pool carried through the scan.
+    """
+    fl = afl.sync_config()
+
+    def body(carry, xs):
+        w_flat, pend = carry
+        sub, ids_t, steps_t, arr_t, store_t, due_s, due_m, due_t, fast_t = xs
+        params = flat_lib.unravel(spec, w_flat)
+
+        def fast_fn(params, pend):
+            new, _ = simulator.fl_round(model_cfg, fl, params, data,
+                                        p_weights, sub, steps_t, sel_probs,
+                                        mesh=mesh)
+            return flat_lib.ravel(spec, new), pend
+
+        def slow_fn(params, pend):
+            new, pend2 = async_lib.deadline_slow_step(
+                model_cfg, afl, params, pend, data, ids_t, steps_t, arr_t,
+                store_t, due_s, due_m, due_t, mesh=mesh)
+            return flat_lib.ravel(spec, new), pend2
+
+        w_new, pend = jax.lax.cond(fast_t, fast_fn, slow_fn, params, pend)
+        return (w_new, pend), w_new
+
+    (w_final, _), ws = jax.lax.scan(
+        body, (w0_flat, pend0),
+        (keys, ids, steps, arrived, store_slot, due_slot, due_mask, due_tau,
+         fast))
+    return w_final, ws
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2),
+                   static_argnames=("mesh",))
+def scan_async_fedbuff(model_cfg, afl, spec: flat_lib.FlatSpec, w0_flat,
+                       pend0, data, ids, steps, store_slot, flush_slot, tau,
+                       *, mesh=None):
+    """Whole-run fedbuff XLA program: scan the shared
+    ``async_engine.fedbuff_round_step`` over the planned flush schedule,
+    carrying the in-flight update pool."""
+    def body(carry, xs):
+        w_flat, pend = carry
+        ids_t, steps_t, store_t, flush_t, tau_t = xs
+        params = flat_lib.unravel(spec, w_flat)
+        new, pend = async_lib.fedbuff_round_step(
+            model_cfg, afl, params, pend, data, ids_t, steps_t, store_t,
+            flush_t, tau_t, mesh=mesh)
+        w_new = flat_lib.ravel(spec, new)
+        return (w_new, pend), w_new
+
+    (w_final, _), ws = jax.lax.scan(
+        body, (w0_flat, pend0), (ids, steps, store_slot, flush_slot, tau))
+    return w_final, ws
+
+
+def run_async_compiled(model_cfg, fed: FederatedData, afl,
+                       fleet, rounds: int,
+                       init_key: Optional[jax.Array] = None,
+                       eval_every: int = 1,
+                       mesh=None) -> simulator.FedRunResult:
+    """Drop-in replacement for ``async_engine.run_async``: the virtual-
+    event scan.
+
+    The host pre-computes the entire event timeline (the plan), one
+    ``lax.scan`` replays the learning math through the same jitted step
+    functions the python event loop uses, and history evaluation replays
+    outside the scan on the emitted parameter trajectory — bit-for-bit
+    identical history (params, ids, staleness means, wall clock) for both
+    deadline and fedbuff modes (tests/test_async_scan.py).
+    """
+    assert fleet.n_devices == fed.n_devices, (fleet.n_devices, fed.n_devices)
+    key = init_key if init_key is not None else jax.random.PRNGKey(afl.seed)
+    params = small.init_small(model_cfg, key)
+    train = {"x": jnp.asarray(fed.x), "y": jnp.asarray(fed.y),
+             "mask": jnp.asarray(fed.mask)}
+    test = {"x": jnp.asarray(fed.test_x), "y": jnp.asarray(fed.test_y),
+            "mask": jnp.asarray(fed.test_mask)}
+    p = jnp.asarray(fed.p)
+    sizes = np.asarray(fed.mask.sum(axis=1))
+    cost = round_cost_for(model_cfg, params,
+                          uploads_gradient="folb" in afl.algo)
+    sync_fl = afl.sync_config()
+    spec = flat_lib.spec_of(params)
+    w0 = flat_lib.ravel(spec, params)
+
+    if afl.mode == "deadline":
+        sel_probs = async_lib.deadline_selection_probs(afl, fleet, cost,
+                                                       sizes)
+        plan = async_lib.build_deadline_plan(afl, fleet, cost, sizes,
+                                             rounds, key, sel_probs)
+        pend0 = async_lib.pool_init(model_cfg, sync_fl, params, train,
+                                    plan.n_slots + 1)
+        w_final, ws = scan_async_deadline(
+            model_cfg, afl, spec, w0, pend0, train, p,
+            jnp.asarray(plan.keys), jnp.asarray(plan.ids),
+            jnp.asarray(plan.n_steps),
+            jnp.asarray(plan.arrived, jnp.float32),
+            jnp.asarray(plan.store_slot), jnp.asarray(plan.due_slot),
+            jnp.asarray(plan.due_mask), jnp.asarray(plan.due_tau),
+            jnp.asarray(plan.fast), sel_probs, mesh=mesh)
+        clocks, n_arr = plan.round_end, plan.n_arrived
+    else:
+        plan = async_lib.build_fedbuff_plan(afl, fleet, cost, sizes, rounds,
+                                            key)
+        pend0 = async_lib.pool_init(model_cfg, sync_fl, params, train,
+                                    plan.n_slots)
+        pend0 = async_lib.fedbuff_seed_pool(
+            model_cfg, afl, params, pend0, train,
+            jnp.asarray(plan.seed_ids), jnp.asarray(plan.seed_steps),
+            jnp.asarray(plan.seed_slots))
+        w_final, ws = scan_async_fedbuff(
+            model_cfg, afl, spec, w0, pend0, train,
+            jnp.asarray(plan.ids), jnp.asarray(plan.n_steps),
+            jnp.asarray(plan.store_slot), jnp.asarray(plan.flush_slot),
+            jnp.asarray(plan.tau), mesh=mesh)
+        clocks = plan.flush_clock
+        n_arr = np.full(rounds, afl.buffer_size)
+
+    hist = {"round": [], "wall_clock": [], "train_loss": [], "train_acc": [],
+            "test_acc": [], "n_arrived": [], "stale_mean": []}
+    for t in range(rounds):
+        if t % eval_every == 0 or t == rounds - 1:
+            params_t = flat_lib.unravel(spec, ws[t])
+            tr_loss, tr_acc = simulator.eval_global(model_cfg, params_t,
+                                                    train, p)
+            _, te_acc = simulator.eval_global(model_cfg, params_t, test, p)
+            hist["round"].append(t)
+            hist["wall_clock"].append(float(clocks[t]))
+            hist["train_loss"].append(float(tr_loss))
+            hist["train_acc"].append(float(tr_acc))
+            hist["test_acc"].append(float(te_acc))
+            hist["n_arrived"].append(float(n_arr[t]))
+            hist["stale_mean"].append(float(plan.stale_mean[t]))
     return simulator.FedRunResult(history=hist,
                                   params=flat_lib.unravel(spec, w_final))

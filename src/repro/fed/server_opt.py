@@ -21,6 +21,7 @@ benchmarks.paper_tables.beyond_server_opt.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, Tuple
 
 import jax
@@ -53,6 +54,25 @@ def apply_round_delta(cfg: ServerOptConfig, params: Params, state: Dict,
     if cfg.kind == "momentum":
         return update_fn(params, pseudo_grad, state, cfg.lr, cfg.beta)
     return update_fn(params, pseudo_grad, state, cfg.lr)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def server_round_update(cfg: ServerOptConfig, params: Params, state: Dict,
+                        new_params: Params) -> Tuple[Params, Dict]:
+    """Jitted server-optimizer advance from a raw round result.
+
+    Computes the round delta with the python loop's exact fp32 cast
+    sequence (``new.astype(f32) − w.astype(f32)``) and feeds it through
+    ``apply_round_delta`` — as ONE jitted unit shared verbatim by
+    ``simulator.run_federated`` and the scan engine.  XLA fuses e.g. the
+    momentum update ``βm + (1−β)g`` into an FMA whose bits differ from an
+    eager op-by-op application, so bit-for-bit loop/scan parity requires
+    both engines to run this same compiled program.
+    """
+    delta = jax.tree.map(
+        lambda n, w: n.astype(jnp.float32) - w.astype(jnp.float32),
+        new_params, params)
+    return apply_round_delta(cfg, params, state, delta)
 
 
 def folb_delta(params: Params, deltas, grads, gammas=None,

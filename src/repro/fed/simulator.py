@@ -332,11 +332,10 @@ def run_federated(model_cfg, fed: FederatedData, fl: FLConfig, rounds: int,
                 np.asarray(diag["ids2"]) if "ids2" in diag else None,
                 n_steps, clock_now)
         if use_server_opt:
-            delta = jax.tree.map(
-                lambda n, w: n.astype(jnp.float32) - w.astype(jnp.float32),
-                new_params, params)
-            params, so_state = sopt.apply_round_delta(
-                so_cfg, params, so_state, delta)
+            # one shared jitted unit (delta cast sequence + optimizer) so
+            # the scan engine can replay it bit-for-bit
+            params, so_state = sopt.server_round_update(
+                so_cfg, params, so_state, new_params)
         else:
             params = new_params
         if t % eval_every == 0 or t == rounds - 1:

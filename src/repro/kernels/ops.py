@@ -144,3 +144,34 @@ def folb_staleness_tree(params, deltas_stacked, grads_stacked, tau,
         jnp.asarray(alpha, jnp.float32), psi_gamma=psi_gammas, mask=mask,
         mesh=mesh)
     return flat_lib.unravel(spec, new_flat), scores
+
+
+def folb_staleness_slots_tree(params, deltas_slots, grads_slots, slot_mask,
+                              slot_tau, alpha: float = 0.0, psi_gammas=None,
+                              buf_dtype=DEFAULT_BUF_DTYPE, mesh=None
+                              ) -> Tuple:
+    """Fixed-budget masked-slot stale aggregation (compiled async engines).
+
+    The stacked client axis here is a *static slot budget* (K dispatched
+    + S late-arrival slots), not the realized arrival count: invalid
+    slots are excluded through ``slot_mask``.  Contract (property-tested
+    in tests/test_event_plan.py):
+
+      * a masked slot never contributes — any finite garbage in a masked
+        row (stale pool contents, missed stragglers, the dump row) yields
+        a bit-identical aggregate, because every masked term enters the
+        reductions as an exact ``0.0 * x``;
+      * an all-masked budget (a deadline round where nothing arrived)
+        returns ``params`` unchanged, bit-exact — not ``params + 0.0``,
+        which would flip negative zeros.
+    """
+    from repro.core import flat as flat_lib
+    spec, w, deltas, grads = _ravel_problem(
+        params, deltas_slots, grads_slots, buf_dtype, mesh)
+    new_flat, scores = folb_staleness_buffers(
+        w, deltas, grads, slot_tau.astype(jnp.float32),
+        jnp.asarray(alpha, jnp.float32), psi_gamma=psi_gammas,
+        mask=slot_mask, mesh=mesh)
+    alive = jnp.sum(slot_mask) > 0.0
+    new_flat = jnp.where(alive, new_flat, w)
+    return flat_lib.unravel(spec, new_flat), scores

@@ -56,6 +56,15 @@ class EventQueue:
         heapq.heappush(self._heap, ev)
         return ev
 
+    def push_batch(self, times, kind: str, key: str, values) -> None:
+        """Vectorized push: one `kind` event per (time, value) pair, with
+        payload {key: value}.  Sequence numbers are assigned in iteration
+        order, so a batch push is tie-break-identical to pushing the pairs
+        one by one — the event-plan builders seed their dispatch queues
+        with this."""
+        for time, value in zip(times, values):
+            self.push(float(time), kind, **{key: value})
+
     def pop(self) -> Event:
         return heapq.heappop(self._heap)
 

@@ -3,9 +3,16 @@
 `plan_sync_round` computes, for one synchronous (deadline-barriered)
 round: when each selected device starts (first availability window at or
 after dispatch), when its upload lands at the server, which devices make
-the deadline, and when the server closes the round.  The async FedBuff
-mode in `repro.fed.async_engine` drives `EventQueue` directly instead —
-there is no global round barrier to plan.
+the deadline, and when the server closes the round.
+
+`plan_deadline_run` is the whole-run vectorized form: given the full
+(rounds, K) id/step schedule it emits every round's arrival times,
+deadline cuts, and round-end clock in one pass — all K·rounds latencies
+from a single vectorized `device_latencies` call, with only the
+start-time recurrence (round t starts when round t-1 ends) left as a
+host loop.  The event-plan builders in `repro.fed.async_engine` replay
+these arrays both in the python event loop and inside the compiled
+`lax.scan` engine, which is what makes the two bit-for-bit comparable.
 """
 from __future__ import annotations
 
@@ -55,3 +62,42 @@ def plan_sync_round(fleet: DeviceFleet, ids: np.ndarray, n_steps: np.ndarray,
         round_end = cutoff
     return RoundPlan(start=start, arrival=arrival, arrived=arrived,
                      round_end=round_end)
+
+
+def plan_deadline_run(fleet: DeviceFleet, ids: np.ndarray,
+                      n_steps: np.ndarray, cost: RoundCost,
+                      deadline: float = math.inf,
+                      n_examples: Optional[np.ndarray] = None,
+                      start: float = 0.0):
+    """Emit every round's `plan_sync_round` at once for a fixed schedule.
+
+    `ids`/`n_steps` are (rounds, K); `n_examples` is the per-DEVICE dataset
+    size vector (indexed by id here, unlike `plan_sync_round` which takes
+    it pre-gathered).  Latencies are start-time independent, so all R·K of
+    them come from one vectorized `device_latencies` call; the host loop
+    only carries the start-time recurrence (and, for availability-cycled
+    fleets, the `next_online` gating that depends on it).
+
+    Returns (arrival (R, K), arrived (R, K) bool, round_end (R,)) —
+    float-identical to calling `plan_sync_round` round by round.
+    """
+    ids = np.asarray(ids)
+    n_steps = np.asarray(n_steps)
+    R, K = ids.shape
+    ex = None if n_examples is None else \
+        np.asarray(n_examples, dtype=np.float64)[ids.reshape(-1)]
+    lat = device_latencies(fleet, ids.reshape(-1), n_steps.reshape(-1),
+                           cost, n_examples=ex).reshape(R, K)
+    always_on = bool((np.asarray(fleet.avail_period) <= 0.0).all())
+    arrival = np.empty((R, K), np.float64)
+    arrived = np.empty((R, K), bool)
+    round_end = np.empty(R, np.float64)
+    s = float(start)
+    for t in range(R):
+        begin = np.full(K, s) if always_on else fleet.next_online(ids[t], s)
+        arr = begin + lat[t]
+        cutoff = s + deadline
+        ok = arr <= cutoff
+        s = float(arr.max()) if ok.all() else cutoff
+        arrival[t], arrived[t], round_end[t] = arr, ok, s
+    return arrival, arrived, round_end

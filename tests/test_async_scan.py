@@ -1,0 +1,181 @@
+"""Compiled async engine: `run_async_compiled` must reproduce the python
+event loop (`run_async`) bit-for-bit — params, per-round wall clock,
+arrival counts, and staleness means — for BOTH deadline and fedbuff modes,
+on the same straggler-heavy fleets the tta sweep uses."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import MCLR
+from repro.data.federated import stack_devices
+from repro.data.synthetic import synthetic_alpha_beta
+from repro.fed.async_engine import AsyncFLConfig, run_async
+from repro.fed.scan_engine import run_async_compiled
+from repro.models import small
+from repro.sysmodel import (expected_latencies, heterogeneous_fleet,
+                            round_cost_for, uniform_fleet)
+
+N_DEV = 20
+HIST_KEYS = ("round", "wall_clock", "train_loss", "train_acc", "test_acc",
+             "n_arrived", "stale_mean")
+
+
+@pytest.fixture(scope="module")
+def fed_data():
+    devs = synthetic_alpha_beta(0, n_devices=N_DEV, alpha=1.0, beta=1.0,
+                                mean_size=60)
+    return stack_devices(devs, seed=0)
+
+
+@pytest.fixture(scope="module")
+def slow_fleet():
+    # strong straggler tail so finite deadlines actually cut devices and
+    # the pending-slot machinery is exercised
+    return heterogeneous_fleet(1, N_DEV, straggler_frac=0.4,
+                               straggler_slowdown=50.0)
+
+
+def straggler_deadline(fed_data, fleet, quantile=0.5):
+    params = small.init_small(MCLR, jax.random.PRNGKey(0))
+    cost = round_cost_for(MCLR, params)
+    lat = expected_latencies(fleet, cost, mean_steps=10,
+                             n_examples=np.asarray(fed_data.mask.sum(1)))
+    return float(np.quantile(lat, quantile))
+
+
+def _assert_bit_for_bit(h_loop, h_scan):
+    for k in HIST_KEYS:
+        assert h_loop[k] == h_scan[k], k
+    for a, b in zip(jax.tree.leaves(h_loop.params),
+                    jax.tree.leaves(h_scan.params)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+class TestDeadlineParity:
+    def test_straggler_run_bit_for_bit(self, fed_data, slow_fleet):
+        """Acceptance criterion: an aggressive deadline (p50 — half the
+        fleet misses rounds, stragglers carry over as masked due slots)
+        replays bit-for-bit in the scan."""
+        deadline = straggler_deadline(fed_data, slow_fleet)
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=8,
+                            deadline=deadline, staleness_alpha=0.5, seed=0)
+        h_loop = run_async(MCLR, fed_data, afl, slow_fleet, rounds=8)
+        h_scan = run_async_compiled(MCLR, fed_data, afl, slow_fleet,
+                                    rounds=8)
+        # the run must actually exercise the slow path
+        assert min(h_loop["n_arrived"]) < 8
+        assert max(h_loop["stale_mean"]) > 0.0
+        _assert_bit_for_bit(h_loop, h_scan)
+
+    def test_infinite_deadline_bit_for_bit(self, fed_data):
+        """All-fast-path runs ride the same fl_round the sync engines
+        share — the scan's lax.cond wrapper must not perturb it."""
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=5,
+                            seed=3)
+        fleet = uniform_fleet(N_DEV)
+        h_loop = run_async(MCLR, fed_data, afl, fleet, rounds=5)
+        h_scan = run_async_compiled(MCLR, fed_data, afl, fleet, rounds=5)
+        assert h_loop["stale_mean"] == [0.0] * 5
+        _assert_bit_for_bit(h_loop, h_scan)
+
+    @pytest.mark.parametrize("algo,psi,mu", [("fedavg", 0.0, 0.0),
+                                             ("folb_het", 0.1, 1.0)])
+    def test_other_algos_bit_for_bit(self, fed_data, slow_fleet, algo, psi,
+                                     mu):
+        deadline = straggler_deadline(fed_data, slow_fleet)
+        afl = AsyncFLConfig(mode="deadline", algo=algo, psi=psi, mu=mu,
+                            n_selected=8, deadline=deadline,
+                            staleness_alpha=0.3, seed=1)
+        h_loop = run_async(MCLR, fed_data, afl, slow_fleet, rounds=6)
+        h_scan = run_async_compiled(MCLR, fed_data, afl, slow_fleet,
+                                    rounds=6)
+        _assert_bit_for_bit(h_loop, h_scan)
+
+    def test_latency_aware_bit_for_bit(self, fed_data, slow_fleet):
+        """The tta sweep's deadline-FOLB policy: latency-aware selection
+        from the static pre-computed distribution."""
+        deadline = straggler_deadline(fed_data, slow_fleet, quantile=0.9)
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=8,
+                            deadline=deadline, latency_aware=True,
+                            staleness_alpha=0.5, seed=2)
+        h_loop = run_async(MCLR, fed_data, afl, slow_fleet, rounds=6)
+        h_scan = run_async_compiled(MCLR, fed_data, afl, slow_fleet,
+                                    rounds=6)
+        _assert_bit_for_bit(h_loop, h_scan)
+
+    def test_pytree_backend_parity_too(self, fed_data, slow_fleet):
+        """Parity is a property of the engine, not the flat kernel."""
+        deadline = straggler_deadline(fed_data, slow_fleet)
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=8,
+                            deadline=deadline, staleness_alpha=0.5,
+                            agg_backend="pytree", seed=0)
+        h_loop = run_async(MCLR, fed_data, afl, slow_fleet, rounds=6)
+        h_scan = run_async_compiled(MCLR, fed_data, afl, slow_fleet,
+                                    rounds=6)
+        _assert_bit_for_bit(h_loop, h_scan)
+
+    def test_eval_every(self, fed_data, slow_fleet):
+        deadline = straggler_deadline(fed_data, slow_fleet)
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=8,
+                            deadline=deadline, seed=0)
+        h = run_async_compiled(MCLR, fed_data, afl, slow_fleet, rounds=6,
+                               eval_every=3)
+        assert h["round"] == [0, 3, 5]
+
+
+class TestFedBuffParity:
+    def test_fedbuff_bit_for_bit(self, fed_data, slow_fleet):
+        """Acceptance criterion: the buffered fully-async mode — in-flight
+        pool, version staleness, flush clock — replays bit-for-bit."""
+        afl = AsyncFLConfig(mode="fedbuff", algo="folb", buffer_size=4,
+                            concurrency=8, staleness_alpha=0.5, seed=0)
+        h_loop = run_async(MCLR, fed_data, afl, slow_fleet, rounds=8)
+        h_scan = run_async_compiled(MCLR, fed_data, afl, slow_fleet,
+                                    rounds=8)
+        assert max(h_loop["stale_mean"]) > 0.0   # staleness exercised
+        _assert_bit_for_bit(h_loop, h_scan)
+
+    def test_fedbuff_fedavg_bit_for_bit(self, fed_data, slow_fleet):
+        afl = AsyncFLConfig(mode="fedbuff", algo="fedavg", mu=0.0,
+                            buffer_size=3, concurrency=6,
+                            staleness_alpha=0.3, seed=5)
+        h_loop = run_async(MCLR, fed_data, afl, slow_fleet, rounds=5)
+        h_scan = run_async_compiled(MCLR, fed_data, afl, slow_fleet,
+                                    rounds=5)
+        _assert_bit_for_bit(h_loop, h_scan)
+
+    def test_deterministic_across_calls(self, fed_data, slow_fleet):
+        afl = AsyncFLConfig(mode="fedbuff", algo="folb", buffer_size=3,
+                            concurrency=6, seed=5)
+        h1 = run_async_compiled(MCLR, fed_data, afl, slow_fleet, rounds=4)
+        h2 = run_async_compiled(MCLR, fed_data, afl, slow_fleet, rounds=4)
+        assert h1["train_loss"] == h2["train_loss"]
+        assert h1["wall_clock"] == h2["wall_clock"]
+
+
+class TestTtaCohortParity:
+    """The acceptance bar names the tta sweep cohort: 30 devices, 30%
+    stragglers at 25x, p90 deadline / fedbuff(5, 10)."""
+
+    @pytest.fixture(scope="class")
+    def cohort(self):
+        from benchmarks.time_to_accuracy import setup_sweep
+        return setup_sweep()
+
+    def test_deadline_sweep_config(self, cohort):
+        model_cfg, fed, fleet, deadline = cohort
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=10,
+                            mu=1.0, lr=0.05, deadline=deadline,
+                            staleness_alpha=0.5, seed=0)
+        h_loop = run_async(model_cfg, fed, afl, fleet, rounds=10)
+        h_scan = run_async_compiled(model_cfg, fed, afl, fleet, rounds=10)
+        _assert_bit_for_bit(h_loop, h_scan)
+
+    def test_fedbuff_sweep_config(self, cohort):
+        model_cfg, fed, fleet, _ = cohort
+        afl = AsyncFLConfig(mode="fedbuff", algo="folb", mu=1.0, lr=0.05,
+                            buffer_size=5, concurrency=10,
+                            staleness_alpha=0.5, seed=0)
+        h_loop = run_async(model_cfg, fed, afl, fleet, rounds=10)
+        h_scan = run_async_compiled(model_cfg, fed, afl, fleet, rounds=10)
+        _assert_bit_for_bit(h_loop, h_scan)

@@ -5,14 +5,17 @@ regressions CI relies on it for — including the new calibration-relative
 kernel ratios — and the roofline byte model must show the ~2x (K, D)
 reduction the bf16 buffers exist for."""
 from benchmarks.check_regression import compare
-from benchmarks.roofline import folb_agg_bytes, folb_kd_bytes
+from benchmarks.roofline import (folb_agg_bytes, folb_kd_bytes,
+                                 folb_stale_agg_bytes)
 
 
-def _artifact(kernel_ratio=1.0):
+def _artifact(kernel_ratio=1.0, async_speedup=1.3):
     return {
         "results": [{"name": "folb/sync", "secs_to_acc": 5.0,
                      "rounds_to_acc": 10, "final_acc": 0.9}],
-        "dispatch": {"scan_vs_loop_speedup": 1.3},
+        "dispatch": {"scan_vs_loop_speedup": 1.3,
+                     "async_deadline": {"scan_vs_loop_speedup": async_speedup},
+                     "async_fedbuff": {"scan_vs_loop_speedup": async_speedup}},
         "kernel": {
             "calibration_us": 1000.0,
             "entries": {
@@ -61,6 +64,33 @@ class TestKernelGate:
         assert any("dispatch" in f for f in fails)
 
 
+class TestAsyncDispatchGate:
+    def test_passes_when_async_speedup_holds(self):
+        assert compare(_artifact(), _artifact(async_speedup=1.1),
+                       0.15, 0.05, 1.0, min_async_speedup=0.85) == []
+
+    def test_fails_when_async_scan_slower_than_loop(self):
+        fails = compare(_artifact(), _artifact(async_speedup=0.7),
+                        0.15, 0.05, 1.0, min_async_speedup=0.85)
+        assert len(fails) == 2   # deadline AND fedbuff
+        assert all("async" in f for f in fails)
+
+    def test_fails_on_missing_async_section(self):
+        cur = _artifact()
+        del cur["dispatch"]["async_fedbuff"]
+        fails = compare(_artifact(), cur, 0.15, 0.05, 1.0,
+                        min_async_speedup=0.85)
+        assert any("async_fedbuff missing" in f for f in fails)
+
+    def test_old_baseline_without_async_is_fine(self):
+        """Pre-compiled-async baselines don't fail the new gate."""
+        base = _artifact()
+        del base["dispatch"]["async_deadline"]
+        del base["dispatch"]["async_fedbuff"]
+        assert compare(base, _artifact(async_speedup=0.1),
+                       0.15, 0.05, 1.0, min_async_speedup=0.85) == []
+
+
 class TestBytesModel:
     def test_kd_sweep_halves_exactly(self):
         """The (K, D) streaming sweeps — the dominant term — are exactly
@@ -75,3 +105,12 @@ class TestBytesModel:
         r64 = folb_agg_bytes(64, 1 << 20, 4) / folb_agg_bytes(64, 1 << 20, 2)
         assert 1.6 < r8 < 2.0 < r64 * 1.05
         assert r64 > r8
+
+    def test_stale_model_adds_one_kd_sweep(self):
+        """The staleness kernel computes the masked g1 internally: its
+        modeled traffic is exactly one more dtype-scaled (K, D) sweep
+        than the plain kernel at every shape/dtype."""
+        for K, D in ((8, 1 << 16), (10, 1 << 27)):
+            for b in (2, 4):
+                assert (folb_stale_agg_bytes(K, D, b)
+                        == folb_agg_bytes(K, D, b) + K * D * b)

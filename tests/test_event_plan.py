@@ -1,0 +1,266 @@
+"""Property tests for the async event plans (the host-precomputed
+timelines the compiled async engine replays).
+
+Invariants checked across random fleets/deadlines/budgets:
+
+  * deadline plan — arrivals never precede their round's dispatch, round
+    ends are monotone, the arrived partition matches the deadline cut,
+    and the masked due slots' τ counters match an INDEPENDENT host
+    pending-queue replay (the original event-loop logic, reimplemented
+    here from scratch);
+  * fedbuff plan — exactly M dispatches per flush, monotone flush clock,
+    and slot-pool safety: every flushed slot still holds the entry it was
+    assigned to (a round's stores never clobber rows its own flush needs);
+  * masked slots never contribute to the aggregation psum: any finite
+    garbage in a masked row is bit-invisible, and an all-masked budget
+    returns the parameters unchanged (bit-exact).
+
+Uses the `_propcheck` shim — real hypothesis when installed, seeded
+deterministic examples otherwise (no hypothesis on the CPU container).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from _propcheck import given, settings, st
+
+from repro.configs.paper_models import MCLR
+from repro.fed.async_engine import (AsyncFLConfig, build_deadline_plan,
+                                    build_fedbuff_plan)
+from repro.kernels import ops
+from repro.models import small
+from repro.sysmodel import heterogeneous_fleet, round_cost_for
+
+N_DEV = 12
+ROUNDS = 6
+_params = small.init_small(MCLR, jax.random.PRNGKey(0))
+_cost = round_cost_for(MCLR, _params)
+_sizes = np.random.default_rng(7).integers(20, 80, N_DEV).astype(np.float64)
+
+
+def _fleet(seed):
+    return heterogeneous_fleet(seed, N_DEV, straggler_frac=0.4,
+                               straggler_slowdown=30.0)
+
+
+def _deadline_for(fleet, quantile):
+    from repro.sysmodel import expected_latencies
+    lat = expected_latencies(fleet, _cost, mean_steps=10, n_examples=_sizes)
+    return float(np.quantile(lat, quantile))
+
+
+class TestDeadlinePlan:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 10**6), st.floats(0.2, 0.95),
+           st.integers(2, 6))
+    def test_timeline_invariants(self, fleet_seed, quantile, k):
+        fleet = _fleet(fleet_seed)
+        deadline = _deadline_for(fleet, quantile)
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=k,
+                            deadline=deadline, staleness_alpha=0.5, seed=0)
+        plan = build_deadline_plan(afl, fleet, _cost, _sizes, ROUNDS,
+                                   jax.random.PRNGKey(0))
+        starts = np.concatenate([[0.0], plan.round_end[:-1]])
+        # arrivals never precede their round's dispatch; ends monotone
+        assert (plan.arrival >= starts[:, None]).all()
+        assert (np.diff(plan.round_end) >= 0).all()
+        # the arrived partition IS the deadline cut
+        assert (plan.arrived
+                == (plan.arrival <= starts[:, None] + deadline)).all()
+        # a round end never exceeds its cutoff and equals the max arrival
+        # when everyone made it
+        for t in range(ROUNDS):
+            if plan.arrived[t].all():
+                assert plan.round_end[t] >= plan.arrival[t].max()
+            else:
+                assert plan.round_end[t] == starts[t] + deadline
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 10**6), st.floats(0.2, 0.95),
+           st.integers(2, 6))
+    def test_tau_matches_host_queue_replay(self, fleet_seed, quantile, k):
+        """The fixed-width masked due slots must carry exactly the τ
+        multiset an independent pending-list replay (the original event
+        loop's logic) produces."""
+        fleet = _fleet(fleet_seed)
+        deadline = _deadline_for(fleet, quantile)
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=k,
+                            deadline=deadline, staleness_alpha=0.5, seed=0)
+        plan = build_deadline_plan(afl, fleet, _cost, _sizes, ROUNDS,
+                                   jax.random.PRNGKey(0))
+        pending = []   # (arrival, dispatch round)
+        for t in range(ROUNDS):
+            due = [pu for pu in pending if pu[0] <= plan.round_end[t]]
+            pending = [pu for pu in pending if pu[0] > plan.round_end[t]]
+            ref_taus = sorted(t - v for _, v in due)
+            got_taus = sorted(plan.due_tau[t][plan.due_mask[t] > 0.0])
+            assert ref_taus == got_taus, t
+            fast = plan.arrived[t].all() and not due
+            assert bool(plan.fast[t]) == fast, t
+            assert plan.n_arrived[t] == plan.arrived[t].sum() + len(due), t
+            if len(due):
+                assert np.isclose(plan.stale_mean[t],
+                                  sum(ref_taus) / plan.n_arrived[t])
+            for i in np.flatnonzero(~plan.arrived[t]):
+                pending.append((plan.arrival[t, i], t))
+                # every straggler got a real pool slot (not the dump row)
+                assert plan.store_slot[t, i] < plan.n_slots
+
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(0, 10**6), st.floats(0.2, 0.95))
+    def test_due_slots_reference_live_stragglers(self, fleet_seed,
+                                                 quantile):
+        """Slot-pool safety: each masked-in due slot must be the pool row
+        most recently assigned to the straggler it stands for — a store
+        never clobbers a row a later due gather still needs."""
+        fleet = _fleet(fleet_seed)
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=5,
+                            deadline=_deadline_for(fleet, quantile),
+                            staleness_alpha=0.5, seed=0)
+        plan = build_deadline_plan(afl, fleet, _cost, _sizes, ROUNDS,
+                                   jax.random.PRNGKey(0))
+        owner = {}      # slot -> (round, device index) of the live entry
+        live = {}       # (round, device) -> slot while pending
+        for t in range(ROUNDS):
+            # gather happens BEFORE this round's stores
+            for j in np.flatnonzero(plan.due_mask[t] > 0.0):
+                slot = plan.due_slot[t, j]
+                src = owner.get(slot)
+                assert src is not None, (t, j)
+                assert plan.due_tau[t, j] == t - src[0]
+                del live[src]
+            for i in np.flatnonzero(~plan.arrived[t]):
+                slot = int(plan.store_slot[t, i])
+                stale = owner.get(slot)
+                assert stale is None or stale not in live, \
+                    f"round {t} overwrote live straggler {stale}"
+                owner[slot] = (t, i)
+                live[(t, i)] = slot
+
+
+class TestFedBuffPlan:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 10**6), st.integers(2, 5), st.integers(3, 8))
+    def test_schedule_invariants(self, fleet_seed, buffer_size,
+                                 concurrency):
+        fleet = _fleet(fleet_seed)
+        afl = AsyncFLConfig(mode="fedbuff", algo="folb",
+                            buffer_size=buffer_size,
+                            concurrency=concurrency, staleness_alpha=0.5,
+                            seed=0)
+        plan = build_fedbuff_plan(afl, fleet, _cost, _sizes, ROUNDS,
+                                  jax.random.PRNGKey(0))
+        M = buffer_size
+        assert plan.ids.shape == (ROUNDS, M)
+        assert (np.diff(plan.flush_clock) >= 0).all()
+        assert (plan.tau >= 0).all()
+        # τ bounded by the flush index (nothing older than the run)
+        assert (plan.tau <= np.arange(ROUNDS)[:, None]).all()
+        # pool bounded by in-flight + buffered
+        assert plan.n_slots <= concurrency + buffer_size
+        # slot safety: a flushed slot holds the entry assigned to it
+        owner = {int(s): ("seed", i)
+                 for i, s in enumerate(plan.seed_slots)}
+        buffered = set(owner.values())   # entries stored, not yet flushed
+        for t in range(ROUNDS):
+            # stores happen BEFORE the gather (same-round flush allowed)
+            for j in range(M):
+                slot = int(plan.store_slot[t, j])
+                prev = owner.get(slot)
+                assert prev is None or prev not in buffered, \
+                    f"round {t} clobbered unflushed entry {prev}"
+                owner[slot] = (t, j)
+                buffered.add((t, j))
+            for j in range(M):
+                src = owner.get(int(plan.flush_slot[t, j]))
+                assert src is not None and src in buffered
+                buffered.remove(src)
+
+    def test_tau_matches_event_queue_replay(self):
+        """Versions at flush match an independent EventQueue simulation
+        driven by the plan's own dispatch schedule."""
+        from repro.sysmodel import EventQueue, device_latencies
+        fleet = _fleet(123)
+        afl = AsyncFLConfig(mode="fedbuff", algo="folb", buffer_size=3,
+                            concurrency=5, staleness_alpha=0.5, seed=0)
+        plan = build_fedbuff_plan(afl, fleet, _cost, _sizes, ROUNDS,
+                                  jax.random.PRNGKey(0))
+        cids = np.concatenate([plan.seed_ids, plan.ids.reshape(-1)])
+        steps = np.concatenate([plan.seed_steps, plan.n_steps.reshape(-1)])
+        lats = device_latencies(fleet, cids, steps, _cost,
+                                n_examples=_sizes[cids])
+        events = EventQueue()
+        version_of = {}
+        nd = 0
+
+        def dispatch(at, version):
+            nonlocal nd
+            d = nd
+            nd += 1
+            begin = float(fleet.next_online(cids[d:d + 1], at)[0])
+            version_of[d] = version
+            events.push(begin + lats[d], "arrival", d=d)
+
+        for _ in range(afl.concurrency):
+            dispatch(0.0, 0)
+        for t in range(ROUNDS):
+            flushed = []
+            while len(flushed) < afl.buffer_size:
+                ev = events.pop()
+                flushed.append(ev.payload["d"])
+                dispatch(ev.time, t)
+            ref_tau = sorted(t - version_of[d] for d in flushed)
+            assert ref_tau == sorted(plan.tau[t]), t
+
+
+class TestMaskedSlotsNeverContribute:
+    K, S, D = 4, 3, 24
+
+    def _problem(self, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        params = {"w": jax.random.normal(ks[0], (self.D,))}
+        n = self.K + self.S
+        deltas = {"w": jax.random.normal(ks[1], (n, self.D)) * 0.1}
+        grads = {"w": jax.random.normal(ks[2], (n, self.D))}
+        return params, deltas, grads, ks[3]
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 10**6), st.floats(0.0, 2.0))
+    def test_garbage_in_masked_rows_is_bit_invisible(self, seed, alpha):
+        """The fixed-budget contract: replacing masked rows with arbitrary
+        finite garbage must not move a single output bit (every masked
+        term enters the reductions as an exact 0·x)."""
+        params, deltas, grads, k = self._problem(seed)
+        mask = jnp.asarray([1.0] * self.K + [0.0] * self.S)
+        mask = mask.at[1].set(0.0)   # mask a "current" row too
+        tau = jnp.abs(jax.random.normal(k, (self.K + self.S,)))
+        garbage = jax.random.normal(jax.random.fold_in(k, 1),
+                                    (self.K + self.S, self.D)) * 1e3
+        zeroed = {
+            "d": jax.tree.map(lambda x: x * mask[:, None], deltas),
+            "g": jax.tree.map(lambda x: x * mask[:, None], grads)}
+        poisoned = {
+            "d": jax.tree.map(
+                lambda x: jnp.where(mask[:, None] > 0, x, garbage), deltas),
+            "g": jax.tree.map(
+                lambda x: jnp.where(mask[:, None] > 0, x, garbage), grads)}
+        outs = []
+        for v in (zeroed, poisoned):
+            new, _ = ops.folb_staleness_slots_tree(
+                params, v["d"], v["g"], mask, tau, alpha=alpha,
+                buf_dtype=jnp.float32)
+            outs.append(np.asarray(new["w"]))
+        assert (outs[0] == outs[1]).all()
+
+    def test_all_masked_budget_returns_params_bitwise(self):
+        params, deltas, grads, _ = self._problem(0)
+        # include a negative zero: params + 0.0 would flip it
+        params = {"w": params["w"].at[0].set(-0.0)}
+        mask = jnp.zeros((self.K + self.S,))
+        tau = jnp.zeros((self.K + self.S,))
+        new, _ = ops.folb_staleness_slots_tree(params, deltas, grads, mask,
+                                               tau, alpha=0.5,
+                                               buf_dtype=jnp.float32)
+        a, b = np.asarray(new["w"]), np.asarray(params["w"])
+        assert (a == b).all()
+        assert np.signbit(a[0]) == np.signbit(b[0])   # -0.0 preserved
