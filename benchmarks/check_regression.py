@@ -17,6 +17,11 @@ baseline and fails (exit 1) on regression:
     speedup (deadline and fedbuff virtual-event scans) must stay at
     least ``--min-async-speedup`` — the same machine-independent ratio
     treatment as the sync scan gate.
+  * sweep: each entry's S-config-sweep-vs-S-solo-runs host-time ratio
+    (``sweep_vs_solo_speedup``, the plan-reuse sweep engine's reason to
+    exist) must stay at least ``--min-sweep-speedup`` — again a ratio,
+    so shared runners can't fake a regression.  As with the async gate,
+    entries are only gated once the baseline records them.
   * kernel: each micro-bench's *calibration-relative* ratio (kernel time
     divided by a fixed jnp workload timed in the same run — see
     ``kernel_bench.calibration_us``) may not grow more than
@@ -48,7 +53,8 @@ def _load(path: str) -> dict:
 def compare(baseline: dict, current: dict, tolerance: float,
             acc_drop: float, min_speedup: float,
             kernel_tolerance: float = 0.75,
-            min_async_speedup: float = 1.0) -> List[str]:
+            min_async_speedup: float = 1.0,
+            min_sweep_speedup: float = 1.0) -> List[str]:
     """Return the list of regression messages (empty == gate passes)."""
     failures: List[str] = []
     cur_by_name = {r["name"]: r for r in current.get("results", [])}
@@ -106,6 +112,27 @@ def compare(baseline: dict, current: dict, tolerance: float,
                         f"dispatch: {name} scan_vs_loop_speedup {sp:.2f} "
                         f"< required {min_async_speedup:.2f}")
 
+    base_sweep = baseline.get("sweep")
+    cur_sweep = current.get("sweep")
+    if base_sweep is not None:
+        if cur_sweep is None:
+            failures.append("sweep: section missing from current artifact")
+        else:
+            for name, be in base_sweep.items():
+                if not isinstance(be, dict) \
+                        or "sweep_vs_solo_speedup" not in be:
+                    continue
+                ce = cur_sweep.get(name)
+                if ce is None:
+                    failures.append(
+                        f"sweep: {name} missing from current artifact")
+                    continue
+                sp = ce.get("sweep_vs_solo_speedup", 0.0)
+                if sp < min_sweep_speedup:
+                    failures.append(
+                        f"sweep: {name} sweep_vs_solo_speedup {sp:.2f} "
+                        f"< required {min_sweep_speedup:.2f}")
+
     base_kern = baseline.get("kernel")
     cur_kern = current.get("kernel")
     if base_kern is not None:
@@ -149,12 +176,16 @@ def main() -> int:
     ap.add_argument("--min-async-speedup", type=float, default=1.0,
                     help="required async scan-vs-event-loop dispatch "
                          "speedup (deadline and fedbuff)")
+    ap.add_argument("--min-sweep-speedup", type=float, default=1.0,
+                    help="required S-config-sweep vs S-solo-runs host-time "
+                         "speedup (plan-reuse sweep engine)")
     args = ap.parse_args()
 
     failures = compare(_load(args.baseline), _load(args.current),
                        args.tolerance, args.acc_drop, args.min_speedup,
                        args.kernel_tolerance,
-                       min_async_speedup=args.min_async_speedup)
+                       min_async_speedup=args.min_async_speedup,
+                       min_sweep_speedup=args.min_sweep_speedup)
     if failures:
         print("BENCHMARK REGRESSION GATE: FAIL")
         for msg in failures:

@@ -13,7 +13,9 @@ both engines warmed at the measured round count, the scan's one-off
 compile cost reported separately.  Results land in ``BENCH_fed.json``:
 the sync engines under ``dispatch``, the async engines (deadline with an
 aggressive straggler-cutting deadline so the masked-slot slow path runs,
-and fedbuff) under ``dispatch.async_deadline`` / ``.async_fedbuff``.
+and fedbuff) under ``dispatch.async_deadline`` / ``.async_fedbuff``, and
+the plan-reuse sweep engine (S-config sweep vs S solo compiled runs)
+under the top-level ``sweep`` section.
 
 The CI regression gate (``benchmarks/check_regression.py``) checks the
 *speedup ratios*, not absolute rounds/sec — machine-independent, so the
@@ -27,6 +29,9 @@ from typing import Dict, List, Tuple
 DISPATCH_ROUNDS = 60   # fixed regardless of --quick: artifact comparability
 ASYNC_ROUNDS = 40      # async rounds cost more host time per round
 _REPS = 5              # median-of-5: each rep is ~0.3 s, CI runners are noisy
+SWEEP_CONFIGS = 8      # S: the acceptance-criterion sweep width
+SWEEP_ROUNDS = 40
+_SWEEP_REPS = 3        # each rep runs S solos + one sweep; keep CI bounded
 
 
 def _median_seconds(fn, reps: int = _REPS) -> float:
@@ -134,6 +139,86 @@ def async_dispatch_results(rounds: int = ASYNC_ROUNDS) -> Dict[str, Dict]:
     return out
 
 
+def sweep_results(s_configs: int = SWEEP_CONFIGS,
+                  rounds: int = SWEEP_ROUNDS) -> Dict[str, Dict]:
+    """S-config hyper-parameter sweep vs S solo compiled runs, host secs.
+
+    The sweep engine builds the fleet timeline / event plan ONCE and runs
+    all S configs' learning math in a single vmapped XLA program; the solo
+    baseline re-runs `run_federated_compiled` / `run_async_compiled` per
+    config (jit caches warm — the solo programs are identical across
+    sweepable values since the hypers refactor, so the measured gap is
+    pure per-run host work: plan building, input drawing, dispatch).
+    Ratios, not absolute seconds, feed the machine-independent CI gate
+    (``check_regression.py --min-sweep-speedup``).
+    """
+    import numpy as np
+
+    from benchmarks.time_to_accuracy import setup_sweep
+    from repro.fed.async_engine import AsyncFLConfig
+    from repro.fed.scan_engine import (run_async_compiled,
+                                       run_federated_compiled)
+    from repro.fed.simulator import FLConfig
+    from repro.fed.sweep_engine import (SweepSpec, run_async_sweep_compiled,
+                                        run_sweep_compiled)
+    from repro.models import small
+    from repro.sysmodel import expected_latencies, round_cost_for
+    import jax
+
+    model_cfg, fed, fleet, _ = setup_sweep()
+    lrs = tuple(float(v) for v in np.linspace(0.02, 0.09, s_configs))
+
+    params = small.init_small(model_cfg, jax.random.PRNGKey(0))
+    cost = round_cost_for(model_cfg, params)
+    lat = expected_latencies(fleet, cost, mean_steps=1.5,
+                             n_examples=np.asarray(fed.mask.sum(1)))
+    deadline = float(np.quantile(lat, 0.6))
+
+    cases = {
+        "sync": (
+            SweepSpec.from_grid(
+                FLConfig(algo="folb", n_selected=5, mu=1.0,
+                         max_local_steps=2, seed=0), lr=lrs),
+            lambda spec: run_sweep_compiled(
+                model_cfg, fed, spec, rounds=rounds, eval_every=rounds),
+            lambda m: run_federated_compiled(
+                model_cfg, fed, m, rounds=rounds, eval_every=rounds)),
+        "async_deadline": (
+            SweepSpec.from_grid(
+                AsyncFLConfig(mode="deadline", algo="folb", n_selected=5,
+                              max_local_steps=2, deadline=deadline,
+                              staleness_alpha=0.5, seed=0), lr=lrs),
+            lambda spec: run_async_sweep_compiled(
+                model_cfg, fed, spec, fleet, rounds=rounds,
+                eval_every=rounds),
+            lambda m: run_async_compiled(
+                model_cfg, fed, m, fleet, rounds=rounds,
+                eval_every=rounds)),
+    }
+    out = {}
+    for name, (spec, sweep_fn, solo_fn) in cases.items():
+        def solos(spec=spec, solo_fn=solo_fn):
+            for m in spec.members():
+                solo_fn(m)
+
+        solos()                      # warm the solo jit cache
+        t0 = time.time()
+        sweep_fn(spec)               # first call compiles the sweep program
+        compile_s = time.time() - t0
+        solo_s = _median_seconds(solos, reps=_SWEEP_REPS)
+        sweep_s = _median_seconds(lambda: sweep_fn(spec),
+                                  reps=_SWEEP_REPS)
+        out[name] = {
+            "s_configs": s_configs,
+            "rounds": rounds,
+            "solo_host_seconds": round(solo_s, 4),
+            "sweep_host_seconds": round(sweep_s, 4),
+            "sweep_first_call_seconds": round(compile_s, 3),
+            "sweep_vs_solo_speedup": solo_s / sweep_s,
+        }
+    return out
+
+
 def dispatch_rows(rounds: int = DISPATCH_ROUNDS, include_async: bool = True
                   ) -> Tuple[List[Tuple[str, float, str]], Dict]:
     """(CSV rows, json payload) for the run harness.  The payload is the
@@ -163,9 +248,28 @@ def dispatch_rows(rounds: int = DISPATCH_ROUNDS, include_async: bool = True
     return rows, res
 
 
+def sweep_rows(s_configs: int = SWEEP_CONFIGS, rounds: int = SWEEP_ROUNDS
+               ) -> Tuple[List[Tuple[str, float, str]], Dict]:
+    """(CSV rows, json payload) for the BENCH_fed.json ``sweep`` section:
+    one entry per engine with the S-sweep-vs-S-solos host-time ratio."""
+    res = sweep_results(s_configs, rounds)
+    rows = [
+        (f"tta/sweep/{name}",
+         r["sweep_host_seconds"] / (r["s_configs"] * rounds) * 1e6,
+         f"s_configs={r['s_configs']};"
+         f"solo_s={r['solo_host_seconds']};"
+         f"sweep_s={r['sweep_host_seconds']};"
+         f"speedup={r['sweep_vs_solo_speedup']:.2f}x;"
+         f"first_call_s={r['sweep_first_call_seconds']}")
+        for name, r in res.items()]
+    return rows, res
+
+
 if __name__ == "__main__":
     res = dispatch_results()
     for k, v in res.items():
         print(f"{k}: {v}")
     for name, a in async_dispatch_results().items():
         print(f"{name}: {a}")
+    for name, a in sweep_results().items():
+        print(f"sweep/{name}: {a}")

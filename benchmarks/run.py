@@ -69,14 +69,19 @@ def main() -> None:
         # dispatch failure can't discard the multi-minute sweep results
         time_to_accuracy.write_bench_json(results, args.bench_json)
         d_rows, dispatch = dispatch_bench.dispatch_rows()
-        path = time_to_accuracy.write_bench_json(
+        time_to_accuracy.write_bench_json(
             results, args.bench_json, extra={"dispatch": dispatch})
+        s_rows, sweep = dispatch_bench.sweep_rows()
+        path = time_to_accuracy.write_bench_json(
+            results, args.bench_json,
+            extra={"dispatch": dispatch, "sweep": sweep})
         print(f"# wrote {path}", file=sys.stderr)
         return [(f"tta/{r['name']}",
                  r["host_seconds"] / tta_rounds * 1e6,
                  f"rounds_to_{r['target_acc']}={r['rounds_to_acc']};"
                  f"secs_to_{r['target_acc']}={r['secs_to_acc']:.2f};"
-                 f"final_acc={r['final_acc']:.3f}") for r in results] + d_rows
+                 f"final_acc={r['final_acc']:.3f}") for r in results] \
+            + d_rows + s_rows
 
     suites = [
         ("table1", lambda: paper_tables.table1_rounds_to_accuracy(rounds)),

@@ -128,7 +128,10 @@ def folb_staleness(w_t, deltas, grads, tau, alpha: float = 0.0,
     g1 = mean_of(grads) if mask is None else _masked_mean_of(grads, mask)
     inner = _stacked_dot(grads, g1)
     scores = inner
-    if psi != 0.0 and gammas is not None:
+    # branch on gammas only: psi may be a traced scalar (a sweepable
+    # hyper-parameter), and psi == 0 subtracts an exact +0.0 — bit-
+    # identical to skipping the term (gammas and ||g1||² are nonnegative)
+    if gammas is not None:
         scores = scores - psi * gammas * tree.tree_sqnorm(g1)
     scores = scores * staleness_discounts(tau, alpha)
     if mask is not None:

@@ -1,11 +1,40 @@
 """Hyper-parameter line search (paper Sec. V-B / VI-A): exponential grids
-for μ and ψ, selected by best end-of-budget metric on short runs."""
+for μ and ψ, selected by best end-of-budget metric on short runs — plus
+the cross-product grid builder the compiled sweep engine
+(``repro.fed.sweep_engine``) consumes."""
 from __future__ import annotations
 
+import itertools
 from typing import Callable, Dict, Sequence, Tuple
 
 MU_GRID: Sequence[float] = (1e-4, 1e-3, 1e-2, 1e-1, 1.0)
 PSI_GRID: Sequence[float] = (1e-1, 1.0, 10.0, 100.0)
+
+
+def sweep_grid(**axes: Sequence[float]) -> Tuple[Dict[str, float], ...]:
+    """Cross product of named hyper-parameter axes -> one override dict
+    per grid point, in deterministic row-major order (the LAST named axis
+    varies fastest, like ``itertools.product``).
+
+        sweep_grid(lr=(0.01, 0.1), mu=(0.0, 1.0))
+        -> ({'lr': 0.01, 'mu': 0.0}, {'lr': 0.01, 'mu': 1.0},
+            {'lr': 0.1, 'mu': 0.0},  {'lr': 0.1, 'mu': 1.0})
+
+    Axis names are not validated here — ``sweep_engine.SweepSpec`` checks
+    them against the engine's sweepable field set.
+    """
+    if not axes:
+        return ({},)
+    # materialize each axis exactly once: a one-shot iterator must not be
+    # consumed by validation and then re-read empty by the product
+    materialized = {name: tuple(vals) for name, vals in axes.items()}
+    for name, vals in materialized.items():
+        if not vals:
+            raise ValueError(f"sweep axis {name!r} is empty")
+    names = tuple(materialized.keys())
+    return tuple(
+        {n: float(v) for n, v in zip(names, combo)}
+        for combo in itertools.product(*materialized.values()))
 
 
 def line_search(run_fn: Callable[[float], float],

@@ -64,6 +64,14 @@ ASYNC_MODES = ("deadline", "fedbuff")
 # additionally requires the algo to exist in the sync simulator)
 ASYNC_ALGOS = ("fedavg", "fedprox", "folb", "folb_het")
 
+# AsyncFLConfig's sweepable / timeline split (see
+# ``simulator.SWEEPABLE_FIELDS``): pure learning-math scalars that never
+# touch the event timeline — the plans built by ``build_deadline_plan`` /
+# ``build_fedbuff_plan`` are byte-identical across any values of these
+# fields (guarded by tests/test_sweep_engine.py), which is what makes one
+# plan reusable by a whole hyper-parameter sweep.
+SWEEPABLE_FIELDS = ("lr", "mu", "psi", "staleness_alpha")
+
 
 @dataclasses.dataclass(frozen=True)
 class AsyncFLConfig:
@@ -100,6 +108,21 @@ class AsyncFLConfig:
             agg_backend=self.agg_backend, agg_dtype=self.agg_dtype,
             seed=self.seed)
 
+    def timeline_config(self) -> "AsyncFLConfig":
+        """The jit-cache key: this config with every SWEEPABLE field
+        canonicalized (the jitted steps read those only from their traced
+        ``hypers`` operand)."""
+        return dataclasses.replace(self, lr=0.0, mu=0.0, psi=0.0,
+                                   staleness_alpha=0.0)
+
+
+def hypers_of(afl: AsyncFLConfig) -> Dict[str, jnp.ndarray]:
+    """Traced-operand view of an async config's sweepable fields.  A
+    superset of what ``simulator.fl_round`` needs (lr/mu/psi), so the same
+    dict serves the sync-parity fast path and the staleness slow steps."""
+    return {name: jnp.float32(getattr(afl, name))
+            for name in SWEEPABLE_FIELDS}
+
 
 def _concat0(a, b):
     """Concatenate two stacked pytrees along the client axis."""
@@ -107,40 +130,44 @@ def _concat0(a, b):
 
 
 def _apply_aggregation(afl: AsyncFLConfig, params, deltas, grads, gammas,
-                       tau: jnp.ndarray, mask=None, mesh=None):
+                       tau: jnp.ndarray, mask=None, mesh=None, hypers=None):
     """Staleness-discounted aggregation over the arrived set.
 
     With `mask` the slot arrays have a static width and invalid slots are
     excluded by the mask (fixed-budget contract of the event plans); an
-    all-masked budget returns `params` unchanged, bit-exact.
+    all-masked budget returns `params` unchanged, bit-exact.  ``hypers``
+    carries the traced staleness_alpha / psi (``None`` falls back to the
+    config's floats for direct callers).
     """
+    h = hypers if hypers is not None else hypers_of(afl)
+    alpha = h["staleness_alpha"]
     if afl.algo in ("fedavg", "fedprox"):
-        new = aggregation.mean_staleness(params, deltas, tau,
-                                         alpha=afl.staleness_alpha,
+        new = aggregation.mean_staleness(params, deltas, tau, alpha=alpha,
                                          mask=mask)
     elif afl.agg_backend == "flat":
         # default hot path: flat (K, D) buffers (bf16 storage unless
         # agg_dtype overrides) through the fused Pallas staleness kernel
-        # (interpret mode on CPU), D-sharded when a mesh is given
-        psi = afl.psi if afl.algo == "folb_het" else 0.0
-        pg = psi * gammas if psi != 0.0 else None
+        # (interpret mode on CPU), D-sharded when a mesh is given.  psi
+        # may be traced, so the branch is on the (static) algo only; the
+        # kernel treats psi_gammas=None as exact zeros, so psi == 0 is
+        # bit-identical either way.
+        pg = h["psi"] * gammas if afl.algo == "folb_het" else None
         if mask is not None:
             new, _ = ops.folb_staleness_slots_tree(
                 params, deltas, grads, mask, tau,
-                alpha=afl.staleness_alpha, psi_gammas=pg,
+                alpha=alpha, psi_gammas=pg,
                 buf_dtype=jnp.dtype(afl.agg_dtype), mesh=mesh)
             return new
         new, _ = ops.folb_staleness_tree(params, deltas, grads, tau,
-                                         alpha=afl.staleness_alpha,
-                                         psi_gammas=pg,
+                                         alpha=alpha, psi_gammas=pg,
                                          buf_dtype=jnp.dtype(afl.agg_dtype),
                                          mesh=mesh)
         return new
     else:
-        psi = afl.psi if afl.algo == "folb_het" else 0.0
-        new = aggregation.folb_staleness(params, deltas, grads, tau,
-                                         alpha=afl.staleness_alpha,
-                                         gammas=gammas, psi=psi, mask=mask)
+        new = aggregation.folb_staleness(
+            params, deltas, grads, tau, alpha=alpha,
+            gammas=gammas if afl.algo == "folb_het" else None,
+            psi=h["psi"], mask=mask)
     if mask is not None:  # empty budget: params unchanged, bit-exact
         alive = jnp.sum(mask) > 0.0
         new = jax.tree.map(lambda n, w: jnp.where(alive, n, w), new, params)
@@ -406,6 +433,41 @@ def build_fedbuff_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
         n_slots=pool)
 
 
+def build_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
+               sizes: np.ndarray, rounds: int, init_key, sel_probs=None):
+    """Mode dispatcher for the event-plan builders.
+
+    Plans are *engine-agnostic reusable values*: a ``DeadlinePlan`` /
+    ``FedBuffPlan`` depends only on the timeline fields of ``afl`` (never
+    on ``SWEEPABLE_FIELDS`` — guarded by tests/test_sweep_engine.py), so
+    one plan built here can be replayed by the python event loop
+    (``run_async(plan=...)``), the compiled scan
+    (``scan_engine.run_async_compiled(plan=...)``), and every member of a
+    hyper-parameter sweep (``sweep_engine.run_async_sweep_compiled``).
+    """
+    if afl.mode == "deadline":
+        return build_deadline_plan(afl, fleet, cost, sizes, rounds,
+                                   init_key, sel_probs)
+    return build_fedbuff_plan(afl, fleet, cost, sizes, rounds, init_key)
+
+
+def plan_digest(plan) -> str:
+    """Content hash of a plan (every array field's bytes + the static
+    ints, field-name tagged).  Two configs produce interchangeable plans
+    iff their digests match — the sweepable/timeline split's guard."""
+    import hashlib
+    h = hashlib.sha256()
+    for f in dataclasses.fields(plan):
+        v = getattr(plan, f.name)
+        h.update(f.name.encode())
+        if isinstance(v, np.ndarray):
+            h.update(str(v.dtype).encode() + str(v.shape).encode())
+            h.update(np.ascontiguousarray(v).tobytes())
+        else:
+            h.update(repr(v).encode())
+    return h.hexdigest()
+
+
 # ------------------------------------------------- shared jitted round steps
 
 def pool_init(model_cfg, fl: simulator.FLConfig, params, data, n_rows: int):
@@ -424,19 +486,21 @@ def pool_init(model_cfg, fl: simulator.FLConfig, params, data, n_rows: int):
 @functools.partial(jax.jit, static_argnums=(0, 1), static_argnames=("mesh",))
 def deadline_slow_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
                        ids, n_steps, arrived_mask, store_slot, due_slot,
-                       due_mask, due_tau, *, mesh=None):
+                       due_mask, due_tau, hypers=None, *, mesh=None):
     """One non-fast deadline round: compute the K dispatched updates,
     gather this round's due stragglers from the pool, stash this round's
     misses, and run the fixed-budget masked staleness aggregation.
 
-    Shared verbatim by the python event loop and the compiled scan — the
-    bit-for-bit parity between `run_async` and `run_async_compiled` rests
-    on both replaying this exact program (separate jit graphs of the
-    "same" math are not guaranteed bit-identical).
+    Shared verbatim by the python event loop, the compiled scan, and the
+    vmapped sweep engine — the bit-for-bit parity between `run_async` and
+    `run_async_compiled` rests on both replaying this exact program
+    (separate jit graphs of the "same" math are not guaranteed
+    bit-identical).  ``hypers`` carries the traced sweepable scalars.
     """
+    h = hypers if hypers is not None else hypers_of(afl)
     fl = afl.sync_config()
     deltas, grads, gammas = simulator._local_updates(
-        model_cfg, params, data, ids, n_steps, fl)
+        model_cfg, params, data, ids, n_steps, fl, h)
     pend_d, pend_g, pend_gam = pend
     # gather due rows BEFORE storing: a slot aggregated this round may be
     # reallocated to one of this round's stragglers
@@ -455,17 +519,19 @@ def deadline_slow_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
     mask = jnp.concatenate([arrived_mask.astype(jnp.float32), due_mask])
     new_params = _apply_aggregation(
         afl, params, _concat0(deltas, due_d), _concat0(grads, due_g),
-        jnp.concatenate([gammas, due_gam]), tau, mask=mask, mesh=mesh)
+        jnp.concatenate([gammas, due_gam]), tau, mask=mask, mesh=mesh,
+        hypers=h)
     return new_params, (pend_d, pend_g, pend_gam)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1))
 def fedbuff_seed_pool(model_cfg, afl: AsyncFLConfig, params, pend, data,
-                      ids, n_steps, store_slot):
+                      ids, n_steps, store_slot, hypers=None):
     """Compute the initial `concurrency` dispatches on the initial params
     and stash them in their pool slots (one batched update call)."""
+    h = hypers if hypers is not None else hypers_of(afl)
     deltas, grads, gammas = simulator._local_updates(
-        model_cfg, params, data, ids, n_steps, afl.sync_config())
+        model_cfg, params, data, ids, n_steps, afl.sync_config(), h)
     pend_d, pend_g, pend_gam = pend
     pend_d = jax.tree.map(lambda b, x: b.at[store_slot].set(x),
                           pend_d, deltas)
@@ -477,18 +543,20 @@ def fedbuff_seed_pool(model_cfg, afl: AsyncFLConfig, params, pend, data,
 
 @functools.partial(jax.jit, static_argnums=(0, 1), static_argnames=("mesh",))
 def fedbuff_round_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
-                       ids, n_steps, store_slot, flush_slot, tau, *,
-                       mesh=None):
+                       ids, n_steps, store_slot, flush_slot, tau,
+                       hypers=None, *, mesh=None):
     """One fedbuff flush round: batch-compute the M dispatches made during
     this round (all reference the current params — the server version only
     bumps at the flush), store them, then aggregate the M flushed rows.
 
     Storing happens BEFORE the flush gather: a device dispatched this
     round can arrive fast enough to be part of this very flush.  Shared
-    verbatim by the python event loop and the compiled scan.
+    verbatim by the python event loop, the compiled scan, and the vmapped
+    sweep engine.
     """
+    h = hypers if hypers is not None else hypers_of(afl)
     deltas, grads, gammas = simulator._local_updates(
-        model_cfg, params, data, ids, n_steps, afl.sync_config())
+        model_cfg, params, data, ids, n_steps, afl.sync_config(), h)
     pend_d, pend_g, pend_gam = pend
     pend_d = jax.tree.map(lambda b, x: b.at[store_slot].set(x),
                           pend_d, deltas)
@@ -498,7 +566,8 @@ def fedbuff_round_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
     flush_d = jax.tree.map(lambda x: x[flush_slot], pend_d)
     flush_g = jax.tree.map(lambda x: x[flush_slot], pend_g)
     new_params = _apply_aggregation(afl, params, flush_d, flush_g,
-                                    pend_gam[flush_slot], tau, mesh=mesh)
+                                    pend_gam[flush_slot], tau, mesh=mesh,
+                                    hypers=h)
     return new_params, (pend_d, pend_g, pend_gam)
 
 
@@ -507,13 +576,17 @@ def fedbuff_round_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
 def run_async(model_cfg, fed: FederatedData, afl: AsyncFLConfig,
               fleet: DeviceFleet, rounds: int,
               init_key: Optional[jax.Array] = None,
-              eval_every: int = 1, mesh=None) -> simulator.FedRunResult:
+              eval_every: int = 1, mesh=None,
+              plan=None) -> simulator.FedRunResult:
     """Run `rounds` server aggregations of async FOLB on the system model.
 
     In deadline mode a "round" is one deadline-barriered aggregation; in
     fedbuff mode it is one buffer flush (M arrivals).  History carries the
     simulated wall-clock at every eval point, so time-to-accuracy is
     directly comparable with fleet-timestamped synchronous runs.
+    ``plan`` replays a pre-built event plan (see ``build_plan``) instead
+    of rebuilding it — it must come from this (afl, fleet, rounds, key)
+    timeline.
     """
     assert fleet.n_devices == fed.n_devices, (fleet.n_devices, fed.n_devices)
     key = init_key if init_key is not None else jax.random.PRNGKey(afl.seed)
@@ -546,22 +619,28 @@ def run_async(model_cfg, fed: FederatedData, afl: AsyncFLConfig,
     if afl.mode == "deadline":
         params = _run_deadline(model_cfg, afl, fleet, cost, sizes, train, p,
                                key, params, rounds, eval_every, record,
-                               mesh=mesh)
+                               mesh=mesh, plan=plan)
     else:
         params = _run_fedbuff(model_cfg, afl, fleet, cost, sizes, train,
                               key, params, rounds, eval_every, record,
-                              mesh=mesh)
+                              mesh=mesh, plan=plan)
     return simulator.FedRunResult(history=hist, params=params)
 
 
 # ------------------------------------------------------------- deadline mode
 
 def _run_deadline(model_cfg, afl, fleet, cost, sizes, train, p, key, params,
-                  rounds, eval_every, record, mesh=None):
-    sync_fl = afl.sync_config()
+                  rounds, eval_every, record, mesh=None, plan=None):
+    # canonical static configs + traced hypers: every sweepable value
+    # reaches the shared jitted steps as an operand (one trace per
+    # timeline, shared across hyper-parameter values)
+    afl_t = afl.timeline_config()
+    sync_fl = afl_t.sync_config()
+    hypers = hypers_of(afl)
     sel_probs = deadline_selection_probs(afl, fleet, cost, sizes)
-    plan = build_deadline_plan(afl, fleet, cost, sizes, rounds, key,
-                               sel_probs)
+    if plan is None:
+        plan = build_deadline_plan(afl, fleet, cost, sizes, rounds, key,
+                                   sel_probs)
     pend = pool_init(model_cfg, sync_fl, params, train, plan.n_slots + 1)
     for t in range(rounds):
         n_steps = jnp.asarray(plan.n_steps[t])
@@ -577,16 +656,17 @@ def _run_deadline(model_cfg, afl, fleet, cost, sizes, train, p, key, params,
             # same key.
             params, _ = simulator.fl_round(
                 model_cfg, sync_fl, params, train, p,
-                jnp.asarray(plan.keys[t]), n_steps, sel_probs, mesh=mesh)
+                jnp.asarray(plan.keys[t]), n_steps, sel_probs, hypers,
+                mesh=mesh)
         else:
             params, pend = deadline_slow_step(
-                model_cfg, afl, params, pend, train,
+                model_cfg, afl_t, params, pend, train,
                 jnp.asarray(plan.ids[t]), n_steps,
                 jnp.asarray(plan.arrived[t], jnp.float32),
                 jnp.asarray(plan.store_slot[t]),
                 jnp.asarray(plan.due_slot[t]),
                 jnp.asarray(plan.due_mask[t]),
-                jnp.asarray(plan.due_tau[t]), mesh=mesh)
+                jnp.asarray(plan.due_tau[t]), hypers, mesh=mesh)
         if t % eval_every == 0 or t == rounds - 1:
             record(t, plan.round_end[t], int(plan.n_arrived[t]),
                    float(plan.stale_mean[t]), params)
@@ -596,20 +676,23 @@ def _run_deadline(model_cfg, afl, fleet, cost, sizes, train, p, key, params,
 # -------------------------------------------------------------- fedbuff mode
 
 def _run_fedbuff(model_cfg, afl, fleet, cost, sizes, train, key, params,
-                 rounds, eval_every, record, mesh=None):
-    plan = build_fedbuff_plan(afl, fleet, cost, sizes, rounds, key)
-    pend = pool_init(model_cfg, afl.sync_config(), params, train,
+                 rounds, eval_every, record, mesh=None, plan=None):
+    afl_t = afl.timeline_config()
+    hypers = hypers_of(afl)
+    if plan is None:
+        plan = build_fedbuff_plan(afl, fleet, cost, sizes, rounds, key)
+    pend = pool_init(model_cfg, afl_t.sync_config(), params, train,
                      plan.n_slots)
-    pend = fedbuff_seed_pool(model_cfg, afl, params, pend, train,
+    pend = fedbuff_seed_pool(model_cfg, afl_t, params, pend, train,
                              jnp.asarray(plan.seed_ids),
                              jnp.asarray(plan.seed_steps),
-                             jnp.asarray(plan.seed_slots))
+                             jnp.asarray(plan.seed_slots), hypers)
     for t in range(rounds):
         params, pend = fedbuff_round_step(
-            model_cfg, afl, params, pend, train,
+            model_cfg, afl_t, params, pend, train,
             jnp.asarray(plan.ids[t]), jnp.asarray(plan.n_steps[t]),
             jnp.asarray(plan.store_slot[t]), jnp.asarray(plan.flush_slot[t]),
-            jnp.asarray(plan.tau[t]), mesh=mesh)
+            jnp.asarray(plan.tau[t]), hypers, mesh=mesh)
         if t % eval_every == 0 or t == rounds - 1:
             record(t, plan.flush_clock[t], afl.buffer_size,
                    float(plan.stale_mean[t]), params)

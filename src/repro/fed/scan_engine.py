@@ -83,40 +83,62 @@ def draw_round_inputs(fl: simulator.FLConfig, rounds: int, init_key):
     return _split_chain(init_key, rounds), jnp.stack(steps)
 
 
+def make_sync_round_step(model_cfg, fl: simulator.FLConfig,
+                         spec: flat_lib.FlatSpec, use_so: bool, data,
+                         p_weights, sel_probs, mesh):
+    """The per-round flat-carry transition, shared VERBATIM by the solo
+    scan (``scan_rounds``) and the sweep engine (which vmaps it over a
+    stacked hypers/carry axis): unravel → ``fl_round`` → optional
+    ``server_round_update`` → ravel.  ``fl`` must be the canonical
+    ``timeline_config()``; every sweepable scalar arrives via ``hypers``.
+    """
+    so_cfg = sopt.ServerOptConfig(kind=fl.server_opt, lr=1.0)
+
+    def step(w_flat, so_state, sub, n_steps, hypers):
+        params = flat_lib.unravel(spec, w_flat)
+        new_params, diag = simulator.fl_round(
+            model_cfg, fl, params, data, p_weights, sub, n_steps,
+            sel_probs, hypers, mesh=mesh)
+        if use_so:
+            new_params, so_state = sopt.server_round_update(
+                so_cfg, params, so_state, new_params, hypers["server_lr"])
+        w_new = flat_lib.ravel(spec, new_params)
+        ids = {"ids": diag["ids"]}
+        if "ids2" in diag:
+            ids["ids2"] = diag["ids2"]
+        return w_new, so_state, ids
+
+    return step
+
+
 @functools.partial(jax.jit, static_argnums=(0, 1, 2),
                    static_argnames=("mesh",))
 def scan_rounds(model_cfg, fl: simulator.FLConfig, spec: flat_lib.FlatSpec,
-                w0_flat, data, p_weights, keys, steps, sel_probs=None,
-                so_state0=None, *, mesh=None):
+                w0_flat, data, p_weights, keys, steps, hypers,
+                sel_probs=None, so_state0=None, *, mesh=None):
     """The whole-run XLA program: scan ``fl_round`` over pre-drawn inputs.
 
     Returns (final flat params, ys) where ys carries the per-round
     post-update flat parameter trajectory and the sampled device ids.
-    ``sel_probs``/``mesh`` forward to ``fl_round`` (static selection
-    distribution; D-sharded flat aggregation).  With a FedOpt-style
-    server optimizer configured, ``so_state0`` seeds the optimizer state
-    in the scan carry and each round applies the same jitted
-    ``server_round_update`` the python loop uses.
+    ``fl`` is the canonical timeline config; ``hypers`` the traced
+    sweepable scalars (``simulator.hypers_of``).  ``sel_probs``/``mesh``
+    forward to ``fl_round`` (static selection distribution; D-sharded
+    flat aggregation).  With a FedOpt-style server optimizer configured,
+    ``so_state0`` seeds the optimizer state in the scan carry and each
+    round applies the same jitted ``server_round_update`` the python loop
+    uses.
     """
     # the caller encodes the use-a-server-optimizer decision in so_state0
     # (one source of truth with run_federated_compiled's predicate)
-    so_cfg = sopt.ServerOptConfig(kind=fl.server_opt, lr=fl.server_lr)
     use_so = so_state0 is not None
+    step = make_sync_round_step(model_cfg, fl, spec, use_so, data,
+                                p_weights, sel_probs, mesh)
 
     def body(carry, xs):
         w_flat, so_state = carry if use_so else (carry, None)
         sub, n_steps = xs
-        params = flat_lib.unravel(spec, w_flat)
-        new_params, diag = simulator.fl_round(
-            model_cfg, fl, params, data, p_weights, sub, n_steps,
-            sel_probs, mesh=mesh)
-        if use_so:
-            new_params, so_state = sopt.server_round_update(
-                so_cfg, params, so_state, new_params)
-        w_new = flat_lib.ravel(spec, new_params)
-        ys = {"params": w_new, "ids": diag["ids"]}
-        if "ids2" in diag:
-            ys["ids2"] = diag["ids2"]
+        w_new, so_state, ids = step(w_flat, so_state, sub, n_steps, hypers)
+        ys = {"params": w_new, **ids}
         return ((w_new, so_state) if use_so else w_new), ys
 
     carry0 = (w0_flat, so_state0) if use_so else w0_flat
@@ -151,6 +173,58 @@ def latency_selection_probs(model_cfg, fed: FederatedData, fl, fleet,
         jnp.ones((fleet.n_devices,)), exp_lat, deadline)
 
 
+def sync_clock_replay(model_cfg, params, fed: FederatedData, algo: str,
+                      fleet, ids_all, ids2_all, steps_np,
+                      rounds: int) -> np.ndarray:
+    """Replay the fleet wall-clock over a whole run's sampled ids via the
+    same ``sync_round_clock`` the python loop advances round by round.
+    The clock depends only on the timeline (ids/steps/fleet/cost), never
+    on sweepable hyper-parameters — one replay serves every member of a
+    sweep."""
+    cost, probe_cost, sizes = simulator.fleet_cost_setup(
+        model_cfg, params, fed, algo)
+    clocks = np.empty(rounds, np.float64)
+    clock_now = 0.0
+    for t in range(rounds):
+        clock_now = simulator.sync_round_clock(
+            fleet, cost, probe_cost, sizes, algo, ids_all[t],
+            None if ids2_all is None else ids2_all[t],
+            steps_np[t], clock_now)
+        clocks[t] = clock_now
+    return clocks
+
+
+def eval_history_replay(model_cfg, spec: flat_lib.FlatSpec, train, test, p,
+                        params_traj, rounds: int, eval_every: int,
+                        clocks=None, n_arrived=None, stale_mean=None):
+    """Post-hoc history evaluation on an emitted (rounds, D_pad) parameter
+    trajectory through the same jitted ``eval_global`` every engine uses —
+    shared by the solo compiled runs (sync and async) and, per member, the
+    sweep engine.  ``clocks``/``n_arrived``/``stale_mean`` are optional
+    per-round timeline series to record alongside (the async engines pass
+    all three from their plan)."""
+    hist = {"round": [], "train_loss": [], "test_acc": [], "train_acc": []}
+    extras = {"wall_clock": clocks, "n_arrived": n_arrived,
+              "stale_mean": stale_mean}
+    for k, series in extras.items():
+        if series is not None:
+            hist[k] = []
+    for t in range(rounds):
+        if t % eval_every == 0 or t == rounds - 1:
+            params_t = flat_lib.unravel(spec, params_traj[t])
+            tr_loss, tr_acc = simulator.eval_global(model_cfg, params_t,
+                                                    train, p)
+            _, te_acc = simulator.eval_global(model_cfg, params_t, test, p)
+            hist["round"].append(t)
+            hist["train_loss"].append(float(tr_loss))
+            hist["train_acc"].append(float(tr_acc))
+            hist["test_acc"].append(float(te_acc))
+            for k, series in extras.items():
+                if series is not None:
+                    hist[k].append(float(series[t]))
+    return hist
+
+
 def run_federated_compiled(model_cfg, fed: FederatedData,
                            fl: simulator.FLConfig, rounds: int,
                            init_key: Optional[jax.Array] = None,
@@ -177,81 +251,73 @@ def run_federated_compiled(model_cfg, fed: FederatedData,
     spec = flat_lib.spec_of(params)
     w0 = flat_lib.ravel(spec, params)
     keys, steps = draw_round_inputs(fl, rounds, key)
-    so_cfg = sopt.ServerOptConfig(kind=fl.server_opt, lr=fl.server_lr)
+    so_cfg = sopt.ServerOptConfig(kind=fl.server_opt, lr=1.0)
     use_so = fl.server_opt != "sgd" or fl.server_lr != 1.0
     so_state0 = sopt.init_server_state(so_cfg, params) if use_so else None
-    w_final, ys = scan_rounds(model_cfg, fl, spec, w0, train, p, keys, steps,
+    w_final, ys = scan_rounds(model_cfg, fl.timeline_config(), spec, w0,
+                              train, p, keys, steps, simulator.hypers_of(fl),
                               sel_probs, so_state0, mesh=mesh)
 
-    hist = {"round": [], "train_loss": [], "test_acc": [], "train_acc": []}
-    cost = probe_cost = sizes = None
+    clocks = None
     if fleet is not None:
         assert fleet.n_devices == fed.n_devices, \
             (fleet.n_devices, fed.n_devices)
-        cost, probe_cost, sizes = simulator.fleet_cost_setup(
-            model_cfg, params, fed, fl.algo)
-        hist["wall_clock"] = []
-    clock_now = 0.0
-    ids_all = np.asarray(ys["ids"])
-    ids2_all = np.asarray(ys["ids2"]) if "ids2" in ys else None
-    steps_np = np.asarray(steps)
-    for t in range(rounds):
-        if fleet is not None:
-            clock_now = simulator.sync_round_clock(
-                fleet, cost, probe_cost, sizes, fl.algo, ids_all[t],
-                None if ids2_all is None else ids2_all[t],
-                steps_np[t], clock_now)
-        if t % eval_every == 0 or t == rounds - 1:
-            params_t = flat_lib.unravel(spec, ys["params"][t])
-            tr_loss, tr_acc = simulator.eval_global(model_cfg, params_t,
-                                                    train, p)
-            _, te_acc = simulator.eval_global(model_cfg, params_t, test, p)
-            hist["round"].append(t)
-            hist["train_loss"].append(float(tr_loss))
-            hist["train_acc"].append(float(tr_acc))
-            hist["test_acc"].append(float(te_acc))
-            if fleet is not None:
-                hist["wall_clock"].append(clock_now)
+        clocks = sync_clock_replay(
+            model_cfg, params, fed, fl.algo, fleet, np.asarray(ys["ids"]),
+            np.asarray(ys["ids2"]) if "ids2" in ys else None,
+            np.asarray(steps), rounds)
+    hist = eval_history_replay(model_cfg, spec, train, test, p,
+                               ys["params"], rounds, eval_every, clocks)
     return simulator.FedRunResult(history=hist,
                                   params=flat_lib.unravel(spec, w_final))
 
 
 # --------------------------------------------------- compiled async engines
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2),
-                   static_argnames=("mesh",))
-def scan_async_deadline(model_cfg, afl, spec: flat_lib.FlatSpec, w0_flat,
-                        pend0, data, p_weights, keys, ids, steps, arrived,
-                        store_slot, due_slot, due_mask, due_tau, fast,
-                        sel_probs=None, *, mesh=None):
-    """Whole-run deadline-mode XLA program.
-
-    Each scan step replays one planned round: sync-parity fast rounds run
-    the very same jitted ``simulator.fl_round`` the python loop calls
-    (under ``lax.cond``), every other round runs the shared
-    ``async_engine.deadline_slow_step`` against the pending-straggler slot
-    pool carried through the scan.
-    """
+def make_deadline_step(model_cfg, afl, spec: flat_lib.FlatSpec, data,
+                       p_weights, sel_probs, mesh):
+    """One planned deadline round as a flat-carry transition, shared
+    VERBATIM by the solo scan and the vmapped sweep engine: sync-parity
+    fast rounds run the same jitted ``simulator.fl_round`` the python
+    loop calls (under ``lax.cond``), every other round runs the shared
+    ``async_engine.deadline_slow_step`` against the pending-straggler
+    slot pool.  ``afl`` must be the canonical ``timeline_config()``."""
     fl = afl.sync_config()
 
-    def body(carry, xs):
-        w_flat, pend = carry
+    def step(w_flat, pend, xs, hypers):
         sub, ids_t, steps_t, arr_t, store_t, due_s, due_m, due_t, fast_t = xs
         params = flat_lib.unravel(spec, w_flat)
 
         def fast_fn(params, pend):
             new, _ = simulator.fl_round(model_cfg, fl, params, data,
                                         p_weights, sub, steps_t, sel_probs,
-                                        mesh=mesh)
+                                        hypers, mesh=mesh)
             return flat_lib.ravel(spec, new), pend
 
         def slow_fn(params, pend):
             new, pend2 = async_lib.deadline_slow_step(
                 model_cfg, afl, params, pend, data, ids_t, steps_t, arr_t,
-                store_t, due_s, due_m, due_t, mesh=mesh)
+                store_t, due_s, due_m, due_t, hypers, mesh=mesh)
             return flat_lib.ravel(spec, new), pend2
 
-        w_new, pend = jax.lax.cond(fast_t, fast_fn, slow_fn, params, pend)
+        return jax.lax.cond(fast_t, fast_fn, slow_fn, params, pend)
+
+    return step
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2),
+                   static_argnames=("mesh",))
+def scan_async_deadline(model_cfg, afl, spec: flat_lib.FlatSpec, w0_flat,
+                        pend0, data, p_weights, keys, ids, steps, arrived,
+                        store_slot, due_slot, due_mask, due_tau, fast,
+                        hypers, sel_probs=None, *, mesh=None):
+    """Whole-run deadline-mode XLA program: scan ``make_deadline_step``
+    over the planned timeline, carrying the straggler pool."""
+    step = make_deadline_step(model_cfg, afl, spec, data, p_weights,
+                              sel_probs, mesh)
+
+    def body(carry, xs):
+        w_new, pend = step(carry[0], carry[1], xs, hypers)
         return (w_new, pend), w_new
 
     (w_final, _), ws = jax.lax.scan(
@@ -261,22 +327,33 @@ def scan_async_deadline(model_cfg, afl, spec: flat_lib.FlatSpec, w0_flat,
     return w_final, ws
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2),
-                   static_argnames=("mesh",))
-def scan_async_fedbuff(model_cfg, afl, spec: flat_lib.FlatSpec, w0_flat,
-                       pend0, data, ids, steps, store_slot, flush_slot, tau,
-                       *, mesh=None):
-    """Whole-run fedbuff XLA program: scan the shared
-    ``async_engine.fedbuff_round_step`` over the planned flush schedule,
-    carrying the in-flight update pool."""
-    def body(carry, xs):
-        w_flat, pend = carry
+def make_fedbuff_step(model_cfg, afl, spec: flat_lib.FlatSpec, data, mesh):
+    """One planned fedbuff flush as a flat-carry transition (shared by the
+    solo scan and the vmapped sweep engine).  ``afl`` must be the
+    canonical ``timeline_config()``."""
+    def step(w_flat, pend, xs, hypers):
         ids_t, steps_t, store_t, flush_t, tau_t = xs
         params = flat_lib.unravel(spec, w_flat)
         new, pend = async_lib.fedbuff_round_step(
             model_cfg, afl, params, pend, data, ids_t, steps_t, store_t,
-            flush_t, tau_t, mesh=mesh)
-        w_new = flat_lib.ravel(spec, new)
+            flush_t, tau_t, hypers, mesh=mesh)
+        return flat_lib.ravel(spec, new), pend
+
+    return step
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2),
+                   static_argnames=("mesh",))
+def scan_async_fedbuff(model_cfg, afl, spec: flat_lib.FlatSpec, w0_flat,
+                       pend0, data, ids, steps, store_slot, flush_slot, tau,
+                       hypers, *, mesh=None):
+    """Whole-run fedbuff XLA program: scan the shared
+    ``async_engine.fedbuff_round_step`` over the planned flush schedule,
+    carrying the in-flight update pool."""
+    step = make_fedbuff_step(model_cfg, afl, spec, data, mesh)
+
+    def body(carry, xs):
+        w_new, pend = step(carry[0], carry[1], xs, hypers)
         return (w_new, pend), w_new
 
     (w_final, _), ws = jax.lax.scan(
@@ -288,7 +365,7 @@ def run_async_compiled(model_cfg, fed: FederatedData, afl,
                        fleet, rounds: int,
                        init_key: Optional[jax.Array] = None,
                        eval_every: int = 1,
-                       mesh=None) -> simulator.FedRunResult:
+                       mesh=None, plan=None) -> simulator.FedRunResult:
     """Drop-in replacement for ``async_engine.run_async``: the virtual-
     event scan.
 
@@ -297,7 +374,10 @@ def run_async_compiled(model_cfg, fed: FederatedData, afl,
     functions the python event loop uses, and history evaluation replays
     outside the scan on the emitted parameter trajectory — bit-for-bit
     identical history (params, ids, staleness means, wall clock) for both
-    deadline and fedbuff modes (tests/test_async_scan.py).
+    deadline and fedbuff modes (tests/test_async_scan.py).  ``plan``
+    replays a pre-built event plan (``async_engine.build_plan``) instead
+    of rebuilding it — plans depend only on timeline fields, so one plan
+    serves any sweepable-hyper variation of ``afl``.
     """
     assert fleet.n_devices == fed.n_devices, (fleet.n_devices, fed.n_devices)
     key = init_key if init_key is not None else jax.random.PRNGKey(afl.seed)
@@ -310,57 +390,49 @@ def run_async_compiled(model_cfg, fed: FederatedData, afl,
     sizes = np.asarray(fed.mask.sum(axis=1))
     cost = round_cost_for(model_cfg, params,
                           uploads_gradient="folb" in afl.algo)
-    sync_fl = afl.sync_config()
+    afl_t = afl.timeline_config()
+    sync_fl = afl_t.sync_config()
+    hypers = async_lib.hypers_of(afl)
     spec = flat_lib.spec_of(params)
     w0 = flat_lib.ravel(spec, params)
 
     if afl.mode == "deadline":
         sel_probs = async_lib.deadline_selection_probs(afl, fleet, cost,
                                                        sizes)
-        plan = async_lib.build_deadline_plan(afl, fleet, cost, sizes,
-                                             rounds, key, sel_probs)
+        if plan is None:
+            plan = async_lib.build_deadline_plan(afl, fleet, cost, sizes,
+                                                 rounds, key, sel_probs)
         pend0 = async_lib.pool_init(model_cfg, sync_fl, params, train,
                                     plan.n_slots + 1)
         w_final, ws = scan_async_deadline(
-            model_cfg, afl, spec, w0, pend0, train, p,
+            model_cfg, afl_t, spec, w0, pend0, train, p,
             jnp.asarray(plan.keys), jnp.asarray(plan.ids),
             jnp.asarray(plan.n_steps),
             jnp.asarray(plan.arrived, jnp.float32),
             jnp.asarray(plan.store_slot), jnp.asarray(plan.due_slot),
             jnp.asarray(plan.due_mask), jnp.asarray(plan.due_tau),
-            jnp.asarray(plan.fast), sel_probs, mesh=mesh)
+            jnp.asarray(plan.fast), hypers, sel_probs, mesh=mesh)
         clocks, n_arr = plan.round_end, plan.n_arrived
     else:
-        plan = async_lib.build_fedbuff_plan(afl, fleet, cost, sizes, rounds,
-                                            key)
+        if plan is None:
+            plan = async_lib.build_fedbuff_plan(afl, fleet, cost, sizes,
+                                                rounds, key)
         pend0 = async_lib.pool_init(model_cfg, sync_fl, params, train,
                                     plan.n_slots)
         pend0 = async_lib.fedbuff_seed_pool(
-            model_cfg, afl, params, pend0, train,
+            model_cfg, afl_t, params, pend0, train,
             jnp.asarray(plan.seed_ids), jnp.asarray(plan.seed_steps),
-            jnp.asarray(plan.seed_slots))
+            jnp.asarray(plan.seed_slots), hypers)
         w_final, ws = scan_async_fedbuff(
-            model_cfg, afl, spec, w0, pend0, train,
+            model_cfg, afl_t, spec, w0, pend0, train,
             jnp.asarray(plan.ids), jnp.asarray(plan.n_steps),
             jnp.asarray(plan.store_slot), jnp.asarray(plan.flush_slot),
-            jnp.asarray(plan.tau), mesh=mesh)
+            jnp.asarray(plan.tau), hypers, mesh=mesh)
         clocks = plan.flush_clock
         n_arr = np.full(rounds, afl.buffer_size)
 
-    hist = {"round": [], "wall_clock": [], "train_loss": [], "train_acc": [],
-            "test_acc": [], "n_arrived": [], "stale_mean": []}
-    for t in range(rounds):
-        if t % eval_every == 0 or t == rounds - 1:
-            params_t = flat_lib.unravel(spec, ws[t])
-            tr_loss, tr_acc = simulator.eval_global(model_cfg, params_t,
-                                                    train, p)
-            _, te_acc = simulator.eval_global(model_cfg, params_t, test, p)
-            hist["round"].append(t)
-            hist["wall_clock"].append(float(clocks[t]))
-            hist["train_loss"].append(float(tr_loss))
-            hist["train_acc"].append(float(tr_acc))
-            hist["test_acc"].append(float(te_acc))
-            hist["n_arrived"].append(float(n_arr[t]))
-            hist["stale_mean"].append(float(plan.stale_mean[t]))
+    hist = eval_history_replay(model_cfg, spec, train, test, p, ws, rounds,
+                               eval_every, clocks=clocks, n_arrived=n_arr,
+                               stale_mean=plan.stale_mean)
     return simulator.FedRunResult(history=hist,
                                   params=flat_lib.unravel(spec, w_final))

@@ -46,33 +46,39 @@ def init_server_state(cfg: ServerOptConfig, params: Params) -> Dict:
 
 
 def apply_round_delta(cfg: ServerOptConfig, params: Params, state: Dict,
-                      round_delta: Params) -> Tuple[Params, Dict]:
+                      round_delta: Params, lr=None) -> Tuple[Params, Dict]:
     """w <- ServerOpt(w, -Δ): the aggregated round delta acts as the
-    negative pseudo-gradient."""
+    negative pseudo-gradient.  ``lr`` (traced operand) overrides
+    ``cfg.lr`` — the server step size is a sweepable hyper-parameter, so
+    the engines keep it out of the static config (see
+    ``simulator.SWEEPABLE_FIELDS``)."""
     _, update_fn = OPTIMIZERS[cfg.kind]
+    lr_v = cfg.lr if lr is None else lr
     pseudo_grad = tree.tree_scale(round_delta, -1.0)
     if cfg.kind == "momentum":
-        return update_fn(params, pseudo_grad, state, cfg.lr, cfg.beta)
-    return update_fn(params, pseudo_grad, state, cfg.lr)
+        return update_fn(params, pseudo_grad, state, lr_v, cfg.beta)
+    return update_fn(params, pseudo_grad, state, lr_v)
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
 def server_round_update(cfg: ServerOptConfig, params: Params, state: Dict,
-                        new_params: Params) -> Tuple[Params, Dict]:
+                        new_params: Params, lr=None) -> Tuple[Params, Dict]:
     """Jitted server-optimizer advance from a raw round result.
 
     Computes the round delta with the python loop's exact fp32 cast
     sequence (``new.astype(f32) − w.astype(f32)``) and feeds it through
     ``apply_round_delta`` — as ONE jitted unit shared verbatim by
-    ``simulator.run_federated`` and the scan engine.  XLA fuses e.g. the
-    momentum update ``βm + (1−β)g`` into an FMA whose bits differ from an
-    eager op-by-op application, so bit-for-bit loop/scan parity requires
-    both engines to run this same compiled program.
+    ``simulator.run_federated``, the scan engine, and the vmapped sweep
+    engine.  XLA fuses e.g. the momentum update ``βm + (1−β)g`` into an
+    FMA whose bits differ from an eager op-by-op application, so
+    bit-for-bit loop/scan parity requires both engines to run this same
+    compiled program.  ``lr`` is the traced server step size (the engines
+    pass it so a server-lr sweep shares one trace).
     """
     delta = jax.tree.map(
         lambda n, w: n.astype(jnp.float32) - w.astype(jnp.float32),
         new_params, params)
-    return apply_round_delta(cfg, params, state, delta)
+    return apply_round_delta(cfg, params, state, delta, lr)
 
 
 def folb_delta(params: Params, deltas, grads, gammas=None,

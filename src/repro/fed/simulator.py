@@ -38,6 +38,18 @@ ALGOS = ("fedavg", "fedprox", "fednu_direct", "fednu_signed", "fednu_norm",
 AGG_BACKENDS = ("flat", "pytree")
 AGG_DTYPES = ("bfloat16", "float32")
 
+# The sweepable / timeline split (enforced at trace time): these FLConfig
+# fields are pure *learning-math* scalars — they never touch device
+# selection, local-step draws, the fleet timeline, or the traced program
+# STRUCTURE — so the jitted round steps take them as traced operands (a
+# `hypers` dict) instead of baking them into the static config.  Two
+# configs differing only in sweepable fields therefore share one compiled
+# program (`timeline_config()` canonicalizes them for the jit cache), and
+# the sweep engine (`repro.fed.sweep_engine`) can vmap the same steps over
+# a stacked hypers axis.  Every OTHER field is timeline-affecting or
+# program-static and must stay constant across a sweep.
+SWEEPABLE_FIELDS = ("lr", "mu", "psi", "server_lr")
+
 
 def mean_local_steps(cfg) -> float:
     """Expected local-step budget under the paper's capability protocol
@@ -74,6 +86,22 @@ class FLConfig:
         assert self.agg_backend in AGG_BACKENDS, self.agg_backend
         assert self.agg_dtype in AGG_DTYPES, self.agg_dtype
 
+    def timeline_config(self) -> "FLConfig":
+        """The jit-cache key: this config with every SWEEPABLE field
+        canonicalized.  The jitted round steps read sweepable values only
+        from their traced ``hypers`` operand, so two configs that differ
+        in sweepables map to the same static argument — one compiled
+        program serves the whole sweep."""
+        return dataclasses.replace(self, lr=0.0, mu=0.0, psi=0.0,
+                                   server_lr=1.0)
+
+
+def hypers_of(cfg: "FLConfig") -> Dict[str, jnp.ndarray]:
+    """The traced-operand view of a config's sweepable fields (f32
+    scalars, explicitly typed so the x64 CI leg doesn't promote them)."""
+    return {name: jnp.float32(getattr(cfg, name))
+            for name in SWEEPABLE_FIELDS}
+
 
 def local_step_draws(t: int, k: int, cfg) -> jnp.ndarray:
     """Device-capability protocol (paper Sec. VI-A): per-round local-step
@@ -108,16 +136,21 @@ def _global_grad(grads_all, p_weights):
         grads_all)
 
 
-def _local_updates(model_cfg, params, data, ids, n_steps, fl: FLConfig):
+def _local_updates(model_cfg, params, data, ids, n_steps, fl: FLConfig,
+                   hypers=None):
     """vmapped device updates for the sampled multiset -> stacked
-    (deltas, grads, gammas)."""
+    (deltas, grads, gammas).  ``hypers`` carries the traced lr/mu (the
+    engines always pass it; ``None`` falls back to the config's floats for
+    direct callers and shape-only ``eval_shape`` probes)."""
     batch = _client_batch(data, ids)
+    lr = fl.lr if hypers is None else hypers["lr"]
+    mu = fl.mu if hypers is None else hypers["mu"]
 
     def one(x, y, m, steps):
         return solvers.local_update(
             lambda p, b: small.small_loss(model_cfg, p, b),
             params, {"x": x, "y": y, "mask": m},
-            lr=fl.lr, mu=fl.mu, n_steps=steps, max_steps=fl.max_local_steps)
+            lr=lr, mu=mu, n_steps=steps, max_steps=fl.max_local_steps)
 
     return jax.vmap(one)(batch["x"], batch["y"], batch["mask"], n_steps)
 
@@ -125,14 +158,19 @@ def _local_updates(model_cfg, params, data, ids, n_steps, fl: FLConfig):
 @functools.partial(jax.jit, static_argnums=(0, 1),
                    static_argnames=("mesh",))
 def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps,
-             sel_probs=None, *, mesh=None):
+             sel_probs=None, hypers=None, *, mesh=None):
     """One communication round.  Returns (new_params, diagnostics).
 
     ``sel_probs`` overrides the uniform selection distribution (e.g. the
     pre-computed static latency-aware probabilities of a deadline fleet);
-    the fednu baselines ignore it (they derive their own).  ``mesh``
-    (static) shards the flat aggregation's D axis over a device mesh.
+    the fednu baselines ignore it (they derive their own).  ``hypers`` is
+    the traced-operand view of the sweepable fields (see ``hypers_of``);
+    the engines always pass it so sweepable values never enter the trace
+    as constants, and any dict containing lr/mu/psi works (extra keys
+    ride along unused).  ``mesh`` (static) shards the flat aggregation's
+    D axis over a device mesh.
     """
+    h = hypers if hypers is not None else hypers_of(fl)
     k_sel, k_sel2 = jax.random.split(key)
     N = data["x"].shape[0]
     K = fl.n_selected
@@ -150,7 +188,7 @@ def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps,
             probs = selection.lb_near_optimal_probs(inner)
         ids = selection.sample_multiset(k_sel, probs, K)
         deltas, grads, gammas = _local_updates(
-            model_cfg, params, data, ids, n_steps, fl)
+            model_cfg, params, data, ids, n_steps, fl, h)
         if fl.algo == "fednu_signed":
             new = aggregation.signed_aggregate(params, deltas, grads, gg)
         else:
@@ -162,7 +200,7 @@ def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps,
     probs = selection.uniform_probs(N) if sel_probs is None else sel_probs
     ids = selection.sample_multiset(k_sel, probs, K)
     deltas, grads, gammas = _local_updates(
-        model_cfg, params, data, ids, n_steps, fl)
+        model_cfg, params, data, ids, n_steps, fl, h)
 
     if fl.algo in ("fedavg", "fedprox"):
         new = aggregation.fedavg_aggregate(params, deltas)
@@ -171,7 +209,7 @@ def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps,
         # (bf16 grads/deltas unless agg_dtype says otherwise) and run the
         # fused Pallas aggregation (2 streaming passes instead of ~2K
         # leafwise reductions), D-sharded when a mesh is given
-        pg = fl.psi * gammas if fl.algo == "folb_het" else None
+        pg = h["psi"] * gammas if fl.algo == "folb_het" else None
         new, _ = ops.folb_aggregate_tree(params, deltas, grads,
                                          psi_gammas=pg,
                                          buf_dtype=jnp.dtype(fl.agg_dtype),
@@ -188,7 +226,7 @@ def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps,
         new = aggregation.folb_two_set(params, deltas, grads, grads_s2)
         diag["ids2"] = ids2
     elif fl.algo == "folb_het":
-        new = aggregation.folb_het(params, deltas, grads, gammas, fl.psi)
+        new = aggregation.folb_het(params, deltas, grads, gammas, h["psi"])
     else:
         raise ValueError(fl.algo)
     diag["gamma_mean"] = jnp.mean(gammas)
@@ -317,14 +355,19 @@ def run_federated(model_cfg, fed: FederatedData, fl: FLConfig, rounds: int,
         hist["wall_clock"] = []
     clock_now = 0.0
     from repro.fed import server_opt as sopt
-    so_cfg = sopt.ServerOptConfig(kind=fl.server_opt, lr=fl.server_lr)
+    # sweepable scalars ride as traced operands against the canonical
+    # static config: configs differing only in lr/mu/psi/server_lr share
+    # one compiled round program (and the sweep engine vmaps the same one)
+    fl_t = fl.timeline_config()
+    hypers = hypers_of(fl)
+    so_cfg = sopt.ServerOptConfig(kind=fl.server_opt, lr=1.0)
     so_state = sopt.init_server_state(so_cfg, params)
     use_server_opt = fl.server_opt != "sgd" or fl.server_lr != 1.0
     for t in range(rounds):
         n_steps = local_step_draws(t, fl.n_selected, fl)
         key, sub = jax.random.split(key)
-        new_params, diag = fl_round(model_cfg, fl, params, train, p, sub,
-                                    n_steps, sel_probs, mesh=mesh)
+        new_params, diag = fl_round(model_cfg, fl_t, params, train, p, sub,
+                                    n_steps, sel_probs, hypers, mesh=mesh)
         if fleet is not None:
             clock_now = sync_round_clock(
                 fleet, cost, probe_cost, sizes, fl.algo,
@@ -335,7 +378,7 @@ def run_federated(model_cfg, fed: FederatedData, fl: FLConfig, rounds: int,
             # one shared jitted unit (delta cast sequence + optimizer) so
             # the scan engine can replay it bit-for-bit
             params, so_state = sopt.server_round_update(
-                so_cfg, params, so_state, new_params)
+                so_cfg, params, so_state, new_params, hypers["server_lr"])
         else:
             params = new_params
         if t % eval_every == 0 or t == rounds - 1:

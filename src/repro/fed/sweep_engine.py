@@ -1,0 +1,397 @@
+"""Plan-reuse sweep engine: batched compiled runs over ONE fleet timeline.
+
+FOLB's tuning knobs — lr, μ (prox weight), ψ (heterogeneity temperature),
+the staleness discount α, the server-optimizer step size — are pure
+learning-math scalars: they never touch device selection, the local-step
+draws, or the simulated fleet timeline.  A hyper-parameter sweep therefore
+shares everything that is expensive to build or compile:
+
+  * the event plan (``async_engine.build_deadline_plan`` /
+    ``build_fedbuff_plan``) and the pre-drawn key chain are built ONCE and
+    replayed by every sweep member;
+  * the learning math for all S configs runs in a SINGLE XLA program: the
+    same per-round step functions the solo engines scan
+    (``scan_engine.make_sync_round_step`` / ``make_deadline_step`` /
+    ``make_fedbuff_step``, which call the shared jitted ``fl_round``,
+    ``deadline_slow_step``, ``fedbuff_round_step`` and
+    ``server_round_update``) are vmapped over a stacked (S, D) flat-param
+    carry — plus the (S,)-stacked hypers and, for the async modes, the
+    (S, P, ...) pending pools — inside one ``lax.scan`` over rounds.
+
+Per-config host cost drops to ~zero (no per-member plan building, input
+drawing, or dispatch) and the compile cost is amortized S-fold.  Because
+the vmapped program applies the identical op sequence per member — the
+sweepable scalars are traced *operands* everywhere (see
+``simulator.SWEEPABLE_FIELDS``), never trace constants — sweep member i
+is **bit-for-bit identical** to a solo ``run_federated_compiled`` /
+``run_async_compiled`` run of config i: params, history, wall clock,
+arrival counts, staleness means (property-tested across engines, grids
+and agg dtypes in tests/test_sweep_engine.py).
+
+The sweepable/timeline split is *enforced*: ``SweepSpec`` rejects any
+override of a field that could alter the shared timeline or the traced
+program structure (deadline, fleet seed, concurrency, K, algo, ...), so
+future config fields cannot silently corrupt plan reuse.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flat as flat_lib
+from repro.core import tuning
+from repro.data.federated import FederatedData
+from repro.fed import async_engine as async_lib
+from repro.fed import scan_engine
+from repro.fed import simulator
+from repro.fed import server_opt as sopt
+from repro.models import small
+from repro.sysmodel import round_cost_for
+
+AnyConfig = Union[simulator.FLConfig, async_lib.AsyncFLConfig]
+
+# selection of the fednu baselines depends on the current parameters, so
+# sweep members would sample different devices — no shared timeline exists
+_UNSWEEPABLE_ALGOS = ("fednu_direct", "fednu_signed", "fednu_norm")
+
+
+def sweepable_fields(cfg: AnyConfig) -> Tuple[str, ...]:
+    """The sweepable field set for a config instance (engine-dependent)."""
+    if isinstance(cfg, async_lib.AsyncFLConfig):
+        return async_lib.SWEEPABLE_FIELDS
+    return simulator.SWEEPABLE_FIELDS
+
+
+def _uses_server_opt(cfg: simulator.FLConfig) -> bool:
+    return cfg.server_opt != "sgd" or cfg.server_lr != 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """S config variations of one base config, sharing one timeline.
+
+    ``overrides`` holds one mapping per sweep member; keys must come from
+    the engine's sweepable field set (``simulator.SWEEPABLE_FIELDS`` /
+    ``async_engine.SWEEPABLE_FIELDS``).  Overriding any other field —
+    deadline, seed, n_selected, concurrency, algo, agg dtype, ... —
+    raises: those fields change the fleet timeline or the traced program
+    structure, so they cannot vary inside one batched program.
+
+    Build grids with ``SweepSpec.from_grid(base, lr=(...), mu=(...))``
+    (cross product via ``core.tuning.sweep_grid``) or pass explicit
+    member dicts.
+    """
+    base: AnyConfig
+    overrides: Tuple[Mapping[str, float], ...]
+
+    def __post_init__(self):
+        if not self.overrides:
+            raise ValueError("SweepSpec needs at least one member")
+        object.__setattr__(self, "overrides",
+                           tuple(dict(o) for o in self.overrides))
+        allowed = set(sweepable_fields(self.base))
+        for i, o in enumerate(self.overrides):
+            bad = set(o) - allowed
+            if bad:
+                raise ValueError(
+                    f"member {i} sweeps non-sweepable field(s) "
+                    f"{sorted(bad)}: these are timeline-affecting or "
+                    f"program-static — only {sorted(allowed)} may vary "
+                    f"within one sweep")
+        if self.base.algo in _UNSWEEPABLE_ALGOS:
+            raise ValueError(
+                f"algo {self.base.algo!r} derives its selection "
+                f"distribution from the current parameters — sweep "
+                f"members would sample different devices and share no "
+                f"timeline")
+        if isinstance(self.base, simulator.FLConfig):
+            # server_opt='sgd' with server_lr == 1.0 runs a structurally
+            # different program (no optimizer state in the carry); a sweep
+            # is one program, so the predicate must agree across members
+            flags = {_uses_server_opt(m) for m in self.members()}
+            if len(flags) > 1:
+                raise ValueError(
+                    "server_lr sweep mixes the plain path (sgd @ lr=1.0) "
+                    "with the server-optimizer path — use a non-sgd "
+                    "server_opt or keep every member's server_lr != 1.0")
+
+    @classmethod
+    def from_grid(cls, base: AnyConfig, **axes: Sequence[float]
+                  ) -> "SweepSpec":
+        """Cross-product grid over named sweepable axes."""
+        return cls(base=base, overrides=tuning.sweep_grid(**axes))
+
+    @property
+    def n_configs(self) -> int:
+        return len(self.overrides)
+
+    def member(self, i: int) -> AnyConfig:
+        """The full config of sweep member i (for solo parity runs)."""
+        return dataclasses.replace(self.base, **self.overrides[i])
+
+    def members(self) -> Tuple[AnyConfig, ...]:
+        return tuple(self.member(i) for i in range(self.n_configs))
+
+    def stacked_hypers(self) -> dict:
+        """The (S,)-stacked traced-operand view of every sweepable field
+        (base value where a member doesn't override) — the axis the sweep
+        programs vmap over."""
+        return {
+            name: jnp.asarray(
+                [float(o.get(name, getattr(self.base, name)))
+                 for o in self.overrides], jnp.float32)
+            for name in sweepable_fields(self.base)}
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """One ``FedRunResult`` per sweep member, plus the spec that made
+    them.  Timeline quantities (wall clock, n_arrived, stale_mean, ids)
+    are identical across members by construction."""
+    spec: SweepSpec
+    results: Tuple[simulator.FedRunResult, ...]
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __getitem__(self, i: int) -> simulator.FedRunResult:
+        return self.results[i]
+
+    def __iter__(self):
+        return iter(self.results)
+
+
+# ----------------------------------------------------------- sync sweeps
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2),
+                   static_argnames=("mesh",))
+def sweep_scan_rounds(model_cfg, fl, spec: flat_lib.FlatSpec, w0_S, data,
+                      p_weights, keys, steps, hypers_S, sel_probs=None,
+                      so_state0_S=None, *, mesh=None):
+    """The whole-sweep XLA program: one ``lax.scan`` over rounds whose
+    body vmaps the SAME per-round step the solo scan uses
+    (``scan_engine.make_sync_round_step``) over the stacked (S, D) carry
+    and (S,) hypers.  Selection stays unbatched inside the vmap (keys and
+    probs are shared), so every member samples the same devices — the
+    shared-timeline property, asserted by ``out_axes=None`` on the ids.
+    """
+    use_so = so_state0_S is not None
+    step = scan_engine.make_sync_round_step(
+        model_cfg, fl, spec, use_so, data, p_weights, sel_probs, mesh)
+
+    def body(carry, xs):
+        w_S, so_S = carry if use_so else (carry, None)
+        sub, n_steps = xs
+        vstep = jax.vmap(
+            lambda w, so, h: step(w, so, sub, n_steps, h),
+            in_axes=(0, 0 if use_so else None, 0),
+            out_axes=(0, 0 if use_so else None, None))
+        w_new, so_S, ids = vstep(w_S, so_S, hypers_S)
+        ys = {"params": w_new, **ids}
+        return ((w_new, so_S) if use_so else w_new), ys
+
+    carry0 = (w0_S, so_state0_S) if use_so else w0_S
+    carry, ys = jax.lax.scan(body, carry0, (keys, steps))
+    return (carry[0] if use_so else carry), ys
+
+
+def run_sweep_compiled(model_cfg, fed: FederatedData, spec: SweepSpec,
+                       rounds: int,
+                       init_key: Optional[jax.Array] = None,
+                       eval_every: int = 1, fleet=None, sel_probs=None,
+                       mesh=None) -> SweepResult:
+    """All S sync configs of ``spec`` in one compiled run.
+
+    Every member's result is bit-for-bit what a solo
+    ``run_federated_compiled(model_cfg, fed, spec.member(i), ...)`` (and
+    hence the python loop) produces — params, history, and the fleet
+    wall-clock, which is computed once and shared since all members
+    sample identical devices.
+    """
+    base = spec.base
+    assert isinstance(base, simulator.FLConfig), \
+        "run_sweep_compiled takes an FLConfig sweep; use " \
+        "run_async_sweep_compiled for AsyncFLConfig"
+    S = spec.n_configs
+    key = init_key if init_key is not None else jax.random.PRNGKey(base.seed)
+    params = small.init_small(model_cfg, key)
+    train = {"x": jnp.asarray(fed.x), "y": jnp.asarray(fed.y),
+             "mask": jnp.asarray(fed.mask)}
+    test = {"x": jnp.asarray(fed.test_x), "y": jnp.asarray(fed.test_y),
+            "mask": jnp.asarray(fed.test_mask)}
+    p = jnp.asarray(fed.p)
+
+    fspec = flat_lib.spec_of(params)
+    w0 = flat_lib.ravel(fspec, params)
+    w0_S = jnp.broadcast_to(w0, (S,) + w0.shape)
+    keys, steps = scan_engine.draw_round_inputs(base, rounds, key)
+    # uniform across members (SweepSpec validates), so member 0 decides —
+    # the same predicate each member's solo run applies
+    use_so = _uses_server_opt(spec.member(0))
+    so_state0_S = None
+    if use_so:
+        so_cfg = sopt.ServerOptConfig(kind=base.server_opt, lr=1.0)
+        so0 = sopt.init_server_state(so_cfg, params)
+        so_state0_S = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (S,) + x.shape), so0)
+    w_final_S, ys = sweep_scan_rounds(
+        model_cfg, base.timeline_config(), fspec, w0_S, train, p, keys,
+        steps, spec.stacked_hypers(), sel_probs, so_state0_S, mesh=mesh)
+
+    clocks = None
+    if fleet is not None:
+        assert fleet.n_devices == fed.n_devices, \
+            (fleet.n_devices, fed.n_devices)
+        clocks = scan_engine.sync_clock_replay(
+            model_cfg, params, fed, base.algo, fleet, np.asarray(ys["ids"]),
+            np.asarray(ys["ids2"]) if "ids2" in ys else None,
+            np.asarray(steps), rounds)
+    results = []
+    for i in range(S):
+        hist = scan_engine.eval_history_replay(
+            model_cfg, fspec, train, test, p, ys["params"][:, i], rounds,
+            eval_every, clocks)
+        results.append(simulator.FedRunResult(
+            history=hist, params=flat_lib.unravel(fspec, w_final_S[i])))
+    return SweepResult(spec=spec, results=tuple(results))
+
+
+# ---------------------------------------------------------- async sweeps
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2),
+                   static_argnames=("mesh",))
+def sweep_scan_deadline(model_cfg, afl, spec: flat_lib.FlatSpec, w0_S,
+                        pend0_S, data, p_weights, keys, ids, steps, arrived,
+                        store_slot, due_slot, due_mask, due_tau, fast,
+                        hypers_S, sel_probs=None, *, mesh=None):
+    """Whole-sweep deadline program: scan over the ONE shared event plan,
+    vmapping ``scan_engine.make_deadline_step`` over the stacked carries
+    (flat params + per-member straggler pools) and hypers."""
+    step = scan_engine.make_deadline_step(model_cfg, afl, spec, data,
+                                          p_weights, sel_probs, mesh)
+
+    def body(carry, xs):
+        w_S, pend_S = carry
+        w_new, pend_S = jax.vmap(
+            lambda w, pend, h: step(w, pend, xs, h))(w_S, pend_S, hypers_S)
+        return (w_new, pend_S), w_new
+
+    (w_final, _), ws = jax.lax.scan(
+        body, (w0_S, pend0_S),
+        (keys, ids, steps, arrived, store_slot, due_slot, due_mask, due_tau,
+         fast))
+    return w_final, ws
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2),
+                   static_argnames=("mesh",))
+def sweep_scan_fedbuff(model_cfg, afl, spec: flat_lib.FlatSpec, w0_S,
+                       pend0_S, data, ids, steps, store_slot, flush_slot,
+                       tau, hypers_S, *, mesh=None):
+    """Whole-sweep fedbuff program: scan the shared flush schedule,
+    vmapping ``scan_engine.make_fedbuff_step`` over the stacked carries
+    (flat params + per-member in-flight pools) and hypers."""
+    step = scan_engine.make_fedbuff_step(model_cfg, afl, spec, data, mesh)
+
+    def body(carry, xs):
+        w_S, pend_S = carry
+        w_new, pend_S = jax.vmap(
+            lambda w, pend, h: step(w, pend, xs, h))(w_S, pend_S, hypers_S)
+        return (w_new, pend_S), w_new
+
+    (w_final, _), ws = jax.lax.scan(
+        body, (w0_S, pend0_S), (ids, steps, store_slot, flush_slot, tau))
+    return w_final, ws
+
+
+def run_async_sweep_compiled(model_cfg, fed: FederatedData,
+                             spec: SweepSpec, fleet, rounds: int,
+                             init_key: Optional[jax.Array] = None,
+                             eval_every: int = 1, mesh=None,
+                             plan=None) -> SweepResult:
+    """All S async configs of ``spec`` against ONE event plan.
+
+    The plan (and the pre-drawn key chain inside it) is built once from
+    the base config — sweepable fields provably cannot move it — and
+    replayed for every member inside a single compiled scan.  Member i is
+    bit-for-bit identical to a solo ``run_async_compiled`` (and hence
+    ``run_async``) with config i: params, wall clock, n_arrived,
+    stale_mean.  ``plan`` accepts a pre-built ``async_engine.build_plan``
+    value for reuse across calls.
+    """
+    base = spec.base
+    assert isinstance(base, async_lib.AsyncFLConfig), \
+        "run_async_sweep_compiled takes an AsyncFLConfig sweep; use " \
+        "run_sweep_compiled for FLConfig"
+    assert fleet.n_devices == fed.n_devices, (fleet.n_devices, fed.n_devices)
+    S = spec.n_configs
+    key = init_key if init_key is not None else jax.random.PRNGKey(base.seed)
+    params = small.init_small(model_cfg, key)
+    train = {"x": jnp.asarray(fed.x), "y": jnp.asarray(fed.y),
+             "mask": jnp.asarray(fed.mask)}
+    test = {"x": jnp.asarray(fed.test_x), "y": jnp.asarray(fed.test_y),
+            "mask": jnp.asarray(fed.test_mask)}
+    p = jnp.asarray(fed.p)
+    sizes = np.asarray(fed.mask.sum(axis=1))
+    cost = round_cost_for(model_cfg, params,
+                          uploads_gradient="folb" in base.algo)
+    afl_t = base.timeline_config()
+    sync_fl = afl_t.sync_config()
+    hypers_S = spec.stacked_hypers()
+    fspec = flat_lib.spec_of(params)
+    w0 = flat_lib.ravel(fspec, params)
+    w0_S = jnp.broadcast_to(w0, (S,) + w0.shape)
+    bcast = lambda tree_: jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (S,) + x.shape), tree_)
+
+    if base.mode == "deadline":
+        sel_probs = async_lib.deadline_selection_probs(base, fleet, cost,
+                                                       sizes)
+        if plan is None:
+            plan = async_lib.build_deadline_plan(base, fleet, cost, sizes,
+                                                 rounds, key, sel_probs)
+        pend0_S = bcast(async_lib.pool_init(model_cfg, sync_fl, params,
+                                            train, plan.n_slots + 1))
+        w_final_S, ws = sweep_scan_deadline(
+            model_cfg, afl_t, fspec, w0_S, pend0_S, train, p,
+            jnp.asarray(plan.keys), jnp.asarray(plan.ids),
+            jnp.asarray(plan.n_steps),
+            jnp.asarray(plan.arrived, jnp.float32),
+            jnp.asarray(plan.store_slot), jnp.asarray(plan.due_slot),
+            jnp.asarray(plan.due_mask), jnp.asarray(plan.due_tau),
+            jnp.asarray(plan.fast), hypers_S, sel_probs, mesh=mesh)
+        clocks, n_arr = plan.round_end, plan.n_arrived
+    else:
+        if plan is None:
+            plan = async_lib.build_fedbuff_plan(base, fleet, cost, sizes,
+                                                rounds, key)
+        pend0 = async_lib.pool_init(model_cfg, sync_fl, params, train,
+                                    plan.n_slots)
+        # the seed dispatches all start from the SAME initial params but
+        # member-specific lr/mu: vmap the shared jitted seeding step
+        pend0_S = jax.vmap(
+            lambda pend, h: async_lib.fedbuff_seed_pool(
+                model_cfg, afl_t, params, pend, train,
+                jnp.asarray(plan.seed_ids), jnp.asarray(plan.seed_steps),
+                jnp.asarray(plan.seed_slots), h))(bcast(pend0), hypers_S)
+        w_final_S, ws = sweep_scan_fedbuff(
+            model_cfg, afl_t, fspec, w0_S, pend0_S, train,
+            jnp.asarray(plan.ids), jnp.asarray(plan.n_steps),
+            jnp.asarray(plan.store_slot), jnp.asarray(plan.flush_slot),
+            jnp.asarray(plan.tau), hypers_S, mesh=mesh)
+        clocks = plan.flush_clock
+        n_arr = np.full(rounds, base.buffer_size)
+
+    results = []
+    for i in range(S):
+        hist = scan_engine.eval_history_replay(
+            model_cfg, fspec, train, test, p, ws[:, i], rounds, eval_every,
+            clocks=clocks, n_arrived=n_arr, stale_mean=plan.stale_mean)
+        results.append(simulator.FedRunResult(
+            history=hist, params=flat_lib.unravel(fspec, w_final_S[i])))
+    return SweepResult(spec=spec, results=tuple(results))

@@ -74,12 +74,17 @@ def plan_deadline_run(fleet: DeviceFleet, ids: np.ndarray,
     `ids`/`n_steps` are (rounds, K); `n_examples` is the per-DEVICE dataset
     size vector (indexed by id here, unlike `plan_sync_round` which takes
     it pre-gathered).  Latencies are start-time independent, so all R·K of
-    them come from one vectorized `device_latencies` call; the host loop
-    only carries the start-time recurrence (and, for availability-cycled
-    fleets, the `next_online` gating that depends on it).
+    them come from one vectorized `device_latencies` call.  For
+    availability-cycled fleets the `next_online` modular-arithmetic window
+    search is batched the same way: the per-(R, K) period/duty/phase
+    tables are gathered ONCE up front, so the start-time recurrence (round
+    t starts when round t-1 ends — inherently sequential) loops over
+    precomputed rows with no per-round fleet calls or fancy indexing.
+    Plan building is O(1) host calls for cycled fleets too.
 
     Returns (arrival (R, K), arrived (R, K) bool, round_end (R,)) —
-    float-identical to calling `plan_sync_round` round by round.
+    float-identical to calling `plan_sync_round` round by round (cycled
+    fleets included; see tests/test_sysmodel.py).
     """
     ids = np.asarray(ids)
     n_steps = np.asarray(n_steps)
@@ -89,12 +94,26 @@ def plan_deadline_run(fleet: DeviceFleet, ids: np.ndarray,
     lat = device_latencies(fleet, ids.reshape(-1), n_steps.reshape(-1),
                            cost, n_examples=ex).reshape(R, K)
     always_on = bool((np.asarray(fleet.avail_period) <= 0.0).all())
+    if not always_on:
+        # one gather per capability table for the whole schedule; the
+        # arithmetic below replicates DeviceFleet.next_online exactly
+        # (same ops on the same float64 values => identical bits)
+        period = fleet.avail_period[ids]              # (R, K)
+        always = period <= 0.0
+        safe = np.where(always, 1.0, period)
+        duty_win = fleet.avail_duty[ids] * safe
+        phase = fleet.avail_phase[ids]
     arrival = np.empty((R, K), np.float64)
     arrived = np.empty((R, K), bool)
     round_end = np.empty(R, np.float64)
     s = float(start)
     for t in range(R):
-        begin = np.full(K, s) if always_on else fleet.next_online(ids[t], s)
+        if always_on:
+            begin = np.full(K, s)
+        else:
+            pos = np.mod(s + phase[t], safe[t])
+            wait = np.where(pos < duty_win[t], 0.0, safe[t] - pos)
+            begin = s + np.where(always[t], 0.0, wait)
         arr = begin + lat[t]
         cutoff = s + deadline
         ok = arr <= cutoff

@@ -9,13 +9,18 @@ from benchmarks.roofline import (folb_agg_bytes, folb_kd_bytes,
                                  folb_stale_agg_bytes)
 
 
-def _artifact(kernel_ratio=1.0, async_speedup=1.3):
+def _artifact(kernel_ratio=1.0, async_speedup=1.3, sweep_speedup=3.0):
     return {
         "results": [{"name": "folb/sync", "secs_to_acc": 5.0,
                      "rounds_to_acc": 10, "final_acc": 0.9}],
         "dispatch": {"scan_vs_loop_speedup": 1.3,
                      "async_deadline": {"scan_vs_loop_speedup": async_speedup},
                      "async_fedbuff": {"scan_vs_loop_speedup": async_speedup}},
+        "sweep": {
+            "sync": {"s_configs": 8, "sweep_vs_solo_speedup": sweep_speedup},
+            "async_deadline": {"s_configs": 8,
+                               "sweep_vs_solo_speedup": sweep_speedup},
+        },
         "kernel": {
             "calibration_us": 1000.0,
             "entries": {
@@ -89,6 +94,50 @@ class TestAsyncDispatchGate:
         del base["dispatch"]["async_fedbuff"]
         assert compare(base, _artifact(async_speedup=0.1),
                        0.15, 0.05, 1.0, min_async_speedup=0.85) == []
+
+
+class TestSweepGate:
+    """--min-sweep-speedup: the plan-reuse sweep engine's S-sweep vs
+    S-solos host-time ratio, per recorded engine entry."""
+
+    def test_passes_when_sweep_speedup_holds(self):
+        assert compare(_artifact(), _artifact(sweep_speedup=2.5),
+                       0.15, 0.05, 1.0, min_sweep_speedup=1.2) == []
+
+    def test_fails_when_sweep_slower_than_solos(self):
+        fails = compare(_artifact(), _artifact(sweep_speedup=0.9),
+                        0.15, 0.05, 1.0, min_sweep_speedup=1.2)
+        assert len(fails) == 2   # sync AND async_deadline entries
+        assert all("sweep_vs_solo_speedup" in f for f in fails)
+
+    def test_fails_on_missing_sweep_section(self):
+        """A current artifact that silently dropped the sweep bench (e.g.
+        the suite crashed) must fail, not pass vacuously."""
+        cur = _artifact()
+        del cur["sweep"]
+        fails = compare(_artifact(), cur, 0.15, 0.05, 1.0,
+                        min_sweep_speedup=1.2)
+        assert any("sweep: section missing" in f for f in fails)
+
+    def test_fails_on_missing_sweep_entry(self):
+        cur = _artifact()
+        del cur["sweep"]["async_deadline"]
+        fails = compare(_artifact(), cur, 0.15, 0.05, 1.0,
+                        min_sweep_speedup=1.2)
+        assert any("async_deadline missing" in f for f in fails)
+
+    def test_old_baseline_without_sweep_is_fine(self):
+        """Pre-sweep-engine baselines don't fail the new gate."""
+        base = _artifact()
+        del base["sweep"]
+        assert compare(base, _artifact(sweep_speedup=0.1),
+                       0.15, 0.05, 1.0, min_sweep_speedup=1.2) == []
+
+    def test_other_gates_unaffected_by_sweep_section(self):
+        fails = compare(_artifact(), _artifact(async_speedup=0.1),
+                        0.15, 0.05, 1.0, min_async_speedup=0.85,
+                        min_sweep_speedup=1.2)
+        assert len(fails) == 2 and all("async" in f for f in fails)
 
 
 class TestBytesModel:

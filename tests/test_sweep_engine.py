@@ -1,0 +1,292 @@
+"""Plan-reuse sweep engine: every sweep member must be bit-for-bit
+identical to a solo compiled run of the same config — params, history,
+wall clock, arrival counts, staleness means — across random grids, all
+three engines (sync, deadline, fedbuff), and both aggregation dtypes.
+
+Also locks in the sweepable/timeline split itself: mutating a sweepable
+field (lr/mu/psi/alpha) leaves the built event plan byte-identical, and
+mutating a timeline field through the sweep API raises — so future config
+fields cannot silently corrupt plan reuse.
+
+Uses the `_propcheck` shim — real hypothesis when installed, seeded
+deterministic examples otherwise (no hypothesis on the CPU container).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from _propcheck import given, settings, st
+
+from repro.configs.paper_models import MCLR
+from repro.core.tuning import sweep_grid
+from repro.data.federated import stack_devices
+from repro.data.synthetic import synthetic_alpha_beta
+from repro.fed.async_engine import (AsyncFLConfig, build_plan, plan_digest,
+                                    deadline_selection_probs)
+from repro.fed.scan_engine import run_async_compiled, run_federated_compiled
+from repro.fed.simulator import FLConfig
+from repro.fed.sweep_engine import (SweepSpec, run_async_sweep_compiled,
+                                    run_sweep_compiled)
+from repro.models import small
+from repro.sysmodel import (expected_latencies, heterogeneous_fleet,
+                            round_cost_for)
+
+N_DEV = 14
+ROUNDS = 3
+
+_fed = stack_devices(
+    synthetic_alpha_beta(0, n_devices=N_DEV, alpha=1.0, beta=1.0,
+                         mean_size=50), seed=0)
+# strong straggler tail so finite deadlines cut devices and the masked
+# slow path / staleness machinery is exercised inside the sweep
+_fleet = heterogeneous_fleet(1, N_DEV, straggler_frac=0.4,
+                             straggler_slowdown=30.0)
+_params = small.init_small(MCLR, jax.random.PRNGKey(0))
+_cost = round_cost_for(MCLR, _params)
+_sizes = np.asarray(_fed.mask.sum(axis=1))
+_lat = expected_latencies(_fleet, _cost, mean_steps=10, n_examples=_sizes)
+_DEADLINE = float(np.quantile(_lat, 0.5))
+
+
+def _assert_member_bit_for_bit(member_res, solo_res):
+    assert set(member_res.history) == set(solo_res.history)
+    for k in member_res.history:
+        assert member_res.history[k] == solo_res.history[k], k
+    for a, b in zip(jax.tree.leaves(member_res.params),
+                    jax.tree.leaves(solo_res.params)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def _grid(rng, s, names):
+    """s random override dicts over a subset of `names`."""
+    draws = {"lr": lambda: float(rng.uniform(0.01, 0.1)),
+             "mu": lambda: float(rng.uniform(0.0, 2.0)),
+             "psi": lambda: float(rng.uniform(0.0, 0.5)),
+             "staleness_alpha": lambda: float(rng.uniform(0.0, 1.0)),
+             "server_lr": lambda: float(rng.uniform(0.3, 1.5))}
+    return tuple({n: draws[n]() for n in names} for _ in range(s))
+
+
+class TestSyncSweepParity:
+    @settings(max_examples=4, deadline=None)
+    @given(st.integers(1, 4), st.sampled_from(["bfloat16", "float32"]),
+           st.integers(0, 10**6))
+    def test_member_bit_for_bit(self, s, agg_dtype, seed):
+        """Acceptance criterion (sync): sweep member i == solo
+        run_federated_compiled(config i), fleet wall-clock included."""
+        rng = np.random.default_rng(seed)
+        base = FLConfig(algo="folb", n_selected=4, seed=seed % 5,
+                        agg_dtype=agg_dtype)
+        spec = SweepSpec(base=base,
+                         overrides=_grid(rng, s, ("lr", "mu")))
+        sw = run_sweep_compiled(MCLR, _fed, spec, rounds=ROUNDS,
+                                fleet=_fleet)
+        assert len(sw) == s
+        for i in range(s):
+            solo = run_federated_compiled(MCLR, _fed, spec.member(i),
+                                          rounds=ROUNDS, fleet=_fleet)
+            _assert_member_bit_for_bit(sw[i], solo)
+
+    def test_folb_het_psi_axis(self):
+        """ψ (the Sec. V temperature) sweeps bit-for-bit on folb_het."""
+        base = FLConfig(algo="folb_het", n_selected=4, seed=2, psi=0.1)
+        spec = SweepSpec.from_grid(base, psi=(0.0, 0.1, 0.4), lr=(0.05,))
+        sw = run_sweep_compiled(MCLR, _fed, spec, rounds=ROUNDS)
+        for i in range(spec.n_configs):
+            solo = run_federated_compiled(MCLR, _fed, spec.member(i),
+                                          rounds=ROUNDS)
+            _assert_member_bit_for_bit(sw[i], solo)
+
+    def test_server_opt_lr_axis(self):
+        """Server-optimizer hyper-sweep: the (S,)-stacked optimizer state
+        rides the scan carry through the same jitted
+        server_round_update."""
+        base = FLConfig(algo="folb", n_selected=4, seed=1,
+                        server_opt="momentum")
+        spec = SweepSpec.from_grid(base, server_lr=(0.5, 1.0, 1.5),
+                                   lr=(0.04,))
+        sw = run_sweep_compiled(MCLR, _fed, spec, rounds=4)
+        for i in range(spec.n_configs):
+            solo = run_federated_compiled(MCLR, _fed, spec.member(i),
+                                          rounds=4)
+            _assert_member_bit_for_bit(sw[i], solo)
+
+    def test_members_share_one_timeline(self):
+        """All members carry the identical wall clock (same sampled ids,
+        same fleet replay) — the shared-timeline property."""
+        base = FLConfig(algo="folb", n_selected=4, seed=0)
+        spec = SweepSpec.from_grid(base, lr=(0.02, 0.05, 0.09))
+        sw = run_sweep_compiled(MCLR, _fed, spec, rounds=ROUNDS,
+                                fleet=_fleet)
+        clocks = [r.history["wall_clock"] for r in sw]
+        assert clocks[0] == clocks[1] == clocks[2]
+        losses = [r.history["train_loss"] for r in sw]
+        assert losses[0] != losses[1]   # but the learning math differs
+
+
+class TestDeadlineSweepParity:
+    @settings(max_examples=4, deadline=None)
+    @given(st.integers(1, 4), st.sampled_from(["bfloat16", "float32"]),
+           st.integers(0, 10**6))
+    def test_member_bit_for_bit(self, s, agg_dtype, seed):
+        """Acceptance criterion (deadline): params + wall clock +
+        n_arrived + stale_mean, on a straggler-cutting deadline."""
+        rng = np.random.default_rng(seed)
+        base = AsyncFLConfig(mode="deadline", algo="folb", n_selected=6,
+                             deadline=_DEADLINE, staleness_alpha=0.5,
+                             seed=seed % 5, agg_dtype=agg_dtype)
+        spec = SweepSpec(
+            base=base,
+            overrides=_grid(rng, s, ("lr", "mu", "staleness_alpha")))
+        sw = run_async_sweep_compiled(MCLR, _fed, spec, _fleet,
+                                      rounds=ROUNDS + 1)
+        # the shared timeline must actually exercise the slow path
+        assert min(sw[0].history["n_arrived"]) < 6
+        for i in range(s):
+            solo = run_async_compiled(MCLR, _fed, spec.member(i), _fleet,
+                                      rounds=ROUNDS + 1)
+            _assert_member_bit_for_bit(sw[i], solo)
+
+    def test_prebuilt_plan_reuse(self):
+        """The explicit Plan boundary: one build_plan value feeds the solo
+        scan, the python event loop, and the sweep — identical results."""
+        from repro.fed.async_engine import run_async
+        base = AsyncFLConfig(mode="deadline", algo="folb", n_selected=6,
+                             deadline=_DEADLINE, staleness_alpha=0.5,
+                             seed=0)
+        sel = deadline_selection_probs(base, _fleet, _cost, _sizes)
+        plan = build_plan(base, _fleet, _cost, _sizes, 4,
+                          jax.random.PRNGKey(base.seed), sel)
+        spec = SweepSpec.from_grid(base, lr=(0.03, 0.07))
+        sw = run_async_sweep_compiled(MCLR, _fed, spec, _fleet, rounds=4,
+                                      plan=plan)
+        solo_scan = run_async_compiled(MCLR, _fed, spec.member(1), _fleet,
+                                       rounds=4, plan=plan)
+        solo_loop = run_async(MCLR, _fed, spec.member(1), _fleet, rounds=4,
+                              plan=plan)
+        _assert_member_bit_for_bit(sw[1], solo_scan)
+        _assert_member_bit_for_bit(sw[1], solo_loop)
+
+
+class TestFedBuffSweepParity:
+    @settings(max_examples=4, deadline=None)
+    @given(st.integers(1, 4), st.sampled_from(["bfloat16", "float32"]),
+           st.integers(0, 10**6))
+    def test_member_bit_for_bit(self, s, agg_dtype, seed):
+        """Acceptance criterion (fedbuff): the buffered fully-async mode —
+        per-member in-flight pools seeded from member lr/mu, version
+        staleness, flush clock — replays bit-for-bit per member."""
+        rng = np.random.default_rng(seed)
+        base = AsyncFLConfig(mode="fedbuff", algo="folb", buffer_size=3,
+                             concurrency=6, staleness_alpha=0.5,
+                             seed=seed % 5, agg_dtype=agg_dtype)
+        spec = SweepSpec(
+            base=base,
+            overrides=_grid(rng, s, ("lr", "mu", "staleness_alpha")))
+        sw = run_async_sweep_compiled(MCLR, _fed, spec, _fleet,
+                                      rounds=ROUNDS + 1)
+        assert max(sw[0].history["stale_mean"]) > 0.0
+        for i in range(s):
+            solo = run_async_compiled(MCLR, _fed, spec.member(i), _fleet,
+                                      rounds=ROUNDS + 1)
+            _assert_member_bit_for_bit(sw[i], solo)
+
+
+class TestTimelineSplit:
+    """The guard the whole engine rests on: sweepables can NEVER move the
+    plan, and timeline fields can never ride a sweep."""
+
+    def _deadline_base(self):
+        return AsyncFLConfig(mode="deadline", algo="folb", n_selected=5,
+                             deadline=_DEADLINE, staleness_alpha=0.5,
+                             seed=0)
+
+    @settings(max_examples=6, deadline=None)
+    @given(st.sampled_from(["lr", "mu", "psi", "staleness_alpha"]),
+           st.floats(0.001, 5.0), st.sampled_from(["deadline", "fedbuff"]))
+    def test_sweepable_mutation_plan_byte_identical(self, field, value,
+                                                    mode):
+        """Hash of the whole plan pytree is invariant to any sweepable
+        field value, for both plan builders."""
+        if mode == "deadline":
+            base = self._deadline_base()
+        else:
+            base = AsyncFLConfig(mode="fedbuff", algo="folb",
+                                 buffer_size=3, concurrency=6, seed=0)
+        key = jax.random.PRNGKey(0)
+        d0 = plan_digest(build_plan(base, _fleet, _cost, _sizes, 4, key))
+        mutated = dataclasses.replace(base, **{field: value})
+        d1 = plan_digest(build_plan(mutated, _fleet, _cost, _sizes, 4, key))
+        assert d0 == d1, (field, value, mode)
+
+    def test_timeline_mutation_moves_the_plan(self):
+        """Sanity check that the digest is actually sensitive: a timeline
+        field (the deadline) produces a different plan."""
+        base = self._deadline_base()
+        key = jax.random.PRNGKey(0)
+        d0 = plan_digest(build_plan(base, _fleet, _cost, _sizes, 4, key))
+        tighter = dataclasses.replace(base, deadline=_DEADLINE * 0.5)
+        d1 = plan_digest(build_plan(tighter, _fleet, _cost, _sizes, 4, key))
+        assert d0 != d1
+
+    @pytest.mark.parametrize("bad", [{"deadline": 1.0}, {"seed": 1},
+                                     {"n_selected": 3}, {"concurrency": 2},
+                                     {"buffer_size": 2},
+                                     {"max_local_steps": 5},
+                                     {"latency_aware": True},
+                                     {"agg_dtype": "float32"}])
+    def test_async_timeline_field_raises(self, bad):
+        with pytest.raises(ValueError, match="timeline-affecting"):
+            SweepSpec(base=self._deadline_base(), overrides=(bad,))
+
+    @pytest.mark.parametrize("bad", [{"seed": 1}, {"n_selected": 3},
+                                     {"algo": "fedavg"},
+                                     {"het_steps": False},
+                                     {"server_opt": "adam"}])
+    def test_sync_timeline_field_raises(self, bad):
+        base = FLConfig(algo="folb", n_selected=4, seed=0)
+        with pytest.raises(ValueError, match="timeline-affecting"):
+            SweepSpec(base=base, overrides=(bad,))
+
+    def test_mixed_server_opt_structure_raises(self):
+        """sgd @ server_lr=1.0 runs a structurally different program than
+        server_lr != 1.0 — a sweep mixing them cannot be one program."""
+        base = FLConfig(algo="folb", n_selected=4, seed=0)
+        with pytest.raises(ValueError, match="server_lr"):
+            SweepSpec.from_grid(base, server_lr=(1.0, 0.5))
+
+    def test_fednu_rejected(self):
+        base = FLConfig(algo="fednu_norm", n_selected=4, seed=0)
+        with pytest.raises(ValueError, match="selection"):
+            SweepSpec.from_grid(base, lr=(0.01, 0.1))
+
+    def test_empty_sweep_rejected(self):
+        with pytest.raises(ValueError):
+            SweepSpec(base=FLConfig(), overrides=())
+
+
+class TestSweepGrid:
+    def test_cross_product_order(self):
+        g = sweep_grid(lr=(0.01, 0.1), mu=(0.0, 1.0))
+        assert g == ({"lr": 0.01, "mu": 0.0}, {"lr": 0.01, "mu": 1.0},
+                     {"lr": 0.1, "mu": 0.0}, {"lr": 0.1, "mu": 1.0})
+
+    def test_no_axes_is_single_empty_member(self):
+        assert sweep_grid() == ({},)
+
+    def test_empty_axis_raises(self):
+        with pytest.raises(ValueError, match="empty"):
+            sweep_grid(lr=())
+
+    def test_spec_from_grid_members(self):
+        base = FLConfig(algo="folb", lr=0.3)
+        spec = SweepSpec.from_grid(base, lr=(0.01, 0.1), mu=(0.5,))
+        assert spec.n_configs == 2
+        assert spec.member(0).lr == 0.01 and spec.member(0).mu == 0.5
+        assert spec.member(1).lr == 0.1
+        h = spec.stacked_hypers()
+        assert np.allclose(np.asarray(h["lr"]), [0.01, 0.1])
+        # unswept fields fall back to the base value
+        assert np.allclose(np.asarray(h["psi"]), [base.psi] * 2)

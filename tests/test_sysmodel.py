@@ -137,6 +137,46 @@ class TestClock:
         assert len(q) == 1
 
 
+class TestPushBatchTieBreaking:
+    """`push_batch` must be tie-break-identical to pushing the pairs one
+    by one — the event-plan builders seed their dispatch queues with it,
+    and the whole simulation's bit-reproducibility rests on equal-time
+    events draining in insertion order."""
+
+    TIMES = [1.0, 0.5, 1.0, 1.0, 0.25, 0.5, 1.0]
+
+    @staticmethod
+    def _drain(q):
+        return [(e.time, e.seq, e.payload["d"]) for e in
+                (q.pop() for _ in range(len(q)))]
+
+    def test_batch_replays_sequential_under_equal_times(self):
+        qb, qs = EventQueue(), EventQueue()
+        qb.push_batch(self.TIMES, "arrival", "d", range(len(self.TIMES)))
+        for i, t in enumerate(self.TIMES):
+            qs.push(t, "arrival", d=i)
+        assert self._drain(qb) == self._drain(qs)
+
+    def test_all_equal_times_pop_in_insertion_order(self):
+        q = EventQueue()
+        q.push_batch([7.0] * 6, "arrival", "d", range(6))
+        assert [v for _, _, v in self._drain(q)] == list(range(6))
+
+    def test_batch_then_push_continues_the_seq_counter(self):
+        """A plain push after a batch loses every tie against the batch —
+        the counter is shared, not per-call."""
+        q = EventQueue()
+        q.push_batch([3.0, 3.0, 1.0], "arrival", "d", [10, 11, 12])
+        q.push(3.0, "arrival", d=99)
+        assert [v for _, _, v in self._drain(q)] == [12, 10, 11, 99]
+
+    def test_interleaved_batches_keep_global_fifo(self):
+        q = EventQueue()
+        q.push_batch([2.0, 2.0], "arrival", "d", [0, 1])
+        q.push_batch([2.0, 1.0], "arrival", "d", [2, 3])
+        assert [v for _, _, v in self._drain(q)] == [3, 0, 1, 2]
+
+
 class TestScheduler:
     COST = RoundCost(flops_per_step_example=1e7, down_bytes=1e4,
                      up_bytes=1e4)
@@ -178,3 +218,31 @@ class TestScheduler:
                                start=42.0, deadline=math.inf)
         assert plan.start == 42.0
         assert (plan.arrival > 42.0).all()
+
+    @pytest.mark.parametrize("deadline", [math.inf, 40.0, 5.0])
+    def test_cycled_fleet_plan_matches_eager_scheduler(self, deadline):
+        """`plan_deadline_run` on an availability-cycled fleet (batched
+        modular-arithmetic window search, one capability gather for the
+        whole schedule) must stay float-identical to the eager per-round
+        `plan_sync_round` recurrence."""
+        from repro.sysmodel import plan_deadline_run
+        f = heterogeneous_fleet(3, 15, straggler_frac=0.3,
+                                straggler_slowdown=20.0, avail_frac=0.5,
+                                avail_period=30.0, avail_duty=0.4)
+        assert (f.avail_period > 0).any()       # genuinely cycled
+        assert (f.avail_period <= 0).any()      # mixed with always-on
+        rng = np.random.default_rng(0)
+        ids = rng.integers(0, 15, (8, 5))
+        steps = rng.integers(1, 10, (8, 5))
+        sizes = rng.integers(10, 80, 15).astype(np.float64)
+        arrival, arrived, round_end = plan_deadline_run(
+            f, ids, steps, self.COST, deadline=deadline, n_examples=sizes)
+        s = 0.0
+        for t in range(8):
+            ref = plan_sync_round(f, ids[t], steps[t], self.COST, start=s,
+                                  deadline=deadline,
+                                  n_examples=sizes[ids[t]])
+            assert (arrival[t] == ref.arrival).all(), t
+            assert (arrived[t] == ref.arrived).all(), t
+            assert round_end[t] == ref.round_end, t
+            s = ref.round_end
