@@ -22,6 +22,17 @@ baseline and fails (exit 1) on regression:
     exist) must stay at least ``--min-sweep-speedup`` — again a ratio,
     so shared runners can't fake a regression.  As with the async gate,
     entries are only gated once the baseline records them.
+  * network: schema gate on the modeled-traffic section — once a
+    baseline records it, the current artifact must carry every baseline
+    run's byte columns (bytes_up_total / bytes_down_total / bytes_to_acc).
+    Byte *values* stay ungated: they move with intentional algorithm and
+    payload-model changes; the gate only stops the telemetry plumbing
+    from silently disappearing.
+  * profile: schema gate on the host-phase profile section — phases
+    non-empty, positive total, and timer coverage of at least
+    ``--min-profile-coverage`` of the run wall time (the acceptance bar
+    for the phase timers staying contiguous as engines evolve).  Absolute
+    phase seconds stay ungated (machine-dependent).
   * kernel: each micro-bench's *calibration-relative* ratio (kernel time
     divided by a fixed jnp workload timed in the same run — see
     ``kernel_bench.calibration_us``) may not grow more than
@@ -54,7 +65,8 @@ def compare(baseline: dict, current: dict, tolerance: float,
             acc_drop: float, min_speedup: float,
             kernel_tolerance: float = 0.75,
             min_async_speedup: float = 1.0,
-            min_sweep_speedup: float = 1.0) -> List[str]:
+            min_sweep_speedup: float = 1.0,
+            min_profile_coverage: float = 0.9) -> List[str]:
     """Return the list of regression messages (empty == gate passes)."""
     failures: List[str] = []
     cur_by_name = {r["name"]: r for r in current.get("results", [])}
@@ -133,6 +145,46 @@ def compare(baseline: dict, current: dict, tolerance: float,
                         f"sweep: {name} sweep_vs_solo_speedup {sp:.2f} "
                         f"< required {min_sweep_speedup:.2f}")
 
+    base_net = baseline.get("network")
+    cur_net = current.get("network")
+    if base_net is not None:
+        if cur_net is None:
+            failures.append("network: section missing from current artifact")
+        else:
+            cur_runs = cur_net.get("runs", {})
+            for name, be in base_net.get("runs", {}).items():
+                ce = cur_runs.get(name)
+                if ce is None:
+                    failures.append(
+                        f"network: {name} missing from current artifact")
+                    continue
+                for key in ("bytes_up_total", "bytes_down_total",
+                            "bytes_to_acc"):
+                    if key in be and not isinstance(ce.get(key),
+                                                    (int, float)):
+                        failures.append(
+                            f"network: {name} lacks numeric {key}")
+
+    base_prof = baseline.get("profile")
+    cur_prof = current.get("profile")
+    if base_prof is not None:
+        if cur_prof is None:
+            failures.append("profile: section missing from current artifact")
+        else:
+            phases = cur_prof.get("phases")
+            if not isinstance(phases, dict) or not phases:
+                failures.append("profile: phases missing or empty")
+            if not isinstance(cur_prof.get("total_s"), (int, float)) \
+                    or cur_prof.get("total_s", 0.0) <= 0.0:
+                failures.append("profile: total_s missing or non-positive")
+            cov = cur_prof.get("coverage")
+            if not isinstance(cov, (int, float)):
+                failures.append("profile: coverage missing")
+            elif cov < min_profile_coverage:
+                failures.append(
+                    f"profile: phase-timer coverage {cov:.2f} < required "
+                    f"{min_profile_coverage:.2f}")
+
     base_kern = baseline.get("kernel")
     cur_kern = current.get("kernel")
     if base_kern is not None:
@@ -179,13 +231,17 @@ def main() -> int:
     ap.add_argument("--min-sweep-speedup", type=float, default=1.0,
                     help="required S-config-sweep vs S-solo-runs host-time "
                          "speedup (plan-reuse sweep engine)")
+    ap.add_argument("--min-profile-coverage", type=float, default=0.9,
+                    help="required host-phase timer coverage of the "
+                         "profiled run's wall time")
     args = ap.parse_args()
 
     failures = compare(_load(args.baseline), _load(args.current),
                        args.tolerance, args.acc_drop, args.min_speedup,
                        args.kernel_tolerance,
                        min_async_speedup=args.min_async_speedup,
-                       min_sweep_speedup=args.min_sweep_speedup)
+                       min_sweep_speedup=args.min_sweep_speedup,
+                       min_profile_coverage=args.min_profile_coverage)
     if failures:
         print("BENCHMARK REGRESSION GATE: FAIL")
         for msg in failures:

@@ -23,6 +23,7 @@ gate is meaningful on shared runners.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Dict, List, Tuple
 
@@ -217,6 +218,88 @@ def sweep_results(s_configs: int = SWEEP_CONFIGS,
             "sweep_vs_solo_speedup": solo_s / sweep_s,
         }
     return out
+
+
+PROFILE_ROUNDS = 50    # distinct from ASYNC_ROUNDS so the cold run really
+                       # compiles even after other suites warmed their caches
+
+
+def profile_results(rounds: int = PROFILE_ROUNDS,
+                    reports_dir: str = "reports") -> Dict:
+    """Host-phase profile of the compiled deadline engine + trace export.
+
+    Runs the telemetry-on deadline-FOLB scan twice: the cold run pays the
+    whole-program XLA compile inside its ``scan`` phase, the warm run
+    replays the cached executable, so the compile cost is their
+    difference — measured from the engine's own phase timers rather than
+    an outer stopwatch.  Also exports the run's event plan as a
+    Perfetto-loadable trace under ``reports_dir``.  The returned payload
+    is the BENCH_fed.json ``profile`` section (schema-gated by
+    check_regression.py: phases present, coverage >= 0.9).
+    """
+    import jax
+    import numpy as np
+
+    from benchmarks.time_to_accuracy import setup_sweep
+    from repro.fed.async_engine import (AsyncFLConfig, build_plan,
+                                        deadline_selection_probs)
+    from repro.fed.scan_engine import run_async_compiled
+    from repro.models import small
+    from repro.sysmodel import expected_latencies, round_cost_for
+    from repro.telemetry import validate_trace, write_trace
+    from repro.telemetry.trace import deadline_trace_events
+
+    model_cfg, fed, fleet, _ = setup_sweep()
+    params = small.init_small(model_cfg, jax.random.PRNGKey(0))
+    sizes = np.asarray(fed.mask.sum(1))
+    cost = round_cost_for(model_cfg, params, uploads_gradient=True)
+    lat = expected_latencies(fleet, cost, mean_steps=1.5, n_examples=sizes)
+    afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=5,
+                        max_local_steps=2,
+                        deadline=float(np.quantile(lat, 0.6)),
+                        staleness_alpha=0.5, seed=0, telemetry=True)
+    sel_probs = deadline_selection_probs(afl, fleet, cost, sizes)
+    plan = build_plan(afl, fleet, cost, sizes, rounds,
+                      jax.random.PRNGKey(afl.seed), sel_probs)
+
+    def run():
+        return run_async_compiled(model_cfg, fed, afl, fleet, rounds=rounds,
+                                  eval_every=rounds, plan=plan)
+
+    cold = run().profile
+    warm = run().profile
+    compile_s = max(cold["phases"]["scan"] - warm["phases"]["scan"], 0.0)
+
+    events = deadline_trace_events(plan, fleet=fleet, cost=cost, sizes=sizes)
+    counts = validate_trace(events)
+    trace_path = write_trace(
+        os.path.join(reports_dir, "trace_deadline.json"), events)
+    return {
+        "engine": "async_deadline_scan",
+        "rounds": rounds,
+        "phases": {k: round(v, 4) for k, v in warm["phases"].items()},
+        "total_s": round(warm["total_s"], 4),
+        "coverage": round(warm["coverage"], 4),
+        "first_call_compile_s": round(compile_s, 3),
+        "cold_total_s": round(cold["total_s"], 4),
+        "trace_path": trace_path,
+        "trace_event_counts": counts,
+    }
+
+
+def profile_rows(rounds: int = PROFILE_ROUNDS, reports_dir: str = "reports"
+                 ) -> Tuple[List[Tuple[str, float, str]], Dict]:
+    """(CSV rows, json payload) for the BENCH_fed.json ``profile``
+    section."""
+    res = profile_results(rounds, reports_dir)
+    phase_str = ";".join(f"{k}_s={v}" for k, v in res["phases"].items())
+    rows = [(
+        "profile/async_deadline_scan",
+        res["total_s"] / res["rounds"] * 1e6,
+        f"coverage={res['coverage']};{phase_str};"
+        f"first_call_compile_s={res['first_call_compile_s']};"
+        f"trace={res['trace_path']}")]
+    return rows, res
 
 
 def dispatch_rows(rounds: int = DISPATCH_ROUNDS, include_async: bool = True

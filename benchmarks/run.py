@@ -65,23 +65,50 @@ def main() -> None:
 
     def tta_rows():
         results = time_to_accuracy.time_to_accuracy_results(tta_rounds)
+        network = time_to_accuracy.network_payload(results)
         # persist the TTA sweep before the dispatch bench runs, so a
         # dispatch failure can't discard the multi-minute sweep results
-        time_to_accuracy.write_bench_json(results, args.bench_json)
+        time_to_accuracy.write_bench_json(results, args.bench_json,
+                                          extra={"network": network})
         d_rows, dispatch = dispatch_bench.dispatch_rows()
         time_to_accuracy.write_bench_json(
-            results, args.bench_json, extra={"dispatch": dispatch})
+            results, args.bench_json,
+            extra={"network": network, "dispatch": dispatch})
         s_rows, sweep = dispatch_bench.sweep_rows()
         path = time_to_accuracy.write_bench_json(
             results, args.bench_json,
-            extra={"dispatch": dispatch, "sweep": sweep})
+            extra={"network": network, "dispatch": dispatch, "sweep": sweep})
         print(f"# wrote {path}", file=sys.stderr)
         return [(f"tta/{r['name']}",
                  r["host_seconds"] / tta_rounds * 1e6,
                  f"rounds_to_{r['target_acc']}={r['rounds_to_acc']};"
                  f"secs_to_{r['target_acc']}={r['secs_to_acc']:.2f};"
-                 f"final_acc={r['final_acc']:.3f}") for r in results] \
+                 f"final_acc={r['final_acc']:.3f};"
+                 f"bytes_up={r['bytes_up_total']:.0f};"
+                 f"bytes_down={r['bytes_down_total']:.0f};"
+                 f"bytes_to_acc={r['bytes_to_acc']:.0f}") for r in results] \
             + d_rows + s_rows
+
+    def profile_rows():
+        """Host-phase profile + trace export, merged into the artifact's
+        ``profile`` section (same merge-into-existing contract as
+        kernel_rows, so CI can run it as its own invocation)."""
+        import json
+        import os
+        rows, payload = dispatch_bench.profile_rows(
+            reports_dir=args.reports)
+        data = {}
+        if os.path.exists(args.bench_json):
+            with open(args.bench_json) as f:
+                data = json.load(f)
+        data["profile"] = payload
+        with open(args.bench_json, "w") as f:
+            json.dump(data, f, indent=2)
+            f.write("\n")
+        print(f"# merged profile section into {args.bench_json} "
+              f"(coverage={payload['coverage']}, "
+              f"trace={payload['trace_path']})", file=sys.stderr)
+        return rows
 
     suites = [
         ("table1", lambda: paper_tables.table1_rounds_to_accuracy(rounds)),
@@ -94,6 +121,7 @@ def main() -> None:
         ("beyond", lambda: paper_tables.beyond_server_opt(fig_rounds)),
         ("tta", tta_rows),
         ("kernel", kernel_rows),
+        ("profile", profile_rows),
         ("roofline", lambda: roofline.bench_rows(args.reports)),
     ]
 

@@ -68,7 +68,14 @@ def setup_sweep():
 
 
 def time_to_accuracy_results(rounds: int = 60) -> List[Dict]:
-    """Run the sweep; one result dict per (algo, engine)."""
+    """Run the sweep; one result dict per (algo, engine).
+
+    Every run enables the telemetry knob (bit-for-bit invisible to the
+    gated convergence metrics — property-tested in tests/test_telemetry),
+    so each result also carries the modeled per-round network traffic:
+    total bytes moved and bytes-to-target-accuracy, the communication
+    budget the paper's algorithm selection is ultimately spent against.
+    """
     from repro.fed.async_engine import AsyncFLConfig, run_async
     from repro.fed.simulator import (FLConfig, rounds_to_accuracy,
                                      run_federated, seconds_to_accuracy)
@@ -76,17 +83,18 @@ def time_to_accuracy_results(rounds: int = 60) -> List[Dict]:
 
     runs = []
     for algo, mu in (("fedavg", 0.0), ("folb", 1.0)):
-        fl = FLConfig(algo=algo, n_selected=10, mu=mu, lr=0.05, seed=SEED)
+        fl = FLConfig(algo=algo, n_selected=10, mu=mu, lr=0.05, seed=SEED,
+                      telemetry=True)
         runs.append((f"{algo}/sync", lambda fl=fl: run_federated(
             model_cfg, fed, fl, rounds=rounds, eval_every=1, fleet=fleet)))
     afl_dl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=10,
                            mu=1.0, lr=0.05, deadline=deadline,
-                           staleness_alpha=0.5, seed=SEED)
+                           staleness_alpha=0.5, seed=SEED, telemetry=True)
     runs.append(("folb/deadline", lambda: run_async(
         model_cfg, fed, afl_dl, fleet, rounds=rounds, eval_every=1)))
     afl_fb = AsyncFLConfig(mode="fedbuff", algo="folb", mu=1.0, lr=0.05,
                            buffer_size=5, concurrency=10,
-                           staleness_alpha=0.5, seed=SEED)
+                           staleness_alpha=0.5, seed=SEED, telemetry=True)
     runs.append(("folb/fedbuff", lambda: run_async(
         model_cfg, fed, afl_fb, fleet, rounds=rounds, eval_every=1)))
 
@@ -94,33 +102,72 @@ def time_to_accuracy_results(rounds: int = 60) -> List[Dict]:
     for name, fn in runs:
         t0 = time.time()
         h = fn()
-        results.append({
+        r_to_acc = rounds_to_accuracy(h, TARGET_ACC)
+        res = {
             "name": name,
             "algo": name.split("/")[0],
             "engine": name.split("/")[1],
-            "rounds_to_acc": rounds_to_accuracy(h, TARGET_ACC),
+            "rounds_to_acc": r_to_acc,
             "secs_to_acc": seconds_to_accuracy(h, TARGET_ACC),
             "final_acc": h["test_acc"][-1],
             "final_wall_clock": h["wall_clock"][-1],
             "target_acc": TARGET_ACC,
             "host_seconds": round(time.time() - t0, 2),
-        })
+        }
+        res.update(_network_columns(h, r_to_acc))
+        results.append(res)
     return results
+
+
+def _network_columns(res, rounds_to_acc: int) -> Dict:
+    """Per-run modeled traffic columns from a telemetry-on run result:
+    whole-run bytes up/down and cumulative bytes to the accuracy target
+    (-1 when the run never reached it)."""
+    up = np.asarray(res.metrics["bytes_up"], dtype=np.float64)
+    down = np.asarray(res.metrics["bytes_down"], dtype=np.float64)
+    to_acc = -1.0
+    if rounds_to_acc is not None and rounds_to_acc >= 0:
+        # bytes spent through the round that first hit the target
+        # (rounds_to_acc is that round's index, so rows 0..r inclusive)
+        n = min(int(rounds_to_acc) + 1, len(up))
+        to_acc = float(up[:n].sum() + down[:n].sum())
+    return {
+        "bytes_up_total": float(up.sum()),
+        "bytes_down_total": float(down.sum()),
+        "bytes_to_acc": to_acc,
+    }
+
+
+def network_payload(results: List[Dict]) -> Dict:
+    """The BENCH_fed.json ``network`` section: the modeled-traffic view
+    of the tta sweep (one entry per run, bytes up/down and to-target),
+    gated schema-wise by check_regression.py once a baseline records it."""
+    return {
+        "unit": "bytes",
+        "model": "agg_dtype x D x K payloads (repro.telemetry.metrics)",
+        "runs": {
+            r["name"]: {
+                "bytes_up_total": r["bytes_up_total"],
+                "bytes_down_total": r["bytes_down_total"],
+                "bytes_to_acc": r["bytes_to_acc"],
+            } for r in results},
+    }
 
 
 def write_bench_json(results: List[Dict], path: str = "BENCH_fed.json",
                      extra: Optional[Dict] = None) -> str:
     """Write the cross-PR perf artifact.  `extra` merges additional
     top-level sections (e.g. the dispatch-overhead numbers).  Sections
-    this writer doesn't own (e.g. the `kernel` section merged by
-    ``benchmarks.run --only kernel``) are preserved from an existing
-    artifact, so suite ordering can't silently drop them."""
+    this writer doesn't own (the `kernel` / `profile` sections merged by
+    ``benchmarks.run --only kernel`` / ``--only profile``) are preserved
+    from an existing artifact, so suite ordering can't silently drop
+    them."""
     preserved = {}
     if os.path.exists(path):
         try:
             with open(path) as f:
                 preserved = {k: v for k, v in json.load(f).items()
-                             if k == "kernel"}
+                             if k in ("kernel", "profile")}
         except (OSError, ValueError):
             preserved = {}
     payload = {

@@ -23,6 +23,12 @@ which is exactly the axis the paper's Sec. V optimizes.
 virtual-event scan engine (``run_async_compiled``): the same event
 timeline compiled into one XLA program, bit-for-bit identical histories,
 with the python-loop vs scan host-time comparison printed per mode.
+
+``--telemetry`` turns on the observability layer for the deadline run
+and prints the per-round metric summary (FOLB scores, staleness
+histogram, modeled network bytes, straggler pool) plus the host-phase
+profile; ``--trace PATH`` additionally exports the run's virtual
+timeline as Chrome trace-event JSON for ui.perfetto.dev.
 """
 import argparse
 import pathlib
@@ -73,11 +79,69 @@ def compiled_comparison(rounds: int = ROUNDS) -> None:
         assert same, f"{name}: compiled history diverged from the loop"
 
 
+def telemetry_demo(rounds: int = ROUNDS, trace_path: str = None) -> None:
+    """Deadline-FOLB with the observability layer on: per-round metric
+    summary, straggler/network accounting, host-phase profile, and
+    (optionally) the Perfetto trace of the virtual timeline."""
+    import jax
+    import numpy as np
+
+    from repro.fed.async_engine import (AsyncFLConfig, build_plan,
+                                        deadline_selection_probs)
+    from repro.fed.scan_engine import run_async_compiled
+    from repro.models import small
+    from repro.sysmodel import round_cost_for
+    from repro.telemetry import write_trace
+    from repro.telemetry.trace import deadline_trace_events
+
+    model_cfg, fed, fleet, deadline = setup_sweep()
+    afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=10,
+                        mu=1.0, lr=0.05, deadline=deadline,
+                        staleness_alpha=0.5, seed=SEED, telemetry=True)
+    sizes = np.asarray(fed.mask.sum(1))
+    cost = round_cost_for(model_cfg, small.init_small(
+        model_cfg, jax.random.PRNGKey(SEED)), uploads_gradient=True)
+    sel_probs = deadline_selection_probs(afl, fleet, cost, sizes)
+    plan = build_plan(afl, fleet, cost, sizes, rounds,
+                      jax.random.PRNGKey(SEED), sel_probs)
+    res = run_async_compiled(model_cfg, fed, afl, fleet, rounds=rounds,
+                             plan=plan)
+
+    m = res.metrics
+    print(f"\ntelemetry (deadline-FOLB, {rounds} rounds):")
+    print(f"{'round':>6} {'score_mean':>11} {'w_entropy':>10} "
+          f"{'upd_norm':>9} {'n_contrib':>9} {'n_cut':>6} {'pool':>5} "
+          f"{'MB up':>7}")
+    for t in range(0, rounds, max(rounds // 8, 1)):
+        print(f"{t:>6} {m['score_mean'][t]:>11.4f} "
+              f"{m['weight_entropy'][t]:>10.3f} "
+              f"{m['update_norm'][t]:>9.4f} {m['n_contrib'][t]:>9.0f} "
+              f"{m['n_cut'][t]:>6.0f} {m['pool_live'][t]:>5.0f} "
+              f"{m['bytes_up'][t] / 1e6:>7.3f}")
+    print(f"  totals: {m['bytes_up'].sum() / 1e6:.1f} MB up, "
+          f"{m['bytes_down'].sum() / 1e6:.1f} MB down; "
+          f"selection entropy {m['selection_entropy']:.3f} nats")
+    print("  host phases: " + ", ".join(
+        f"{k}={v:.3f}s" for k, v in res.profile["phases"].items())
+        + f" (coverage {res.profile['coverage']:.2f})")
+    if trace_path:
+        events = deadline_trace_events(plan, fleet=fleet, cost=cost,
+                                       sizes=sizes)
+        print(f"  trace: {write_trace(trace_path, events)} "
+              f"({len(events)} events; load in ui.perfetto.dev)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--compiled", action="store_true",
                     help="also run the virtual-event scan engine and "
                          "print the loop-vs-scan host-time comparison")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="run the deadline config with the observability "
+                         "layer on and print metric/profile summaries")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="with --telemetry: export the virtual timeline "
+                         "as Chrome trace-event JSON to PATH")
     args = ap.parse_args()
 
     _, _, fleet, deadline = setup_sweep()
@@ -94,6 +158,8 @@ def main():
               f"{r['final_wall_clock']:>10.1f}s")
     if args.compiled:
         compiled_comparison()
+    if args.telemetry or args.trace:
+        telemetry_demo(trace_path=args.trace)
 
 
 if __name__ == "__main__":

@@ -90,6 +90,9 @@ class AsyncFLConfig:
     latency_aware: bool = False   # deadline-aware selection probabilities
     agg_backend: str = "flat"     # flat (fused Pallas kernel) | pytree
     agg_dtype: str = "bfloat16"   # (K, D) buffer storage dtype (flat only)
+    # observability: per-round metrics from the jitted steps + host-phase
+    # profile (see FLConfig.telemetry — same static, never-sweepable flag)
+    telemetry: bool = False
     seed: int = 0
 
     def __post_init__(self):
@@ -106,7 +109,7 @@ class AsyncFLConfig:
             lr=self.lr, max_local_steps=self.max_local_steps,
             het_steps=self.het_steps, psi=self.psi,
             agg_backend=self.agg_backend, agg_dtype=self.agg_dtype,
-            seed=self.seed)
+            telemetry=self.telemetry, seed=self.seed)
 
     def timeline_config(self) -> "AsyncFLConfig":
         """The jit-cache key: this config with every SWEEPABLE field
@@ -222,6 +225,13 @@ class FedBuffPlan:
     flush_clock: np.ndarray  # (R,) float64 wall clock of the M-th arrival
     stale_mean: np.ndarray   # (R,) float64
     n_slots: int             # pool rows (max concurrently live updates)
+    # per-dispatch clocks over ALL C + R*M dispatches (seeds first) — the
+    # telemetry trace export's raw material; None on externally-built
+    # plans that predate the fields
+    dispatch_clock: Optional[np.ndarray] = None  # (C + R*M,) float64
+    arrival_clock: Optional[np.ndarray] = None   # (C + R*M,) float64
+    all_ids: Optional[np.ndarray] = None         # (C + R*M,) int32
+    all_steps: Optional[np.ndarray] = None       # (C + R*M,) int32
 
 
 @functools.partial(jax.jit, static_argnums=(2,))
@@ -382,6 +392,10 @@ def build_fedbuff_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
     events.push_batch(begin0 + lats[:C], "arrival", "d", range(C))
     pool = C
     n_dispatched = C
+    # per-dispatch clocks, recorded for the telemetry trace export
+    disp_clock = np.zeros(total, np.float64)
+    arr_clock = np.empty(total, np.float64)
+    arr_clock[:C] = begin0 + lats[:C]
 
     def do_dispatch(at: float, version: int) -> int:
         nonlocal n_dispatched, pool
@@ -395,6 +409,7 @@ def build_fedbuff_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
             slot = pool
             pool += 1
         slot_of[d], version_of[d] = slot, version
+        disp_clock[d], arr_clock[d] = at, begin + lats[d]
         events.push(begin + lats[d], "arrival", d=d)
         return d
     ids = np.empty((rounds, M), np.int64)
@@ -430,7 +445,8 @@ def build_fedbuff_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
         store_slot=store_slot.astype(np.int32),
         flush_slot=flush_slot.astype(np.int32), tau=tau,
         flush_clock=flush_clock, stale_mean=tau.mean(axis=1).astype(float),
-        n_slots=pool)
+        n_slots=pool, dispatch_clock=disp_clock, arrival_clock=arr_clock,
+        all_ids=cids.astype(np.int32), all_steps=steps.astype(np.int32))
 
 
 def build_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
@@ -517,10 +533,19 @@ def deadline_slow_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
     K = ids.shape[0]
     tau = jnp.concatenate([jnp.zeros((K,), jnp.float32), due_tau])
     mask = jnp.concatenate([arrived_mask.astype(jnp.float32), due_mask])
+    deltas_all = _concat0(deltas, due_d)
+    grads_all = _concat0(grads, due_g)
+    gammas_all = jnp.concatenate([gammas, due_gam])
     new_params = _apply_aggregation(
-        afl, params, _concat0(deltas, due_d), _concat0(grads, due_g),
-        jnp.concatenate([gammas, due_gam]), tau, mask=mask, mesh=mesh,
-        hypers=h)
+        afl, params, deltas_all, grads_all, gammas_all, tau, mask=mask,
+        mesh=mesh, hypers=h)
+    if afl.telemetry:
+        from repro.telemetry import metrics as tmetrics
+        m = tmetrics.metrics_for_algo(
+            afl.algo, params, new_params, deltas_all, grads_all,
+            psi=h["psi"], gammas=gammas_all, tau=tau,
+            alpha=h["staleness_alpha"], mask=mask)
+        return new_params, (pend_d, pend_g, pend_gam), m
     return new_params, (pend_d, pend_g, pend_gam)
 
 
@@ -565,9 +590,15 @@ def fedbuff_round_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
     pend_gam = pend_gam.at[store_slot].set(gammas)
     flush_d = jax.tree.map(lambda x: x[flush_slot], pend_d)
     flush_g = jax.tree.map(lambda x: x[flush_slot], pend_g)
+    flush_gam = pend_gam[flush_slot]
     new_params = _apply_aggregation(afl, params, flush_d, flush_g,
-                                    pend_gam[flush_slot], tau, mesh=mesh,
-                                    hypers=h)
+                                    flush_gam, tau, mesh=mesh, hypers=h)
+    if afl.telemetry:
+        from repro.telemetry import metrics as tmetrics
+        m = tmetrics.metrics_for_algo(
+            afl.algo, params, new_params, flush_d, flush_g, psi=h["psi"],
+            gammas=flush_gam, tau=tau, alpha=h["staleness_alpha"])
+        return new_params, (pend_d, pend_g, pend_gam), m
     return new_params, (pend_d, pend_g, pend_gam)
 
 
@@ -577,7 +608,7 @@ def run_async(model_cfg, fed: FederatedData, afl: AsyncFLConfig,
               fleet: DeviceFleet, rounds: int,
               init_key: Optional[jax.Array] = None,
               eval_every: int = 1, mesh=None,
-              plan=None) -> simulator.FedRunResult:
+              plan=None, profiler=None) -> simulator.FedRunResult:
     """Run `rounds` server aggregations of async FOLB on the system model.
 
     In deadline mode a "round" is one deadline-barriered aggregation; in
@@ -587,18 +618,29 @@ def run_async(model_cfg, fed: FederatedData, afl: AsyncFLConfig,
     ``plan`` replays a pre-built event plan (see ``build_plan``) instead
     of rebuilding it — it must come from this (afl, fleet, rounds, key)
     timeline.
+
+    The result's ``ids`` are the plan's dispatched device ids.  With
+    ``afl.telemetry`` the result additionally carries per-round metrics
+    (in-scan stats plus the plan-derived network/pool series) and a
+    host-phase profile; ``profiler`` overrides the auto-created one.
     """
-    assert fleet.n_devices == fed.n_devices, (fleet.n_devices, fed.n_devices)
-    key = init_key if init_key is not None else jax.random.PRNGKey(afl.seed)
-    params = small.init_small(model_cfg, key)
-    train = {"x": jnp.asarray(fed.x), "y": jnp.asarray(fed.y),
-             "mask": jnp.asarray(fed.mask)}
-    test = {"x": jnp.asarray(fed.test_x), "y": jnp.asarray(fed.test_y),
-            "mask": jnp.asarray(fed.test_mask)}
-    p = jnp.asarray(fed.p)
-    sizes = np.asarray(fed.mask.sum(axis=1))
-    cost = round_cost_for(model_cfg, params,
-                          uploads_gradient="folb" in afl.algo)
+    from repro.telemetry import metrics as tmetrics
+    from repro.telemetry import profiler_for
+    prof = profiler_for(afl.telemetry, profiler)
+    with prof.phase("setup"):
+        assert fleet.n_devices == fed.n_devices, \
+            (fleet.n_devices, fed.n_devices)
+        key = init_key if init_key is not None \
+            else jax.random.PRNGKey(afl.seed)
+        params = small.init_small(model_cfg, key)
+        train = {"x": jnp.asarray(fed.x), "y": jnp.asarray(fed.y),
+                 "mask": jnp.asarray(fed.mask)}
+        test = {"x": jnp.asarray(fed.test_x), "y": jnp.asarray(fed.test_y),
+                "mask": jnp.asarray(fed.test_mask)}
+        p = jnp.asarray(fed.p)
+        sizes = np.asarray(fed.mask.sum(axis=1))
+        cost = round_cost_for(model_cfg, params,
+                              uploads_gradient="folb" in afl.algo)
 
     hist: Dict[str, List[float]] = {
         "round": [], "wall_clock": [], "train_loss": [], "train_acc": [],
@@ -606,94 +648,146 @@ def run_async(model_cfg, fed: FederatedData, afl: AsyncFLConfig,
 
     def record(t: int, clock_now: float, n_arrived: int, stale_mean: float,
                cur_params):
-        tr_loss, tr_acc = simulator.eval_global(model_cfg, cur_params, train, p)
-        _, te_acc = simulator.eval_global(model_cfg, cur_params, test, p)
-        hist["round"].append(t)
-        hist["wall_clock"].append(float(clock_now))
-        hist["train_loss"].append(float(tr_loss))
-        hist["train_acc"].append(float(tr_acc))
-        hist["test_acc"].append(float(te_acc))
-        hist["n_arrived"].append(float(n_arrived))
-        hist["stale_mean"].append(float(stale_mean))
+        with prof.phase("eval"):
+            tr_loss, tr_acc = simulator.eval_global(model_cfg, cur_params,
+                                                    train, p)
+            _, te_acc = simulator.eval_global(model_cfg, cur_params, test, p)
+            hist["round"].append(t)
+            hist["wall_clock"].append(float(clock_now))
+            hist["train_loss"].append(float(tr_loss))
+            hist["train_acc"].append(float(tr_acc))
+            hist["test_acc"].append(float(te_acc))
+            hist["n_arrived"].append(float(n_arrived))
+            hist["stale_mean"].append(float(stale_mean))
 
     if afl.mode == "deadline":
-        params = _run_deadline(model_cfg, afl, fleet, cost, sizes, train, p,
-                               key, params, rounds, eval_every, record,
-                               mesh=mesh, plan=plan)
+        params, plan, mlist = _run_deadline(
+            model_cfg, afl, fleet, cost, sizes, train, p, key, params,
+            rounds, eval_every, record, mesh=mesh, plan=plan, prof=prof)
     else:
-        params = _run_fedbuff(model_cfg, afl, fleet, cost, sizes, train,
-                              key, params, rounds, eval_every, record,
-                              mesh=mesh, plan=plan)
-    return simulator.FedRunResult(history=hist, params=params)
+        params, plan, mlist = _run_fedbuff(
+            model_cfg, afl, fleet, cost, sizes, train, key, params, rounds,
+            eval_every, record, mesh=mesh, plan=plan, prof=prof)
+    with prof.phase("collect"):
+        metrics = None
+        if afl.telemetry:
+            metrics = tmetrics.stack_metrics(mlist)
+            D = int(sum(x.size for x in jax.tree.leaves(params)))
+            if afl.mode == "deadline":
+                metrics.update(tmetrics.deadline_network_series(D, afl,
+                                                                plan))
+                metrics.update(tmetrics.deadline_pool_series(plan))
+            else:
+                metrics.update(tmetrics.fedbuff_network_series(D, afl,
+                                                               plan))
+            metrics["selection_entropy"] = tmetrics.selection_entropy(
+                plan.ids, fed.n_devices)
+    return simulator.FedRunResult(history=hist, params=params,
+                                  ids=np.asarray(plan.ids),
+                                  metrics=metrics, profile=prof.finish())
 
 
 # ------------------------------------------------------------- deadline mode
 
 def _run_deadline(model_cfg, afl, fleet, cost, sizes, train, p, key, params,
-                  rounds, eval_every, record, mesh=None, plan=None):
+                  rounds, eval_every, record, mesh=None, plan=None,
+                  prof=None):
+    from repro.telemetry import NULL_PROFILER
+    prof = prof if prof is not None else NULL_PROFILER
+    mlist: List = []
     # canonical static configs + traced hypers: every sweepable value
     # reaches the shared jitted steps as an operand (one trace per
     # timeline, shared across hyper-parameter values)
     afl_t = afl.timeline_config()
     sync_fl = afl_t.sync_config()
     hypers = hypers_of(afl)
-    sel_probs = deadline_selection_probs(afl, fleet, cost, sizes)
-    if plan is None:
-        plan = build_deadline_plan(afl, fleet, cost, sizes, rounds, key,
-                                   sel_probs)
-    pend = pool_init(model_cfg, sync_fl, params, train, plan.n_slots + 1)
+    with prof.phase("plan_build"):
+        sel_probs = deadline_selection_probs(afl, fleet, cost, sizes)
+        if plan is None:
+            plan = build_deadline_plan(afl, fleet, cost, sizes, rounds, key,
+                                       sel_probs)
+        pend = pool_init(model_cfg, sync_fl, params, train,
+                         plan.n_slots + 1)
     for t in range(rounds):
-        n_steps = jnp.asarray(plan.n_steps[t])
-        if plan.fast[t]:
-            # sync-parity fast path: every dispatched device made the
-            # deadline and no stale upload joins, so every τ is 0 and the
-            # (1+τ)^{-α} discount is the constant 1.0 for ANY α — the round
-            # is EXACTLY one synchronous round; reuse the simulator's fused
-            # round (same jitted computation => bit-for-bit agreement in
-            # the D = ∞ limit, and ~3x less host time per round).  With
-            # latency-aware selection the pre-computed sel_probs make
-            # fl_round resample the very same ids as the plan from the
-            # same key.
-            params, _ = simulator.fl_round(
-                model_cfg, sync_fl, params, train, p,
-                jnp.asarray(plan.keys[t]), n_steps, sel_probs, hypers,
-                mesh=mesh)
-        else:
-            params, pend = deadline_slow_step(
-                model_cfg, afl_t, params, pend, train,
-                jnp.asarray(plan.ids[t]), n_steps,
-                jnp.asarray(plan.arrived[t], jnp.float32),
-                jnp.asarray(plan.store_slot[t]),
-                jnp.asarray(plan.due_slot[t]),
-                jnp.asarray(plan.due_mask[t]),
-                jnp.asarray(plan.due_tau[t]), hypers, mesh=mesh)
+        with prof.phase("rounds"):
+            params, pend = _deadline_round(
+                model_cfg, afl_t, sync_fl, params, pend, train, p, plan, t,
+                sel_probs, hypers, mlist, mesh)
         if t % eval_every == 0 or t == rounds - 1:
             record(t, plan.round_end[t], int(plan.n_arrived[t]),
                    float(plan.stale_mean[t]), params)
-    return params
+    return params, plan, mlist
+
+
+def _deadline_round(model_cfg, afl_t, sync_fl, params, pend, train, p, plan,
+                    t, sel_probs, hypers, mlist, mesh):
+    n_steps = jnp.asarray(plan.n_steps[t])
+    if plan.fast[t]:
+        # sync-parity fast path: every dispatched device made the
+        # deadline and no stale upload joins, so every τ is 0 and the
+        # (1+τ)^{-α} discount is the constant 1.0 for ANY α — the round
+        # is EXACTLY one synchronous round; reuse the simulator's fused
+        # round (same jitted computation => bit-for-bit agreement in
+        # the D = ∞ limit, and ~3x less host time per round).  With
+        # latency-aware selection the pre-computed sel_probs make
+        # fl_round resample the very same ids as the plan from the
+        # same key.
+        params, diag = simulator.fl_round(
+            model_cfg, sync_fl, params, train, p,
+            jnp.asarray(plan.keys[t]), n_steps, sel_probs, hypers,
+            mesh=mesh)
+        if sync_fl.telemetry:
+            mlist.append(diag["metrics"])
+        return params, pend
+    out = deadline_slow_step(
+        model_cfg, afl_t, params, pend, train,
+        jnp.asarray(plan.ids[t]), n_steps,
+        jnp.asarray(plan.arrived[t], jnp.float32),
+        jnp.asarray(plan.store_slot[t]),
+        jnp.asarray(plan.due_slot[t]),
+        jnp.asarray(plan.due_mask[t]),
+        jnp.asarray(plan.due_tau[t]), hypers, mesh=mesh)
+    if afl_t.telemetry:
+        params, pend, m = out
+        mlist.append(m)
+    else:
+        params, pend = out
+    return params, pend
 
 
 # -------------------------------------------------------------- fedbuff mode
 
 def _run_fedbuff(model_cfg, afl, fleet, cost, sizes, train, key, params,
-                 rounds, eval_every, record, mesh=None, plan=None):
+                 rounds, eval_every, record, mesh=None, plan=None,
+                 prof=None):
+    from repro.telemetry import NULL_PROFILER
+    prof = prof if prof is not None else NULL_PROFILER
+    mlist: List = []
     afl_t = afl.timeline_config()
     hypers = hypers_of(afl)
-    if plan is None:
-        plan = build_fedbuff_plan(afl, fleet, cost, sizes, rounds, key)
-    pend = pool_init(model_cfg, afl_t.sync_config(), params, train,
-                     plan.n_slots)
-    pend = fedbuff_seed_pool(model_cfg, afl_t, params, pend, train,
-                             jnp.asarray(plan.seed_ids),
-                             jnp.asarray(plan.seed_steps),
-                             jnp.asarray(plan.seed_slots), hypers)
+    with prof.phase("plan_build"):
+        if plan is None:
+            plan = build_fedbuff_plan(afl, fleet, cost, sizes, rounds, key)
+        pend = pool_init(model_cfg, afl_t.sync_config(), params, train,
+                         plan.n_slots)
+        pend = fedbuff_seed_pool(model_cfg, afl_t, params, pend, train,
+                                 jnp.asarray(plan.seed_ids),
+                                 jnp.asarray(plan.seed_steps),
+                                 jnp.asarray(plan.seed_slots), hypers)
     for t in range(rounds):
-        params, pend = fedbuff_round_step(
-            model_cfg, afl_t, params, pend, train,
-            jnp.asarray(plan.ids[t]), jnp.asarray(plan.n_steps[t]),
-            jnp.asarray(plan.store_slot[t]), jnp.asarray(plan.flush_slot[t]),
-            jnp.asarray(plan.tau[t]), hypers, mesh=mesh)
+        with prof.phase("rounds"):
+            out = fedbuff_round_step(
+                model_cfg, afl_t, params, pend, train,
+                jnp.asarray(plan.ids[t]), jnp.asarray(plan.n_steps[t]),
+                jnp.asarray(plan.store_slot[t]),
+                jnp.asarray(plan.flush_slot[t]),
+                jnp.asarray(plan.tau[t]), hypers, mesh=mesh)
+            if afl_t.telemetry:
+                params, pend, m = out
+                mlist.append(m)
+            else:
+                params, pend = out
         if t % eval_every == 0 or t == rounds - 1:
             record(t, plan.flush_clock[t], afl.buffer_size,
                    float(plan.stale_mean[t]), params)
-    return params
+    return params, plan, mlist

@@ -103,10 +103,12 @@ def make_sync_round_step(model_cfg, fl: simulator.FLConfig,
             new_params, so_state = sopt.server_round_update(
                 so_cfg, params, so_state, new_params, hypers["server_lr"])
         w_new = flat_lib.ravel(spec, new_params)
-        ids = {"ids": diag["ids"]}
+        extras = {"ids": diag["ids"]}
         if "ids2" in diag:
-            ids["ids2"] = diag["ids2"]
-        return w_new, so_state, ids
+            extras["ids2"] = diag["ids2"]
+        if fl.telemetry:
+            extras["metrics"] = diag["metrics"]
+        return w_new, so_state, extras
 
     return step
 
@@ -137,8 +139,9 @@ def scan_rounds(model_cfg, fl: simulator.FLConfig, spec: flat_lib.FlatSpec,
     def body(carry, xs):
         w_flat, so_state = carry if use_so else (carry, None)
         sub, n_steps = xs
-        w_new, so_state, ids = step(w_flat, so_state, sub, n_steps, hypers)
-        ys = {"params": w_new, **ids}
+        w_new, so_state, extras = step(w_flat, so_state, sub, n_steps,
+                                       hypers)
+        ys = {"params": w_new, **extras}
         return ((w_new, so_state) if use_so else w_new), ys
 
     carry0 = (w0_flat, so_state0) if use_so else w0_flat
@@ -230,7 +233,8 @@ def run_federated_compiled(model_cfg, fed: FederatedData,
                            init_key: Optional[jax.Array] = None,
                            eval_every: int = 1,
                            fleet=None, sel_probs=None,
-                           mesh=None) -> simulator.FedRunResult:
+                           mesh=None, profiler=None
+                           ) -> simulator.FedRunResult:
     """Drop-in replacement for ``run_federated`` on fixed schedules.
 
     Bit-for-bit identical history on the same seed (shared round math,
@@ -239,37 +243,67 @@ def run_federated_compiled(model_cfg, fed: FederatedData,
     round.  ``sel_probs`` (e.g. from ``latency_selection_probs``) replaces
     uniform sampling; ``mesh`` shards the flat aggregation's D axis so
     fed100m-scale models fit.
+
+    With ``fl.telemetry`` the scan additionally emits the per-round
+    metrics pytree (extra scan outputs — same program otherwise) and the
+    result carries them as (rounds, ·) arrays plus the host-phase profile
+    (setup / plan_build / scan / eval phases; the first call's jit
+    compilation lands inside ``scan``).
     """
-    key = init_key if init_key is not None else jax.random.PRNGKey(fl.seed)
-    params = small.init_small(model_cfg, key)
-    train = {"x": jnp.asarray(fed.x), "y": jnp.asarray(fed.y),
-             "mask": jnp.asarray(fed.mask)}
-    test = {"x": jnp.asarray(fed.test_x), "y": jnp.asarray(fed.test_y),
-            "mask": jnp.asarray(fed.test_mask)}
-    p = jnp.asarray(fed.p)
+    from repro.telemetry import metrics as tmetrics
+    from repro.telemetry import profiler_for
+    prof = profiler_for(fl.telemetry, profiler)
+    with prof.phase("setup"):
+        key = init_key if init_key is not None \
+            else jax.random.PRNGKey(fl.seed)
+        params = small.init_small(model_cfg, key)
+        train = {"x": jnp.asarray(fed.x), "y": jnp.asarray(fed.y),
+                 "mask": jnp.asarray(fed.mask)}
+        test = {"x": jnp.asarray(fed.test_x), "y": jnp.asarray(fed.test_y),
+                "mask": jnp.asarray(fed.test_mask)}
+        p = jnp.asarray(fed.p)
+        spec = flat_lib.spec_of(params)
+        w0 = flat_lib.ravel(spec, params)
+    with prof.phase("plan_build"):
+        keys, steps = draw_round_inputs(fl, rounds, key)
+        so_cfg = sopt.ServerOptConfig(kind=fl.server_opt, lr=1.0)
+        use_so = fl.server_opt != "sgd" or fl.server_lr != 1.0
+        so_state0 = sopt.init_server_state(so_cfg, params) if use_so \
+            else None
+    with prof.phase("scan"):
+        w_final, ys = scan_rounds(
+            model_cfg, fl.timeline_config(), spec, w0, train, p, keys,
+            steps, simulator.hypers_of(fl), sel_probs, so_state0, mesh=mesh)
+        if fl.telemetry:
+            # attribute device time honestly when profiling (jax dispatch
+            # is async); the telemetry-off path never adds a barrier
+            jax.block_until_ready(ys)
 
-    spec = flat_lib.spec_of(params)
-    w0 = flat_lib.ravel(spec, params)
-    keys, steps = draw_round_inputs(fl, rounds, key)
-    so_cfg = sopt.ServerOptConfig(kind=fl.server_opt, lr=1.0)
-    use_so = fl.server_opt != "sgd" or fl.server_lr != 1.0
-    so_state0 = sopt.init_server_state(so_cfg, params) if use_so else None
-    w_final, ys = scan_rounds(model_cfg, fl.timeline_config(), spec, w0,
-                              train, p, keys, steps, simulator.hypers_of(fl),
-                              sel_probs, so_state0, mesh=mesh)
-
-    clocks = None
-    if fleet is not None:
-        assert fleet.n_devices == fed.n_devices, \
-            (fleet.n_devices, fed.n_devices)
-        clocks = sync_clock_replay(
-            model_cfg, params, fed, fl.algo, fleet, np.asarray(ys["ids"]),
-            np.asarray(ys["ids2"]) if "ids2" in ys else None,
-            np.asarray(steps), rounds)
-    hist = eval_history_replay(model_cfg, spec, train, test, p,
-                               ys["params"], rounds, eval_every, clocks)
-    return simulator.FedRunResult(history=hist,
-                                  params=flat_lib.unravel(spec, w_final))
+    with prof.phase("eval"):
+        clocks = None
+        if fleet is not None:
+            assert fleet.n_devices == fed.n_devices, \
+                (fleet.n_devices, fed.n_devices)
+            clocks = sync_clock_replay(
+                model_cfg, params, fed, fl.algo, fleet,
+                np.asarray(ys["ids"]),
+                np.asarray(ys["ids2"]) if "ids2" in ys else None,
+                np.asarray(steps), rounds)
+        hist = eval_history_replay(model_cfg, spec, train, test, p,
+                                   ys["params"], rounds, eval_every, clocks)
+    with prof.phase("collect"):
+        ids_np = np.asarray(ys["ids"])
+        metrics = None
+        if fl.telemetry:
+            metrics = {k: np.asarray(v) for k, v in ys["metrics"].items()}
+            D = int(sum(x.size for x in jax.tree.leaves(params)))
+            metrics.update(tmetrics.sync_network_series(
+                D, fl, rounds, fed.n_devices))
+            metrics["selection_entropy"] = tmetrics.selection_entropy(
+                ids_np, fed.n_devices)
+    return simulator.FedRunResult(
+        history=hist, params=flat_lib.unravel(spec, w_final), ids=ids_np,
+        metrics=metrics, profile=prof.finish())
 
 
 # --------------------------------------------------- compiled async engines
@@ -288,16 +322,25 @@ def make_deadline_step(model_cfg, afl, spec: flat_lib.FlatSpec, data,
         sub, ids_t, steps_t, arr_t, store_t, due_s, due_m, due_t, fast_t = xs
         params = flat_lib.unravel(spec, w_flat)
 
+        # with telemetry both branches return a third metrics pytree; the
+        # schemas are structurally identical by construction (the sync
+        # round is the τ = 0 full-mask case), which lax.cond requires
         def fast_fn(params, pend):
-            new, _ = simulator.fl_round(model_cfg, fl, params, data,
-                                        p_weights, sub, steps_t, sel_probs,
-                                        hypers, mesh=mesh)
+            new, diag = simulator.fl_round(model_cfg, fl, params, data,
+                                           p_weights, sub, steps_t,
+                                           sel_probs, hypers, mesh=mesh)
+            if fl.telemetry:
+                return flat_lib.ravel(spec, new), pend, diag["metrics"]
             return flat_lib.ravel(spec, new), pend
 
         def slow_fn(params, pend):
-            new, pend2 = async_lib.deadline_slow_step(
+            out = async_lib.deadline_slow_step(
                 model_cfg, afl, params, pend, data, ids_t, steps_t, arr_t,
                 store_t, due_s, due_m, due_t, hypers, mesh=mesh)
+            if afl.telemetry:
+                new, pend2, m = out
+                return flat_lib.ravel(spec, new), pend2, m
+            new, pend2 = out
             return flat_lib.ravel(spec, new), pend2
 
         return jax.lax.cond(fast_t, fast_fn, slow_fn, params, pend)
@@ -317,7 +360,11 @@ def scan_async_deadline(model_cfg, afl, spec: flat_lib.FlatSpec, w0_flat,
                               sel_probs, mesh)
 
     def body(carry, xs):
-        w_new, pend = step(carry[0], carry[1], xs, hypers)
+        out = step(carry[0], carry[1], xs, hypers)
+        if afl.telemetry:
+            w_new, pend, m = out
+            return (w_new, pend), {"params": w_new, "metrics": m}
+        w_new, pend = out
         return (w_new, pend), w_new
 
     (w_final, _), ws = jax.lax.scan(
@@ -334,9 +381,13 @@ def make_fedbuff_step(model_cfg, afl, spec: flat_lib.FlatSpec, data, mesh):
     def step(w_flat, pend, xs, hypers):
         ids_t, steps_t, store_t, flush_t, tau_t = xs
         params = flat_lib.unravel(spec, w_flat)
-        new, pend = async_lib.fedbuff_round_step(
+        out = async_lib.fedbuff_round_step(
             model_cfg, afl, params, pend, data, ids_t, steps_t, store_t,
             flush_t, tau_t, hypers, mesh=mesh)
+        if afl.telemetry:
+            new, pend, m = out
+            return flat_lib.ravel(spec, new), pend, m
+        new, pend = out
         return flat_lib.ravel(spec, new), pend
 
     return step
@@ -353,7 +404,11 @@ def scan_async_fedbuff(model_cfg, afl, spec: flat_lib.FlatSpec, w0_flat,
     step = make_fedbuff_step(model_cfg, afl, spec, data, mesh)
 
     def body(carry, xs):
-        w_new, pend = step(carry[0], carry[1], xs, hypers)
+        out = step(carry[0], carry[1], xs, hypers)
+        if afl.telemetry:
+            w_new, pend, m = out
+            return (w_new, pend), {"params": w_new, "metrics": m}
+        w_new, pend = out
         return (w_new, pend), w_new
 
     (w_final, _), ws = jax.lax.scan(
@@ -365,7 +420,8 @@ def run_async_compiled(model_cfg, fed: FederatedData, afl,
                        fleet, rounds: int,
                        init_key: Optional[jax.Array] = None,
                        eval_every: int = 1,
-                       mesh=None, plan=None) -> simulator.FedRunResult:
+                       mesh=None, plan=None,
+                       profiler=None) -> simulator.FedRunResult:
     """Drop-in replacement for ``async_engine.run_async``: the virtual-
     event scan.
 
@@ -378,61 +434,98 @@ def run_async_compiled(model_cfg, fed: FederatedData, afl,
     replays a pre-built event plan (``async_engine.build_plan``) instead
     of rebuilding it — plans depend only on timeline fields, so one plan
     serves any sweepable-hyper variation of ``afl``.
+
+    With ``afl.telemetry`` the scan additionally emits the per-round
+    metrics pytree and the result carries them (plus the plan-derived
+    network/pool series) and the host-phase profile.
     """
-    assert fleet.n_devices == fed.n_devices, (fleet.n_devices, fed.n_devices)
-    key = init_key if init_key is not None else jax.random.PRNGKey(afl.seed)
-    params = small.init_small(model_cfg, key)
-    train = {"x": jnp.asarray(fed.x), "y": jnp.asarray(fed.y),
-             "mask": jnp.asarray(fed.mask)}
-    test = {"x": jnp.asarray(fed.test_x), "y": jnp.asarray(fed.test_y),
-            "mask": jnp.asarray(fed.test_mask)}
-    p = jnp.asarray(fed.p)
-    sizes = np.asarray(fed.mask.sum(axis=1))
-    cost = round_cost_for(model_cfg, params,
-                          uploads_gradient="folb" in afl.algo)
-    afl_t = afl.timeline_config()
-    sync_fl = afl_t.sync_config()
-    hypers = async_lib.hypers_of(afl)
-    spec = flat_lib.spec_of(params)
-    w0 = flat_lib.ravel(spec, params)
+    from repro.telemetry import metrics as tmetrics
+    from repro.telemetry import profiler_for
+    prof = profiler_for(afl.telemetry, profiler)
+    with prof.phase("setup"):
+        assert fleet.n_devices == fed.n_devices, \
+            (fleet.n_devices, fed.n_devices)
+        key = init_key if init_key is not None \
+            else jax.random.PRNGKey(afl.seed)
+        params = small.init_small(model_cfg, key)
+        train = {"x": jnp.asarray(fed.x), "y": jnp.asarray(fed.y),
+                 "mask": jnp.asarray(fed.mask)}
+        test = {"x": jnp.asarray(fed.test_x), "y": jnp.asarray(fed.test_y),
+                "mask": jnp.asarray(fed.test_mask)}
+        p = jnp.asarray(fed.p)
+        sizes = np.asarray(fed.mask.sum(axis=1))
+        cost = round_cost_for(model_cfg, params,
+                              uploads_gradient="folb" in afl.algo)
+        afl_t = afl.timeline_config()
+        sync_fl = afl_t.sync_config()
+        hypers = async_lib.hypers_of(afl)
+        spec = flat_lib.spec_of(params)
+        w0 = flat_lib.ravel(spec, params)
 
     if afl.mode == "deadline":
-        sel_probs = async_lib.deadline_selection_probs(afl, fleet, cost,
-                                                       sizes)
-        if plan is None:
-            plan = async_lib.build_deadline_plan(afl, fleet, cost, sizes,
-                                                 rounds, key, sel_probs)
-        pend0 = async_lib.pool_init(model_cfg, sync_fl, params, train,
-                                    plan.n_slots + 1)
-        w_final, ws = scan_async_deadline(
-            model_cfg, afl_t, spec, w0, pend0, train, p,
-            jnp.asarray(plan.keys), jnp.asarray(plan.ids),
-            jnp.asarray(plan.n_steps),
-            jnp.asarray(plan.arrived, jnp.float32),
-            jnp.asarray(plan.store_slot), jnp.asarray(plan.due_slot),
-            jnp.asarray(plan.due_mask), jnp.asarray(plan.due_tau),
-            jnp.asarray(plan.fast), hypers, sel_probs, mesh=mesh)
+        with prof.phase("plan_build"):
+            sel_probs = async_lib.deadline_selection_probs(afl, fleet, cost,
+                                                           sizes)
+            if plan is None:
+                plan = async_lib.build_deadline_plan(afl, fleet, cost,
+                                                     sizes, rounds, key,
+                                                     sel_probs)
+            pend0 = async_lib.pool_init(model_cfg, sync_fl, params, train,
+                                        plan.n_slots + 1)
+        with prof.phase("scan"):
+            w_final, ws = scan_async_deadline(
+                model_cfg, afl_t, spec, w0, pend0, train, p,
+                jnp.asarray(plan.keys), jnp.asarray(plan.ids),
+                jnp.asarray(plan.n_steps),
+                jnp.asarray(plan.arrived, jnp.float32),
+                jnp.asarray(plan.store_slot), jnp.asarray(plan.due_slot),
+                jnp.asarray(plan.due_mask), jnp.asarray(plan.due_tau),
+                jnp.asarray(plan.fast), hypers, sel_probs, mesh=mesh)
+            if afl.telemetry:
+                jax.block_until_ready(ws)
         clocks, n_arr = plan.round_end, plan.n_arrived
     else:
-        if plan is None:
-            plan = async_lib.build_fedbuff_plan(afl, fleet, cost, sizes,
-                                                rounds, key)
-        pend0 = async_lib.pool_init(model_cfg, sync_fl, params, train,
-                                    plan.n_slots)
-        pend0 = async_lib.fedbuff_seed_pool(
-            model_cfg, afl_t, params, pend0, train,
-            jnp.asarray(plan.seed_ids), jnp.asarray(plan.seed_steps),
-            jnp.asarray(plan.seed_slots), hypers)
-        w_final, ws = scan_async_fedbuff(
-            model_cfg, afl_t, spec, w0, pend0, train,
-            jnp.asarray(plan.ids), jnp.asarray(plan.n_steps),
-            jnp.asarray(plan.store_slot), jnp.asarray(plan.flush_slot),
-            jnp.asarray(plan.tau), hypers, mesh=mesh)
+        with prof.phase("plan_build"):
+            if plan is None:
+                plan = async_lib.build_fedbuff_plan(afl, fleet, cost, sizes,
+                                                    rounds, key)
+            pend0 = async_lib.pool_init(model_cfg, sync_fl, params, train,
+                                        plan.n_slots)
+            pend0 = async_lib.fedbuff_seed_pool(
+                model_cfg, afl_t, params, pend0, train,
+                jnp.asarray(plan.seed_ids), jnp.asarray(plan.seed_steps),
+                jnp.asarray(plan.seed_slots), hypers)
+        with prof.phase("scan"):
+            w_final, ws = scan_async_fedbuff(
+                model_cfg, afl_t, spec, w0, pend0, train,
+                jnp.asarray(plan.ids), jnp.asarray(plan.n_steps),
+                jnp.asarray(plan.store_slot), jnp.asarray(plan.flush_slot),
+                jnp.asarray(plan.tau), hypers, mesh=mesh)
+            if afl.telemetry:
+                jax.block_until_ready(ws)
         clocks = plan.flush_clock
         n_arr = np.full(rounds, afl.buffer_size)
 
-    hist = eval_history_replay(model_cfg, spec, train, test, p, ws, rounds,
-                               eval_every, clocks=clocks, n_arrived=n_arr,
-                               stale_mean=plan.stale_mean)
-    return simulator.FedRunResult(history=hist,
-                                  params=flat_lib.unravel(spec, w_final))
+    params_traj = ws["params"] if afl.telemetry else ws
+    with prof.phase("eval"):
+        hist = eval_history_replay(model_cfg, spec, train, test, p,
+                                   params_traj, rounds, eval_every,
+                                   clocks=clocks, n_arrived=n_arr,
+                                   stale_mean=plan.stale_mean)
+    with prof.phase("collect"):
+        metrics = None
+        if afl.telemetry:
+            metrics = {k: np.asarray(v) for k, v in ws["metrics"].items()}
+            D = int(sum(x.size for x in jax.tree.leaves(params)))
+            if afl.mode == "deadline":
+                metrics.update(tmetrics.deadline_network_series(D, afl,
+                                                                plan))
+                metrics.update(tmetrics.deadline_pool_series(plan))
+            else:
+                metrics.update(tmetrics.fedbuff_network_series(D, afl,
+                                                               plan))
+            metrics["selection_entropy"] = tmetrics.selection_entropy(
+                plan.ids, fed.n_devices)
+    return simulator.FedRunResult(
+        history=hist, params=flat_lib.unravel(spec, w_final),
+        ids=np.asarray(plan.ids), metrics=metrics, profile=prof.finish())

@@ -79,6 +79,13 @@ class FLConfig:
     # beyond-paper: server optimizer over the round aggregate (FedOpt-style)
     server_opt: str = "sgd"     # sgd | momentum | adam
     server_lr: float = 1.0      # 1.0 + sgd == the paper's plain application
+    # observability: emit structured per-round metrics (repro.telemetry)
+    # as extra outputs of the jitted round steps and attach a host-phase
+    # profile to the run result.  A STATIC program-structure flag — it
+    # changes the traced program (part of the jit cache key, preserved by
+    # timeline_config, never sweepable); off is bit-for-bit the pre-
+    # telemetry program.
+    telemetry: bool = False
     seed: int = 0
 
     def __post_init__(self):
@@ -195,6 +202,11 @@ def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps,
             new = aggregation.fedavg_aggregate(params, deltas)
         diag["probs_entropy"] = -jnp.sum(probs * jnp.log(probs + 1e-12))
         diag["ids"] = ids
+        if fl.telemetry:
+            from repro.telemetry import metrics as tmetrics
+            diag["metrics"] = tmetrics.metrics_for_algo(
+                fl.algo, params, new, deltas, grads, psi=h["psi"],
+                gammas=gammas)
         return new, diag
 
     probs = selection.uniform_probs(N) if sel_probs is None else sel_probs
@@ -231,6 +243,14 @@ def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps,
         raise ValueError(fl.algo)
     diag["gamma_mean"] = jnp.mean(gammas)
     diag["ids"] = ids
+    if fl.telemetry:
+        # a sync round is the τ = 0, full-mask case of the async metrics
+        # schema, so every engine's metric pytrees are structurally
+        # identical (required by the deadline scan's lax.cond)
+        from repro.telemetry import metrics as tmetrics
+        diag["metrics"] = tmetrics.metrics_for_algo(
+            fl.algo, params, new, deltas, grads, psi=h["psi"],
+            gammas=gammas)
     return new, diag
 
 
@@ -257,9 +277,19 @@ class FedRunResult:
     into the history dict.  Mapping-style reads (`result["test_acc"]`)
     delegate to `history` so plotting/benchmark code treats it like the
     plain dict it used to receive.
+
+    `ids` records the actual per-round selected/dispatched device ids as a
+    (rounds, K) int array — every engine fills it (the async engines read
+    it straight off their event plan).  With `telemetry` on, `metrics`
+    carries the structured per-round arrays (repro.telemetry.metrics;
+    in-scan stats plus host-derived network/pool series) and `profile` the
+    host-phase timer summary (repro.telemetry.profiler).
     """
     history: Dict[str, List[float]]
     params: Any
+    ids: Optional[np.ndarray] = None
+    metrics: Optional[Dict[str, Any]] = None
+    profile: Optional[Dict[str, Any]] = None
 
     def __getitem__(self, key: str) -> List[float]:
         return self.history[key]
@@ -325,7 +355,7 @@ def sync_round_clock(fleet, cost, probe_cost, sizes, algo: str,
 def run_federated(model_cfg, fed: FederatedData, fl: FLConfig, rounds: int,
                   init_key: Optional[jax.Array] = None,
                   eval_every: int = 1, fleet=None, sel_probs=None,
-                  mesh=None) -> FedRunResult:
+                  mesh=None, profiler=None) -> FedRunResult:
     """Python-loop driver.  Heterogeneous local-step draws are generated from
     a round-indexed numpy seed so all compared algorithms see identical
     device capabilities (paper Sec. VI-A).
@@ -335,62 +365,94 @@ def run_federated(model_cfg, fed: FederatedData, fl: FLConfig, rounds: int,
     as its slowest selected device (full barrier, no deadline), and the
     cumulative clock is recorded in history["wall_clock"] at eval points —
     making sync runs comparable to the async engine on one time axis.
-    """
-    key = init_key if init_key is not None else jax.random.PRNGKey(fl.seed)
-    params = small.init_small(model_cfg, key)
-    train = {"x": jnp.asarray(fed.x), "y": jnp.asarray(fed.y),
-             "mask": jnp.asarray(fed.mask)}
-    test = {"x": jnp.asarray(fed.test_x), "y": jnp.asarray(fed.test_y),
-            "mask": jnp.asarray(fed.test_mask)}
-    p = jnp.asarray(fed.p)
 
-    hist: Dict[str, List[float]] = {"round": [], "train_loss": [],
-                                    "test_acc": [], "train_acc": []}
-    cost = probe_cost = sizes = None
-    if fleet is not None:
-        assert fleet.n_devices == fed.n_devices, \
-            (fleet.n_devices, fed.n_devices)
-        cost, probe_cost, sizes = fleet_cost_setup(model_cfg, params, fed,
-                                                   fl.algo)
-        hist["wall_clock"] = []
-    clock_now = 0.0
-    from repro.fed import server_opt as sopt
-    # sweepable scalars ride as traced operands against the canonical
-    # static config: configs differing only in lr/mu/psi/server_lr share
-    # one compiled round program (and the sweep engine vmaps the same one)
-    fl_t = fl.timeline_config()
-    hypers = hypers_of(fl)
-    so_cfg = sopt.ServerOptConfig(kind=fl.server_opt, lr=1.0)
-    so_state = sopt.init_server_state(so_cfg, params)
-    use_server_opt = fl.server_opt != "sgd" or fl.server_lr != 1.0
-    for t in range(rounds):
-        n_steps = local_step_draws(t, fl.n_selected, fl)
-        key, sub = jax.random.split(key)
-        new_params, diag = fl_round(model_cfg, fl_t, params, train, p, sub,
-                                    n_steps, sel_probs, hypers, mesh=mesh)
+    With ``fl.telemetry`` the result additionally carries per-round
+    metrics (in-scan stats from `fl_round` plus the modeled network
+    series) and a host-phase profile; ``profiler`` overrides the
+    auto-created `repro.telemetry.PhaseProfiler`.
+    """
+    from repro.telemetry import metrics as tmetrics
+    from repro.telemetry import profiler_for
+    prof = profiler_for(fl.telemetry, profiler)
+    with prof.phase("setup"):
+        key = init_key if init_key is not None \
+            else jax.random.PRNGKey(fl.seed)
+        params = small.init_small(model_cfg, key)
+        train = {"x": jnp.asarray(fed.x), "y": jnp.asarray(fed.y),
+                 "mask": jnp.asarray(fed.mask)}
+        test = {"x": jnp.asarray(fed.test_x), "y": jnp.asarray(fed.test_y),
+                "mask": jnp.asarray(fed.test_mask)}
+        p = jnp.asarray(fed.p)
+
+        hist: Dict[str, List[float]] = {"round": [], "train_loss": [],
+                                        "test_acc": [], "train_acc": []}
+        cost = probe_cost = sizes = None
         if fleet is not None:
-            clock_now = sync_round_clock(
-                fleet, cost, probe_cost, sizes, fl.algo,
-                np.asarray(diag["ids"]),
-                np.asarray(diag["ids2"]) if "ids2" in diag else None,
-                n_steps, clock_now)
-        if use_server_opt:
-            # one shared jitted unit (delta cast sequence + optimizer) so
-            # the scan engine can replay it bit-for-bit
-            params, so_state = sopt.server_round_update(
-                so_cfg, params, so_state, new_params, hypers["server_lr"])
-        else:
-            params = new_params
-        if t % eval_every == 0 or t == rounds - 1:
-            tr_loss, tr_acc = eval_global(model_cfg, params, train, p)
-            _, te_acc = eval_global(model_cfg, params, test, p)
-            hist["round"].append(t)
-            hist["train_loss"].append(float(tr_loss))
-            hist["train_acc"].append(float(tr_acc))
-            hist["test_acc"].append(float(te_acc))
+            assert fleet.n_devices == fed.n_devices, \
+                (fleet.n_devices, fed.n_devices)
+            cost, probe_cost, sizes = fleet_cost_setup(model_cfg, params,
+                                                       fed, fl.algo)
+            hist["wall_clock"] = []
+        clock_now = 0.0
+        from repro.fed import server_opt as sopt
+        # sweepable scalars ride as traced operands against the canonical
+        # static config: configs differing only in lr/mu/psi/server_lr
+        # share one compiled round program (and the sweep engine vmaps the
+        # same one)
+        fl_t = fl.timeline_config()
+        hypers = hypers_of(fl)
+        so_cfg = sopt.ServerOptConfig(kind=fl.server_opt, lr=1.0)
+        so_state = sopt.init_server_state(so_cfg, params)
+        use_server_opt = fl.server_opt != "sgd" or fl.server_lr != 1.0
+    ids_all: List[Any] = []
+    mlist: List[Any] = []
+    for t in range(rounds):
+        with prof.phase("rounds"):
+            n_steps = local_step_draws(t, fl.n_selected, fl)
+            key, sub = jax.random.split(key)
+            new_params, diag = fl_round(model_cfg, fl_t, params, train, p,
+                                        sub, n_steps, sel_probs, hypers,
+                                        mesh=mesh)
+            ids_all.append(diag["ids"])
+            if fl.telemetry:
+                mlist.append(diag["metrics"])
             if fleet is not None:
-                hist["wall_clock"].append(clock_now)
-    return FedRunResult(history=hist, params=params)
+                clock_now = sync_round_clock(
+                    fleet, cost, probe_cost, sizes, fl.algo,
+                    np.asarray(diag["ids"]),
+                    np.asarray(diag["ids2"]) if "ids2" in diag else None,
+                    n_steps, clock_now)
+            if use_server_opt:
+                # one shared jitted unit (delta cast sequence + optimizer)
+                # so the scan engine can replay it bit-for-bit
+                params, so_state = sopt.server_round_update(
+                    so_cfg, params, so_state, new_params,
+                    hypers["server_lr"])
+            else:
+                params = new_params
+        if t % eval_every == 0 or t == rounds - 1:
+            with prof.phase("eval"):
+                tr_loss, tr_acc = eval_global(model_cfg, params, train, p)
+                _, te_acc = eval_global(model_cfg, params, test, p)
+                hist["round"].append(t)
+                hist["train_loss"].append(float(tr_loss))
+                hist["train_acc"].append(float(tr_acc))
+                hist["test_acc"].append(float(te_acc))
+                if fleet is not None:
+                    hist["wall_clock"].append(clock_now)
+    with prof.phase("collect"):
+        ids_np = np.stack([np.asarray(i) for i in ids_all]) \
+            if ids_all else None
+        metrics = None
+        if fl.telemetry:
+            metrics = tmetrics.stack_metrics(mlist)
+            D = int(sum(x.size for x in jax.tree.leaves(params)))
+            metrics.update(tmetrics.sync_network_series(
+                D, fl, rounds, fed.n_devices))
+            metrics["selection_entropy"] = tmetrics.selection_entropy(
+                ids_np, fed.n_devices)
+    return FedRunResult(history=hist, params=params, ids=ids_np,
+                        metrics=metrics, profile=prof.finish())
 
 
 def rounds_to_accuracy(hist, target: float) -> int:

@@ -152,9 +152,13 @@ class SweepSpec:
 class SweepResult:
     """One ``FedRunResult`` per sweep member, plus the spec that made
     them.  Timeline quantities (wall clock, n_arrived, stale_mean, ids)
-    are identical across members by construction."""
+    are identical across members by construction.  With the base config's
+    ``telemetry`` on, each member result carries its own (R, ·) metrics
+    slice of the (R, S, ·) stacked scan outputs, and `profile` holds the
+    run-level host-phase timer summary (one compiled run serves all S)."""
     spec: SweepSpec
     results: Tuple[simulator.FedRunResult, ...]
+    profile: Optional[dict] = None
 
     def __len__(self) -> int:
         return len(self.results)
@@ -184,15 +188,24 @@ def sweep_scan_rounds(model_cfg, fl, spec: flat_lib.FlatSpec, w0_S, data,
     step = scan_engine.make_sync_round_step(
         model_cfg, fl, spec, use_so, data, p_weights, sel_probs, mesh)
 
+    # ids stay unbatched (out_axes None asserts the shared timeline);
+    # per-round metrics DO vary per member (deltas depend on lr/mu), so
+    # with telemetry they come back stacked along the sweep axis
+    extras_axes = {"ids": None}
+    if fl.algo == "folb2":
+        extras_axes["ids2"] = None
+    if fl.telemetry:
+        extras_axes["metrics"] = 0
+
     def body(carry, xs):
         w_S, so_S = carry if use_so else (carry, None)
         sub, n_steps = xs
         vstep = jax.vmap(
             lambda w, so, h: step(w, so, sub, n_steps, h),
             in_axes=(0, 0 if use_so else None, 0),
-            out_axes=(0, 0 if use_so else None, None))
-        w_new, so_S, ids = vstep(w_S, so_S, hypers_S)
-        ys = {"params": w_new, **ids}
+            out_axes=(0, 0 if use_so else None, extras_axes))
+        w_new, so_S, extras = vstep(w_S, so_S, hypers_S)
+        ys = {"params": w_new, **extras}
         return ((w_new, so_S) if use_so else w_new), ys
 
     carry0 = (w0_S, so_state0_S) if use_so else w0_S
@@ -204,7 +217,7 @@ def run_sweep_compiled(model_cfg, fed: FederatedData, spec: SweepSpec,
                        rounds: int,
                        init_key: Optional[jax.Array] = None,
                        eval_every: int = 1, fleet=None, sel_probs=None,
-                       mesh=None) -> SweepResult:
+                       mesh=None, profiler=None) -> SweepResult:
     """All S sync configs of ``spec`` in one compiled run.
 
     Every member's result is bit-for-bit what a solo
@@ -213,52 +226,81 @@ def run_sweep_compiled(model_cfg, fed: FederatedData, spec: SweepSpec,
     wall-clock, which is computed once and shared since all members
     sample identical devices.
     """
+    from repro.telemetry import metrics as tmetrics
+    from repro.telemetry import profiler_for
     base = spec.base
     assert isinstance(base, simulator.FLConfig), \
         "run_sweep_compiled takes an FLConfig sweep; use " \
         "run_async_sweep_compiled for AsyncFLConfig"
-    S = spec.n_configs
-    key = init_key if init_key is not None else jax.random.PRNGKey(base.seed)
-    params = small.init_small(model_cfg, key)
-    train = {"x": jnp.asarray(fed.x), "y": jnp.asarray(fed.y),
-             "mask": jnp.asarray(fed.mask)}
-    test = {"x": jnp.asarray(fed.test_x), "y": jnp.asarray(fed.test_y),
-            "mask": jnp.asarray(fed.test_mask)}
-    p = jnp.asarray(fed.p)
+    prof = profiler_for(base.telemetry, profiler)
+    with prof.phase("setup"):
+        S = spec.n_configs
+        key = init_key if init_key is not None \
+            else jax.random.PRNGKey(base.seed)
+        params = small.init_small(model_cfg, key)
+        train = {"x": jnp.asarray(fed.x), "y": jnp.asarray(fed.y),
+                 "mask": jnp.asarray(fed.mask)}
+        test = {"x": jnp.asarray(fed.test_x), "y": jnp.asarray(fed.test_y),
+                "mask": jnp.asarray(fed.test_mask)}
+        p = jnp.asarray(fed.p)
+        fspec = flat_lib.spec_of(params)
+        w0 = flat_lib.ravel(fspec, params)
+        w0_S = jnp.broadcast_to(w0, (S,) + w0.shape)
+    with prof.phase("plan_build"):
+        keys, steps = scan_engine.draw_round_inputs(base, rounds, key)
+        # uniform across members (SweepSpec validates), so member 0
+        # decides — the same predicate each member's solo run applies
+        use_so = _uses_server_opt(spec.member(0))
+        so_state0_S = None
+        if use_so:
+            so_cfg = sopt.ServerOptConfig(kind=base.server_opt, lr=1.0)
+            so0 = sopt.init_server_state(so_cfg, params)
+            so_state0_S = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (S,) + x.shape), so0)
+    with prof.phase("scan"):
+        w_final_S, ys = sweep_scan_rounds(
+            model_cfg, base.timeline_config(), fspec, w0_S, train, p, keys,
+            steps, spec.stacked_hypers(), sel_probs, so_state0_S, mesh=mesh)
+        if base.telemetry:
+            jax.block_until_ready(ys)
 
-    fspec = flat_lib.spec_of(params)
-    w0 = flat_lib.ravel(fspec, params)
-    w0_S = jnp.broadcast_to(w0, (S,) + w0.shape)
-    keys, steps = scan_engine.draw_round_inputs(base, rounds, key)
-    # uniform across members (SweepSpec validates), so member 0 decides —
-    # the same predicate each member's solo run applies
-    use_so = _uses_server_opt(spec.member(0))
-    so_state0_S = None
-    if use_so:
-        so_cfg = sopt.ServerOptConfig(kind=base.server_opt, lr=1.0)
-        so0 = sopt.init_server_state(so_cfg, params)
-        so_state0_S = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (S,) + x.shape), so0)
-    w_final_S, ys = sweep_scan_rounds(
-        model_cfg, base.timeline_config(), fspec, w0_S, train, p, keys,
-        steps, spec.stacked_hypers(), sel_probs, so_state0_S, mesh=mesh)
-
-    clocks = None
-    if fleet is not None:
-        assert fleet.n_devices == fed.n_devices, \
-            (fleet.n_devices, fed.n_devices)
-        clocks = scan_engine.sync_clock_replay(
-            model_cfg, params, fed, base.algo, fleet, np.asarray(ys["ids"]),
-            np.asarray(ys["ids2"]) if "ids2" in ys else None,
-            np.asarray(steps), rounds)
-    results = []
-    for i in range(S):
-        hist = scan_engine.eval_history_replay(
+    with prof.phase("eval"):
+        clocks = None
+        if fleet is not None:
+            assert fleet.n_devices == fed.n_devices, \
+                (fleet.n_devices, fed.n_devices)
+            clocks = scan_engine.sync_clock_replay(
+                model_cfg, params, fed, base.algo, fleet,
+                np.asarray(ys["ids"]),
+                np.asarray(ys["ids2"]) if "ids2" in ys else None,
+                np.asarray(steps), rounds)
+        hists = [scan_engine.eval_history_replay(
             model_cfg, fspec, train, test, p, ys["params"][:, i], rounds,
-            eval_every, clocks)
-        results.append(simulator.FedRunResult(
-            history=hist, params=flat_lib.unravel(fspec, w_final_S[i])))
-    return SweepResult(spec=spec, results=tuple(results))
+            eval_every, clocks) for i in range(S)]
+    with prof.phase("collect"):
+        ids_np = np.asarray(ys["ids"])
+        shared = None
+        if base.telemetry:
+            # the network series and selection entropy are timeline-only —
+            # one copy serves every member
+            D = int(sum(x.size for x in jax.tree.leaves(params)))
+            shared = tmetrics.sync_network_series(D, base, rounds,
+                                                  fed.n_devices)
+            shared["selection_entropy"] = tmetrics.selection_entropy(
+                ids_np, fed.n_devices)
+        results = []
+        for i in range(S):
+            metrics = None
+            if base.telemetry:
+                metrics = {k: np.asarray(v[:, i])
+                           for k, v in ys["metrics"].items()}
+                metrics.update(shared)
+            results.append(simulator.FedRunResult(
+                history=hists[i],
+                params=flat_lib.unravel(fspec, w_final_S[i]),
+                ids=ids_np, metrics=metrics))
+    return SweepResult(spec=spec, results=tuple(results),
+                       profile=prof.finish())
 
 
 # ---------------------------------------------------------- async sweeps
@@ -277,6 +319,11 @@ def sweep_scan_deadline(model_cfg, afl, spec: flat_lib.FlatSpec, w0_S,
 
     def body(carry, xs):
         w_S, pend_S = carry
+        if afl.telemetry:
+            w_new, pend_S, m = jax.vmap(
+                lambda w, pend, h: step(w, pend, xs, h))(w_S, pend_S,
+                                                         hypers_S)
+            return (w_new, pend_S), {"params": w_new, "metrics": m}
         w_new, pend_S = jax.vmap(
             lambda w, pend, h: step(w, pend, xs, h))(w_S, pend_S, hypers_S)
         return (w_new, pend_S), w_new
@@ -300,6 +347,11 @@ def sweep_scan_fedbuff(model_cfg, afl, spec: flat_lib.FlatSpec, w0_S,
 
     def body(carry, xs):
         w_S, pend_S = carry
+        if afl.telemetry:
+            w_new, pend_S, m = jax.vmap(
+                lambda w, pend, h: step(w, pend, xs, h))(w_S, pend_S,
+                                                         hypers_S)
+            return (w_new, pend_S), {"params": w_new, "metrics": m}
         w_new, pend_S = jax.vmap(
             lambda w, pend, h: step(w, pend, xs, h))(w_S, pend_S, hypers_S)
         return (w_new, pend_S), w_new
@@ -313,7 +365,7 @@ def run_async_sweep_compiled(model_cfg, fed: FederatedData,
                              spec: SweepSpec, fleet, rounds: int,
                              init_key: Optional[jax.Array] = None,
                              eval_every: int = 1, mesh=None,
-                             plan=None) -> SweepResult:
+                             plan=None, profiler=None) -> SweepResult:
     """All S async configs of ``spec`` against ONE event plan.
 
     The plan (and the pre-drawn key chain inside it) is built once from
@@ -324,74 +376,112 @@ def run_async_sweep_compiled(model_cfg, fed: FederatedData,
     stale_mean.  ``plan`` accepts a pre-built ``async_engine.build_plan``
     value for reuse across calls.
     """
+    from repro.telemetry import metrics as tmetrics
+    from repro.telemetry import profiler_for
     base = spec.base
     assert isinstance(base, async_lib.AsyncFLConfig), \
         "run_async_sweep_compiled takes an AsyncFLConfig sweep; use " \
         "run_sweep_compiled for FLConfig"
     assert fleet.n_devices == fed.n_devices, (fleet.n_devices, fed.n_devices)
-    S = spec.n_configs
-    key = init_key if init_key is not None else jax.random.PRNGKey(base.seed)
-    params = small.init_small(model_cfg, key)
-    train = {"x": jnp.asarray(fed.x), "y": jnp.asarray(fed.y),
-             "mask": jnp.asarray(fed.mask)}
-    test = {"x": jnp.asarray(fed.test_x), "y": jnp.asarray(fed.test_y),
-            "mask": jnp.asarray(fed.test_mask)}
-    p = jnp.asarray(fed.p)
-    sizes = np.asarray(fed.mask.sum(axis=1))
-    cost = round_cost_for(model_cfg, params,
-                          uploads_gradient="folb" in base.algo)
-    afl_t = base.timeline_config()
-    sync_fl = afl_t.sync_config()
-    hypers_S = spec.stacked_hypers()
-    fspec = flat_lib.spec_of(params)
-    w0 = flat_lib.ravel(fspec, params)
-    w0_S = jnp.broadcast_to(w0, (S,) + w0.shape)
+    prof = profiler_for(base.telemetry, profiler)
+    with prof.phase("setup"):
+        S = spec.n_configs
+        key = init_key if init_key is not None \
+            else jax.random.PRNGKey(base.seed)
+        params = small.init_small(model_cfg, key)
+        train = {"x": jnp.asarray(fed.x), "y": jnp.asarray(fed.y),
+                 "mask": jnp.asarray(fed.mask)}
+        test = {"x": jnp.asarray(fed.test_x), "y": jnp.asarray(fed.test_y),
+                "mask": jnp.asarray(fed.test_mask)}
+        p = jnp.asarray(fed.p)
+        sizes = np.asarray(fed.mask.sum(axis=1))
+        cost = round_cost_for(model_cfg, params,
+                              uploads_gradient="folb" in base.algo)
+        afl_t = base.timeline_config()
+        sync_fl = afl_t.sync_config()
+        hypers_S = spec.stacked_hypers()
+        fspec = flat_lib.spec_of(params)
+        w0 = flat_lib.ravel(fspec, params)
+        w0_S = jnp.broadcast_to(w0, (S,) + w0.shape)
     bcast = lambda tree_: jax.tree.map(
         lambda x: jnp.broadcast_to(x, (S,) + x.shape), tree_)
 
     if base.mode == "deadline":
-        sel_probs = async_lib.deadline_selection_probs(base, fleet, cost,
-                                                       sizes)
-        if plan is None:
-            plan = async_lib.build_deadline_plan(base, fleet, cost, sizes,
-                                                 rounds, key, sel_probs)
-        pend0_S = bcast(async_lib.pool_init(model_cfg, sync_fl, params,
-                                            train, plan.n_slots + 1))
-        w_final_S, ws = sweep_scan_deadline(
-            model_cfg, afl_t, fspec, w0_S, pend0_S, train, p,
-            jnp.asarray(plan.keys), jnp.asarray(plan.ids),
-            jnp.asarray(plan.n_steps),
-            jnp.asarray(plan.arrived, jnp.float32),
-            jnp.asarray(plan.store_slot), jnp.asarray(plan.due_slot),
-            jnp.asarray(plan.due_mask), jnp.asarray(plan.due_tau),
-            jnp.asarray(plan.fast), hypers_S, sel_probs, mesh=mesh)
+        with prof.phase("plan_build"):
+            sel_probs = async_lib.deadline_selection_probs(base, fleet,
+                                                           cost, sizes)
+            if plan is None:
+                plan = async_lib.build_deadline_plan(base, fleet, cost,
+                                                     sizes, rounds, key,
+                                                     sel_probs)
+            pend0_S = bcast(async_lib.pool_init(model_cfg, sync_fl, params,
+                                                train, plan.n_slots + 1))
+        with prof.phase("scan"):
+            w_final_S, ws = sweep_scan_deadline(
+                model_cfg, afl_t, fspec, w0_S, pend0_S, train, p,
+                jnp.asarray(plan.keys), jnp.asarray(plan.ids),
+                jnp.asarray(plan.n_steps),
+                jnp.asarray(plan.arrived, jnp.float32),
+                jnp.asarray(plan.store_slot), jnp.asarray(plan.due_slot),
+                jnp.asarray(plan.due_mask), jnp.asarray(plan.due_tau),
+                jnp.asarray(plan.fast), hypers_S, sel_probs, mesh=mesh)
+            if base.telemetry:
+                jax.block_until_ready(ws)
         clocks, n_arr = plan.round_end, plan.n_arrived
     else:
-        if plan is None:
-            plan = async_lib.build_fedbuff_plan(base, fleet, cost, sizes,
-                                                rounds, key)
-        pend0 = async_lib.pool_init(model_cfg, sync_fl, params, train,
-                                    plan.n_slots)
-        # the seed dispatches all start from the SAME initial params but
-        # member-specific lr/mu: vmap the shared jitted seeding step
-        pend0_S = jax.vmap(
-            lambda pend, h: async_lib.fedbuff_seed_pool(
-                model_cfg, afl_t, params, pend, train,
-                jnp.asarray(plan.seed_ids), jnp.asarray(plan.seed_steps),
-                jnp.asarray(plan.seed_slots), h))(bcast(pend0), hypers_S)
-        w_final_S, ws = sweep_scan_fedbuff(
-            model_cfg, afl_t, fspec, w0_S, pend0_S, train,
-            jnp.asarray(plan.ids), jnp.asarray(plan.n_steps),
-            jnp.asarray(plan.store_slot), jnp.asarray(plan.flush_slot),
-            jnp.asarray(plan.tau), hypers_S, mesh=mesh)
+        with prof.phase("plan_build"):
+            if plan is None:
+                plan = async_lib.build_fedbuff_plan(base, fleet, cost,
+                                                    sizes, rounds, key)
+            pend0 = async_lib.pool_init(model_cfg, sync_fl, params, train,
+                                        plan.n_slots)
+            # the seed dispatches all start from the SAME initial params
+            # but member-specific lr/mu: vmap the shared jitted seeding step
+            pend0_S = jax.vmap(
+                lambda pend, h: async_lib.fedbuff_seed_pool(
+                    model_cfg, afl_t, params, pend, train,
+                    jnp.asarray(plan.seed_ids), jnp.asarray(plan.seed_steps),
+                    jnp.asarray(plan.seed_slots), h))(bcast(pend0), hypers_S)
+        with prof.phase("scan"):
+            w_final_S, ws = sweep_scan_fedbuff(
+                model_cfg, afl_t, fspec, w0_S, pend0_S, train,
+                jnp.asarray(plan.ids), jnp.asarray(plan.n_steps),
+                jnp.asarray(plan.store_slot), jnp.asarray(plan.flush_slot),
+                jnp.asarray(plan.tau), hypers_S, mesh=mesh)
+            if base.telemetry:
+                jax.block_until_ready(ws)
         clocks = plan.flush_clock
         n_arr = np.full(rounds, base.buffer_size)
 
-    results = []
-    for i in range(S):
-        hist = scan_engine.eval_history_replay(
-            model_cfg, fspec, train, test, p, ws[:, i], rounds, eval_every,
-            clocks=clocks, n_arrived=n_arr, stale_mean=plan.stale_mean)
-        results.append(simulator.FedRunResult(
-            history=hist, params=flat_lib.unravel(fspec, w_final_S[i])))
-    return SweepResult(spec=spec, results=tuple(results))
+    params_traj = ws["params"] if base.telemetry else ws
+    with prof.phase("eval"):
+        hists = [scan_engine.eval_history_replay(
+            model_cfg, fspec, train, test, p, params_traj[:, i], rounds,
+            eval_every, clocks=clocks, n_arrived=n_arr,
+            stale_mean=plan.stale_mean) for i in range(S)]
+    with prof.phase("collect"):
+        shared = None
+        if base.telemetry:
+            # network traffic and pool occupancy are plan-derived — the
+            # whole point of the sweep is that the plan is shared
+            D = int(sum(x.size for x in jax.tree.leaves(params)))
+            if base.mode == "deadline":
+                shared = tmetrics.deadline_network_series(D, base, plan)
+                shared.update(tmetrics.deadline_pool_series(plan))
+            else:
+                shared = tmetrics.fedbuff_network_series(D, base, plan)
+            shared["selection_entropy"] = tmetrics.selection_entropy(
+                np.asarray(plan.ids).reshape(-1), fed.n_devices)
+        results = []
+        for i in range(S):
+            metrics = None
+            if base.telemetry:
+                metrics = {k: np.asarray(v[:, i])
+                           for k, v in ws["metrics"].items()}
+                metrics.update(shared)
+            results.append(simulator.FedRunResult(
+                history=hists[i],
+                params=flat_lib.unravel(fspec, w_final_S[i]),
+                ids=np.asarray(plan.ids), metrics=metrics))
+    return SweepResult(spec=spec, results=tuple(results),
+                       profile=prof.finish())

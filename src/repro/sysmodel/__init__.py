@@ -20,7 +20,8 @@ engines are comparable on one wall-clock axis.
 from repro.sysmodel.clock import Event, EventQueue, VirtualClock
 from repro.sysmodel.latency import (RoundCost, device_latencies,
                                     expected_latencies, flops_per_local_step,
-                                    param_bytes, round_cost_for)
+                                    latency_components, param_bytes,
+                                    round_cost_for)
 from repro.sysmodel.profiles import (DeviceFleet, DeviceProfile,
                                      fleet_summary, heterogeneous_fleet,
                                      uniform_fleet)
@@ -31,6 +32,7 @@ __all__ = [
     "DeviceFleet", "DeviceProfile", "Event", "EventQueue", "RoundCost",
     "RoundPlan", "VirtualClock", "device_latencies", "expected_latencies",
     "fleet_summary", "flops_per_local_step", "heterogeneous_fleet",
+    "latency_components",
     "param_bytes", "plan_deadline_run", "plan_sync_round", "round_cost_for",
     "uniform_fleet",
 ]

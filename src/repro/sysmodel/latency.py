@@ -74,6 +74,28 @@ def device_latencies(fleet: DeviceFleet, ids: np.ndarray,
     return compute + comm
 
 
+def latency_components(fleet: DeviceFleet, ids: np.ndarray,
+                       n_steps: np.ndarray, cost: RoundCost,
+                       n_examples: Optional[np.ndarray] = None):
+    """Per-phase latency decomposition (download, compute, upload) for each
+    selected device — the spans the telemetry trace export draws.
+
+    Same model as `device_latencies`, exposed per phase; note the phases'
+    float sum may differ from `device_latencies` in the last ulp (that
+    function adds the two comm terms first), which is why the engines'
+    wall-clocks keep using `device_latencies` unchanged.
+    """
+    ids = np.asarray(ids)
+    n_steps = np.asarray(n_steps, dtype=np.float64)
+    ex = np.ones_like(n_steps) if n_examples is None \
+        else np.asarray(n_examples, dtype=np.float64)
+    down = np.broadcast_to(cost.down_bytes / fleet.down_bw[ids],
+                           n_steps.shape)
+    compute = n_steps * ex * cost.flops_per_step_example / fleet.flops[ids]
+    up = np.broadcast_to(cost.up_bytes / fleet.up_bw[ids], n_steps.shape)
+    return down, compute, up
+
+
 def expected_latencies(fleet: DeviceFleet, cost: RoundCost,
                        mean_steps: float,
                        n_examples: Optional[np.ndarray] = None) -> np.ndarray:

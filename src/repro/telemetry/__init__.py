@@ -1,0 +1,28 @@
+"""Observability layer for the federated engines.
+
+Three parts, riding the execution machinery that already exists instead
+of adding dispatches:
+
+  * ``telemetry.metrics`` — structured per-round metrics.  The in-scan
+    half (FOLB score stats, aggregation-weight entropy, grad/delta/update
+    norms, staleness histogram) is computed inside the SAME jitted round
+    steps every engine shares and emitted as extra scan outputs — zero
+    extra dispatches, and traced only when ``telemetry=True`` so the off
+    path stays bit-for-bit identical.  The host half (modeled network
+    bytes, arrivals vs cut stragglers, slot-pool occupancy) is derived
+    from the event plans, which already know the whole timeline.
+  * ``telemetry.trace`` — converts deadline/fedbuff event plans into
+    Chrome trace-event JSON (per-device download/compute/upload spans,
+    round barriers, deadline cuts, flush instants) loadable in
+    ``ui.perfetto.dev``.
+  * ``telemetry.profiler`` — context-manager host-phase timers
+    (setup / plan-build / scan / eval) attached to run results and
+    written into the ``profile`` section of ``BENCH_fed.json``.
+"""
+from repro.telemetry.metrics import (METRIC_KEYS, STALE_BINS,  # noqa: F401
+                                     round_metrics, selection_entropy,
+                                     stack_metrics)
+from repro.telemetry.profiler import (NULL_PROFILER,  # noqa: F401
+                                      PhaseProfiler, profiler_for)
+from repro.telemetry.trace import (validate_trace,  # noqa: F401
+                                   write_trace)

@@ -1,0 +1,224 @@
+"""Structured per-round metrics for the federated engines.
+
+Two halves, split by where the data already lives:
+
+In-scan (``round_metrics``): computed INSIDE the jitted round steps
+(`fl_round` / `deadline_slow_step` / `fedbuff_round_step`) from the
+stacked deltas/grads those steps already hold, and emitted as extra scan
+outputs.  One schema for every engine — sync rounds are the τ = 0,
+full-mask special case — so the deadline engine's `lax.cond` fast/slow
+branches return identical pytree structures.  The math mirrors
+`repro.core.aggregation.folb_staleness` / `mean_staleness`: the reported
+scores/weights are exactly the quantities those rules normalize over.
+
+Host-side (``*_series``): modeled network bytes, arrivals vs cut
+stragglers, and slot-pool occupancy are pure functions of the event
+plans (which already encode the whole timeline) and the payload model —
+numpy, zero device dispatches.
+
+All in-scan outputs are f32 scalars except ``stale_hist`` (STALE_BINS,).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, tree
+
+# staleness histogram bins: τ = 0, 1, ..., STALE_BINS-2, and ≥ STALE_BINS-1
+STALE_BINS = 8
+
+# the in-scan schema, in emission order (tests and consumers rely on the
+# key set, not the order)
+METRIC_KEYS = ("score_min", "score_mean", "score_max", "weight_entropy",
+               "grad_norm", "delta_norm", "update_norm", "n_contrib",
+               "stale_hist")
+
+
+def round_metrics(params_old, params_new, deltas, grads, *,
+                  folb: bool = True, psi=0.0, gammas=None,
+                  tau=None, alpha=0.0, mask=None) -> Dict[str, jnp.ndarray]:
+    """Per-round aggregation metrics from one step's stacked client sets.
+
+    ``folb`` selects the score family: FOLB-style gradient-informed scores
+    I_k = (<g_k, g1> − ψ γ_k ||g1||²)·(1 + τ_k)^{−α} (`folb_staleness`),
+    or the discounted-mean weights of `mean_staleness` for the
+    fedavg/fedprox family.  ``mask`` marks contributing clients (1.0);
+    masked rows score 0 and are excluded from the min/max/histogram.
+    """
+    K = jax.tree.leaves(deltas)[0].shape[0]
+    m = jnp.ones((K,), jnp.float32) if mask is None \
+        else mask.astype(jnp.float32)
+    t = jnp.zeros((K,), jnp.float32) if tau is None \
+        else tau.astype(jnp.float32)
+    disc = aggregation.staleness_discounts(t, alpha)
+
+    g1 = aggregation._masked_mean_of(grads, m)
+    if folb:
+        inner = aggregation._stacked_dot(grads, g1)
+        scores = inner
+        if gammas is not None:
+            scores = scores - psi * gammas * tree.tree_sqnorm(g1)
+        scores = scores * disc * m
+    else:
+        scores = disc * m
+    denom = jnp.maximum(jnp.sum(jnp.abs(scores)), 1e-30)
+    weights = scores / denom
+
+    n = jnp.sum(m)
+    valid = m > 0.0
+    score_min = jnp.where(
+        n > 0, jnp.min(jnp.where(valid, scores, jnp.inf)), 0.0)
+    score_max = jnp.where(
+        n > 0, jnp.max(jnp.where(valid, scores, -jnp.inf)), 0.0)
+    score_mean = jnp.sum(scores) / jnp.maximum(n, 1.0)
+    p = jnp.abs(weights)
+    entropy = -jnp.sum(jnp.where(p > 0.0, p * jnp.log(p), 0.0))
+
+    mean_delta = aggregation._masked_mean_of(deltas, m)
+    upd = jax.tree.map(
+        lambda a, b: b.astype(jnp.float32) - a.astype(jnp.float32),
+        params_old, params_new)
+    bins = jnp.clip(t.astype(jnp.int32), 0, STALE_BINS - 1)
+    hist = jnp.zeros((STALE_BINS,), jnp.float32).at[bins].add(m)
+
+    return {
+        "score_min": score_min.astype(jnp.float32),
+        "score_mean": score_mean.astype(jnp.float32),
+        "score_max": score_max.astype(jnp.float32),
+        "weight_entropy": entropy.astype(jnp.float32),
+        "grad_norm": tree.tree_norm(g1).astype(jnp.float32),
+        "delta_norm": tree.tree_norm(mean_delta).astype(jnp.float32),
+        "update_norm": tree.tree_norm(upd).astype(jnp.float32),
+        "n_contrib": n.astype(jnp.float32),
+        "stale_hist": hist,
+    }
+
+
+def metrics_for_algo(algo: str, params_old, params_new, deltas, grads, *,
+                     psi=0.0, gammas=None, tau=None, alpha=0.0, mask=None):
+    """`round_metrics` with the score family picked from the algo name.
+
+    folb/folb2/folb_het report gradient-informed FOLB scores (folb2 is
+    reported in its S1 single-set view); the fedavg/fedprox/fednu family
+    reports discounted-mean weights.
+    """
+    return round_metrics(
+        params_old, params_new, deltas, grads,
+        folb=algo.startswith("folb"), psi=psi,
+        gammas=gammas if algo == "folb_het" else None,
+        tau=tau, alpha=alpha, mask=mask)
+
+
+def stack_metrics(mlist: List[Dict[str, Any]]) -> Dict[str, np.ndarray]:
+    """Stack a python-loop engine's per-round metric dicts into the same
+    (R, ·) numpy arrays the scan engines emit."""
+    if not mlist:
+        return {}
+    return {k: np.stack([np.asarray(m[k]) for m in mlist])
+            for k in mlist[0]}
+
+
+def selection_entropy(ids: np.ndarray, n_devices: int) -> float:
+    """Entropy (nats) of the empirical selection distribution over the
+    whole run — 0.0 for a degenerate scheduler, ln(N) for uniform."""
+    counts = np.bincount(np.asarray(ids).reshape(-1),
+                         minlength=int(n_devices)).astype(np.float64)
+    total = counts.sum()
+    if total <= 0:
+        return 0.0
+    p = counts / total
+    p = p[p > 0]
+    return float(-(p * np.log(p)).sum())
+
+
+# ---------------------------------------------------------------------------
+# host-side modeled network traffic (agg_dtype × D × K payloads)
+# ---------------------------------------------------------------------------
+
+def payload_bytes(D: int, agg_dtype: str,
+                  uploads_gradient: bool) -> Dict[str, float]:
+    """Modeled per-device payloads: the server broadcasts fp32 parameters
+    (D × 4 down); a device uploads its delta — plus its reference gradient
+    for FOLB-family algos — in the aggregation-buffer dtype (agg_dtype × D
+    per vector up).  A gradient probe (fednu baselines, folb2's S2 set)
+    downloads the model and uploads one gradient vector.
+
+    This is the TELEMETRY traffic model; the latency cost model
+    (`repro.sysmodel.round_cost_for`) deliberately keeps fp32 uploads so
+    simulated wall-clocks are unchanged by the buffer-dtype knob.
+    """
+    up_item = float(np.dtype(agg_dtype).itemsize)
+    down = float(D) * 4.0
+    vectors_up = 2.0 if uploads_gradient else 1.0
+    return {"down": down, "up": float(D) * up_item * vectors_up,
+            "probe_down": down, "probe_up": float(D) * up_item}
+
+
+def sync_network_series(D: int, fl, rounds: int,
+                        n_devices: int) -> Dict[str, np.ndarray]:
+    """Per-round modeled bytes for a synchronous run of `fl` (FLConfig)."""
+    algo = fl.algo
+    pay = payload_bytes(D, fl.agg_dtype,
+                        uploads_gradient="folb" in algo or "fednu" in algo)
+    K = fl.n_selected
+    down = np.full(rounds, K * pay["down"])
+    up = np.full(rounds, K * pay["up"])
+    if algo.startswith("fednu"):
+        # the naive baselines probe all N devices each round — the
+        # communication cost FOLB exists to avoid
+        down += n_devices * pay["probe_down"]
+        up += n_devices * pay["probe_up"]
+    if algo == "folb2":
+        down += K * pay["probe_down"]
+        up += K * pay["probe_up"]
+    return {"bytes_down": down, "bytes_up": up}
+
+
+def deadline_network_series(D: int, afl, plan) -> Dict[str, np.ndarray]:
+    """Per-round modeled bytes for a deadline run: every selected device
+    is sent the model; an upload is charged to the round it LANDS in
+    (on-time arrivals plus late stragglers applied from the slot pool),
+    so stragglers cut at run end are traffic never spent."""
+    pay = payload_bytes(D, afl.agg_dtype,
+                        uploads_gradient="folb" in afl.algo)
+    R, K = plan.ids.shape
+    down = np.full(R, K * pay["down"])
+    # plan.n_arrived = on-time arrivals + late pool flushes, i.e. exactly
+    # the uploads whose bytes land inside round t's window
+    up = np.asarray(plan.n_arrived, dtype=np.float64) * pay["up"]
+    return {"bytes_down": down, "bytes_up": up}
+
+
+def fedbuff_network_series(D: int, afl, plan) -> Dict[str, np.ndarray]:
+    """Per-round modeled bytes for a fedbuff run: M dispatches and M
+    buffered arrivals per flush; the C concurrency seeds are charged to
+    round 0's downlink."""
+    pay = payload_bytes(D, afl.agg_dtype,
+                        uploads_gradient="folb" in afl.algo)
+    R, M = plan.ids.shape
+    down = np.full(R, M * pay["down"])
+    down[0] += plan.seed_ids.shape[0] * pay["down"]
+    up = np.full(R, M * pay["up"])
+    return {"bytes_down": down, "bytes_up": up}
+
+
+def deadline_pool_series(plan) -> Dict[str, np.ndarray]:
+    """Slot-pool occupancy and straggler accounting replayed from a
+    `DeadlinePlan`'s host arrays: per round, how many uploads missed the
+    deadline (`n_cut`), how many late uploads were applied (`n_late`),
+    and how many slots are live after the round (`pool_live` /
+    `pool_frac` of the pool's n_slots)."""
+    on_time = np.asarray(plan.arrived, dtype=np.int64).sum(axis=1)
+    n_late = np.asarray(plan.due_mask, dtype=np.float64).sum(axis=1)
+    K = plan.ids.shape[1]
+    stored = K - on_time                    # new stragglers parked per round
+    live = np.cumsum(stored) - np.cumsum(n_late)
+    return {"n_cut": (K - on_time).astype(np.float64),
+            "n_late": n_late,
+            "n_arrived": np.asarray(plan.n_arrived, dtype=np.float64),
+            "pool_live": live.astype(np.float64),
+            "pool_frac": live.astype(np.float64) / max(plan.n_slots, 1)}

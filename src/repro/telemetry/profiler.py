@@ -1,0 +1,114 @@
+"""Host-phase wall-time profiler for the run drivers.
+
+`PhaseProfiler` breaks a run's host time into named contiguous phases
+(`setup` / `plan_build` / `scan` / `eval` for the compiled engines;
+`rounds` instead of `scan` for the python-loop drivers) via context
+managers.  `summary()` reports per-phase seconds, the total since
+construction, and coverage — the fraction of total time the phases
+account for (the engines keep phases contiguous, so coverage stays near
+1.0; the acceptance bar is ≥ 0.9).
+
+First-call jit compilation is not a separate timer — it lands inside the
+first run's `scan` phase.  `dispatch_bench.profile_results` estimates it
+as cold-run scan minus warm-run scan, which is how the `profile` section
+of BENCH_fed.json reports `first_call_compile_s`.
+
+When telemetry is off the engines use `NULL_PROFILER`, whose phase() is
+a reusable no-op context manager — zero timers, zero allocation, and no
+change to host-time behavior (the profiled path may block on device
+results inside a phase; the null path never does).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+
+class _Phase:
+    """Reusable context manager accumulating wall time into a profiler."""
+
+    __slots__ = ("_prof", "_name", "_t0")
+
+    def __init__(self, prof: "PhaseProfiler", name: str):
+        self._prof = prof
+        self._name = name
+        self._t0 = 0.0
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self._prof._add(self._name, time.perf_counter() - self._t0)
+        return False
+
+
+class PhaseProfiler:
+    """Accumulates named host-time phases from construction to finish()."""
+
+    def __init__(self):
+        self._start = time.perf_counter()
+        self._end: Optional[float] = None
+        self._phases: Dict[str, float] = {}
+
+    def _add(self, name: str, seconds: float) -> None:
+        self._phases[name] = self._phases.get(name, 0.0) + seconds
+
+    def phase(self, name: str) -> _Phase:
+        """Context manager timing one (re-enterable) phase."""
+        return _Phase(self, name)
+
+    def finish(self) -> Dict[str, object]:
+        """Stamp the end time (first call wins) and return `summary()`."""
+        if self._end is None:
+            self._end = time.perf_counter()
+        return self.summary()
+
+    def summary(self) -> Dict[str, object]:
+        end = self._end if self._end is not None else time.perf_counter()
+        total = max(end - self._start, 1e-12)
+        attributed = sum(self._phases.values())
+        return {
+            "phases": dict(self._phases),
+            "total_s": total,
+            "unattributed_s": max(total - attributed, 0.0),
+            "coverage": min(attributed / total, 1.0),
+        }
+
+
+class _NullPhase:
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+class _NullProfiler:
+    """Do-nothing stand-in so engine code has no `if telemetry` timer
+    branches: phase() hands back one shared no-op context manager."""
+
+    _PHASE = _NullPhase()
+
+    def phase(self, name: str) -> _NullPhase:
+        return self._PHASE
+
+    def finish(self) -> None:
+        return None
+
+    def summary(self) -> None:
+        return None
+
+
+NULL_PROFILER = _NullProfiler()
+
+
+def profiler_for(enabled: bool, profiler=None):
+    """The engines' profiler hook: an explicit `profiler` wins (callers
+    can share one across runs); otherwise a fresh PhaseProfiler when
+    telemetry is on, the shared null profiler when off."""
+    if profiler is not None:
+        return profiler
+    return PhaseProfiler() if enabled else NULL_PROFILER

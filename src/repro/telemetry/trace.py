@@ -1,0 +1,243 @@
+"""Virtual-timeline export: event plans -> Chrome trace-event JSON.
+
+The async engines already pre-compute their entire fleet timeline into an
+event plan (`async_engine.DeadlinePlan` / `FedBuffPlan`); this module is
+a pure host-side view of those arrays in the Chrome trace-event format,
+so a whole simulated run loads in ``ui.perfetto.dev`` (or
+``chrome://tracing``): per-device wait/download/compute/upload spans on
+one track per device, server round/flush barriers with arrival +
+staleness args, and deadline-cut / late-flush instants.
+
+Timestamps are simulated seconds scaled to the format's microseconds.
+Track layout: pid 0 is the server (tid 0), pid 1 the device fleet
+(tid = device id).  Per-phase device spans need the latency model
+(`fleet` + `cost` [+ `sizes`]); without it each dispatch renders as one
+"round-trip" span.  Events come out sorted by timestamp (metadata
+first), so every track is monotonic — `validate_trace` checks that plus
+the schema, and `write_trace` emits the JSON object form
+(``{"traceEvents": [...]}``).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+SERVER_PID = 0
+FLEET_PID = 1
+
+REQUIRED_KEYS = ("name", "ph", "ts", "pid", "tid")
+
+_US = 1e6   # simulated seconds -> trace microseconds
+
+
+def _meta(pid: int, name: str, tid: Optional[int] = None,
+          tname: Optional[str] = None) -> List[dict]:
+    out = [{"name": "process_name", "ph": "M", "ts": 0.0, "pid": pid,
+            "tid": 0, "args": {"name": name}}]
+    if tid is not None:
+        out.append({"name": "thread_name", "ph": "M", "ts": 0.0, "pid": pid,
+                    "tid": tid, "args": {"name": tname}})
+    return out
+
+
+def _span(name: str, start_s: float, end_s: float, pid: int, tid: int,
+          args: Optional[dict] = None) -> dict:
+    ev = {"name": name, "ph": "X", "ts": float(start_s) * _US,
+          "dur": max(float(end_s - start_s), 0.0) * _US,
+          "pid": pid, "tid": tid, "cat": "sim"}
+    if args:
+        ev["args"] = args
+    return ev
+
+
+def _instant(name: str, at_s: float, pid: int, tid: int,
+             args: Optional[dict] = None) -> dict:
+    ev = {"name": name, "ph": "i", "ts": float(at_s) * _US, "pid": pid,
+          "tid": tid, "s": "p", "cat": "sim"}
+    if args:
+        ev["args"] = args
+    return ev
+
+
+def _device_spans(events: List[dict], dev: int, t: int, start_s: float,
+                  arrival_s: float, lat3=None) -> None:
+    """One dispatch's spans on the device's track.  ``lat3`` is the
+    (down, compute, up) seconds tuple from the latency model; the phases
+    are laid out backwards from the (exact, plan-recorded) arrival so any
+    pre-download availability wait shows up as a "wait" span."""
+    base = {"round": int(t), "device": int(dev)}
+    if lat3 is None:
+        events.append(_span("round-trip", start_s, arrival_s, FLEET_PID,
+                            dev, base))
+        return
+    down_s, compute_s, up_s = (float(x) for x in lat3)
+    begin = arrival_s - (down_s + compute_s + up_s)
+    if begin > start_s + 1e-12:
+        events.append(_span("wait", start_s, begin, FLEET_PID, dev, base))
+    else:
+        begin = start_s
+    up0 = arrival_s - up_s
+    comp0 = up0 - compute_s
+    events.append(_span("download", begin, comp0, FLEET_PID, dev, base))
+    events.append(_span("compute", comp0, up0, FLEET_PID, dev, base))
+    events.append(_span("upload", up0, arrival_s, FLEET_PID, dev, base))
+
+
+def _finalize(events: List[dict]) -> List[dict]:
+    """Metadata first, then everything sorted by (ts, pid, tid) — which is
+    what makes every track's timestamps monotonic."""
+    meta = [e for e in events if e["ph"] == "M"]
+    rest = sorted((e for e in events if e["ph"] != "M"),
+                  key=lambda e: (e["ts"], e["pid"], e["tid"]))
+    return meta + rest
+
+
+def deadline_trace_events(plan, fleet=None, cost=None,
+                          sizes: Optional[np.ndarray] = None) -> List[dict]:
+    """A `DeadlinePlan`'s timeline as trace events: server round barriers
+    (with n_arrived / n_cut / n_late / stale_mean args), a deadline-cut
+    instant whenever a dispatched device missed, a late-flush instant
+    whenever parked stragglers joined, and per-(round, device) spans."""
+    R, K = plan.ids.shape
+    events = _meta(SERVER_PID, "server")
+    events += _meta(FLEET_PID, "fleet")
+    lat3 = None
+    if fleet is not None and cost is not None:
+        from repro.sysmodel import latency_components
+        flat_ids = plan.ids.reshape(-1)
+        ex = None if sizes is None else np.asarray(sizes)[flat_ids]
+        down, comp, up = latency_components(
+            fleet, flat_ids, plan.n_steps.reshape(-1), cost, n_examples=ex)
+        lat3 = (down.reshape(R, K), comp.reshape(R, K), up.reshape(R, K))
+    seen = set()
+    for t in range(R):
+        start = 0.0 if t == 0 else float(plan.round_end[t - 1])
+        end = float(plan.round_end[t])
+        n_cut = int(K - plan.arrived[t].sum())
+        n_late = int(plan.due_mask[t].sum()) if plan.n_due else 0
+        events.append(_span(f"round {t}", start, end, SERVER_PID, 0, {
+            "n_arrived": int(plan.n_arrived[t]), "n_cut": n_cut,
+            "n_late": n_late, "stale_mean": float(plan.stale_mean[t]),
+            "fast": bool(plan.fast[t])}))
+        if n_cut:
+            events.append(_instant("deadline cut", end, SERVER_PID, 0,
+                                   {"round": t, "n_cut": n_cut}))
+        if n_late:
+            events.append(_instant("late flush", end, SERVER_PID, 0,
+                                   {"round": t, "n_late": n_late}))
+        for k in range(K):
+            dev = int(plan.ids[t, k])
+            if dev not in seen:
+                seen.add(dev)
+                events += _meta(FLEET_PID, "fleet", dev,
+                                f"device {dev}")[1:]
+            _device_spans(events, dev, t, start, float(plan.arrival[t, k]),
+                          None if lat3 is None else
+                          (lat3[0][t, k], lat3[1][t, k], lat3[2][t, k]))
+    return _finalize(events)
+
+
+def fedbuff_trace_events(plan, fleet=None, cost=None,
+                         sizes: Optional[np.ndarray] = None) -> List[dict]:
+    """A `FedBuffPlan`'s timeline as trace events: one server span per
+    flush window, a flush instant at each buffer boundary, and one span
+    chain per dispatch (needs the plan's recorded ``dispatch_clock`` /
+    ``arrival_clock`` / ``all_ids`` / ``all_steps`` arrays)."""
+    if plan.dispatch_clock is None:
+        raise ValueError("plan lacks per-dispatch clocks; rebuild it with "
+                         "the current build_fedbuff_plan")
+    R, M = plan.ids.shape
+    events = _meta(SERVER_PID, "server")
+    events += _meta(FLEET_PID, "fleet")
+    lat3 = None
+    if fleet is not None and cost is not None:
+        from repro.sysmodel import latency_components
+        ids = np.asarray(plan.all_ids)
+        ex = None if sizes is None else np.asarray(sizes)[ids]
+        lat3 = latency_components(fleet, ids, np.asarray(plan.all_steps),
+                                  cost, n_examples=ex)
+    prev = 0.0
+    for t in range(R):
+        end = float(plan.flush_clock[t])
+        events.append(_span(f"flush window {t}", prev, end, SERVER_PID, 0, {
+            "buffer_size": M, "stale_mean": float(plan.stale_mean[t])}))
+        events.append(_instant("flush", end, SERVER_PID, 0,
+                               {"round": t,
+                                "stale_mean": float(plan.stale_mean[t])}))
+        prev = end
+    seen = set()
+    n_disp = len(plan.all_ids)
+    # which flush window each dispatch was made in (-1 = concurrency seed)
+    C = len(plan.seed_ids)
+    disp_round = np.full(n_disp, -1, np.int64)
+    disp_round[C:] = np.repeat(np.arange(R), M)[:max(n_disp - C, 0)]
+    for d in range(n_disp):
+        dev = int(plan.all_ids[d])
+        if dev not in seen:
+            seen.add(dev)
+            events += _meta(FLEET_PID, "fleet", dev, f"device {dev}")[1:]
+        _device_spans(events, dev, int(disp_round[d]),
+                      float(plan.dispatch_clock[d]),
+                      float(plan.arrival_clock[d]),
+                      None if lat3 is None else
+                      (lat3[0][d], lat3[1][d], lat3[2][d]))
+    return _finalize(events)
+
+
+def queue_trace_events(drained: Iterable) -> List[dict]:
+    """Eager `sysmodel.EventQueue` events (e.g. collected while a python
+    event loop pops them) as instant markers on the server track."""
+    events = _meta(SERVER_PID, "server")
+    for ev in drained:
+        args = {"seq": int(ev.seq)}
+        args.update({k: (int(v) if isinstance(v, (int, np.integer))
+                         else float(v) if isinstance(v, (float, np.floating))
+                         else str(v))
+                     for k, v in (ev.payload or {}).items()})
+        events.append(_instant(str(ev.kind), float(ev.time), SERVER_PID, 0,
+                               args))
+    return _finalize(events)
+
+
+def validate_trace(events: List[dict]) -> Dict[str, int]:
+    """Schema check: required keys on every event, non-negative ts,
+    non-negative dur on complete ("X") spans, and per-(pid, tid) monotonic
+    timestamps.  Raises ValueError on the first violation; returns
+    per-phase event counts."""
+    if not isinstance(events, list) or not events:
+        raise ValueError("trace must be a non-empty list of events")
+    counts: Dict[str, int] = {}
+    last_ts: Dict[tuple, float] = {}
+    for i, ev in enumerate(events):
+        for k in REQUIRED_KEYS:
+            if k not in ev:
+                raise ValueError(f"event {i} missing required key {k!r}")
+        ph = ev["ph"]
+        ts = float(ev["ts"])
+        if ts < 0.0:
+            raise ValueError(f"event {i} has negative ts {ts}")
+        if ph == "X" and float(ev.get("dur", -1.0)) < 0.0:
+            raise ValueError(f"complete event {i} needs dur >= 0")
+        if ph != "M":
+            track = (ev["pid"], ev["tid"])
+            if ts < last_ts.get(track, 0.0):
+                raise ValueError(
+                    f"event {i} breaks monotonic ts on track {track}")
+            last_ts[track] = ts
+        counts[ph] = counts.get(ph, 0) + 1
+    return counts
+
+
+def write_trace(path: str, events: List[dict]) -> str:
+    """Validate and write the JSON object form Perfetto/chrome://tracing
+    load directly.  Returns the path."""
+    validate_trace(events)
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"traceEvents": events, "displayTimeUnit": "ms"}, f)
+    return path

@@ -9,10 +9,24 @@ from benchmarks.roofline import (folb_agg_bytes, folb_kd_bytes,
                                  folb_stale_agg_bytes)
 
 
-def _artifact(kernel_ratio=1.0, async_speedup=1.3, sweep_speedup=3.0):
+def _artifact(kernel_ratio=1.0, async_speedup=1.3, sweep_speedup=3.0,
+              profile_coverage=0.97):
     return {
         "results": [{"name": "folb/sync", "secs_to_acc": 5.0,
                      "rounds_to_acc": 10, "final_acc": 0.9}],
+        "network": {
+            "unit": "bytes",
+            "runs": {"folb/sync": {"bytes_up_total": 1e8,
+                                   "bytes_down_total": 5e7,
+                                   "bytes_to_acc": 3e7}},
+        },
+        "profile": {
+            "engine": "async_deadline_scan",
+            "phases": {"setup": 0.1, "plan_build": 0.2, "scan": 1.0,
+                       "eval": 0.3, "collect": 0.1},
+            "total_s": 1.75,
+            "coverage": profile_coverage,
+        },
         "dispatch": {"scan_vs_loop_speedup": 1.3,
                      "async_deadline": {"scan_vs_loop_speedup": async_speedup},
                      "async_fedbuff": {"scan_vs_loop_speedup": async_speedup}},
@@ -137,6 +151,85 @@ class TestSweepGate:
         fails = compare(_artifact(), _artifact(async_speedup=0.1),
                         0.15, 0.05, 1.0, min_async_speedup=0.85,
                         min_sweep_speedup=1.2)
+        assert len(fails) == 2 and all("async" in f for f in fails)
+
+
+class TestNetworkGate:
+    """Schema gate on the modeled-traffic section: the byte columns must
+    keep existing once a baseline records them (values stay ungated)."""
+
+    def test_passes_with_different_byte_values(self):
+        cur = _artifact()
+        cur["network"]["runs"]["folb/sync"]["bytes_up_total"] = 12345.0
+        assert compare(_artifact(), cur, 0.15, 0.05, 1.0) == []
+
+    def test_fails_on_missing_network_section(self):
+        cur = _artifact()
+        del cur["network"]
+        fails = compare(_artifact(), cur, 0.15, 0.05, 1.0)
+        assert any("network: section missing" in f for f in fails)
+
+    def test_fails_on_missing_run_entry(self):
+        cur = _artifact()
+        cur["network"]["runs"] = {}
+        fails = compare(_artifact(), cur, 0.15, 0.05, 1.0)
+        assert any("network: folb/sync missing" in f for f in fails)
+
+    def test_fails_on_missing_byte_column(self):
+        cur = _artifact()
+        del cur["network"]["runs"]["folb/sync"]["bytes_to_acc"]
+        fails = compare(_artifact(), cur, 0.15, 0.05, 1.0)
+        assert any("lacks numeric bytes_to_acc" in f for f in fails)
+
+    def test_old_baseline_without_network_is_fine(self):
+        base = _artifact()
+        del base["network"]
+        cur = _artifact()
+        del cur["network"]
+        assert compare(base, cur, 0.15, 0.05, 1.0) == []
+
+
+class TestProfileGate:
+    """Schema gate on the host-phase profile: phases present, positive
+    total, and timer coverage over the threshold."""
+
+    def test_passes_when_coverage_holds(self):
+        assert compare(_artifact(), _artifact(profile_coverage=0.93),
+                       0.15, 0.05, 1.0, min_profile_coverage=0.9) == []
+
+    def test_fails_on_low_coverage(self):
+        fails = compare(_artifact(), _artifact(profile_coverage=0.5),
+                        0.15, 0.05, 1.0, min_profile_coverage=0.9)
+        assert any("coverage 0.50" in f for f in fails)
+
+    def test_fails_on_missing_profile_section(self):
+        cur = _artifact()
+        del cur["profile"]
+        fails = compare(_artifact(), cur, 0.15, 0.05, 1.0)
+        assert any("profile: section missing" in f for f in fails)
+
+    def test_fails_on_empty_phases(self):
+        cur = _artifact()
+        cur["profile"]["phases"] = {}
+        fails = compare(_artifact(), cur, 0.15, 0.05, 1.0)
+        assert any("phases missing or empty" in f for f in fails)
+
+    def test_fails_on_bad_total(self):
+        cur = _artifact()
+        cur["profile"]["total_s"] = 0.0
+        fails = compare(_artifact(), cur, 0.15, 0.05, 1.0)
+        assert any("total_s" in f for f in fails)
+
+    def test_old_baseline_without_profile_is_fine(self):
+        base = _artifact()
+        del base["profile"]
+        assert compare(base, _artifact(profile_coverage=0.1),
+                       0.15, 0.05, 1.0) == []
+
+    def test_other_gates_unaffected(self):
+        fails = compare(_artifact(), _artifact(async_speedup=0.1),
+                        0.15, 0.05, 1.0, min_async_speedup=0.85,
+                        min_profile_coverage=0.9)
         assert len(fails) == 2 and all("async" in f for f in fails)
 
 
