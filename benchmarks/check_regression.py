@@ -33,6 +33,15 @@ baseline and fails (exit 1) on regression:
     ``--min-profile-coverage`` of the run wall time (the acceptance bar
     for the phase timers staying contiguous as engines evolve).  Absolute
     phase seconds stay ungated (machine-dependent).
+  * scenario: schema gate on the failure-scenario matrix — once a
+    baseline records it, every baseline cell × algorithm must stay in
+    the current artifact with numeric ``secs_to_acc`` / ``bytes_to_acc``
+    columns, and each drop=0 cell's FOLB-vs-FedAvg time-to-accuracy
+    *ordering* must be preserved: whichever algorithm the baseline
+    records as reaching the target first must still win (the paper's
+    headline comparison under zero transmission failure).  Cell *values*
+    stay ungated: they move with intentional algorithm changes; the
+    ordering and the schema are what must not silently rot.
   * kernel: each micro-bench's *calibration-relative* ratio (kernel time
     divided by a fixed jnp workload timed in the same run — see
     ``kernel_bench.calibration_us``) may not grow more than
@@ -184,6 +193,60 @@ def compare(baseline: dict, current: dict, tolerance: float,
                 failures.append(
                     f"profile: phase-timer coverage {cov:.2f} < required "
                     f"{min_profile_coverage:.2f}")
+
+    base_scn = baseline.get("scenario")
+    cur_scn = current.get("scenario")
+    if base_scn is not None:
+        if cur_scn is None:
+            failures.append("scenario: section missing from current artifact")
+        else:
+            cur_cells = cur_scn.get("cells", {})
+            for key, bc in base_scn.get("cells", {}).items():
+                cc = cur_cells.get(key)
+                if cc is None:
+                    failures.append(
+                        f"scenario: cell {key} missing from current artifact")
+                    continue
+                cur_runs = cc.get("runs", {})
+                for algo, br in bc.get("runs", {}).items():
+                    ce = cur_runs.get(algo)
+                    if ce is None:
+                        failures.append(
+                            f"scenario: {key}/{algo} missing from current "
+                            f"artifact")
+                        continue
+                    for metric in ("secs_to_acc", "bytes_to_acc"):
+                        if not isinstance(ce.get(metric), (int, float)):
+                            failures.append(
+                                f"scenario: {key}/{algo} lacks numeric "
+                                f"{metric}")
+            # ordering gate: each drop=0 cell's recorded FOLB-vs-FedAvg
+            # time-to-accuracy winner must not flip (reaching the target
+            # beats not reaching it; both-unreached cells record no
+            # winner and are skipped)
+            def _folb_wins(runs):
+                fa = runs.get("fedavg", {}).get("secs_to_acc")
+                fo = runs.get("folb", {}).get("secs_to_acc")
+                if not isinstance(fa, (int, float)) \
+                        or not isinstance(fo, (int, float)):
+                    return None
+                if fo < 0:
+                    return False if fa >= 0 else None
+                return fa < 0 or fo <= fa
+            for key, bc in base_scn.get("cells", {}).items():
+                cc = cur_cells.get(key)
+                if cc is None or bc.get("drop") not in (0, 0.0):
+                    continue
+                bw = _folb_wins(bc.get("runs", {}))
+                cw = _folb_wins(cc.get("runs", {}))
+                if bw is None or cw == bw:
+                    continue
+                cur_desc = "neither (target unreached)" if cw is None \
+                    else ("folb" if cw else "fedavg")
+                failures.append(
+                    f"scenario: {key} drop=0 folb-vs-fedavg "
+                    f"time-to-accuracy ordering changed (baseline winner "
+                    f"{'folb' if bw else 'fedavg'} -> current {cur_desc})")
 
     base_kern = baseline.get("kernel")
     cur_kern = current.get("kernel")

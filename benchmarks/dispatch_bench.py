@@ -48,20 +48,20 @@ def dispatch_results(rounds: int = DISPATCH_ROUNDS) -> Dict:
     """Measure rounds/sec of both engines on the shared tta sweep cohort
     with a dispatch-bound round (light local work)."""
     from benchmarks.time_to_accuracy import setup_sweep
-    from repro.fed.scan_engine import run_federated_compiled
-    from repro.fed.simulator import FLConfig, run_federated
+    from repro import fed as fed_api
+    from repro.fed.simulator import FLConfig
     model_cfg, fed, _fleet, _deadline = setup_sweep()
     fl = FLConfig(algo="folb", n_selected=5, mu=1.0, lr=0.05,
                   max_local_steps=2, seed=0)
 
     # eval only at the endpoints: measure round dispatch, not evaluation
     def loop_run():
-        return run_federated(model_cfg, fed, fl, rounds=rounds,
-                             eval_every=rounds)
+        return fed_api.run(model_cfg, fed, fl, rounds, engine="loop",
+                           eval_every=rounds)
 
     def scan_run():
-        return run_federated_compiled(model_cfg, fed, fl, rounds=rounds,
-                                      eval_every=rounds)
+        return fed_api.run(model_cfg, fed, fl, rounds, engine="scan",
+                           eval_every=rounds)
 
     loop_run()                      # warm the per-round jit caches
     t0 = time.time()
@@ -94,8 +94,8 @@ def async_dispatch_results(rounds: int = ASYNC_ROUNDS) -> Dict[str, Dict]:
     import numpy as np
 
     from benchmarks.time_to_accuracy import setup_sweep
-    from repro.fed.async_engine import AsyncFLConfig, run_async
-    from repro.fed.scan_engine import run_async_compiled
+    from repro import fed as fed_api
+    from repro.fed.async_engine import AsyncFLConfig
     from repro.models import small
     from repro.sysmodel import expected_latencies, round_cost_for
 
@@ -117,12 +117,12 @@ def async_dispatch_results(rounds: int = ASYNC_ROUNDS) -> Dict[str, Dict]:
     out = {}
     for name, afl in configs.items():
         def loop_run(afl=afl):
-            return run_async(model_cfg, fed, afl, fleet, rounds=rounds,
-                             eval_every=rounds)
+            return fed_api.run(model_cfg, fed, afl, rounds, fleet=fleet,
+                               engine="loop", eval_every=rounds)
 
         def scan_run(afl=afl):
-            return run_async_compiled(model_cfg, fed, afl, fleet,
-                                      rounds=rounds, eval_every=rounds)
+            return fed_api.run(model_cfg, fed, afl, rounds, fleet=fleet,
+                               engine="scan", eval_every=rounds)
 
         loop_run()                  # warm the per-round jit caches
         t0 = time.time()
@@ -156,12 +156,10 @@ def sweep_results(s_configs: int = SWEEP_CONFIGS,
     import numpy as np
 
     from benchmarks.time_to_accuracy import setup_sweep
+    from repro import fed as fed_api
     from repro.fed.async_engine import AsyncFLConfig
-    from repro.fed.scan_engine import (run_async_compiled,
-                                       run_federated_compiled)
     from repro.fed.simulator import FLConfig
-    from repro.fed.sweep_engine import (SweepSpec, run_async_sweep_compiled,
-                                        run_sweep_compiled)
+    from repro.fed.sweep_engine import SweepSpec
     from repro.models import small
     from repro.sysmodel import expected_latencies, round_cost_for
     import jax
@@ -180,20 +178,20 @@ def sweep_results(s_configs: int = SWEEP_CONFIGS,
             SweepSpec.from_grid(
                 FLConfig(algo="folb", n_selected=5, mu=1.0,
                          max_local_steps=2, seed=0), lr=lrs),
-            lambda spec: run_sweep_compiled(
-                model_cfg, fed, spec, rounds=rounds, eval_every=rounds),
-            lambda m: run_federated_compiled(
-                model_cfg, fed, m, rounds=rounds, eval_every=rounds)),
+            lambda spec: fed_api.run(
+                model_cfg, fed, spec, rounds, eval_every=rounds),
+            lambda m: fed_api.run(
+                model_cfg, fed, m, rounds, eval_every=rounds)),
         "async_deadline": (
             SweepSpec.from_grid(
                 AsyncFLConfig(mode="deadline", algo="folb", n_selected=5,
                               max_local_steps=2, deadline=deadline,
                               staleness_alpha=0.5, seed=0), lr=lrs),
-            lambda spec: run_async_sweep_compiled(
-                model_cfg, fed, spec, fleet, rounds=rounds,
+            lambda spec: fed_api.run(
+                model_cfg, fed, spec, rounds, fleet=fleet,
                 eval_every=rounds),
-            lambda m: run_async_compiled(
-                model_cfg, fed, m, fleet, rounds=rounds,
+            lambda m: fed_api.run(
+                model_cfg, fed, m, rounds, fleet=fleet,
                 eval_every=rounds)),
     }
     out = {}

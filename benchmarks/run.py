@@ -32,7 +32,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (dispatch_bench, kernel_bench, paper_tables,
-                            roofline, time_to_accuracy)
+                            roofline, scenario_matrix, time_to_accuracy)
 
     rounds = 30 if args.quick else 100
     fig_rounds = 20 if args.quick else 60
@@ -89,6 +89,27 @@ def main() -> None:
                  f"bytes_to_acc={r['bytes_to_acc']:.0f}") for r in results] \
             + d_rows + s_rows
 
+    def scenario_rows():
+        """Failure-scenario matrix, merged into the artifact's
+        ``scenario`` section (same merge-into-existing contract as
+        kernel_rows, so CI can run it as its own invocation)."""
+        import json
+        import os
+        rows, payload = scenario_matrix.scenario_rows()
+        data = {}
+        if os.path.exists(args.bench_json):
+            with open(args.bench_json) as f:
+                data = json.load(f)
+        data["scenario"] = payload
+        with open(args.bench_json, "w") as f:
+            json.dump(data, f, indent=2)
+            f.write("\n")
+        print(f"# merged scenario section into {args.bench_json} "
+              f"({len(payload['cells'])} cells x "
+              f"{len(next(iter(payload['cells'].values()))['runs'])} algos)",
+              file=sys.stderr)
+        return rows
+
     def profile_rows():
         """Host-phase profile + trace export, merged into the artifact's
         ``profile`` section (same merge-into-existing contract as
@@ -121,6 +142,7 @@ def main() -> None:
         ("beyond", lambda: paper_tables.beyond_server_opt(fig_rounds)),
         ("tta", tta_rows),
         ("kernel", kernel_rows),
+        ("scenario", scenario_rows),
         ("profile", profile_rows),
         ("roofline", lambda: roofline.bench_rows(args.reports)),
     ]

@@ -1,0 +1,148 @@
+"""Scenario-matrix benchmark: convergence cost under failure channels.
+
+Sweeps the failure axes the paper's reliability story cares about —
+per-upload transmission drop rate × fleet straggler fraction × device
+availability pattern — and runs ALL eight sync algorithms per cell
+through the compiled scan engine (``repro.fed.run(engine="scan")``),
+measuring simulated seconds-to-target AND modeled bytes-to-target per
+cell: the two budgets (time and traffic) a deployment actually spends.
+
+The drop = 0 cells pass ``scenario=None`` — they double as a standing
+bit-invisibility check, since the gated numbers must match what the
+pre-scenario engine produced on the same seeds.  The payload lands in
+BENCH_fed.json's ``scenario`` section (merged by ``benchmarks.run
+--only scenario``) and is schema-gated by ``check_regression.py``,
+including preservation of each drop=0 cell's recorded FOLB-vs-FedAvg
+seconds-to-accuracy ordering.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+N_DEVICES = 30
+ROUNDS = 40                 # fixed regardless of --quick: artifact comparability
+TARGET_ACC = 0.75
+SEED = 0
+STRAGGLER_SLOWDOWN = 25.0
+
+DROP_AXIS = (0.0, 0.25)
+STRAGGLER_AXIS = (0.15, 0.4)
+AVAIL_AXIS = ("always_on", "cycled")    # cycled: 50% duty availability windows
+
+ALGO_MU = {"fedavg": 0.0}               # every other algo uses mu = 1.0
+FOLB_HET_PSI = 1.0
+
+
+def _cell_key(drop: float, sf: float, avail: str) -> str:
+    return f"drop{drop:g}_strag{sf:g}_{avail}"
+
+
+def _cell_fleet(sf: float, avail: str):
+    from repro.sysmodel import heterogeneous_fleet
+    kwargs = {}
+    if avail == "cycled":
+        kwargs = {"avail_frac": 0.5, "avail_period": 600.0,
+                  "avail_duty": 0.7}
+    return heterogeneous_fleet(SEED, N_DEVICES, straggler_frac=sf,
+                               straggler_slowdown=STRAGGLER_SLOWDOWN,
+                               **kwargs)
+
+
+def _bytes_to_acc(res, rounds_to_acc: int) -> float:
+    """Cumulative modeled up+down traffic through the round that first
+    reached the target (-1.0 when the run never got there)."""
+    if rounds_to_acc is None or rounds_to_acc < 0:
+        return -1.0
+    up = np.asarray(res.metrics["bytes_up"], np.float64)
+    down = np.asarray(res.metrics["bytes_down"], np.float64)
+    n = min(int(rounds_to_acc) + 1, len(up))
+    return float(up[:n].sum() + down[:n].sum())
+
+
+def scenario_results(rounds: int = ROUNDS) -> Dict:
+    """The full matrix: one cell per (drop, straggler_frac, avail), all
+    eight sync algorithms per cell.  Returns the BENCH_fed.json
+    ``scenario`` section payload."""
+    from repro import fed as fed_api
+    from repro.configs.paper_models import MCLR
+    from repro.data.federated import stack_devices
+    from repro.data.synthetic import synthetic_alpha_beta
+    from repro.fed.simulator import (ALGOS, FLConfig, rounds_to_accuracy,
+                                     seconds_to_accuracy)
+    from repro.sysmodel import ScenarioConfig
+
+    data = stack_devices(
+        synthetic_alpha_beta(SEED, N_DEVICES, 1.0, 1.0, mean_size=60),
+        seed=SEED)
+
+    cells = {}
+    for drop in DROP_AXIS:
+        # drop = 0 → scenario=None: the cell numbers must be exactly the
+        # pre-scenario engine's (bit-invisibility, enforced by the gate
+        # comparing against the committed baseline)
+        sc = None if drop == 0.0 else ScenarioConfig(drop_prob=drop,
+                                                     seed=SEED)
+        for sf in STRAGGLER_AXIS:
+            for avail in AVAIL_AXIS:
+                fleet = _cell_fleet(sf, avail)
+                runs = {}
+                for algo in ALGOS:
+                    fl = FLConfig(
+                        algo=algo, n_selected=10, lr=0.05, seed=SEED,
+                        mu=ALGO_MU.get(algo, 1.0),
+                        psi=FOLB_HET_PSI if algo == "folb_het" else 0.0,
+                        telemetry=True)
+                    t0 = time.time()
+                    res = fed_api.run(MCLR, data, fl, rounds,
+                                      engine="scan", eval_every=1,
+                                      fleet=fleet, scenario=sc)
+                    r2a = rounds_to_accuracy(res, TARGET_ACC)
+                    runs[algo] = {
+                        "rounds_to_acc": r2a,
+                        "secs_to_acc": seconds_to_accuracy(res, TARGET_ACC),
+                        "bytes_to_acc": _bytes_to_acc(res, r2a),
+                        "final_acc": float(res["test_acc"][-1]),
+                        "host_seconds": round(time.time() - t0, 2),
+                    }
+                cells[_cell_key(drop, sf, avail)] = {
+                    "drop": drop, "straggler_frac": sf, "avail": avail,
+                    "runs": runs,
+                }
+    return {
+        "axes": {"drop": list(DROP_AXIS),
+                 "straggler_frac": list(STRAGGLER_AXIS),
+                 "avail": list(AVAIL_AXIS)},
+        "rounds": rounds,
+        "target_acc": TARGET_ACC,
+        "n_devices": N_DEVICES,
+        "straggler_slowdown": STRAGGLER_SLOWDOWN,
+        "engine": "sync_scan (repro.fed.run engine='scan')",
+        "cells": cells,
+    }
+
+
+def scenario_rows(rounds: int = ROUNDS
+                  ) -> Tuple[List[Tuple[str, float, str]], Dict]:
+    """(CSV rows, json payload) for the ``scenario`` section: one row per
+    cell × algorithm with the time- and bytes-to-target columns."""
+    payload = scenario_results(rounds)
+    rows = []
+    for key, cell in payload["cells"].items():
+        for algo, r in cell["runs"].items():
+            rows.append((
+                f"scenario/{key}/{algo}",
+                r["host_seconds"] / rounds * 1e6,
+                f"secs_to_{TARGET_ACC}={r['secs_to_acc']:.2f};"
+                f"bytes_to_{TARGET_ACC}={r['bytes_to_acc']:.0f};"
+                f"rounds_to_{TARGET_ACC}={r['rounds_to_acc']};"
+                f"final_acc={r['final_acc']:.3f}"))
+    return rows, payload
+
+
+if __name__ == "__main__":
+    rows, payload = scenario_rows()
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -76,27 +76,32 @@ def time_to_accuracy_results(rounds: int = 60) -> List[Dict]:
     total bytes moved and bytes-to-target-accuracy, the communication
     budget the paper's algorithm selection is ultimately spent against.
     """
-    from repro.fed.async_engine import AsyncFLConfig, run_async
+    from repro import fed as fed_api
+    from repro.fed.async_engine import AsyncFLConfig
     from repro.fed.simulator import (FLConfig, rounds_to_accuracy,
-                                     run_federated, seconds_to_accuracy)
+                                     seconds_to_accuracy)
     model_cfg, fed, fleet, deadline = setup_sweep()
 
+    # engine="loop" keeps host_seconds comparable with prior artifacts
     runs = []
     for algo, mu in (("fedavg", 0.0), ("folb", 1.0)):
         fl = FLConfig(algo=algo, n_selected=10, mu=mu, lr=0.05, seed=SEED,
                       telemetry=True)
-        runs.append((f"{algo}/sync", lambda fl=fl: run_federated(
-            model_cfg, fed, fl, rounds=rounds, eval_every=1, fleet=fleet)))
+        runs.append((f"{algo}/sync", lambda fl=fl: fed_api.run(
+            model_cfg, fed, fl, rounds, engine="loop", eval_every=1,
+            fleet=fleet)))
     afl_dl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=10,
                            mu=1.0, lr=0.05, deadline=deadline,
                            staleness_alpha=0.5, seed=SEED, telemetry=True)
-    runs.append(("folb/deadline", lambda: run_async(
-        model_cfg, fed, afl_dl, fleet, rounds=rounds, eval_every=1)))
+    runs.append(("folb/deadline", lambda: fed_api.run(
+        model_cfg, fed, afl_dl, rounds, engine="loop", eval_every=1,
+        fleet=fleet)))
     afl_fb = AsyncFLConfig(mode="fedbuff", algo="folb", mu=1.0, lr=0.05,
                            buffer_size=5, concurrency=10,
                            staleness_alpha=0.5, seed=SEED, telemetry=True)
-    runs.append(("folb/fedbuff", lambda: run_async(
-        model_cfg, fed, afl_fb, fleet, rounds=rounds, eval_every=1)))
+    runs.append(("folb/fedbuff", lambda: fed_api.run(
+        model_cfg, fed, afl_fb, rounds, engine="loop", eval_every=1,
+        fleet=fleet)))
 
     results = []
     for name, fn in runs:
@@ -158,16 +163,16 @@ def write_bench_json(results: List[Dict], path: str = "BENCH_fed.json",
                      extra: Optional[Dict] = None) -> str:
     """Write the cross-PR perf artifact.  `extra` merges additional
     top-level sections (e.g. the dispatch-overhead numbers).  Sections
-    this writer doesn't own (the `kernel` / `profile` sections merged by
-    ``benchmarks.run --only kernel`` / ``--only profile``) are preserved
-    from an existing artifact, so suite ordering can't silently drop
-    them."""
+    this writer doesn't own (the `kernel` / `profile` / `scenario`
+    sections merged by ``benchmarks.run --only kernel`` / ``--only
+    profile`` / ``--only scenario``) are preserved from an existing
+    artifact, so suite ordering can't silently drop them."""
     preserved = {}
     if os.path.exists(path):
         try:
             with open(path) as f:
                 preserved = {k: v for k, v in json.load(f).items()
-                             if k in ("kernel", "profile")}
+                             if k in ("kernel", "profile", "scenario")}
         except (OSError, ValueError):
             preserved = {}
     payload = {

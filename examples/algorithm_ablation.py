@@ -11,10 +11,11 @@ import dataclasses
 
 import numpy as np
 
+from repro import fed as fed_api
 from repro.configs.paper_models import MCLR
 from repro.data.federated import stack_devices
 from repro.data.synthetic import synthetic_alpha_beta
-from repro.fed.simulator import FLConfig, run_federated, rounds_to_accuracy
+from repro.fed.simulator import FLConfig, rounds_to_accuracy
 
 ROUNDS, TARGET = 50, 0.70
 
@@ -42,7 +43,7 @@ def main() -> None:
           f"{'drop':>6s}  comm/round")
     for label, fl, comm in RUNS:
         fl = dataclasses.replace(fl, n_selected=10, lr=0.05, seed=0)
-        h = run_federated(MCLR, fed, fl, rounds=ROUNDS, eval_every=2)
+        h = fed_api.run(MCLR, fed, fl, ROUNDS, eval_every=2)
         accs = np.asarray(h["test_acc"])
         r2a = rounds_to_accuracy(h, TARGET)
         drop = float(np.maximum(0, accs[:-1] - accs[1:]).max())

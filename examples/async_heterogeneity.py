@@ -48,8 +48,8 @@ def compiled_comparison(rounds: int = ROUNDS) -> None:
     """Run deadline + fedbuff through both async engines and print the
     host-time comparison (the simulated history is identical by
     construction — asserted below)."""
-    from repro.fed.async_engine import AsyncFLConfig, run_async
-    from repro.fed.scan_engine import run_async_compiled
+    from repro import fed as fed_api
+    from repro.fed.async_engine import AsyncFLConfig
     model_cfg, fed, fleet, deadline = setup_sweep()
     configs = {
         "folb/deadline": AsyncFLConfig(
@@ -62,14 +62,17 @@ def compiled_comparison(rounds: int = ROUNDS) -> None:
     print(f"\n{'run':>15} {'loop host-s':>12} {'scan host-s':>12} "
           f"{'speedup':>8} {'bit-for-bit':>12}")
     for name, afl in configs.items():
-        run_async(model_cfg, fed, afl, fleet, rounds=rounds)   # warm jits
+        fed_api.run(model_cfg, fed, afl, rounds, fleet=fleet,
+                    engine="loop")                             # warm jits
         t0 = time.time()
-        h_loop = run_async(model_cfg, fed, afl, fleet, rounds=rounds)
+        h_loop = fed_api.run(model_cfg, fed, afl, rounds, fleet=fleet,
+                             engine="loop")
         loop_s = time.time() - t0
-        run_async_compiled(model_cfg, fed, afl, fleet, rounds=rounds)
+        fed_api.run(model_cfg, fed, afl, rounds, fleet=fleet,
+                    engine="scan")
         t0 = time.time()
-        h_scan = run_async_compiled(model_cfg, fed, afl, fleet,
-                                    rounds=rounds)
+        h_scan = fed_api.run(model_cfg, fed, afl, rounds, fleet=fleet,
+                             engine="scan")
         scan_s = time.time() - t0
         same = (h_loop["test_acc"] == h_scan["test_acc"]
                 and h_loop["wall_clock"] == h_scan["wall_clock"]
@@ -86,9 +89,9 @@ def telemetry_demo(rounds: int = ROUNDS, trace_path: str = None) -> None:
     import jax
     import numpy as np
 
+    from repro import fed as fed_api
     from repro.fed.async_engine import (AsyncFLConfig, build_plan,
                                         deadline_selection_probs)
-    from repro.fed.scan_engine import run_async_compiled
     from repro.models import small
     from repro.sysmodel import round_cost_for
     from repro.telemetry import write_trace
@@ -104,8 +107,7 @@ def telemetry_demo(rounds: int = ROUNDS, trace_path: str = None) -> None:
     sel_probs = deadline_selection_probs(afl, fleet, cost, sizes)
     plan = build_plan(afl, fleet, cost, sizes, rounds,
                       jax.random.PRNGKey(SEED), sel_probs)
-    res = run_async_compiled(model_cfg, fed, afl, fleet, rounds=rounds,
-                             plan=plan)
+    res = fed_api.run(model_cfg, fed, afl, rounds, fleet=fleet, plan=plan)
 
     m = res.metrics
     print(f"\ntelemetry (deadline-FOLB, {rounds} rounds):")

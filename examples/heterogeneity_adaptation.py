@@ -10,11 +10,12 @@ single line-searched hyper-parameter ψ (Sec. V-B).  This example runs the
 """
 import numpy as np
 
+from repro import fed as fed_api
 from repro.configs.paper_models import MCLR
 from repro.core.tuning import PSI_GRID, line_search
 from repro.data.federated import stack_devices
 from repro.data.synthetic import synthetic_alpha_beta
-from repro.fed.simulator import FLConfig, run_federated
+from repro.fed.simulator import FLConfig
 
 ROUNDS = 40
 
@@ -30,14 +31,14 @@ def main() -> None:
     fed = stack_devices(devs, seed=0)
 
     base = FLConfig(algo="folb", n_selected=10, mu=1.0, lr=0.05, seed=0)
-    h0 = run_federated(MCLR, fed, base, rounds=ROUNDS, eval_every=1)
+    h0 = fed_api.run(MCLR, fed, base, ROUNDS, eval_every=1)
     print(f"vanilla FOLB : final acc {h0['test_acc'][-1]:.3f}, "
           f"worst round-to-round drop {stability(h0):.3f}")
 
     def run_psi(psi: float) -> float:
         fl = FLConfig(algo="folb_het", n_selected=10, mu=1.0, lr=0.05,
                       psi=psi, seed=0)
-        h = run_federated(MCLR, fed, fl, rounds=ROUNDS, eval_every=1)
+        h = fed_api.run(MCLR, fed, fl, ROUNDS, eval_every=1)
         # figure of merit: accuracy minus instability penalty
         return h["test_acc"][-1] - stability(h)
 
@@ -48,7 +49,7 @@ def main() -> None:
 
     fl = FLConfig(algo="folb_het", n_selected=10, mu=1.0, lr=0.05,
                   psi=best_psi, seed=0)
-    h1 = run_federated(MCLR, fed, fl, rounds=ROUNDS, eval_every=1)
+    h1 = fed_api.run(MCLR, fed, fl, ROUNDS, eval_every=1)
     print(f"FOLB-het ψ={best_psi:g}: final acc {h1['test_acc'][-1]:.3f}, "
           f"worst drop {stability(h1):.3f}")
     print("\nheterogeneity-aware aggregation trades a slightly different "

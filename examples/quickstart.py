@@ -8,10 +8,11 @@ prints the convergence comparison — the Fig. 7/8 + Table I story.
 """
 import sys
 
+from repro import fed as fed_api
 from repro.configs.paper_models import MCLR
 from repro.data.federated import stack_devices
 from repro.data.synthetic import synthetic_alpha_beta
-from repro.fed.simulator import FLConfig, run_federated, rounds_to_accuracy
+from repro.fed.simulator import FLConfig, rounds_to_accuracy
 
 ROUNDS = 60
 TARGET = 0.70
@@ -28,7 +29,7 @@ def main() -> None:
     for algo, mu in (("fedavg", 0.0), ("fedprox", 1.0), ("folb", 1.0),
                      ("fednu_direct", 1.0)):
         fl = FLConfig(algo=algo, n_selected=10, mu=mu, lr=0.05, seed=0)
-        hist = run_federated(MCLR, fed, fl, rounds=ROUNDS, eval_every=2)
+        hist = fed_api.run(MCLR, fed, fl, ROUNDS, eval_every=2)
         results[algo] = hist
         r2a = rounds_to_accuracy(hist, TARGET)
         print(f"{algo:8s}  loss {hist['train_loss'][0]:.3f} -> "

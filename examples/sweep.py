@@ -28,10 +28,10 @@ ALPHA_AXIS = (0.0, 0.5, 1.0)
 
 
 def main():
+    from repro import fed as fed_api
     from repro.fed.async_engine import AsyncFLConfig
-    from repro.fed.scan_engine import run_async_compiled
     from repro.fed.simulator import seconds_to_accuracy
-    from repro.fed.sweep_engine import SweepSpec, run_async_sweep_compiled
+    from repro.fed.sweep_engine import SweepSpec
     from repro.sysmodel import fleet_summary
 
     model_cfg, fed, fleet, deadline = setup_sweep()
@@ -47,15 +47,14 @@ def main():
           f"{ROUNDS} rounds each")
 
     t0 = time.time()
-    sweep = run_async_sweep_compiled(model_cfg, fed, spec, fleet,
-                                     rounds=ROUNDS)
+    sweep = fed_api.run(model_cfg, fed, spec, ROUNDS, fleet=fleet)
     sweep_s = time.time() - t0
 
     # one solo compiled run for the host-time comparison (it rebuilds the
     # plan and pays its own dispatch — the cost every extra grid point
     # would add without the sweep engine)
     t0 = time.time()
-    run_async_compiled(model_cfg, fed, spec.member(0), fleet, rounds=ROUNDS)
+    fed_api.run(model_cfg, fed, spec.member(0), ROUNDS, fleet=fleet)
     solo_s = time.time() - t0
 
     print(f"\n{'lr':>6} {'alpha':>6} {'final acc':>10} "

@@ -43,11 +43,19 @@ def fedavg_aggregate(w_t, deltas):
                         w_t, upd)
 
 
-def signed_aggregate(w_t, deltas, grads, global_grad):
-    """Eq. 5: flip the sign of anti-aligned updates (FedNu + sign rule)."""
+def signed_aggregate(w_t, deltas, grads, global_grad, mask=None):
+    """Eq. 5: flip the sign of anti-aligned updates (FedNu + sign rule).
+
+    `mask` (optional, scenario drop channel) restricts the rule to the
+    uploads that made it: masked signs are zeroed and the 1/K norm
+    shrinks to 1/n_arrived; `mask=None` is the exact original rule."""
     inner = _stacked_dot(grads, global_grad)
     K = inner.shape[0]
-    weights = jnp.sign(inner) / K
+    if mask is None:
+        weights = jnp.sign(inner) / K
+    else:
+        m = mask.astype(jnp.float32)
+        weights = jnp.sign(inner) * m / jnp.maximum(jnp.sum(m), 1.0)
     upd = _weighted_sum(deltas, weights)
     return jax.tree.map(lambda w, u: (w.astype(jnp.float32) + u).astype(w.dtype),
                         w_t, upd)
@@ -70,12 +78,21 @@ def folb_single_set(w_t, deltas, grads):
                         w_t, upd)
 
 
-def folb_two_set(w_t, deltas, grads_s1, grads_s2):
+def folb_two_set(w_t, deltas, grads_s1, grads_s2, mask=None):
     """FOLB (Alg. 2 / Eq. IV-A): weights from S1 inner products, normalized
-    by the independent S2 estimate."""
-    g1 = mean_of(grads_s1)
+    by the independent S2 estimate.
+
+    `mask` (optional, scenario drop channel) applies to the S1 *updates*
+    only: g1 and the weights exclude failed uploads, while the S2 probe
+    gradients are separate lightweight transmissions outside the
+    per-update drop draw and keep the full set.  `mask=None` is the
+    exact original rule."""
+    g1 = mean_of(grads_s1) if mask is None else _masked_mean_of(grads_s1,
+                                                                mask)
     g2 = mean_of(grads_s2)
     inner1 = _stacked_dot(grads_s1, g1)
+    if mask is not None:
+        inner1 = inner1 * mask.astype(jnp.float32)
     denom = jnp.sum(_stacked_dot(grads_s2, g2))
     weights = inner1 / jnp.where(jnp.abs(denom) > 1e-30, denom, 1e-30)
     upd = _weighted_sum(deltas, weights)
@@ -175,11 +192,11 @@ def aggregate(rule: str, w_t, deltas, grads=None, grads_s2=None,
         return fedavg_aggregate(w_t, deltas)
     if rule == "signed":
         gg = global_grad if global_grad is not None else mean_of(grads)
-        return signed_aggregate(w_t, deltas, grads, gg)
+        return signed_aggregate(w_t, deltas, grads, gg, mask=mask)
     if rule == "folb":
         return folb_single_set(w_t, deltas, grads)
     if rule == "folb2":
-        return folb_two_set(w_t, deltas, grads, grads_s2)
+        return folb_two_set(w_t, deltas, grads, grads_s2, mask=mask)
     if rule == "folb_het":
         return folb_het(w_t, deltas, grads, gammas, psi)
     raise ValueError(f"unknown aggregation rule {rule!r}")

@@ -7,8 +7,18 @@ from __future__ import annotations
 import itertools
 from typing import Callable, Dict, Sequence, Tuple
 
+import jax.numpy as jnp
+
 MU_GRID: Sequence[float] = (1e-4, 1e-3, 1e-2, 1e-1, 1.0)
 PSI_GRID: Sequence[float] = (1e-1, 1.0, 10.0, 100.0)
+
+
+def hypers_of(cfg, fields: Sequence[str]) -> Dict[str, jnp.ndarray]:
+    """Extract the named sweepable hyper-parameters from a config as f32
+    scalars — the traced-operand dict every engine passes into its jitted
+    round step (one shared helper so the sync and async engines cannot
+    drift on dtype or ordering)."""
+    return {name: jnp.float32(getattr(cfg, name)) for name in fields}
 
 
 def sweep_grid(**axes: Sequence[float]) -> Tuple[Dict[str, float], ...]:

@@ -1,0 +1,6 @@
+"""Federated engines.  ``repro.fed.run`` is the single front door; the
+per-engine modules (``simulator``, ``scan_engine``, ``async_engine``,
+``sweep_engine``) stay importable for internals and tests."""
+from repro.fed.api import run
+
+__all__ = ["run"]

@@ -1,0 +1,232 @@
+"""One front door for every federated run: ``repro.fed.run``.
+
+The repo grew six entry points — ``run_federated`` /
+``run_federated_compiled`` (sync loop / scan), ``run_async`` /
+``run_async_compiled`` (async loop / scan), and the two sweep drivers —
+whose call sites had to know which engine matched which config and which
+knobs each engine accepts.  ``run(...)`` dispatches on the *config type*
+(``FLConfig`` vs ``AsyncFLConfig`` vs ``SweepSpec``) plus an ``engine``
+selector, validates knob combinations up front with actionable errors,
+and returns the same ``FedRunResult`` / ``SweepResult`` the underlying
+engines produce — bit-for-bit, because it only forwards.
+
+    from repro import fed
+    res  = fed.run(MCLR, data, FLConfig(algo="folb"), rounds=100)
+    res  = fed.run(MCLR, data, afl, rounds=50, fleet=fleet)   # async
+    grid = fed.run(MCLR, data, SweepSpec.from_grid(fl, lr=(...)),
+                   rounds=100, fleet=fleet)                    # sweep
+
+Engine selection:
+
+  * ``"auto"`` (default) — the compiled ``lax.scan`` engine, the fast
+    path for every config type.
+  * ``"scan"`` — explicitly the compiled engine.
+  * ``"loop"`` — the python-loop reference engine (sync and async solo
+    runs only; sweeps are scan-only by construction).
+
+The six historical entry points remain importable from their home
+modules and from here, but the ones re-exported by this module warn
+``DeprecationWarning`` and forward unchanged — new code should call
+``fed.run``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import warnings
+from typing import Mapping, Optional, Union
+
+from repro.fed import async_engine as _async
+from repro.fed import scan_engine as _scan
+from repro.fed import simulator as _sim
+from repro.fed import sweep_engine as _sweep
+
+_ENGINES = ("auto", "loop", "scan")
+
+RunConfig = Union[_sim.FLConfig, _async.AsyncFLConfig, _sweep.SweepSpec]
+
+
+def _with_telemetry(cfg, telemetry: Optional[bool]):
+    """telemetry=None respects the config; a bool overrides it."""
+    if telemetry is None or cfg.telemetry == bool(telemetry):
+        return cfg
+    return dataclasses.replace(cfg, telemetry=bool(telemetry))
+
+
+def _as_sweep_spec(cfg, sweep) -> _sweep.SweepSpec:
+    """Normalize the (cfg, sweep=) combination to one SweepSpec."""
+    if isinstance(cfg, _sweep.SweepSpec):
+        if sweep is not None:
+            raise ValueError(
+                "pass the sweep either as cfg (a SweepSpec) or via "
+                "sweep=, not both")
+        return cfg
+    if isinstance(sweep, _sweep.SweepSpec):
+        if sweep.base != cfg:
+            raise ValueError(
+                "sweep= is a SweepSpec whose base config differs from "
+                "cfg — pass the SweepSpec as cfg, or build it from this "
+                "base with SweepSpec.from_grid(cfg, ...)")
+        return sweep
+    if isinstance(sweep, Mapping):
+        # axes mapping: {"lr": (0.01, 0.1), "mu": (0.0, 1.0)}
+        return _sweep.SweepSpec.from_grid(cfg, **sweep)
+    raise ValueError(
+        f"sweep= must be a SweepSpec or a mapping of sweepable axes "
+        f"(e.g. {{'lr': (0.01, 0.1)}}), got {type(sweep).__name__}")
+
+
+def run(model_cfg, fed, cfg: RunConfig, rounds: int, *,
+        engine: str = "auto",
+        sweep=None,
+        fleet=None,
+        plan=None,
+        mesh=None,
+        eval_every: int = 1,
+        telemetry: Optional[bool] = None,
+        scenario=None,
+        key=None,
+        sel_probs=None,
+        profiler=None):
+    """Run any federated configuration through the matching engine.
+
+    Parameters
+    ----------
+    model_cfg, fed : the model config and ``FederatedData`` every engine
+        takes as its first two arguments.
+    cfg : ``FLConfig`` (sync), ``AsyncFLConfig`` (async), or
+        ``SweepSpec`` (batched hyper-parameter sweep; its base config
+        picks sync vs async).
+    rounds : number of communication rounds (async: aggregations).
+    engine : ``"auto"`` | ``"loop"`` | ``"scan"``.  ``auto`` resolves to
+        the compiled scan engine.  ``loop`` is the python-loop reference
+        engine — unavailable for sweeps.
+    sweep : alternative way to request a sweep — a mapping of sweepable
+        axes (``{"lr": (0.01, 0.1)}``, cross product via
+        ``SweepSpec.from_grid``) or a pre-built ``SweepSpec`` whose base
+        must equal ``cfg``.
+    fleet : ``DeviceFleet``; required for async configs, optional for
+        sync (enables the simulated wall clock).
+    plan : pre-built async event plan (``async_engine.build_plan``) to
+        replay; async scan/sweep engines only.
+    mesh / eval_every / key / sel_probs / profiler : forwarded to the
+        engine (``key`` is the ``init_key``).
+    telemetry : None respects ``cfg.telemetry``; a bool overrides it
+        (via ``dataclasses.replace``).
+    scenario : ``repro.sysmodel.ScenarioConfig`` failure channels; a
+        RUN-level knob, applied identically by loop and scan engines.
+
+    Returns ``FedRunResult`` for solo configs, ``SweepResult`` for
+    sweeps.
+    """
+    if engine not in _ENGINES:
+        raise ValueError(
+            f"engine must be one of {_ENGINES}, got {engine!r}")
+
+    if isinstance(cfg, _sweep.SweepSpec) or sweep is not None:
+        spec = _as_sweep_spec(cfg, sweep)
+        if engine == "loop":
+            raise ValueError(
+                "engine='loop' cannot run sweeps: the sweep engines are "
+                "single compiled programs (that is the point) — use "
+                "engine='scan'/'auto', or loop over spec.members() with "
+                "solo run() calls")
+        if telemetry is not None and spec.base.telemetry != bool(telemetry):
+            spec = dataclasses.replace(
+                spec, base=_with_telemetry(spec.base, telemetry))
+        if isinstance(spec.base, _async.AsyncFLConfig):
+            if fleet is None:
+                raise ValueError(
+                    "async sweeps need fleet=: the event timeline is "
+                    "built from the device fleet "
+                    "(repro.sysmodel.heterogeneous_fleet / uniform_fleet)")
+            if sel_probs is not None:
+                raise ValueError(
+                    "sel_probs= is a sync-engine knob; the async "
+                    "deadline engine derives its selection distribution "
+                    "from the fleet (latency_aware) or uses uniform "
+                    "sampling")
+            return _sweep.run_async_sweep_compiled(
+                model_cfg, fed, spec, fleet, rounds, init_key=key,
+                eval_every=eval_every, mesh=mesh, plan=plan,
+                profiler=profiler, scenario=scenario)
+        if plan is not None:
+            raise ValueError(
+                "plan= is an async-engine knob (a pre-built event plan); "
+                "sync sweeps draw their inputs from the config seed")
+        return _sweep.run_sweep_compiled(
+            model_cfg, fed, spec, rounds, init_key=key,
+            eval_every=eval_every, fleet=fleet, sel_probs=sel_probs,
+            mesh=mesh, profiler=profiler, scenario=scenario)
+
+    if isinstance(cfg, _async.AsyncFLConfig):
+        cfg = _with_telemetry(cfg, telemetry)
+        if fleet is None:
+            raise ValueError(
+                "async configs need fleet=: the event timeline is built "
+                "from the device fleet "
+                "(repro.sysmodel.heterogeneous_fleet / uniform_fleet)")
+        if sel_probs is not None:
+            raise ValueError(
+                "sel_probs= is a sync-engine knob; the async deadline "
+                "engine derives its selection distribution from the "
+                "fleet (latency_aware) or uses uniform sampling")
+        if engine == "loop":
+            return _async.run_async(
+                model_cfg, fed, cfg, fleet, rounds, init_key=key,
+                eval_every=eval_every, mesh=mesh, plan=plan,
+                profiler=profiler, scenario=scenario)
+        return _scan.run_async_compiled(
+            model_cfg, fed, cfg, fleet, rounds, init_key=key,
+            eval_every=eval_every, mesh=mesh, plan=plan,
+            profiler=profiler, scenario=scenario)
+
+    if isinstance(cfg, _sim.FLConfig):
+        cfg = _with_telemetry(cfg, telemetry)
+        if plan is not None:
+            raise ValueError(
+                "plan= is an async-engine knob (a pre-built event plan); "
+                "sync runs have no event plan — drop it, or pass an "
+                "AsyncFLConfig")
+        if engine == "loop":
+            return _sim.run_federated(
+                model_cfg, fed, cfg, rounds, init_key=key,
+                eval_every=eval_every, fleet=fleet, sel_probs=sel_probs,
+                mesh=mesh, profiler=profiler, scenario=scenario)
+        return _scan.run_federated_compiled(
+            model_cfg, fed, cfg, rounds, init_key=key,
+            eval_every=eval_every, fleet=fleet, sel_probs=sel_probs,
+            mesh=mesh, profiler=profiler, scenario=scenario)
+
+    raise TypeError(
+        f"cfg must be FLConfig, AsyncFLConfig or SweepSpec, got "
+        f"{type(cfg).__name__}")
+
+
+# ------------------------------------------------- deprecated old names
+#
+# The historical per-engine entry points, re-exported with a
+# DeprecationWarning.  They forward verbatim (same results bit-for-bit);
+# the canonical implementations stay in their home modules.
+
+def _deprecated(target, replacement: str):
+    @functools.wraps(target)
+    def wrapper(*args, **kwargs):
+        warnings.warn(
+            f"repro.fed.{target.__name__} is deprecated; use "
+            f"repro.fed.run({replacement})", DeprecationWarning,
+            stacklevel=2)
+        return target(*args, **kwargs)
+    return wrapper
+
+
+run_federated = _deprecated(_sim.run_federated, "..., engine='loop'")
+run_federated_compiled = _deprecated(_scan.run_federated_compiled, "...")
+run_async = _deprecated(_async.run_async,
+                        "..., fleet=fleet, engine='loop'")
+run_async_compiled = _deprecated(_scan.run_async_compiled,
+                                 "..., fleet=fleet")
+run_sweep_compiled = _deprecated(_sweep.run_sweep_compiled,
+                                 "..., sweep spec as cfg")
+run_async_sweep_compiled = _deprecated(_sweep.run_async_sweep_compiled,
+                                       "..., sweep spec as cfg")

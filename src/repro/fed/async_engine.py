@@ -50,7 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation, selection
+from repro.core import aggregation, selection, tuning
 from repro.data.federated import FederatedData
 from repro.fed import simulator
 from repro.kernels import ops
@@ -58,6 +58,7 @@ from repro.models import small
 from repro.sysmodel import (DeviceFleet, EventQueue, device_latencies,
                             expected_latencies, plan_deadline_run,
                             round_cost_for)
+from repro.sysmodel import scenario as scenario_mod
 
 ASYNC_MODES = ("deadline", "fedbuff")
 # aggregation bases the async engine can run (the sync-parity fast path
@@ -123,8 +124,7 @@ def hypers_of(afl: AsyncFLConfig) -> Dict[str, jnp.ndarray]:
     """Traced-operand view of an async config's sweepable fields.  A
     superset of what ``simulator.fl_round`` needs (lr/mu/psi), so the same
     dict serves the sync-parity fast path and the staleness slow steps."""
-    return {name: jnp.float32(getattr(afl, name))
-            for name in SWEEPABLE_FIELDS}
+    return tuning.hypers_of(afl, SWEEPABLE_FIELDS)
 
 
 def _concat0(a, b):
@@ -204,6 +204,14 @@ class DeadlinePlan:
     stale_mean: np.ndarray  # (R,) float64 mean τ over the aggregated set
     n_slots: int            # pool rows (dump row index == n_slots)
     n_due: int              # S: static late-arrival budget per round
+    # scenario channels (None on scenario-free plans — the pre-scenario
+    # layout; `plan_digest` iterates dataclass fields, so these hash too):
+    # `arrived` above already excludes dropped/lost dispatches, these
+    # record WHY so telemetry/tests can account uploads vs silence
+    drop_mask: Optional[np.ndarray] = None    # (R, K) bool upload failed
+    lost_mask: Optional[np.ndarray] = None    # (R, K) bool device offline
+    n_failed_up: Optional[np.ndarray] = None  # (R,) int64 failed uploads
+    #   landing (paying their bytes) inside each round's window
 
 
 @dataclasses.dataclass(frozen=True)
@@ -232,6 +240,12 @@ class FedBuffPlan:
     arrival_clock: Optional[np.ndarray] = None   # (C + R*M,) float64
     all_ids: Optional[np.ndarray] = None         # (C + R*M,) int32
     all_steps: Optional[np.ndarray] = None       # (C + R*M,) int32
+    # scenario channels (None on scenario-free plans): flushes count
+    # arrival ATTEMPTS, so a dropped upload occupies its flush position
+    # but is masked out of the aggregation by `flush_mask`
+    flush_mask: Optional[np.ndarray] = None      # (R, M) float32
+    drop_mask: Optional[np.ndarray] = None       # (C + R*M,) bool
+    lost_mask: Optional[np.ndarray] = None       # (C + R*M,) bool
 
 
 @functools.partial(jax.jit, static_argnums=(2,))
@@ -271,7 +285,7 @@ def deadline_selection_probs(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
 
 def build_deadline_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
                         sizes: np.ndarray, rounds: int, init_key,
-                        sel_probs=None) -> DeadlinePlan:
+                        sel_probs=None, scenario=None) -> DeadlinePlan:
     """Pre-compute the whole deadline-mode event timeline on the host.
 
     Replicates the per-round host sequence exactly — the
@@ -279,6 +293,15 @@ def build_deadline_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
     step draws, and `plan_sync_round`'s float arithmetic (via the
     vectorized `plan_deadline_run`) — then simulates the pending-straggler
     set to assign pool slots and fixed-width masked due budgets.
+
+    An active ``scenario`` folds the failure channels into the plan
+    arrays: completeness rescales the step draws, jitter multiplies the
+    latencies, lost (dropout) dispatches never arrive (forcing the round
+    to its cutoff — dropout requires a finite deadline), and dropped
+    uploads arrive on schedule but are excluded from aggregation and the
+    straggler pool (they are charged as failed-upload bytes in the round
+    their arrival lands in).  ``plan.arrived`` remains the aggregation
+    mask; `drop_mask`/`lost_mask`/`n_failed_up` record the failures.
     """
     from repro.fed.scan_engine import _split_chain
     K = afl.n_selected
@@ -288,18 +311,47 @@ def build_deadline_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
     ids = np.asarray(_draw_ids_chain(subs, probs, K), np.int32)
     n_steps = np.stack([np.asarray(simulator.local_step_draws(t, K, afl))
                         for t in range(rounds)]).astype(np.int32)
-    arrival, arrived, round_end = plan_deadline_run(
-        fleet, ids, n_steps, cost, deadline=afl.deadline, n_examples=sizes)
+    sc = scenario_mod.as_active(scenario)
+    if sc is None:
+        arrival, arrived, round_end = plan_deadline_run(
+            fleet, ids, n_steps, cost, deadline=afl.deadline,
+            n_examples=sizes)
+        drop = lost = None
+    else:
+        scenario_mod.check_deadline(sc, afl.deadline)
+        g = scenario_mod.realize(sc, (rounds, K))
+        n_steps = scenario_mod.scale_steps(n_steps, g.comp)
+        drop, lost = g.drop, g.lost
+        arrival, arrived, round_end = plan_deadline_run(
+            fleet, ids, n_steps, cost, deadline=afl.deadline,
+            n_examples=sizes, lat_scale=g.lat_scale, lost=lost)
+        # `arrived` excludes lost dispatches already (plan_deadline_run);
+        # exclude failed uploads from aggregation too — they land on time
+        # but carry nothing
+        arrived = arrived & ~drop
 
     pending: List[Dict] = []   # {"arrival", "t0", "slot"} in insertion order
+    failed_pending: List[float] = []   # arrival clocks of dropped uploads
     free: List[int] = []
     pool = 0
     store_slot = np.full((rounds, K), -1, np.int64)
     due_lists: List[List] = []
     fast = np.zeros(rounds, bool)
     n_arrived = np.zeros(rounds, np.int64)
+    n_failed = np.zeros(rounds, np.int64)
     stale_sum = np.zeros(rounds)
     for t in range(rounds):
+        if sc is not None:
+            # failed-upload byte accounting: a dropped dispatch's upload
+            # still lands on the network at its arrival time (possibly in
+            # a LATER round for dropped stragglers) — drain before the
+            # fast-round shortcut so fast rounds are charged too
+            failed_pending.extend(arrival[t, i]
+                                  for i in np.flatnonzero(drop[t]))
+            n_failed[t] = sum(1 for a in failed_pending
+                              if a <= round_end[t])
+            failed_pending = [a for a in failed_pending
+                              if a > round_end[t]]
         due = [pu for pu in pending if pu["arrival"] <= round_end[t]]
         if arrived[t].all() and not due:
             fast[t] = True
@@ -312,7 +364,13 @@ def build_deadline_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
         # slot reuse is safe
         for pu in due:
             heapq.heappush(free, pu["slot"])
-        for i in np.flatnonzero(~arrived[t]):
+        if sc is None:
+            stragglers = np.flatnonzero(~arrived[t])
+        else:
+            # dropped/lost dispatches are DISCARDED, never parked: their
+            # updates go to the dump row like an on-time device's write
+            stragglers = np.flatnonzero(~arrived[t] & ~drop[t] & ~lost[t])
+        for i in stragglers:
             if free:
                 slot = heapq.heappop(free)
             else:
@@ -341,12 +399,14 @@ def build_deadline_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
         store_slot=store_slot.astype(np.int32),
         due_slot=due_slot.astype(np.int32), due_mask=due_mask,
         due_tau=due_tau, n_arrived=n_arrived, stale_mean=stale_mean,
-        n_slots=pool, n_due=S)
+        n_slots=pool, n_due=S,
+        drop_mask=drop, lost_mask=lost,
+        n_failed_up=None if sc is None else n_failed)
 
 
 def build_fedbuff_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
                        sizes: np.ndarray, rounds: int,
-                       init_key) -> FedBuffPlan:
+                       init_key, scenario=None) -> FedBuffPlan:
     """Pre-compute the whole fedbuff event timeline on the host.
 
     Device latencies don't depend on parameter values, so the entire
@@ -355,11 +415,23 @@ def build_fedbuff_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
     any model math runs.  The key chain, per-dispatch numpy step draws,
     and (time, seq) event ordering replicate the original event loop
     exactly.
+
+    An active ``scenario`` draws one failure realization over the whole
+    dispatch stream: completeness rescales per-dispatch steps, jitter
+    multiplies latencies, a *dropped* dispatch still arrives (it counts
+    toward the M-arrival flush trigger and spends its upload bytes) but
+    is masked out of the aggregation via ``flush_mask``, and a *lost*
+    dispatch never arrives — its pool slot leaks, permanently shrinking
+    the in-flight fleet (no replacement dispatch fires, matching a
+    server that never learns the device died).  A scenario that loses
+    every in-flight dispatch raises (the queue runs dry).
     """
     from repro.fed.scan_engine import _split_chain
     M, C = afl.buffer_size, afl.concurrency
     total = C + rounds * M
     subs = _split_chain(init_key, total)
+    sc = scenario_mod.as_active(scenario)
+    g = scenario_mod.realize(sc, (total,)) if sc is not None else None
     if afl.latency_aware and math.isfinite(afl.deadline):
         exp_lat = jnp.asarray(expected_latencies(
             fleet, cost, mean_steps=simulator.mean_local_steps(afl),
@@ -374,8 +446,14 @@ def build_fedbuff_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
         step_rng = np.random.default_rng(20_000 + d)
         steps[d] = (int(step_rng.integers(1, afl.max_local_steps + 1))
                     if afl.het_steps else afl.max_local_steps)
+    if g is not None:
+        # completeness rescales the step budget BEFORE the latency model
+        # runs: partial work comes back earlier AND trains less
+        steps = scenario_mod.scale_steps(steps, g.comp)
     # one vectorized latency call for every dispatch of the run
     lats = device_latencies(fleet, cids, steps, cost, n_examples=sizes[cids])
+    if g is not None and g.lat_scale is not None:
+        lats = lats * g.lat_scale
     always_on = bool((np.asarray(fleet.avail_period) <= 0.0).all())
 
     events = EventQueue()
@@ -389,7 +467,12 @@ def build_fedbuff_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
     begin0 = np.zeros(C) if always_on else fleet.next_online(cids[:C], 0.0)
     slot_of[:C] = np.arange(C)
     version_of[:C] = 0
-    events.push_batch(begin0 + lats[:C], "arrival", "d", range(C))
+    if g is None:
+        events.push_batch(begin0 + lats[:C], "arrival", "d", range(C))
+    else:
+        # lost seed dispatches occupy their slots but never arrive
+        keep = np.flatnonzero(~g.lost[:C])
+        events.push_batch((begin0 + lats[:C])[keep], "arrival", "d", keep)
     pool = C
     n_dispatched = C
     # per-dispatch clocks, recorded for the telemetry trace export
@@ -410,7 +493,10 @@ def build_fedbuff_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
             pool += 1
         slot_of[d], version_of[d] = slot, version
         disp_clock[d], arr_clock[d] = at, begin + lats[d]
-        events.push(begin + lats[d], "arrival", d=d)
+        if g is None or not g.lost[d]:
+            events.push(begin + lats[d], "arrival", d=d)
+        # a lost dispatch pushes no arrival: the update sits in its slot
+        # forever (the slot leaks) and the in-flight fleet shrinks by one
         return d
     ids = np.empty((rounds, M), np.int64)
     n_steps = np.empty((rounds, M), np.int64)
@@ -418,11 +504,17 @@ def build_fedbuff_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
     flush_slot = np.empty((rounds, M), np.int64)
     tau = np.empty((rounds, M), np.float32)
     flush_clock = np.empty(rounds, np.float64)
+    flush_mask = None if g is None else np.ones((rounds, M), np.float32)
     for t in range(rounds):
         flush_d: List[int] = []
         disp_d: List[int] = []
         clock = 0.0
         while len(flush_d) < M:
+            if len(events) == 0:
+                raise ValueError(
+                    f"fedbuff scenario: dropout depleted the in-flight "
+                    f"fleet at flush {t} — every pending dispatch was "
+                    f"lost; lower dropout_prob or raise concurrency")
             ev = events.pop()
             clock = ev.time
             flush_d.append(ev.payload["d"])
@@ -433,6 +525,10 @@ def build_fedbuff_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
         flush_slot[t] = slot_of[flush_d]
         tau[t] = t - version_of[flush_d]
         flush_clock[t] = clock
+        if g is not None:
+            # a dropped arrival triggered its flush position (and its
+            # replacement dispatch) but carries no usable update
+            flush_mask[t] = (~g.drop[flush_d]).astype(np.float32)
         # slots free only AFTER the flush: a dispatch made during this
         # round can never steal a slot the flush still needs
         for d in flush_d:
@@ -446,11 +542,15 @@ def build_fedbuff_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
         flush_slot=flush_slot.astype(np.int32), tau=tau,
         flush_clock=flush_clock, stale_mean=tau.mean(axis=1).astype(float),
         n_slots=pool, dispatch_clock=disp_clock, arrival_clock=arr_clock,
-        all_ids=cids.astype(np.int32), all_steps=steps.astype(np.int32))
+        all_ids=cids.astype(np.int32), all_steps=steps.astype(np.int32),
+        flush_mask=flush_mask,
+        drop_mask=None if g is None else g.drop,
+        lost_mask=None if g is None else g.lost)
 
 
 def build_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
-               sizes: np.ndarray, rounds: int, init_key, sel_probs=None):
+               sizes: np.ndarray, rounds: int, init_key, sel_probs=None,
+               scenario=None):
     """Mode dispatcher for the event-plan builders.
 
     Plans are *engine-agnostic reusable values*: a ``DeadlinePlan`` /
@@ -463,8 +563,9 @@ def build_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
     """
     if afl.mode == "deadline":
         return build_deadline_plan(afl, fleet, cost, sizes, rounds,
-                                   init_key, sel_probs)
-    return build_fedbuff_plan(afl, fleet, cost, sizes, rounds, init_key)
+                                   init_key, sel_probs, scenario=scenario)
+    return build_fedbuff_plan(afl, fleet, cost, sizes, rounds, init_key,
+                              scenario=scenario)
 
 
 def plan_digest(plan) -> str:
@@ -569,7 +670,7 @@ def fedbuff_seed_pool(model_cfg, afl: AsyncFLConfig, params, pend, data,
 @functools.partial(jax.jit, static_argnums=(0, 1), static_argnames=("mesh",))
 def fedbuff_round_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
                        ids, n_steps, store_slot, flush_slot, tau,
-                       hypers=None, *, mesh=None):
+                       hypers=None, flush_mask=None, *, mesh=None):
     """One fedbuff flush round: batch-compute the M dispatches made during
     this round (all reference the current params — the server version only
     bumps at the flush), store them, then aggregate the M flushed rows.
@@ -578,6 +679,10 @@ def fedbuff_round_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
     round can arrive fast enough to be part of this very flush.  Shared
     verbatim by the python event loop, the compiled scan, and the vmapped
     sweep engine.
+
+    ``flush_mask`` (scenario drop channel, (M,) f32) excludes flushed
+    rows whose upload failed in transit; ``None`` keeps the pre-scenario
+    trace exactly.
     """
     h = hypers if hypers is not None else hypers_of(afl)
     deltas, grads, gammas = simulator._local_updates(
@@ -592,12 +697,14 @@ def fedbuff_round_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
     flush_g = jax.tree.map(lambda x: x[flush_slot], pend_g)
     flush_gam = pend_gam[flush_slot]
     new_params = _apply_aggregation(afl, params, flush_d, flush_g,
-                                    flush_gam, tau, mesh=mesh, hypers=h)
+                                    flush_gam, tau, mask=flush_mask,
+                                    mesh=mesh, hypers=h)
     if afl.telemetry:
         from repro.telemetry import metrics as tmetrics
         m = tmetrics.metrics_for_algo(
             afl.algo, params, new_params, flush_d, flush_g, psi=h["psi"],
-            gammas=flush_gam, tau=tau, alpha=h["staleness_alpha"])
+            gammas=flush_gam, tau=tau, alpha=h["staleness_alpha"],
+            mask=flush_mask)
         return new_params, (pend_d, pend_g, pend_gam), m
     return new_params, (pend_d, pend_g, pend_gam)
 
@@ -608,7 +715,8 @@ def run_async(model_cfg, fed: FederatedData, afl: AsyncFLConfig,
               fleet: DeviceFleet, rounds: int,
               init_key: Optional[jax.Array] = None,
               eval_every: int = 1, mesh=None,
-              plan=None, profiler=None) -> simulator.FedRunResult:
+              plan=None, profiler=None,
+              scenario=None) -> simulator.FedRunResult:
     """Run `rounds` server aggregations of async FOLB on the system model.
 
     In deadline mode a "round" is one deadline-barriered aggregation; in
@@ -623,6 +731,11 @@ def run_async(model_cfg, fed: FederatedData, afl: AsyncFLConfig,
     ``afl.telemetry`` the result additionally carries per-round metrics
     (in-scan stats plus the plan-derived network/pool series) and a
     host-phase profile; ``profiler`` overrides the auto-created one.
+
+    ``scenario`` (`repro.sysmodel.ScenarioConfig`) folds the seeded
+    failure channels into the plan at build time; it is ignored when a
+    pre-built ``plan`` is supplied (the plan already embeds whatever
+    scenario it was built with).
     """
     from repro.telemetry import metrics as tmetrics
     from repro.telemetry import profiler_for
@@ -663,11 +776,13 @@ def run_async(model_cfg, fed: FederatedData, afl: AsyncFLConfig,
     if afl.mode == "deadline":
         params, plan, mlist = _run_deadline(
             model_cfg, afl, fleet, cost, sizes, train, p, key, params,
-            rounds, eval_every, record, mesh=mesh, plan=plan, prof=prof)
+            rounds, eval_every, record, mesh=mesh, plan=plan, prof=prof,
+            scenario=scenario)
     else:
         params, plan, mlist = _run_fedbuff(
             model_cfg, afl, fleet, cost, sizes, train, key, params, rounds,
-            eval_every, record, mesh=mesh, plan=plan, prof=prof)
+            eval_every, record, mesh=mesh, plan=plan, prof=prof,
+            scenario=scenario)
     with prof.phase("collect"):
         metrics = None
         if afl.telemetry:
@@ -691,7 +806,7 @@ def run_async(model_cfg, fed: FederatedData, afl: AsyncFLConfig,
 
 def _run_deadline(model_cfg, afl, fleet, cost, sizes, train, p, key, params,
                   rounds, eval_every, record, mesh=None, plan=None,
-                  prof=None):
+                  prof=None, scenario=None):
     from repro.telemetry import NULL_PROFILER
     prof = prof if prof is not None else NULL_PROFILER
     mlist: List = []
@@ -705,7 +820,7 @@ def _run_deadline(model_cfg, afl, fleet, cost, sizes, train, p, key, params,
         sel_probs = deadline_selection_probs(afl, fleet, cost, sizes)
         if plan is None:
             plan = build_deadline_plan(afl, fleet, cost, sizes, rounds, key,
-                                       sel_probs)
+                                       sel_probs, scenario=scenario)
         pend = pool_init(model_cfg, sync_fl, params, train,
                          plan.n_slots + 1)
     for t in range(rounds):
@@ -759,7 +874,7 @@ def _deadline_round(model_cfg, afl_t, sync_fl, params, pend, train, p, plan,
 
 def _run_fedbuff(model_cfg, afl, fleet, cost, sizes, train, key, params,
                  rounds, eval_every, record, mesh=None, plan=None,
-                 prof=None):
+                 prof=None, scenario=None):
     from repro.telemetry import NULL_PROFILER
     prof = prof if prof is not None else NULL_PROFILER
     mlist: List = []
@@ -767,7 +882,8 @@ def _run_fedbuff(model_cfg, afl, fleet, cost, sizes, train, key, params,
     hypers = hypers_of(afl)
     with prof.phase("plan_build"):
         if plan is None:
-            plan = build_fedbuff_plan(afl, fleet, cost, sizes, rounds, key)
+            plan = build_fedbuff_plan(afl, fleet, cost, sizes, rounds, key,
+                                      scenario=scenario)
         pend = pool_init(model_cfg, afl_t.sync_config(), params, train,
                          plan.n_slots)
         pend = fedbuff_seed_pool(model_cfg, afl_t, params, pend, train,
@@ -781,13 +897,17 @@ def _run_fedbuff(model_cfg, afl, fleet, cost, sizes, train, key, params,
                 jnp.asarray(plan.ids[t]), jnp.asarray(plan.n_steps[t]),
                 jnp.asarray(plan.store_slot[t]),
                 jnp.asarray(plan.flush_slot[t]),
-                jnp.asarray(plan.tau[t]), hypers, mesh=mesh)
+                jnp.asarray(plan.tau[t]), hypers,
+                flush_mask=None if plan.flush_mask is None
+                else jnp.asarray(plan.flush_mask[t]), mesh=mesh)
             if afl_t.telemetry:
                 params, pend, m = out
                 mlist.append(m)
             else:
                 params, pend = out
         if t % eval_every == 0 or t == rounds - 1:
-            record(t, plan.flush_clock[t], afl.buffer_size,
+            n_arrived = (afl.buffer_size if plan.flush_mask is None
+                         else int(plan.flush_mask[t].sum()))
+            record(t, plan.flush_clock[t], n_arrived,
                    float(plan.stale_mean[t]), params)
     return params, plan, mlist

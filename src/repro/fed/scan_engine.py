@@ -55,6 +55,7 @@ from repro.fed import simulator
 from repro.fed import server_opt as sopt
 from repro.models import small
 from repro.sysmodel import round_cost_for
+from repro.sysmodel import scenario as scenario_mod
 
 
 @functools.partial(jax.jit, static_argnums=(1,))
@@ -94,11 +95,11 @@ def make_sync_round_step(model_cfg, fl: simulator.FLConfig,
     """
     so_cfg = sopt.ServerOptConfig(kind=fl.server_opt, lr=1.0)
 
-    def step(w_flat, so_state, sub, n_steps, hypers):
+    def step(w_flat, so_state, sub, n_steps, hypers, up_mask=None):
         params = flat_lib.unravel(spec, w_flat)
         new_params, diag = simulator.fl_round(
             model_cfg, fl, params, data, p_weights, sub, n_steps,
-            sel_probs, hypers, mesh=mesh)
+            sel_probs, hypers, up_mask, mesh=mesh)
         if use_so:
             new_params, so_state = sopt.server_round_update(
                 so_cfg, params, so_state, new_params, hypers["server_lr"])
@@ -117,7 +118,7 @@ def make_sync_round_step(model_cfg, fl: simulator.FLConfig,
                    static_argnames=("mesh",))
 def scan_rounds(model_cfg, fl: simulator.FLConfig, spec: flat_lib.FlatSpec,
                 w0_flat, data, p_weights, keys, steps, hypers,
-                sel_probs=None, so_state0=None, *, mesh=None):
+                sel_probs=None, so_state0=None, up_mask=None, *, mesh=None):
     """The whole-run XLA program: scan ``fl_round`` over pre-drawn inputs.
 
     Returns (final flat params, ys) where ys carries the per-round
@@ -128,7 +129,9 @@ def scan_rounds(model_cfg, fl: simulator.FLConfig, spec: flat_lib.FlatSpec,
     flat aggregation).  With a FedOpt-style server optimizer configured,
     ``so_state0`` seeds the optimizer state in the scan carry and each
     round applies the same jitted ``server_round_update`` the python loop
-    uses.
+    uses.  ``up_mask`` (optional, (rounds, K) f32) is the scenario drop
+    channel: each round's row forwards to ``fl_round`` as the arrived-
+    upload mask; None is the exact pre-scenario program.
     """
     # the caller encodes the use-a-server-optimizer decision in so_state0
     # (one source of truth with run_federated_compiled's predicate)
@@ -138,14 +141,19 @@ def scan_rounds(model_cfg, fl: simulator.FLConfig, spec: flat_lib.FlatSpec,
 
     def body(carry, xs):
         w_flat, so_state = carry if use_so else (carry, None)
-        sub, n_steps = xs
+        if up_mask is None:
+            sub, n_steps = xs
+            um = None
+        else:
+            sub, n_steps, um = xs
         w_new, so_state, extras = step(w_flat, so_state, sub, n_steps,
-                                       hypers)
+                                       hypers, um)
         ys = {"params": w_new, **extras}
         return ((w_new, so_state) if use_so else w_new), ys
 
     carry0 = (w0_flat, so_state0) if use_so else w0_flat
-    carry, ys = jax.lax.scan(body, carry0, (keys, steps))
+    xs = (keys, steps) if up_mask is None else (keys, steps, up_mask)
+    carry, ys = jax.lax.scan(body, carry0, xs)
     return (carry[0] if use_so else carry), ys
 
 
@@ -178,12 +186,13 @@ def latency_selection_probs(model_cfg, fed: FederatedData, fl, fleet,
 
 def sync_clock_replay(model_cfg, params, fed: FederatedData, algo: str,
                       fleet, ids_all, ids2_all, steps_np,
-                      rounds: int) -> np.ndarray:
+                      rounds: int, lat_scale=None) -> np.ndarray:
     """Replay the fleet wall-clock over a whole run's sampled ids via the
     same ``sync_round_clock`` the python loop advances round by round.
     The clock depends only on the timeline (ids/steps/fleet/cost), never
     on sweepable hyper-parameters — one replay serves every member of a
-    sweep."""
+    sweep.  ``lat_scale`` (optional, (rounds, K)) is the scenario jitter
+    channel, forwarded per round."""
     cost, probe_cost, sizes = simulator.fleet_cost_setup(
         model_cfg, params, fed, algo)
     clocks = np.empty(rounds, np.float64)
@@ -192,7 +201,8 @@ def sync_clock_replay(model_cfg, params, fed: FederatedData, algo: str,
         clock_now = simulator.sync_round_clock(
             fleet, cost, probe_cost, sizes, algo, ids_all[t],
             None if ids2_all is None else ids2_all[t],
-            steps_np[t], clock_now)
+            steps_np[t], clock_now,
+            lat_scale=None if lat_scale is None else lat_scale[t])
         clocks[t] = clock_now
     return clocks
 
@@ -233,7 +243,7 @@ def run_federated_compiled(model_cfg, fed: FederatedData,
                            init_key: Optional[jax.Array] = None,
                            eval_every: int = 1,
                            fleet=None, sel_probs=None,
-                           mesh=None, profiler=None
+                           mesh=None, profiler=None, scenario=None
                            ) -> simulator.FedRunResult:
     """Drop-in replacement for ``run_federated`` on fixed schedules.
 
@@ -249,10 +259,18 @@ def run_federated_compiled(model_cfg, fed: FederatedData,
     result carries them as (rounds, ·) arrays plus the host-phase profile
     (setup / plan_build / scan / eval phases; the first call's jit
     compilation lands inside ``scan``).
+
+    ``scenario`` (``repro.sysmodel.ScenarioConfig``) realizes the seeded
+    failure channels at plan-build time — the same draws the python loop
+    replays — and folds them into the scanned step/mask inputs; None (or
+    an all-off config) is bit-for-bit the unmodified program.
     """
     from repro.telemetry import metrics as tmetrics
     from repro.telemetry import profiler_for
     prof = profiler_for(fl.telemetry, profiler)
+    sc = scenario_mod.as_active(scenario)
+    if sc is not None:
+        scenario_mod.check_sync(sc)
     with prof.phase("setup"):
         key = init_key if init_key is not None \
             else jax.random.PRNGKey(fl.seed)
@@ -265,7 +283,17 @@ def run_federated_compiled(model_cfg, fed: FederatedData,
         spec = flat_lib.spec_of(params)
         w0 = flat_lib.ravel(spec, params)
     with prof.phase("plan_build"):
-        keys, steps = draw_round_inputs(fl, rounds, key)
+        if sc is None:
+            keys, steps = draw_round_inputs(fl, rounds, key)
+            up_mask = sc_lat = None
+        else:
+            # same key chain as the unmodified program; steps/mask carry
+            # the realized completeness + drop channels
+            sc_steps, sc_mask, sc_lat = simulator.scenario_round_inputs(
+                fl, rounds, sc)
+            keys = _split_chain(key, rounds)
+            steps = jnp.asarray(sc_steps)
+            up_mask = jnp.asarray(sc_mask)
         so_cfg = sopt.ServerOptConfig(kind=fl.server_opt, lr=1.0)
         use_so = fl.server_opt != "sgd" or fl.server_lr != 1.0
         so_state0 = sopt.init_server_state(so_cfg, params) if use_so \
@@ -273,7 +301,8 @@ def run_federated_compiled(model_cfg, fed: FederatedData,
     with prof.phase("scan"):
         w_final, ys = scan_rounds(
             model_cfg, fl.timeline_config(), spec, w0, train, p, keys,
-            steps, simulator.hypers_of(fl), sel_probs, so_state0, mesh=mesh)
+            steps, simulator.hypers_of(fl), sel_probs, so_state0, up_mask,
+            mesh=mesh)
         if fl.telemetry:
             # attribute device time honestly when profiling (jax dispatch
             # is async); the telemetry-off path never adds a barrier
@@ -288,7 +317,7 @@ def run_federated_compiled(model_cfg, fed: FederatedData,
                 model_cfg, params, fed, fl.algo, fleet,
                 np.asarray(ys["ids"]),
                 np.asarray(ys["ids2"]) if "ids2" in ys else None,
-                np.asarray(steps), rounds)
+                np.asarray(steps), rounds, lat_scale=sc_lat)
         hist = eval_history_replay(model_cfg, spec, train, test, p,
                                    ys["params"], rounds, eval_every, clocks)
     with prof.phase("collect"):
@@ -378,12 +407,12 @@ def make_fedbuff_step(model_cfg, afl, spec: flat_lib.FlatSpec, data, mesh):
     """One planned fedbuff flush as a flat-carry transition (shared by the
     solo scan and the vmapped sweep engine).  ``afl`` must be the
     canonical ``timeline_config()``."""
-    def step(w_flat, pend, xs, hypers):
+    def step(w_flat, pend, xs, hypers, flush_mask=None):
         ids_t, steps_t, store_t, flush_t, tau_t = xs
         params = flat_lib.unravel(spec, w_flat)
         out = async_lib.fedbuff_round_step(
             model_cfg, afl, params, pend, data, ids_t, steps_t, store_t,
-            flush_t, tau_t, hypers, mesh=mesh)
+            flush_t, tau_t, hypers, flush_mask=flush_mask, mesh=mesh)
         if afl.telemetry:
             new, pend, m = out
             return flat_lib.ravel(spec, new), pend, m
@@ -397,22 +426,31 @@ def make_fedbuff_step(model_cfg, afl, spec: flat_lib.FlatSpec, data, mesh):
                    static_argnames=("mesh",))
 def scan_async_fedbuff(model_cfg, afl, spec: flat_lib.FlatSpec, w0_flat,
                        pend0, data, ids, steps, store_slot, flush_slot, tau,
-                       hypers, *, mesh=None):
+                       hypers, flush_mask=None, *, mesh=None):
     """Whole-run fedbuff XLA program: scan the shared
     ``async_engine.fedbuff_round_step`` over the planned flush schedule,
-    carrying the in-flight update pool."""
+    carrying the in-flight update pool.  ``flush_mask`` (optional,
+    (R, M) f32 — the scenario drop channel) excludes failed uploads from
+    each flush's aggregation; None is the exact pre-scenario program."""
     step = make_fedbuff_step(model_cfg, afl, spec, data, mesh)
 
     def body(carry, xs):
-        out = step(carry[0], carry[1], xs, hypers)
+        if flush_mask is None:
+            fm = None
+        else:
+            *xs, fm = xs
+            xs = tuple(xs)
+        out = step(carry[0], carry[1], xs, hypers, fm)
         if afl.telemetry:
             w_new, pend, m = out
             return (w_new, pend), {"params": w_new, "metrics": m}
         w_new, pend = out
         return (w_new, pend), w_new
 
-    (w_final, _), ws = jax.lax.scan(
-        body, (w0_flat, pend0), (ids, steps, store_slot, flush_slot, tau))
+    xs = (ids, steps, store_slot, flush_slot, tau)
+    if flush_mask is not None:
+        xs = xs + (flush_mask,)
+    (w_final, _), ws = jax.lax.scan(body, (w0_flat, pend0), xs)
     return w_final, ws
 
 
@@ -421,7 +459,8 @@ def run_async_compiled(model_cfg, fed: FederatedData, afl,
                        init_key: Optional[jax.Array] = None,
                        eval_every: int = 1,
                        mesh=None, plan=None,
-                       profiler=None) -> simulator.FedRunResult:
+                       profiler=None,
+                       scenario=None) -> simulator.FedRunResult:
     """Drop-in replacement for ``async_engine.run_async``: the virtual-
     event scan.
 
@@ -433,7 +472,10 @@ def run_async_compiled(model_cfg, fed: FederatedData, afl,
     deadline and fedbuff modes (tests/test_async_scan.py).  ``plan``
     replays a pre-built event plan (``async_engine.build_plan``) instead
     of rebuilding it — plans depend only on timeline fields, so one plan
-    serves any sweepable-hyper variation of ``afl``.
+    serves any sweepable-hyper variation of ``afl``.  ``scenario``
+    (``repro.sysmodel.ScenarioConfig``) folds the seeded failure channels
+    into the freshly built plan; it is ignored when ``plan=`` is supplied
+    (the plan already embeds its own scenario realization).
 
     With ``afl.telemetry`` the scan additionally emits the per-round
     metrics pytree and the result carries them (plus the plan-derived
@@ -469,7 +511,8 @@ def run_async_compiled(model_cfg, fed: FederatedData, afl,
             if plan is None:
                 plan = async_lib.build_deadline_plan(afl, fleet, cost,
                                                      sizes, rounds, key,
-                                                     sel_probs)
+                                                     sel_probs,
+                                                     scenario=scenario)
             pend0 = async_lib.pool_init(model_cfg, sync_fl, params, train,
                                         plan.n_slots + 1)
         with prof.phase("scan"):
@@ -488,7 +531,8 @@ def run_async_compiled(model_cfg, fed: FederatedData, afl,
         with prof.phase("plan_build"):
             if plan is None:
                 plan = async_lib.build_fedbuff_plan(afl, fleet, cost, sizes,
-                                                    rounds, key)
+                                                    rounds, key,
+                                                    scenario=scenario)
             pend0 = async_lib.pool_init(model_cfg, sync_fl, params, train,
                                         plan.n_slots)
             pend0 = async_lib.fedbuff_seed_pool(
@@ -500,11 +544,15 @@ def run_async_compiled(model_cfg, fed: FederatedData, afl,
                 model_cfg, afl_t, spec, w0, pend0, train,
                 jnp.asarray(plan.ids), jnp.asarray(plan.n_steps),
                 jnp.asarray(plan.store_slot), jnp.asarray(plan.flush_slot),
-                jnp.asarray(plan.tau), hypers, mesh=mesh)
+                jnp.asarray(plan.tau), hypers,
+                None if plan.flush_mask is None
+                else jnp.asarray(plan.flush_mask), mesh=mesh)
             if afl.telemetry:
                 jax.block_until_ready(ws)
         clocks = plan.flush_clock
-        n_arr = np.full(rounds, afl.buffer_size)
+        n_arr = (np.full(rounds, afl.buffer_size)
+                 if plan.flush_mask is None
+                 else plan.flush_mask.sum(axis=1).astype(np.int64))
 
     params_traj = ws["params"] if afl.telemetry else ws
     with prof.phase("eval"):

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation, selection, tree
+from repro.core import aggregation, selection, tree, tuning
 from repro.data.federated import FederatedData
 from repro.kernels import ops
 from repro.models import small
@@ -106,8 +106,7 @@ class FLConfig:
 def hypers_of(cfg: "FLConfig") -> Dict[str, jnp.ndarray]:
     """The traced-operand view of a config's sweepable fields (f32
     scalars, explicitly typed so the x64 CI leg doesn't promote them)."""
-    return {name: jnp.float32(getattr(cfg, name))
-            for name in SWEEPABLE_FIELDS}
+    return tuning.hypers_of(cfg, SWEEPABLE_FIELDS)
 
 
 def local_step_draws(t: int, k: int, cfg) -> jnp.ndarray:
@@ -122,6 +121,23 @@ def local_step_draws(t: int, k: int, cfg) -> jnp.ndarray:
         return jnp.asarray(step_rng.integers(
             1, cfg.max_local_steps + 1, k), jnp.int32)
     return jnp.full((k,), cfg.max_local_steps, jnp.int32)
+
+
+def scenario_round_inputs(fl, rounds: int, scenario):
+    """Realize an ACTIVE scenario over a sync schedule: the per-round
+    step draws with the completeness channel applied, the f32 upload
+    mask (0.0 = transmission failed), and the per-dispatch latency
+    multiplier (None when jitter is off).  Shared by the python loop and
+    the scan engine so both replay the identical realization.
+    Returns (steps (R, K) int32, up_mask (R, K) f32, lat_scale or None).
+    """
+    from repro.sysmodel import scenario as scenario_mod
+    base = np.stack([np.asarray(local_step_draws(t, fl.n_selected, fl))
+                     for t in range(rounds)])
+    g = scenario_mod.realize(scenario, (rounds, fl.n_selected))
+    steps = scenario_mod.scale_steps(base, g.comp)
+    up_mask = (~g.drop).astype(np.float32)
+    return steps, up_mask, g.lat_scale
 
 
 def _client_batch(data, ids):
@@ -162,10 +178,19 @@ def _local_updates(model_cfg, params, data, ids, n_steps, fl: FLConfig,
     return jax.vmap(one)(batch["x"], batch["y"], batch["mask"], n_steps)
 
 
+def _mask_guard(new, params, up_mask):
+    """All-uploads-failed guard for the masked pytree rules: keep the old
+    parameters bit-for-bit when every selected upload dropped (mirrors
+    the async engine's `_apply_aggregation`; `w + 0·x` alone would flip
+    the sign of negative zeros)."""
+    alive = jnp.sum(up_mask) > 0.0
+    return jax.tree.map(lambda n, w: jnp.where(alive, n, w), new, params)
+
+
 @functools.partial(jax.jit, static_argnums=(0, 1),
                    static_argnames=("mesh",))
 def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps,
-             sel_probs=None, hypers=None, *, mesh=None):
+             sel_probs=None, hypers=None, up_mask=None, *, mesh=None):
     """One communication round.  Returns (new_params, diagnostics).
 
     ``sel_probs`` overrides the uniform selection distribution (e.g. the
@@ -176,12 +201,19 @@ def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps,
     as constants, and any dict containing lr/mu/psi works (extra keys
     ride along unused).  ``mesh`` (static) shards the flat aggregation's
     D axis over a device mesh.
+
+    ``up_mask`` is the scenario drop channel: a traced (K,) f32 mask with
+    0.0 on uploads that failed in transit.  Masked devices still ran (and
+    were waited for — the wall-clock is plan-side) but are excluded from
+    aggregation via each rule's staleness-mask form at τ = 0, α = 0, so
+    ``up_mask=None`` leaves the traced program exactly as before.
     """
     h = hypers if hypers is not None else hypers_of(fl)
     k_sel, k_sel2 = jax.random.split(key)
     N = data["x"].shape[0]
     K = fl.n_selected
     diag: Dict[str, Any] = {}
+    tau0 = None if up_mask is None else jnp.zeros((K,), jnp.float32)
 
     if fl.algo in ("fednu_direct", "fednu_signed", "fednu_norm"):
         # naive baselines: probe all N devices first (expensive comms)
@@ -197,16 +229,22 @@ def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps,
         deltas, grads, gammas = _local_updates(
             model_cfg, params, data, ids, n_steps, fl, h)
         if fl.algo == "fednu_signed":
-            new = aggregation.signed_aggregate(params, deltas, grads, gg)
-        else:
+            new = aggregation.signed_aggregate(params, deltas, grads, gg,
+                                               mask=up_mask)
+        elif up_mask is None:
             new = aggregation.fedavg_aggregate(params, deltas)
+        else:
+            new = aggregation.mean_staleness(params, deltas, tau0,
+                                             alpha=0.0, mask=up_mask)
+        if up_mask is not None:
+            new = _mask_guard(new, params, up_mask)
         diag["probs_entropy"] = -jnp.sum(probs * jnp.log(probs + 1e-12))
         diag["ids"] = ids
         if fl.telemetry:
             from repro.telemetry import metrics as tmetrics
             diag["metrics"] = tmetrics.metrics_for_algo(
                 fl.algo, params, new, deltas, grads, psi=h["psi"],
-                gammas=gammas)
+                gammas=gammas, mask=up_mask)
         return new, diag
 
     probs = selection.uniform_probs(N) if sel_probs is None else sel_probs
@@ -215,19 +253,36 @@ def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps,
         model_cfg, params, data, ids, n_steps, fl, h)
 
     if fl.algo in ("fedavg", "fedprox"):
-        new = aggregation.fedavg_aggregate(params, deltas)
+        if up_mask is None:
+            new = aggregation.fedavg_aggregate(params, deltas)
+        else:
+            new = _mask_guard(aggregation.mean_staleness(
+                params, deltas, tau0, alpha=0.0, mask=up_mask),
+                params, up_mask)
     elif fl.algo in ("folb", "folb_het") and fl.agg_backend == "flat":
         # default hot path: stack everything into flat (K, D) buffers
         # (bf16 grads/deltas unless agg_dtype says otherwise) and run the
         # fused Pallas aggregation (2 streaming passes instead of ~2K
         # leafwise reductions), D-sharded when a mesh is given
         pg = h["psi"] * gammas if fl.algo == "folb_het" else None
-        new, _ = ops.folb_aggregate_tree(params, deltas, grads,
-                                         psi_gammas=pg,
-                                         buf_dtype=jnp.dtype(fl.agg_dtype),
-                                         mesh=mesh)
+        if up_mask is None:
+            new, _ = ops.folb_aggregate_tree(
+                params, deltas, grads, psi_gammas=pg,
+                buf_dtype=jnp.dtype(fl.agg_dtype), mesh=mesh)
+        else:
+            # the masked-slot staleness kernel at τ = 0 IS masked folb
+            # (disc == 1 exactly); it self-guards the all-masked case
+            new, _ = ops.folb_staleness_slots_tree(
+                params, deltas, grads, up_mask, tau0, alpha=0.0,
+                psi_gammas=pg, buf_dtype=jnp.dtype(fl.agg_dtype),
+                mesh=mesh)
     elif fl.algo == "folb":
-        new = aggregation.folb_single_set(params, deltas, grads)
+        if up_mask is None:
+            new = aggregation.folb_single_set(params, deltas, grads)
+        else:
+            new = _mask_guard(aggregation.folb_staleness(
+                params, deltas, grads, tau0, alpha=0.0, mask=up_mask),
+                params, up_mask)
     elif fl.algo == "folb2":
         ids2 = selection.sample_multiset(k_sel2, probs, K)
         batch2 = _client_batch(data, ids2)
@@ -235,10 +290,19 @@ def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps,
             lambda x, y, m: jax.grad(lambda p: small.small_loss(
                 model_cfg, p, {"x": x, "y": y, "mask": m}))(params)
         )(batch2["x"], batch2["y"], batch2["mask"])
-        new = aggregation.folb_two_set(params, deltas, grads, grads_s2)
+        new = aggregation.folb_two_set(params, deltas, grads, grads_s2,
+                                       mask=up_mask)
+        if up_mask is not None:
+            new = _mask_guard(new, params, up_mask)
         diag["ids2"] = ids2
     elif fl.algo == "folb_het":
-        new = aggregation.folb_het(params, deltas, grads, gammas, h["psi"])
+        if up_mask is None:
+            new = aggregation.folb_het(params, deltas, grads, gammas,
+                                       h["psi"])
+        else:
+            new = _mask_guard(aggregation.folb_staleness(
+                params, deltas, grads, tau0, alpha=0.0, gammas=gammas,
+                psi=h["psi"], mask=up_mask), params, up_mask)
     else:
         raise ValueError(fl.algo)
     diag["gamma_mean"] = jnp.mean(gammas)
@@ -250,7 +314,7 @@ def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps,
         from repro.telemetry import metrics as tmetrics
         diag["metrics"] = tmetrics.metrics_for_algo(
             fl.algo, params, new, deltas, grads, psi=h["psi"],
-            gammas=gammas)
+            gammas=gammas, mask=up_mask)
     return new, diag
 
 
@@ -322,9 +386,14 @@ def fleet_cost_setup(model_cfg, params, fed: FederatedData, algo: str):
 
 def sync_round_clock(fleet, cost, probe_cost, sizes, algo: str,
                      ids: np.ndarray, ids2: Optional[np.ndarray],
-                     n_steps, clock_now: float) -> float:
+                     n_steps, clock_now: float,
+                     lat_scale: Optional[np.ndarray] = None) -> float:
     """Advance the simulated wall-clock by one synchronous round (full
-    barrier: the round costs as much as its slowest selected device)."""
+    barrier: the round costs as much as its slowest selected device).
+
+    ``lat_scale`` (scenario jitter, (K,)) applies to the K update
+    dispatches only — the fednu/folb2 gradient probes are separate
+    transmissions outside the scenario's per-dispatch draw grid."""
     from repro.sysmodel import RoundCost, plan_sync_round
     start = clock_now
     phase_cost = cost
@@ -343,7 +412,8 @@ def sync_round_clock(fleet, cost, probe_cost, sizes, algo: str,
             flops_per_step_example=cost.flops_per_step_example,
             down_bytes=0.0, up_bytes=probe_cost.down_bytes)
     plan = plan_sync_round(fleet, ids, np.asarray(n_steps), phase_cost,
-                           start=start, n_examples=sizes[ids])
+                           start=start, n_examples=sizes[ids],
+                           lat_scale=lat_scale)
     clock_now = plan.round_end
     if ids2 is not None:   # folb2 contacts a second K-device set
         plan2 = plan_sync_round(fleet, ids2, np.ones(len(ids2)), probe_cost,
@@ -355,7 +425,7 @@ def sync_round_clock(fleet, cost, probe_cost, sizes, algo: str,
 def run_federated(model_cfg, fed: FederatedData, fl: FLConfig, rounds: int,
                   init_key: Optional[jax.Array] = None,
                   eval_every: int = 1, fleet=None, sel_probs=None,
-                  mesh=None, profiler=None) -> FedRunResult:
+                  mesh=None, profiler=None, scenario=None) -> FedRunResult:
     """Python-loop driver.  Heterogeneous local-step draws are generated from
     a round-indexed numpy seed so all compared algorithms see identical
     device capabilities (paper Sec. VI-A).
@@ -370,11 +440,24 @@ def run_federated(model_cfg, fed: FederatedData, fl: FLConfig, rounds: int,
     metrics (in-scan stats from `fl_round` plus the modeled network
     series) and a host-phase profile; ``profiler`` overrides the
     auto-created `repro.telemetry.PhaseProfiler`.
+
+    ``scenario`` (`repro.sysmodel.ScenarioConfig`) activates the seeded
+    failure channels: drop masks uploads out of aggregation (the fleet
+    clock still waits — and charges bytes — for them), completeness
+    rescales the local-step draws, jitter multiplies latencies.  Dropout
+    is rejected (the sync barrier would wait forever).  A null/None
+    scenario is bit-for-bit the scenario-free program.
     """
     from repro.telemetry import metrics as tmetrics
     from repro.telemetry import profiler_for
     prof = profiler_for(fl.telemetry, profiler)
     with prof.phase("setup"):
+        from repro.sysmodel import scenario as scenario_mod
+        sc = scenario_mod.as_active(scenario)
+        sc_steps = sc_mask = sc_lat = None
+        if sc is not None:
+            scenario_mod.check_sync(sc)
+            sc_steps, sc_mask, sc_lat = scenario_round_inputs(fl, rounds, sc)
         key = init_key if init_key is not None \
             else jax.random.PRNGKey(fl.seed)
         params = small.init_small(model_cfg, key)
@@ -408,11 +491,16 @@ def run_federated(model_cfg, fed: FederatedData, fl: FLConfig, rounds: int,
     mlist: List[Any] = []
     for t in range(rounds):
         with prof.phase("rounds"):
-            n_steps = local_step_draws(t, fl.n_selected, fl)
+            if sc is None:
+                n_steps = local_step_draws(t, fl.n_selected, fl)
+                up_mask = None
+            else:
+                n_steps = jnp.asarray(sc_steps[t])
+                up_mask = jnp.asarray(sc_mask[t])
             key, sub = jax.random.split(key)
             new_params, diag = fl_round(model_cfg, fl_t, params, train, p,
                                         sub, n_steps, sel_probs, hypers,
-                                        mesh=mesh)
+                                        up_mask, mesh=mesh)
             ids_all.append(diag["ids"])
             if fl.telemetry:
                 mlist.append(diag["metrics"])
@@ -421,7 +509,8 @@ def run_federated(model_cfg, fed: FederatedData, fl: FLConfig, rounds: int,
                     fleet, cost, probe_cost, sizes, fl.algo,
                     np.asarray(diag["ids"]),
                     np.asarray(diag["ids2"]) if "ids2" in diag else None,
-                    n_steps, clock_now)
+                    n_steps, clock_now,
+                    lat_scale=None if sc_lat is None else sc_lat[t])
             if use_server_opt:
                 # one shared jitted unit (delta cast sequence + optimizer)
                 # so the scan engine can replay it bit-for-bit

@@ -176,7 +176,7 @@ class SweepResult:
                    static_argnames=("mesh",))
 def sweep_scan_rounds(model_cfg, fl, spec: flat_lib.FlatSpec, w0_S, data,
                       p_weights, keys, steps, hypers_S, sel_probs=None,
-                      so_state0_S=None, *, mesh=None):
+                      so_state0_S=None, up_mask=None, *, mesh=None):
     """The whole-sweep XLA program: one ``lax.scan`` over rounds whose
     body vmaps the SAME per-round step the solo scan uses
     (``scan_engine.make_sync_round_step``) over the stacked (S, D) carry
@@ -199,9 +199,15 @@ def sweep_scan_rounds(model_cfg, fl, spec: flat_lib.FlatSpec, w0_S, data,
 
     def body(carry, xs):
         w_S, so_S = carry if use_so else (carry, None)
-        sub, n_steps = xs
+        if up_mask is None:
+            sub, n_steps = xs
+            um = None
+        else:
+            # the scenario mask is timeline-shared: one row per round,
+            # closed over unbatched so every member drops the same uploads
+            sub, n_steps, um = xs
         vstep = jax.vmap(
-            lambda w, so, h: step(w, so, sub, n_steps, h),
+            lambda w, so, h: step(w, so, sub, n_steps, h, um),
             in_axes=(0, 0 if use_so else None, 0),
             out_axes=(0, 0 if use_so else None, extras_axes))
         w_new, so_S, extras = vstep(w_S, so_S, hypers_S)
@@ -209,7 +215,8 @@ def sweep_scan_rounds(model_cfg, fl, spec: flat_lib.FlatSpec, w0_S, data,
         return ((w_new, so_S) if use_so else w_new), ys
 
     carry0 = (w0_S, so_state0_S) if use_so else w0_S
-    carry, ys = jax.lax.scan(body, carry0, (keys, steps))
+    xs = (keys, steps) if up_mask is None else (keys, steps, up_mask)
+    carry, ys = jax.lax.scan(body, carry0, xs)
     return (carry[0] if use_so else carry), ys
 
 
@@ -217,7 +224,8 @@ def run_sweep_compiled(model_cfg, fed: FederatedData, spec: SweepSpec,
                        rounds: int,
                        init_key: Optional[jax.Array] = None,
                        eval_every: int = 1, fleet=None, sel_probs=None,
-                       mesh=None, profiler=None) -> SweepResult:
+                       mesh=None, profiler=None,
+                       scenario=None) -> SweepResult:
     """All S sync configs of ``spec`` in one compiled run.
 
     Every member's result is bit-for-bit what a solo
@@ -225,6 +233,10 @@ def run_sweep_compiled(model_cfg, fed: FederatedData, spec: SweepSpec,
     hence the python loop) produces — params, history, and the fleet
     wall-clock, which is computed once and shared since all members
     sample identical devices.
+
+    ``scenario`` is a RUN-level knob (never sweepable): one realization
+    of the failure channels is folded into the shared timeline and
+    replayed identically by every member.
     """
     from repro.telemetry import metrics as tmetrics
     from repro.telemetry import profiler_for
@@ -233,6 +245,10 @@ def run_sweep_compiled(model_cfg, fed: FederatedData, spec: SweepSpec,
         "run_sweep_compiled takes an FLConfig sweep; use " \
         "run_async_sweep_compiled for AsyncFLConfig"
     prof = profiler_for(base.telemetry, profiler)
+    from repro.sysmodel import scenario as scenario_mod
+    sc = scenario_mod.as_active(scenario)
+    if sc is not None:
+        scenario_mod.check_sync(sc)
     with prof.phase("setup"):
         S = spec.n_configs
         key = init_key if init_key is not None \
@@ -247,7 +263,15 @@ def run_sweep_compiled(model_cfg, fed: FederatedData, spec: SweepSpec,
         w0 = flat_lib.ravel(fspec, params)
         w0_S = jnp.broadcast_to(w0, (S,) + w0.shape)
     with prof.phase("plan_build"):
-        keys, steps = scan_engine.draw_round_inputs(base, rounds, key)
+        if sc is None:
+            keys, steps = scan_engine.draw_round_inputs(base, rounds, key)
+            up_mask = sc_lat = None
+        else:
+            sc_steps, sc_mask, sc_lat = simulator.scenario_round_inputs(
+                base, rounds, sc)
+            keys = scan_engine._split_chain(key, rounds)
+            steps = jnp.asarray(sc_steps)
+            up_mask = jnp.asarray(sc_mask)
         # uniform across members (SweepSpec validates), so member 0
         # decides — the same predicate each member's solo run applies
         use_so = _uses_server_opt(spec.member(0))
@@ -260,7 +284,8 @@ def run_sweep_compiled(model_cfg, fed: FederatedData, spec: SweepSpec,
     with prof.phase("scan"):
         w_final_S, ys = sweep_scan_rounds(
             model_cfg, base.timeline_config(), fspec, w0_S, train, p, keys,
-            steps, spec.stacked_hypers(), sel_probs, so_state0_S, mesh=mesh)
+            steps, spec.stacked_hypers(), sel_probs, so_state0_S, up_mask,
+            mesh=mesh)
         if base.telemetry:
             jax.block_until_ready(ys)
 
@@ -273,7 +298,7 @@ def run_sweep_compiled(model_cfg, fed: FederatedData, spec: SweepSpec,
                 model_cfg, params, fed, base.algo, fleet,
                 np.asarray(ys["ids"]),
                 np.asarray(ys["ids2"]) if "ids2" in ys else None,
-                np.asarray(steps), rounds)
+                np.asarray(steps), rounds, lat_scale=sc_lat)
         hists = [scan_engine.eval_history_replay(
             model_cfg, fspec, train, test, p, ys["params"][:, i], rounds,
             eval_every, clocks) for i in range(S)]
@@ -339,25 +364,36 @@ def sweep_scan_deadline(model_cfg, afl, spec: flat_lib.FlatSpec, w0_S,
                    static_argnames=("mesh",))
 def sweep_scan_fedbuff(model_cfg, afl, spec: flat_lib.FlatSpec, w0_S,
                        pend0_S, data, ids, steps, store_slot, flush_slot,
-                       tau, hypers_S, *, mesh=None):
+                       tau, hypers_S, flush_mask=None, *, mesh=None):
     """Whole-sweep fedbuff program: scan the shared flush schedule,
     vmapping ``scan_engine.make_fedbuff_step`` over the stacked carries
-    (flat params + per-member in-flight pools) and hypers."""
+    (flat params + per-member in-flight pools) and hypers.
+    ``flush_mask`` ((R, M) f32, the scenario drop channel) is timeline-
+    shared: the per-round row is closed over unbatched so every member
+    drops the same uploads."""
     step = scan_engine.make_fedbuff_step(model_cfg, afl, spec, data, mesh)
 
     def body(carry, xs):
         w_S, pend_S = carry
+        if flush_mask is None:
+            fm = None
+        else:
+            *xs, fm = xs
+            xs = tuple(xs)
         if afl.telemetry:
             w_new, pend_S, m = jax.vmap(
-                lambda w, pend, h: step(w, pend, xs, h))(w_S, pend_S,
-                                                         hypers_S)
+                lambda w, pend, h: step(w, pend, xs, h, fm))(w_S, pend_S,
+                                                             hypers_S)
             return (w_new, pend_S), {"params": w_new, "metrics": m}
         w_new, pend_S = jax.vmap(
-            lambda w, pend, h: step(w, pend, xs, h))(w_S, pend_S, hypers_S)
+            lambda w, pend, h: step(w, pend, xs, h, fm))(w_S, pend_S,
+                                                         hypers_S)
         return (w_new, pend_S), w_new
 
-    (w_final, _), ws = jax.lax.scan(
-        body, (w0_S, pend0_S), (ids, steps, store_slot, flush_slot, tau))
+    xs = (ids, steps, store_slot, flush_slot, tau)
+    if flush_mask is not None:
+        xs = xs + (flush_mask,)
+    (w_final, _), ws = jax.lax.scan(body, (w0_S, pend0_S), xs)
     return w_final, ws
 
 
@@ -365,7 +401,8 @@ def run_async_sweep_compiled(model_cfg, fed: FederatedData,
                              spec: SweepSpec, fleet, rounds: int,
                              init_key: Optional[jax.Array] = None,
                              eval_every: int = 1, mesh=None,
-                             plan=None, profiler=None) -> SweepResult:
+                             plan=None, profiler=None,
+                             scenario=None) -> SweepResult:
     """All S async configs of ``spec`` against ONE event plan.
 
     The plan (and the pre-drawn key chain inside it) is built once from
@@ -374,7 +411,10 @@ def run_async_sweep_compiled(model_cfg, fed: FederatedData,
     bit-for-bit identical to a solo ``run_async_compiled`` (and hence
     ``run_async``) with config i: params, wall clock, n_arrived,
     stale_mean.  ``plan`` accepts a pre-built ``async_engine.build_plan``
-    value for reuse across calls.
+    value for reuse across calls.  ``scenario`` (RUN-level, never
+    sweepable) folds one failure-channel realization into the freshly
+    built plan, shared by every member; it is ignored when ``plan=`` is
+    supplied.
     """
     from repro.telemetry import metrics as tmetrics
     from repro.telemetry import profiler_for
@@ -413,7 +453,8 @@ def run_async_sweep_compiled(model_cfg, fed: FederatedData,
             if plan is None:
                 plan = async_lib.build_deadline_plan(base, fleet, cost,
                                                      sizes, rounds, key,
-                                                     sel_probs)
+                                                     sel_probs,
+                                                     scenario=scenario)
             pend0_S = bcast(async_lib.pool_init(model_cfg, sync_fl, params,
                                                 train, plan.n_slots + 1))
         with prof.phase("scan"):
@@ -432,7 +473,8 @@ def run_async_sweep_compiled(model_cfg, fed: FederatedData,
         with prof.phase("plan_build"):
             if plan is None:
                 plan = async_lib.build_fedbuff_plan(base, fleet, cost,
-                                                    sizes, rounds, key)
+                                                    sizes, rounds, key,
+                                                    scenario=scenario)
             pend0 = async_lib.pool_init(model_cfg, sync_fl, params, train,
                                         plan.n_slots)
             # the seed dispatches all start from the SAME initial params
@@ -447,11 +489,15 @@ def run_async_sweep_compiled(model_cfg, fed: FederatedData,
                 model_cfg, afl_t, fspec, w0_S, pend0_S, train,
                 jnp.asarray(plan.ids), jnp.asarray(plan.n_steps),
                 jnp.asarray(plan.store_slot), jnp.asarray(plan.flush_slot),
-                jnp.asarray(plan.tau), hypers_S, mesh=mesh)
+                jnp.asarray(plan.tau), hypers_S,
+                None if plan.flush_mask is None
+                else jnp.asarray(plan.flush_mask), mesh=mesh)
             if base.telemetry:
                 jax.block_until_ready(ws)
         clocks = plan.flush_clock
-        n_arr = np.full(rounds, base.buffer_size)
+        n_arr = (np.full(rounds, base.buffer_size)
+                 if plan.flush_mask is None
+                 else plan.flush_mask.sum(axis=1).astype(np.int64))
 
     params_traj = ws["params"] if base.telemetry else ws
     with prof.phase("eval"):

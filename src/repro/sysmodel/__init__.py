@@ -25,14 +25,17 @@ from repro.sysmodel.latency import (RoundCost, device_latencies,
 from repro.sysmodel.profiles import (DeviceFleet, DeviceProfile,
                                      fleet_summary, heterogeneous_fleet,
                                      uniform_fleet)
+from repro.sysmodel.scenario import (ScenarioConfig, ScenarioDraws,
+                                     realize_scenario, scale_steps)
 from repro.sysmodel.scheduler import (RoundPlan, plan_deadline_run,
                                       plan_sync_round)
 
 __all__ = [
     "DeviceFleet", "DeviceProfile", "Event", "EventQueue", "RoundCost",
-    "RoundPlan", "VirtualClock", "device_latencies", "expected_latencies",
+    "RoundPlan", "ScenarioConfig", "ScenarioDraws", "VirtualClock",
+    "device_latencies", "expected_latencies",
     "fleet_summary", "flops_per_local_step", "heterogeneous_fleet",
     "latency_components",
-    "param_bytes", "plan_deadline_run", "plan_sync_round", "round_cost_for",
-    "uniform_fleet",
+    "param_bytes", "plan_deadline_run", "plan_sync_round",
+    "realize_scenario", "round_cost_for", "scale_steps", "uniform_fleet",
 ]

@@ -1,0 +1,156 @@
+"""Failure scenarios: seeded stochastic unreliability for the sysmodel.
+
+The fleet layer (profiles/latency/scheduler) only knows "slow".  Real
+fleets also *fail*: uploads are lost in transit, devices go offline
+mid-round, partial work comes back, response times jitter.  This module
+models those as four orthogonal, independently seeded channels — the
+FLGo simulator's availability/connectivity/completeness/responsiveness
+split, with per-upload transmission failure following Salehi & Hossain's
+unreliable-network model:
+
+  drop         — the update is computed and *sent* but the upload fails:
+                 timing is unchanged (the round still waits for or cuts
+                 the device as usual) and the bytes are still spent, but
+                 the update is excluded from aggregation and never parks
+                 in the straggler pool.
+  dropout      — the device goes offline mid-round: the update never
+                 arrives at all.  A deadline round closes at its cutoff
+                 (so dropout requires a finite deadline) and a fedbuff
+                 dispatch leaks its in-flight slot.  Forbidden in the
+                 synchronous engine, whose barrier would wait forever.
+  completeness — the device returns after ``ceil(c * n_steps)`` local
+                 steps, ``c ~ U[completeness_min, 1)`` per dispatch with
+                 probability ``partial_prob``.  Affects both the local
+                 learning math and the modeled latency (fewer steps
+                 finish sooner) via the existing per-device n_steps path.
+  jitter       — response time is multiplied by ``exp(sigma * N(0,1))``
+                 per dispatch (log-normal multiplicative noise).
+
+Everything is sampled *at plan-build time* from numpy streams keyed as
+``default_rng([seed, CHANNEL_ID])`` — enabling one channel never shifts
+another channel's draws — and folded into the precomputed plan arrays
+(n_steps, arrival/arrived masks, slot pools).  The compiled scan engines
+replay the realized plan bit-for-bit with the python loops, and a null
+scenario (all rates zero) routes to the exact pre-scenario program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+
+# per-channel stream ids (never renumber: seeds are part of the contract)
+_CH_DROP = 1
+_CH_DROPOUT = 2
+_CH_COMPLETE = 3
+_CH_JITTER = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    """Four orthogonal failure channels, all off by default.
+
+    A config with every rate at zero is *inactive*: engines treat it
+    exactly like ``scenario=None`` and run the unmodified program.
+    """
+    drop_prob: float = 0.0        # P[upload transmission fails]
+    dropout_prob: float = 0.0     # P[device goes offline mid-dispatch]
+    partial_prob: float = 0.0     # P[dispatch returns partial work]
+    completeness_min: float = 0.5  # c ~ U[completeness_min, 1) when partial
+    jitter_sigma: float = 0.0     # latency *= exp(sigma * N(0,1))
+    seed: int = 0
+
+    def __post_init__(self):
+        for name in ("drop_prob", "dropout_prob", "partial_prob"):
+            p = getattr(self, name)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {p}")
+        if not 0.0 < self.completeness_min <= 1.0:
+            raise ValueError("completeness_min must be in (0, 1] — zero "
+                             "steps is not a partial result, it is dropout")
+        if self.jitter_sigma < 0.0:
+            raise ValueError("jitter_sigma must be >= 0")
+
+    @property
+    def active(self) -> bool:
+        return (self.drop_prob > 0.0 or self.dropout_prob > 0.0
+                or self.partial_prob > 0.0 or self.jitter_sigma > 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioDraws:
+    """One realization of every channel over a dispatch grid.
+
+    ``lost`` wins over ``drop``: a device that went offline never sent
+    its upload, so it cannot also be charged a failed transmission.
+    ``lat_scale`` is None when jitter is off so the scheduler's latency
+    math stays byte-identical for jitter-free scenarios.
+    """
+    drop: np.ndarray                    # bool — upload sent but failed
+    lost: np.ndarray                    # bool — device offline, no upload
+    comp: np.ndarray                    # float64 in (0, 1] — work fraction
+    lat_scale: Optional[np.ndarray]     # float64 > 0, or None
+
+
+def realize(sc: ScenarioConfig, shape: Tuple[int, ...]) -> ScenarioDraws:
+    """Sample every channel over ``shape`` dispatches (e.g. ``(R, K)``
+    for round-based engines, ``(total,)`` for the fedbuff stream)."""
+    seed = int(sc.seed)
+    lost = (np.random.default_rng([seed, _CH_DROPOUT]).random(shape)
+            < sc.dropout_prob)
+    drop = (np.random.default_rng([seed, _CH_DROP]).random(shape)
+            < sc.drop_prob) & ~lost
+    rng_c = np.random.default_rng([seed, _CH_COMPLETE])
+    partial = rng_c.random(shape) < sc.partial_prob
+    c_draw = rng_c.uniform(sc.completeness_min, 1.0, shape)
+    comp = np.where(partial, c_draw, 1.0)
+    lat_scale = None
+    if sc.jitter_sigma > 0.0:
+        lat_scale = np.exp(sc.jitter_sigma * np.random.default_rng(
+            [seed, _CH_JITTER]).standard_normal(shape))
+    return ScenarioDraws(drop=drop, lost=lost, comp=comp,
+                         lat_scale=lat_scale)
+
+
+# package-level export name (repro.sysmodel.realize_scenario); inside
+# this package the module-qualified `scenario.realize` reads better
+realize_scenario = realize
+
+
+def scale_steps(n_steps: np.ndarray, comp: np.ndarray) -> np.ndarray:
+    """``ceil(c * n_steps)``, at least one step, dtype-preserving.
+    ``comp == 1.0`` dispatches come back exactly unchanged."""
+    base = np.asarray(n_steps)
+    scaled = np.maximum(1, np.ceil(comp * base)).astype(base.dtype)
+    return scaled
+
+
+def as_active(sc: Optional[ScenarioConfig]) -> Optional[ScenarioConfig]:
+    """Null-config normalization: engines call this once so a scenario
+    with every channel off takes the exact pre-scenario code path."""
+    if sc is None or not sc.active:
+        return None
+    return sc
+
+
+def check_sync(sc: ScenarioConfig) -> None:
+    """The synchronous barrier waits for every selected device, so a
+    device that never answers would hang the (simulated) round."""
+    if sc.dropout_prob > 0.0:
+        raise ValueError(
+            "dropout_prob > 0 is not meaningful for the synchronous "
+            "engine: the round barrier would wait forever for an offline "
+            "device.  Use drop_prob (failed uploads) for sync runs, or "
+            "switch to mode='deadline'/'fedbuff' for dropout.")
+
+
+def check_deadline(sc: ScenarioConfig, deadline: float) -> None:
+    """Deadline rounds close at ``start + deadline``; with an infinite
+    deadline a lost device would stall the timeline forever."""
+    if sc.dropout_prob > 0.0 and not math.isfinite(deadline):
+        raise ValueError(
+            "dropout_prob > 0 requires a finite deadline: with "
+            "deadline=inf the round only closes when every device "
+            "arrives, and an offline device never does.")

@@ -42,17 +42,22 @@ class RoundPlan:
 def plan_sync_round(fleet: DeviceFleet, ids: np.ndarray, n_steps: np.ndarray,
                     cost: RoundCost, start: float,
                     deadline: float = math.inf,
-                    n_examples: Optional[np.ndarray] = None) -> RoundPlan:
+                    n_examples: Optional[np.ndarray] = None,
+                    lat_scale: Optional[np.ndarray] = None) -> RoundPlan:
     """Dispatch `ids` at `start`; the server aggregates whatever has arrived
     by `start + deadline` (or as soon as everything arrives, if earlier).
 
     A device begins its download at its first online instant >= start; a
     device that is offline at dispatch simply starts late — if its window
     never opens before the deadline it is a straggler like any other.
+    `lat_scale` is the scenario jitter channel: a per-dispatch (K,)
+    multiplier on the modeled latency.
     """
     ids = np.asarray(ids)
     begin = fleet.next_online(ids, start)
     lat = device_latencies(fleet, ids, n_steps, cost, n_examples)
+    if lat_scale is not None:
+        lat = lat * lat_scale
     arrival = begin + lat
     cutoff = start + deadline
     arrived = arrival <= cutoff
@@ -68,7 +73,9 @@ def plan_deadline_run(fleet: DeviceFleet, ids: np.ndarray,
                       n_steps: np.ndarray, cost: RoundCost,
                       deadline: float = math.inf,
                       n_examples: Optional[np.ndarray] = None,
-                      start: float = 0.0):
+                      start: float = 0.0,
+                      lat_scale: Optional[np.ndarray] = None,
+                      lost: Optional[np.ndarray] = None):
     """Emit every round's `plan_sync_round` at once for a fixed schedule.
 
     `ids`/`n_steps` are (rounds, K); `n_examples` is the per-DEVICE dataset
@@ -82,6 +89,11 @@ def plan_deadline_run(fleet: DeviceFleet, ids: np.ndarray,
     precomputed rows with no per-round fleet calls or fancy indexing.
     Plan building is O(1) host calls for cycled fleets too.
 
+    Scenario channels: `lat_scale` (R, K) multiplies the modeled latency
+    per dispatch (jitter); `lost` (R, K) marks dispatches whose device
+    went offline mid-round — they never arrive, so the round closes at
+    its cutoff (dropout therefore requires a finite deadline).
+
     Returns (arrival (R, K), arrived (R, K) bool, round_end (R,)) —
     float-identical to calling `plan_sync_round` round by round (cycled
     fleets included; see tests/test_sysmodel.py).
@@ -93,6 +105,8 @@ def plan_deadline_run(fleet: DeviceFleet, ids: np.ndarray,
         np.asarray(n_examples, dtype=np.float64)[ids.reshape(-1)]
     lat = device_latencies(fleet, ids.reshape(-1), n_steps.reshape(-1),
                            cost, n_examples=ex).reshape(R, K)
+    if lat_scale is not None:
+        lat = lat * lat_scale
     always_on = bool((np.asarray(fleet.avail_period) <= 0.0).all())
     if not always_on:
         # one gather per capability table for the whole schedule; the
@@ -117,6 +131,11 @@ def plan_deadline_run(fleet: DeviceFleet, ids: np.ndarray,
         arr = begin + lat[t]
         cutoff = s + deadline
         ok = arr <= cutoff
+        if lost is not None:
+            # an offline device never arrives; any loss forces the round
+            # to its cutoff (ok.all() is False), which a finite deadline
+            # guarantees exists
+            ok = ok & ~lost[t]
         s = float(arr.max()) if ok.all() else cutoff
         arrival[t], arrived[t], round_end[t] = arr, ok, s
     return arrival, arrived, round_end

@@ -20,7 +20,7 @@ All in-scan outputs are f32 scalars except ``stale_hist`` (STALE_BINS,).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -190,6 +190,11 @@ def deadline_network_series(D: int, afl, plan) -> Dict[str, np.ndarray]:
     # plan.n_arrived = on-time arrivals + late pool flushes, i.e. exactly
     # the uploads whose bytes land inside round t's window
     up = np.asarray(plan.n_arrived, dtype=np.float64) * pay["up"]
+    if getattr(plan, "n_failed_up", None) is not None:
+        # scenario drop channel: a failed upload is transmitted in full
+        # before it is lost — the bytes are spent even though the update
+        # never reaches the aggregation
+        up = up + np.asarray(plan.n_failed_up, np.float64) * pay["up"]
     return {"bytes_down": down, "bytes_up": up}
 
 
@@ -215,7 +220,13 @@ def deadline_pool_series(plan) -> Dict[str, np.ndarray]:
     on_time = np.asarray(plan.arrived, dtype=np.int64).sum(axis=1)
     n_late = np.asarray(plan.due_mask, dtype=np.float64).sum(axis=1)
     K = plan.ids.shape[1]
-    stored = K - on_time                    # new stragglers parked per round
+    if getattr(plan, "drop_mask", None) is not None:
+        # scenario runs: dropped/lost uploads miss the aggregation but
+        # never park in the pool — count actual slot writes (the dump row
+        # at index n_slots is not a parked straggler)
+        stored = (np.asarray(plan.store_slot) < plan.n_slots).sum(axis=1)
+    else:
+        stored = K - on_time                # new stragglers parked per round
     live = np.cumsum(stored) - np.cumsum(n_late)
     return {"n_cut": (K - on_time).astype(np.float64),
             "n_late": n_late,

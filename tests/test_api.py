@@ -1,0 +1,199 @@
+"""The unified front door (repro.fed.run): dispatch on config type must
+reproduce each of the six historical entry points bit-for-bit, knob
+mismatches must fail with actionable errors, and the old names must keep
+working as (warning) deprecated aliases."""
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro import fed as fed_api
+from repro.configs.paper_models import MCLR
+from repro.data.federated import stack_devices
+from repro.data.synthetic import synthetic_alpha_beta
+from repro.fed import api
+from repro.fed.async_engine import AsyncFLConfig, run_async
+from repro.fed.scan_engine import (run_async_compiled,
+                                   run_federated_compiled)
+from repro.fed.simulator import FLConfig, run_federated
+from repro.fed.sweep_engine import (SweepSpec, run_async_sweep_compiled,
+                                    run_sweep_compiled)
+from repro.sysmodel import heterogeneous_fleet
+
+N_DEV = 20
+
+
+@pytest.fixture(scope="module")
+def fed_data():
+    devs = synthetic_alpha_beta(0, n_devices=N_DEV, alpha=1.0, beta=1.0,
+                                mean_size=60)
+    return stack_devices(devs, seed=0)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return heterogeneous_fleet(1, N_DEV, straggler_frac=0.4,
+                               straggler_slowdown=50.0)
+
+
+FL = FLConfig(algo="folb", n_selected=8, lr=0.05, mu=1.0, seed=0)
+AFL_DL = AsyncFLConfig(mode="deadline", algo="folb", n_selected=8, mu=1.0,
+                       deadline=0.15, staleness_alpha=0.5, seed=0)
+AFL_FB = AsyncFLConfig(mode="fedbuff", algo="folb", mu=1.0, buffer_size=3,
+                       concurrency=8, staleness_alpha=0.5, seed=0)
+
+
+def _same(h_a, h_b):
+    assert set(h_a.history) == set(h_b.history)
+    for k in h_a.history:
+        assert h_a[k] == h_b[k], k
+    for a, b in zip(jax.tree.leaves(h_a.params),
+                    jax.tree.leaves(h_b.params)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+class TestDispatchEquivalence:
+    """fed.run must forward to exactly the engine the old entry point
+    was — same results bit-for-bit for all six."""
+
+    def test_sync_loop(self, fed_data, fleet):
+        _same(fed_api.run(MCLR, fed_data, FL, 4, engine="loop",
+                          fleet=fleet),
+              run_federated(MCLR, fed_data, FL, 4, fleet=fleet))
+
+    def test_sync_scan_is_auto(self, fed_data, fleet):
+        direct = run_federated_compiled(MCLR, fed_data, FL, 4, fleet=fleet)
+        _same(fed_api.run(MCLR, fed_data, FL, 4, fleet=fleet), direct)
+        _same(fed_api.run(MCLR, fed_data, FL, 4, engine="scan",
+                          fleet=fleet), direct)
+
+    def test_async_loop_and_scan(self, fed_data, fleet):
+        for afl in (AFL_DL, AFL_FB):
+            _same(fed_api.run(MCLR, fed_data, afl, 4, engine="loop",
+                              fleet=fleet),
+                  run_async(MCLR, fed_data, afl, fleet, rounds=4))
+            _same(fed_api.run(MCLR, fed_data, afl, 4, fleet=fleet),
+                  run_async_compiled(MCLR, fed_data, afl, fleet, rounds=4))
+
+    def test_sync_sweep(self, fed_data):
+        spec = SweepSpec.from_grid(FL, lr=(0.05, 0.1))
+        sw_api = fed_api.run(MCLR, fed_data, spec, 4)
+        sw_old = run_sweep_compiled(MCLR, fed_data, spec, 4)
+        for i in range(spec.n_configs):
+            _same(sw_api[i], sw_old[i])
+
+    def test_async_sweep(self, fed_data, fleet):
+        spec = SweepSpec.from_grid(AFL_DL, lr=(0.05, 0.1))
+        sw_api = fed_api.run(MCLR, fed_data, spec, 4, fleet=fleet)
+        sw_old = run_async_sweep_compiled(MCLR, fed_data, spec, fleet, 4)
+        for i in range(spec.n_configs):
+            _same(sw_api[i], sw_old[i])
+
+    def test_sweep_as_mapping(self, fed_data):
+        """sweep= accepts a plain axes mapping (SweepSpec.from_grid
+        sugar)."""
+        sw = fed_api.run(MCLR, fed_data, FL, 4, sweep={"lr": (0.05, 0.1)})
+        solo = fed_api.run(MCLR, fed_data,
+                           dataclasses.replace(FL, lr=0.1), 4)
+        _same(sw[1], solo)
+
+    def test_telemetry_override(self, fed_data, fleet):
+        """telemetry=True on a telemetry-off config must equal running
+        the replaced config — and not disturb the gated history."""
+        res = fed_api.run(MCLR, fed_data, FL, 4, fleet=fleet,
+                          telemetry=True)
+        assert res.metrics is not None and "bytes_up" in res.metrics
+        _same(res, fed_api.run(MCLR, fed_data, FL, 4, fleet=fleet))
+
+
+class TestValidation:
+    def test_bad_engine(self, fed_data):
+        with pytest.raises(ValueError, match="engine must be one of"):
+            fed_api.run(MCLR, fed_data, FL, 4, engine="warp")
+
+    def test_async_needs_fleet(self, fed_data):
+        with pytest.raises(ValueError, match="need fleet="):
+            fed_api.run(MCLR, fed_data, AFL_DL, 4)
+
+    def test_async_sweep_needs_fleet(self, fed_data):
+        spec = SweepSpec.from_grid(AFL_DL, lr=(0.05, 0.1))
+        with pytest.raises(ValueError, match="need fleet="):
+            fed_api.run(MCLR, fed_data, spec, 4)
+
+    def test_async_rejects_sel_probs(self, fed_data, fleet):
+        with pytest.raises(ValueError, match="sync-engine knob"):
+            fed_api.run(MCLR, fed_data, AFL_DL, 4, fleet=fleet,
+                        sel_probs=np.full(N_DEV, 1.0 / N_DEV))
+
+    def test_sync_rejects_plan(self, fed_data, fleet):
+        with pytest.raises(ValueError, match="async-engine knob"):
+            fed_api.run(MCLR, fed_data, FL, 4, fleet=fleet, plan=object())
+
+    def test_loop_cannot_run_sweeps(self, fed_data):
+        spec = SweepSpec.from_grid(FL, lr=(0.05, 0.1))
+        with pytest.raises(ValueError, match="cannot run sweeps"):
+            fed_api.run(MCLR, fed_data, spec, 4, engine="loop")
+
+    def test_spec_and_sweep_kwarg_conflict(self, fed_data):
+        spec = SweepSpec.from_grid(FL, lr=(0.05, 0.1))
+        with pytest.raises(ValueError, match="not both"):
+            fed_api.run(MCLR, fed_data, spec, 4, sweep={"mu": (0.0, 1.0)})
+
+    def test_sweep_spec_base_mismatch(self, fed_data):
+        other = dataclasses.replace(FL, seed=99)
+        spec = SweepSpec.from_grid(other, lr=(0.05, 0.1))
+        with pytest.raises(ValueError, match="base config differs"):
+            fed_api.run(MCLR, fed_data, FL, 4, sweep=spec)
+
+    def test_bad_sweep_type(self, fed_data):
+        with pytest.raises(ValueError, match="sweep= must be"):
+            fed_api.run(MCLR, fed_data, FL, 4, sweep=[("lr", 0.1)])
+
+    def test_bad_cfg_type(self, fed_data):
+        with pytest.raises(TypeError, match="FLConfig, AsyncFLConfig or"):
+            fed_api.run(MCLR, fed_data, {"algo": "folb"}, 4)
+
+
+class TestDeprecatedAliases:
+    """The six historical names re-exported by repro.fed.api warn and
+    forward unchanged."""
+
+    def test_alias_warns_and_matches(self, fed_data, fleet):
+        with pytest.warns(DeprecationWarning, match="run_federated is"):
+            h_old = api.run_federated(MCLR, fed_data, FL, 4, fleet=fleet)
+        _same(h_old, fed_api.run(MCLR, fed_data, FL, 4, engine="loop",
+                                 fleet=fleet))
+
+    def test_async_alias_warns_and_matches(self, fed_data, fleet):
+        with pytest.warns(DeprecationWarning,
+                          match="run_async_compiled is"):
+            h_old = api.run_async_compiled(MCLR, fed_data, AFL_DL, fleet,
+                                           rounds=4)
+        _same(h_old, fed_api.run(MCLR, fed_data, AFL_DL, 4, fleet=fleet))
+
+    def test_all_six_warn(self, fed_data, fleet):
+        spec = SweepSpec.from_grid(FL, lr=(0.05, 0.1))
+        aspec = SweepSpec.from_grid(AFL_DL, lr=(0.05, 0.1))
+        calls = [
+            lambda: api.run_federated(MCLR, fed_data, FL, 2),
+            lambda: api.run_federated_compiled(MCLR, fed_data, FL, 2),
+            lambda: api.run_async(MCLR, fed_data, AFL_DL, fleet, rounds=2),
+            lambda: api.run_async_compiled(MCLR, fed_data, AFL_DL, fleet,
+                                           rounds=2),
+            lambda: api.run_sweep_compiled(MCLR, fed_data, spec, 2),
+            lambda: api.run_async_sweep_compiled(MCLR, fed_data, aspec,
+                                                 fleet, 2),
+        ]
+        for fn in calls:
+            with pytest.warns(DeprecationWarning, match="deprecated; use "
+                                                        "repro.fed.run"):
+                fn()
+
+    def test_canonical_homes_do_not_warn(self, fed_data):
+        """The home-module entry points stay warning-free — only the
+        api-module re-exports are deprecated."""
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            run_federated_compiled(MCLR, fed_data, FL, 2)

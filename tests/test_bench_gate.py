@@ -9,8 +9,20 @@ from benchmarks.roofline import (folb_agg_bytes, folb_kd_bytes,
                                  folb_stale_agg_bytes)
 
 
+def _scenario_cell(drop, folb_secs=4.0, fedavg_secs=6.0):
+    return {
+        "drop": drop, "straggler_frac": 0.15, "avail": "always_on",
+        "runs": {
+            "fedavg": {"secs_to_acc": fedavg_secs, "bytes_to_acc": 2e8,
+                       "rounds_to_acc": 12, "final_acc": 0.85},
+            "folb": {"secs_to_acc": folb_secs, "bytes_to_acc": 1e8,
+                     "rounds_to_acc": 8, "final_acc": 0.88},
+        },
+    }
+
+
 def _artifact(kernel_ratio=1.0, async_speedup=1.3, sweep_speedup=3.0,
-              profile_coverage=0.97):
+              profile_coverage=0.97, scenario_folb_secs=4.0):
     return {
         "results": [{"name": "folb/sync", "secs_to_acc": 5.0,
                      "rounds_to_acc": 10, "final_acc": 0.9}],
@@ -41,6 +53,17 @@ def _artifact(kernel_ratio=1.0, async_speedup=1.3, sweep_speedup=3.0,
                 "kernel/folb_aggregate/K8xD65536/bf16": {
                     "us_per_call": 800.0,
                     "ratio_vs_calibration": kernel_ratio},
+            },
+        },
+        "scenario": {
+            "axes": {"drop": [0.0, 0.25], "straggler_frac": [0.15],
+                     "avail": ["always_on"]},
+            "target_acc": 0.75,
+            "cells": {
+                "drop0_strag0.15_always_on":
+                    _scenario_cell(0.0, folb_secs=scenario_folb_secs),
+                "drop0.25_strag0.15_always_on":
+                    _scenario_cell(0.25, folb_secs=9.0),
             },
         },
     }
@@ -230,6 +253,100 @@ class TestProfileGate:
         fails = compare(_artifact(), _artifact(async_speedup=0.1),
                         0.15, 0.05, 1.0, min_async_speedup=0.85,
                         min_profile_coverage=0.9)
+        assert len(fails) == 2 and all("async" in f for f in fails)
+
+
+class TestScenarioGate:
+    """Schema + ordering gate on the failure-scenario matrix: every
+    baseline cell/algo stays with numeric to-target columns, and drop=0
+    cells keep FOLB's time-to-accuracy edge over FedAvg."""
+
+    def test_passes_when_stable(self):
+        assert compare(_artifact(), _artifact(), 0.15, 0.05, 1.0) == []
+
+    def test_passes_with_different_cell_values(self):
+        """Cell values stay ungated — only schema and ordering matter."""
+        cur = _artifact(scenario_folb_secs=5.9)   # still under fedavg's 6.0
+        cells = cur["scenario"]["cells"]
+        cells["drop0.25_strag0.15_always_on"]["runs"]["folb"][
+            "bytes_to_acc"] = 7e9
+        assert compare(_artifact(), cur, 0.15, 0.05, 1.0) == []
+
+    def test_fails_on_missing_scenario_section(self):
+        cur = _artifact()
+        del cur["scenario"]
+        fails = compare(_artifact(), cur, 0.15, 0.05, 1.0)
+        assert any("scenario: section missing" in f for f in fails)
+
+    def test_fails_on_missing_cell(self):
+        cur = _artifact()
+        del cur["scenario"]["cells"]["drop0.25_strag0.15_always_on"]
+        fails = compare(_artifact(), cur, 0.15, 0.05, 1.0)
+        assert any("cell drop0.25_strag0.15_always_on missing" in f
+                   for f in fails)
+
+    def test_fails_on_missing_algo_run(self):
+        cur = _artifact()
+        del cur["scenario"]["cells"]["drop0_strag0.15_always_on"][
+            "runs"]["folb"]
+        fails = compare(_artifact(), cur, 0.15, 0.05, 1.0)
+        assert any("drop0_strag0.15_always_on/folb missing" in f
+                   for f in fails)
+
+    def test_fails_on_non_numeric_column(self):
+        cur = _artifact()
+        cur["scenario"]["cells"]["drop0_strag0.15_always_on"]["runs"][
+            "fedavg"]["bytes_to_acc"] = None
+        fails = compare(_artifact(), cur, 0.15, 0.05, 1.0)
+        assert any("lacks numeric bytes_to_acc" in f for f in fails)
+
+    def test_fails_when_drop0_ordering_flips(self):
+        """The baseline records folb winning the drop=0 cell (4.0 < 6.0);
+        a current artifact where folb is slower than fedavg — or stops
+        reaching the target — flips the winner and fails."""
+        fails = compare(_artifact(), _artifact(scenario_folb_secs=7.0),
+                        0.15, 0.05, 1.0)
+        assert any("ordering changed" in f for f in fails)
+        fails = compare(_artifact(), _artifact(scenario_folb_secs=-1.0),
+                        0.15, 0.05, 1.0)
+        assert any("ordering changed" in f for f in fails)
+
+    def test_fails_when_fedavg_baseline_winner_flips(self):
+        """Preserved means preserved in either direction: a baseline
+        where fedavg won must fail when the current cell has folb win."""
+        base = _artifact(scenario_folb_secs=9.5)   # fedavg (6.0) wins
+        fails = compare(base, _artifact(scenario_folb_secs=4.0),
+                        0.15, 0.05, 1.0)
+        assert any("ordering changed" in f for f in fails)
+        assert compare(base, _artifact(scenario_folb_secs=8.0),
+                       0.15, 0.05, 1.0) == []     # fedavg still wins
+
+    def test_both_unreached_baseline_records_no_winner(self):
+        base = _artifact()
+        runs = base["scenario"]["cells"]["drop0_strag0.15_always_on"]["runs"]
+        runs["folb"]["secs_to_acc"] = -1.0
+        runs["fedavg"]["secs_to_acc"] = -1.0
+        assert compare(base, _artifact(scenario_folb_secs=4.0),
+                       0.15, 0.05, 1.0) == []
+
+    def test_drop_nonzero_cells_exempt_from_ordering(self):
+        """Under transmission failure the ordering is not gated: flip the
+        drop=0.25 cell's winner and the gate must stay quiet."""
+        cur = _artifact()
+        # baseline drop=0.25 winner is fedavg (6.0 < 9.0); flip it
+        cur["scenario"]["cells"]["drop0.25_strag0.15_always_on"]["runs"][
+            "folb"]["secs_to_acc"] = 1.0
+        assert compare(_artifact(), cur, 0.15, 0.05, 1.0) == []
+
+    def test_old_baseline_without_scenario_is_fine(self):
+        base = _artifact()
+        del base["scenario"]
+        assert compare(base, _artifact(scenario_folb_secs=99.0),
+                       0.15, 0.05, 1.0) == []
+
+    def test_other_gates_unaffected(self):
+        fails = compare(_artifact(), _artifact(async_speedup=0.1),
+                        0.15, 0.05, 1.0, min_async_speedup=0.85)
         assert len(fails) == 2 and all("async" in f for f in fails)
 
 

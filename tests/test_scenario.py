@@ -1,0 +1,458 @@
+"""Failure-scenario channels (repro.sysmodel.scenario).
+
+The PR-level acceptance bars: (1) every channel active replays loop==scan
+bit-for-bit — sync, deadline, fedbuff, and sweep members — because the
+channels are realized once at plan-build time and both engines replay the
+same arrays; (2) scenario-off is bit-INVISIBLE — a null ScenarioConfig
+takes the exact pre-scenario code path, pinned against the committed
+BENCH_fed.json numbers; (3) the arrival bookkeeping satisfies the
+conservation law ``n_arrived == n_dispatched - n_cut - n_dropped`` against
+an independent numpy replay of the realized timeline."""
+import jax
+import numpy as np
+import pytest
+
+from repro import fed as fed_api
+from repro.configs.paper_models import MCLR
+from repro.data.federated import stack_devices
+from repro.data.synthetic import synthetic_alpha_beta
+from repro.fed.async_engine import AsyncFLConfig, build_plan, plan_digest
+from repro.fed.simulator import ALGOS, FLConfig
+from repro.fed.sweep_engine import SweepSpec
+from repro.models import small
+from repro.sysmodel import (ScenarioConfig, expected_latencies,
+                            heterogeneous_fleet, realize_scenario,
+                            round_cost_for, scale_steps)
+from repro.sysmodel import scenario as scenario_mod
+
+N_DEV = 20
+HIST = ("round", "wall_clock", "train_loss", "train_acc", "test_acc")
+AHIST = HIST + ("n_arrived", "stale_mean")
+
+# sync engines forbid dropout (the barrier would wait forever); async
+# scenarios exercise all four channels
+SYNC_SC = ScenarioConfig(drop_prob=0.3, partial_prob=0.5,
+                         jitter_sigma=0.2, seed=7)
+ASYNC_SC = ScenarioConfig(drop_prob=0.25, dropout_prob=0.1,
+                          partial_prob=0.5, jitter_sigma=0.2, seed=7)
+
+
+@pytest.fixture(scope="module")
+def fed_data():
+    devs = synthetic_alpha_beta(0, n_devices=N_DEV, alpha=1.0, beta=1.0,
+                                mean_size=60)
+    return stack_devices(devs, seed=0)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return heterogeneous_fleet(1, N_DEV, straggler_frac=0.4,
+                               straggler_slowdown=50.0)
+
+
+def _deadline(fed_data, fleet, quantile=0.7):
+    params = small.init_small(MCLR, jax.random.PRNGKey(0))
+    cost = round_cost_for(MCLR, params)
+    lat = expected_latencies(fleet, cost, mean_steps=10,
+                             n_examples=np.asarray(fed_data.mask.sum(1)))
+    return float(np.quantile(lat, quantile))
+
+
+def _assert_bit_for_bit(h_a, h_b, keys=HIST):
+    for k in keys:
+        assert h_a[k] == h_b[k], k
+    for a, b in zip(jax.tree.leaves(h_a.params),
+                    jax.tree.leaves(h_b.params)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+class TestScenarioConfig:
+    def test_rate_validation(self):
+        with pytest.raises(ValueError, match="drop_prob"):
+            ScenarioConfig(drop_prob=1.5)
+        with pytest.raises(ValueError, match="dropout_prob"):
+            ScenarioConfig(dropout_prob=-0.1)
+        with pytest.raises(ValueError, match="completeness_min"):
+            ScenarioConfig(partial_prob=0.5, completeness_min=0.0)
+        with pytest.raises(ValueError, match="jitter_sigma"):
+            ScenarioConfig(jitter_sigma=-1.0)
+
+    def test_active_and_null_normalization(self):
+        assert not ScenarioConfig().active
+        assert ScenarioConfig(drop_prob=0.1).active
+        assert scenario_mod.as_active(None) is None
+        assert scenario_mod.as_active(ScenarioConfig(seed=9)) is None
+        sc = ScenarioConfig(jitter_sigma=0.1)
+        assert scenario_mod.as_active(sc) is sc
+
+    def test_check_sync_rejects_dropout(self):
+        with pytest.raises(ValueError, match="synchronous"):
+            scenario_mod.check_sync(ScenarioConfig(dropout_prob=0.1))
+        scenario_mod.check_sync(SYNC_SC)   # dropout-free passes
+
+    def test_check_deadline_rejects_infinite_deadline(self):
+        with pytest.raises(ValueError, match="finite deadline"):
+            scenario_mod.check_deadline(ScenarioConfig(dropout_prob=0.1),
+                                        float("inf"))
+        scenario_mod.check_deadline(ScenarioConfig(dropout_prob=0.1), 5.0)
+        scenario_mod.check_deadline(SYNC_SC, float("inf"))
+
+
+class TestRealize:
+    def test_deterministic(self):
+        a = realize_scenario(ASYNC_SC, (6, 5))
+        b = realize_scenario(ASYNC_SC, (6, 5))
+        for f in ("drop", "lost", "comp", "lat_scale"):
+            assert (np.asarray(getattr(a, f))
+                    == np.asarray(getattr(b, f))).all(), f
+
+    def test_channels_independently_seeded(self):
+        """Enabling one channel must not shift another channel's draws —
+        each channel has its own default_rng([seed, CH]) stream."""
+        base = realize_scenario(ASYNC_SC, (8, 4))
+        no_jit = realize_scenario(
+            ScenarioConfig(drop_prob=0.25, dropout_prob=0.1,
+                           partial_prob=0.5, seed=7), (8, 4))
+        assert (base.drop == no_jit.drop).all()
+        assert (base.lost == no_jit.lost).all()
+        assert (base.comp == no_jit.comp).all()
+        assert no_jit.lat_scale is None and base.lat_scale is not None
+
+    def test_lost_wins_over_drop(self):
+        g = realize_scenario(ScenarioConfig(drop_prob=0.9,
+                                            dropout_prob=0.5, seed=3),
+                             (50, 10))
+        assert not (g.drop & g.lost).any()
+        assert g.lost.any() and g.drop.any()
+
+    def test_scale_steps(self):
+        steps = np.array([10, 7, 1], np.int32)
+        same = scale_steps(steps, np.ones(3))
+        assert (same == steps).all() and same.dtype == steps.dtype
+        scaled = scale_steps(steps, np.array([0.55, 0.5, 0.01]))
+        assert (scaled == np.array([6, 4, 1])).all()   # ceil, min 1
+
+
+class TestSyncParity:
+    @pytest.mark.parametrize("algo", ALGOS)
+    def test_all_algos_bit_for_bit(self, fed_data, fleet, algo):
+        """Acceptance criterion: drop+completeness+jitter active, every
+        sync algorithm's loop and scan histories identical — including
+        the jittered wall clock."""
+        fl = FLConfig(algo=algo, n_selected=8, lr=0.05, seed=0,
+                      mu=0.0 if algo == "fedavg" else 1.0,
+                      psi=0.5 if algo == "folb_het" else 0.0)
+        h_loop = fed_api.run(MCLR, fed_data, fl, 5, engine="loop",
+                             fleet=fleet, scenario=SYNC_SC)
+        h_scan = fed_api.run(MCLR, fed_data, fl, 5, engine="scan",
+                             fleet=fleet, scenario=SYNC_SC)
+        _assert_bit_for_bit(h_loop, h_scan)
+
+    @pytest.mark.parametrize("agg_dtype", ["bfloat16", "float32"])
+    def test_both_agg_dtypes(self, fed_data, fleet, agg_dtype):
+        fl = FLConfig(algo="folb", n_selected=8, lr=0.05, mu=1.0, seed=1,
+                      agg_dtype=agg_dtype)
+        h_loop = fed_api.run(MCLR, fed_data, fl, 5, engine="loop",
+                             fleet=fleet, scenario=SYNC_SC)
+        h_scan = fed_api.run(MCLR, fed_data, fl, 5, engine="scan",
+                             fleet=fleet, scenario=SYNC_SC)
+        _assert_bit_for_bit(h_loop, h_scan)
+
+    def test_drops_change_the_run(self, fed_data, fleet):
+        """The drop channel must actually alter aggregation (masked-out
+        uploads) — guards against a silently ignored mask."""
+        fl = FLConfig(algo="folb", n_selected=8, lr=0.05, mu=1.0, seed=0)
+        h_off = fed_api.run(MCLR, fed_data, fl, 5, fleet=fleet)
+        h_on = fed_api.run(MCLR, fed_data, fl, 5, fleet=fleet,
+                           scenario=ScenarioConfig(drop_prob=0.4, seed=2))
+        assert h_off["train_loss"] != h_on["train_loss"]
+
+    def test_sync_rejects_dropout(self, fed_data, fleet):
+        fl = FLConfig(algo="fedavg", n_selected=8, mu=0.0, seed=0)
+        bad = ScenarioConfig(dropout_prob=0.2)
+        for engine in ("loop", "scan"):
+            with pytest.raises(ValueError, match="synchronous"):
+                fed_api.run(MCLR, fed_data, fl, 3, engine=engine,
+                            fleet=fleet, scenario=bad)
+
+    def test_null_scenario_bit_invisible(self, fed_data, fleet):
+        """A ScenarioConfig with every rate at zero must route to the
+        exact scenario=None program, for both engines."""
+        fl = FLConfig(algo="folb", n_selected=8, lr=0.05, mu=1.0, seed=0)
+        null = ScenarioConfig(seed=123)     # seed alone activates nothing
+        for engine in ("loop", "scan"):
+            h_none = fed_api.run(MCLR, fed_data, fl, 4, engine=engine,
+                                 fleet=fleet)
+            h_null = fed_api.run(MCLR, fed_data, fl, 4, engine=engine,
+                                 fleet=fleet, scenario=null)
+            _assert_bit_for_bit(h_none, h_null)
+
+
+class TestDeadlineParity:
+    def test_all_channels_bit_for_bit(self, fed_data, fleet):
+        """All four channels on a straggler-cutting deadline: loop and
+        scan replay the identical realized timeline."""
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=8,
+                            mu=1.0, deadline=_deadline(fed_data, fleet),
+                            staleness_alpha=0.5, seed=0)
+        h_loop = fed_api.run(MCLR, fed_data, afl, 8, engine="loop",
+                             fleet=fleet, scenario=ASYNC_SC)
+        h_scan = fed_api.run(MCLR, fed_data, afl, 8, engine="scan",
+                             fleet=fleet, scenario=ASYNC_SC)
+        # the run must actually exercise failures + staleness
+        assert min(h_loop["n_arrived"]) < 8
+        assert max(h_loop["stale_mean"]) > 0.0
+        _assert_bit_for_bit(h_loop, h_scan, keys=AHIST)
+
+    @pytest.mark.parametrize("agg_dtype", ["bfloat16", "float32"])
+    def test_both_agg_dtypes(self, fed_data, fleet, agg_dtype):
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=8,
+                            mu=1.0, deadline=_deadline(fed_data, fleet),
+                            staleness_alpha=0.5, seed=1,
+                            agg_dtype=agg_dtype)
+        h_loop = fed_api.run(MCLR, fed_data, afl, 6, engine="loop",
+                             fleet=fleet, scenario=ASYNC_SC)
+        h_scan = fed_api.run(MCLR, fed_data, afl, 6, engine="scan",
+                             fleet=fleet, scenario=ASYNC_SC)
+        _assert_bit_for_bit(h_loop, h_scan, keys=AHIST)
+
+    def test_dropout_needs_finite_deadline(self, fed_data, fleet):
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=8,
+                            seed=0)     # deadline=inf default
+        with pytest.raises(ValueError, match="finite deadline"):
+            fed_api.run(MCLR, fed_data, afl, 3, fleet=fleet,
+                        scenario=ScenarioConfig(dropout_prob=0.1))
+
+    def test_null_scenario_bit_invisible(self, fed_data, fleet):
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=8,
+                            mu=1.0, deadline=_deadline(fed_data, fleet),
+                            staleness_alpha=0.5, seed=0)
+        h_none = fed_api.run(MCLR, fed_data, afl, 5, fleet=fleet)
+        h_null = fed_api.run(MCLR, fed_data, afl, 5, fleet=fleet,
+                             scenario=ScenarioConfig(seed=4))
+        _assert_bit_for_bit(h_none, h_null, keys=AHIST)
+
+
+class TestFedBuffParity:
+    SC = ScenarioConfig(drop_prob=0.25, dropout_prob=0.05,
+                        partial_prob=0.5, jitter_sigma=0.2, seed=7)
+
+    def test_all_channels_bit_for_bit(self, fed_data, fleet):
+        afl = AsyncFLConfig(mode="fedbuff", algo="folb", mu=1.0,
+                            buffer_size=4, concurrency=10,
+                            staleness_alpha=0.5, seed=0)
+        h_loop = fed_api.run(MCLR, fed_data, afl, 8, engine="loop",
+                             fleet=fleet, scenario=self.SC)
+        h_scan = fed_api.run(MCLR, fed_data, afl, 8, engine="scan",
+                             fleet=fleet, scenario=self.SC)
+        # dropped arrivals must actually be masked out of some flush
+        assert min(h_loop["n_arrived"]) < 4
+        _assert_bit_for_bit(h_loop, h_scan, keys=AHIST)
+
+    @pytest.mark.parametrize("agg_dtype", ["bfloat16", "float32"])
+    def test_both_agg_dtypes(self, fed_data, fleet, agg_dtype):
+        afl = AsyncFLConfig(mode="fedbuff", algo="folb", mu=1.0,
+                            buffer_size=3, concurrency=8,
+                            staleness_alpha=0.5, seed=2,
+                            agg_dtype=agg_dtype)
+        h_loop = fed_api.run(MCLR, fed_data, afl, 6, engine="loop",
+                             fleet=fleet, scenario=self.SC)
+        h_scan = fed_api.run(MCLR, fed_data, afl, 6, engine="scan",
+                             fleet=fleet, scenario=self.SC)
+        _assert_bit_for_bit(h_loop, h_scan, keys=AHIST)
+
+    def test_total_dropout_raises(self, fed_data, fleet):
+        """dropout_prob=1 loses every in-flight dispatch: the event queue
+        runs dry at the first flush and the plan builder says why."""
+        afl = AsyncFLConfig(mode="fedbuff", algo="folb", buffer_size=3,
+                            concurrency=6, seed=0)
+        with pytest.raises(ValueError, match="depleted"):
+            fed_api.run(MCLR, fed_data, afl, 3, fleet=fleet,
+                        scenario=ScenarioConfig(dropout_prob=1.0))
+
+    def test_null_scenario_bit_invisible(self, fed_data, fleet):
+        afl = AsyncFLConfig(mode="fedbuff", algo="folb", mu=1.0,
+                            buffer_size=4, concurrency=10,
+                            staleness_alpha=0.5, seed=0)
+        h_none = fed_api.run(MCLR, fed_data, afl, 5, fleet=fleet)
+        h_null = fed_api.run(MCLR, fed_data, afl, 5, fleet=fleet,
+                             scenario=ScenarioConfig(seed=11))
+        _assert_bit_for_bit(h_none, h_null, keys=AHIST)
+
+
+class TestSweepParity:
+    """Scenario is a RUN-level knob: every sweep member shares the one
+    realized failure timeline, so member i must equal the solo run of
+    member i's config under the same scenario."""
+
+    def test_sync_member_vs_solo(self, fed_data, fleet):
+        fl = FLConfig(algo="folb", n_selected=8, lr=0.05, mu=1.0, seed=0)
+        spec = SweepSpec.from_grid(fl, lr=(0.05, 0.1))
+        sw = fed_api.run(MCLR, fed_data, spec, 5, fleet=fleet,
+                         scenario=SYNC_SC)
+        for i in range(spec.n_configs):
+            solo = fed_api.run(MCLR, fed_data, spec.member(i), 5,
+                               engine="scan", fleet=fleet,
+                               scenario=SYNC_SC)
+            _assert_bit_for_bit(sw[i], solo)
+
+    def test_deadline_member_vs_solo(self, fed_data, fleet):
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=8,
+                            mu=1.0, deadline=_deadline(fed_data, fleet),
+                            staleness_alpha=0.5, seed=0)
+        spec = SweepSpec.from_grid(afl, lr=(0.05, 0.1))
+        sw = fed_api.run(MCLR, fed_data, spec, 6, fleet=fleet,
+                         scenario=ASYNC_SC)
+        for i in range(spec.n_configs):
+            solo = fed_api.run(MCLR, fed_data, spec.member(i), 6,
+                               engine="scan", fleet=fleet,
+                               scenario=ASYNC_SC)
+            _assert_bit_for_bit(sw[i], solo, keys=AHIST)
+
+    def test_fedbuff_member_vs_solo(self, fed_data, fleet):
+        afl = AsyncFLConfig(mode="fedbuff", algo="folb", mu=1.0,
+                            buffer_size=3, concurrency=8,
+                            staleness_alpha=0.5, seed=0)
+        spec = SweepSpec.from_grid(afl, mu=(0.5, 1.0))
+        sc = TestFedBuffParity.SC
+        sw = fed_api.run(MCLR, fed_data, spec, 5, fleet=fleet, scenario=sc)
+        for i in range(spec.n_configs):
+            solo = fed_api.run(MCLR, fed_data, spec.member(i), 5,
+                               engine="scan", fleet=fleet, scenario=sc)
+            _assert_bit_for_bit(sw[i], solo, keys=AHIST)
+
+    def test_sync_sweep_rejects_dropout(self, fed_data, fleet):
+        fl = FLConfig(algo="folb", n_selected=8, mu=1.0, seed=0)
+        spec = SweepSpec.from_grid(fl, lr=(0.05, 0.1))
+        with pytest.raises(ValueError, match="synchronous"):
+            fed_api.run(MCLR, fed_data, spec, 3, fleet=fleet,
+                        scenario=ScenarioConfig(dropout_prob=0.1))
+
+
+def _plan_inputs(fed_data, fleet):
+    params = small.init_small(MCLR, jax.random.PRNGKey(0))
+    cost = round_cost_for(MCLR, params)
+    sizes = np.asarray(fed_data.mask.sum(1))
+    return cost, sizes
+
+
+class TestConservation:
+    """``n_arrived == n_dispatched - n_cut - n_dropped`` replayed with
+    plain numpy from the realized plan arrays — independent of the
+    builder's pending-pool bookkeeping."""
+
+    def test_deadline_conservation(self, fed_data, fleet):
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=8,
+                            mu=1.0, deadline=_deadline(fed_data, fleet),
+                            staleness_alpha=0.5, seed=0)
+        cost, sizes = _plan_inputs(fed_data, fleet)
+        plan = build_plan(afl, fleet, cost, sizes, 12,
+                          jax.random.PRNGKey(afl.seed),
+                          scenario=ASYNC_SC)
+        R, K = plan.ids.shape
+        arr, end = plan.arrival, plan.round_end
+        drop, lost = plan.drop_mask, plan.lost_mask
+        on_time = (arr <= end[:, None]) & ~drop & ~lost
+        cut = (arr > end[:, None]) & ~drop & ~lost
+        # replay the straggler pool as a bag of arrival clocks
+        pending = []
+        n_due = np.zeros(R, np.int64)
+        for t in range(R):
+            n_due[t] = sum(1 for a in pending if a <= end[t])
+            pending = [a for a in pending if a > end[t]]
+            pending.extend(arr[t, i] for i in np.flatnonzero(cut[t]))
+        # per-round: arrivals = dispatched - cut - dropped - lost + due
+        per_round = (K - cut.sum(1) - drop.sum(1) - lost.sum(1) + n_due)
+        assert (plan.n_arrived == per_round).all()
+        # whole-run: every dispatch is aggregated exactly once unless it
+        # was dropped, lost, or still pending at the horizon
+        assert plan.n_arrived.sum() == (R * K - drop.sum() - lost.sum()
+                                        - len(pending))
+        assert drop.sum() > 0 and lost.sum() > 0 and cut.any()
+
+    def test_fedbuff_conservation(self, fed_data, fleet):
+        afl = AsyncFLConfig(mode="fedbuff", algo="folb", mu=1.0,
+                            buffer_size=4, concurrency=10,
+                            staleness_alpha=0.5, seed=0)
+        cost, sizes = _plan_inputs(fed_data, fleet)
+        sc = TestFedBuffParity.SC
+        plan = build_plan(afl, fleet, cost, sizes, 10,
+                          jax.random.PRNGKey(afl.seed), scenario=sc)
+        R, M = plan.ids.shape
+        drop, lost = plan.drop_mask, plan.lost_mask
+        arr = plan.arrival_clock
+        # independent replay: non-lost dispatches arrive in (clock, push
+        # order); each flush consumes the next M arrivals and aggregates
+        # the non-dropped among them
+        live = np.flatnonzero(~lost)
+        order = live[np.lexsort((live, arr[live]))]
+        for t in range(R):
+            flushed = order[t * M:(t + 1) * M]
+            assert plan.flush_mask[t].sum() == (~drop[flushed]).sum()
+            assert plan.flush_clock[t] == arr[flushed[-1]]
+        # conservation over the whole stream: M arrivals consumed per
+        # flush, minus the dropped ones, equals the aggregated count
+        n_arrived = plan.flush_mask.sum()
+        assert n_arrived == R * M - drop[order[:R * M]].sum()
+        assert drop[order[:R * M]].sum() > 0 and lost.sum() > 0
+
+
+class TestPlanDigest:
+    """Scenario channels are plan content: a stale scenario-free plan (or
+    one realized from a different scenario seed) must never digest-match."""
+
+    def _plan(self, fed_data, fleet, scenario):
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=8,
+                            mu=1.0, deadline=_deadline(fed_data, fleet),
+                            staleness_alpha=0.5, seed=0)
+        cost, sizes = _plan_inputs(fed_data, fleet)
+        return build_plan(afl, fleet, cost, sizes, 6,
+                          jax.random.PRNGKey(afl.seed), scenario=scenario)
+
+    def test_scenario_changes_digest(self, fed_data, fleet):
+        d_off = plan_digest(self._plan(fed_data, fleet, None))
+        d_on = plan_digest(self._plan(fed_data, fleet, ASYNC_SC))
+        d_on2 = plan_digest(self._plan(fed_data, fleet, ASYNC_SC))
+        d_seed = plan_digest(self._plan(
+            fed_data, fleet,
+            ScenarioConfig(drop_prob=0.25, dropout_prob=0.1,
+                           partial_prob=0.5, jitter_sigma=0.2, seed=8)))
+        assert d_on == d_on2          # deterministic realization
+        assert d_off != d_on          # masks are hashed content
+        assert d_on != d_seed         # different realization, new digest
+
+
+class TestBenchInvisibility:
+    """Scenario-off bit-invisibility against the committed artifact: the
+    BENCH_fed.json scenario section's drop=0 cells were produced with
+    scenario=None; re-running one through a null ScenarioConfig must
+    reproduce the committed numbers exactly."""
+
+    def test_drop0_cell_recomputes_exactly(self):
+        import json
+        import pathlib
+
+        from benchmarks import scenario_matrix as sm
+        from repro.fed.simulator import (rounds_to_accuracy,
+                                         seconds_to_accuracy)
+        path = pathlib.Path(__file__).resolve().parents[1] / "BENCH_fed.json"
+        scn = json.loads(path.read_text()).get("scenario")
+        if scn is None:
+            pytest.skip("committed artifact predates the scenario section")
+        key = "drop0_strag0.15_always_on"
+        committed = scn["cells"][key]["runs"]["folb"]
+        data = stack_devices(
+            synthetic_alpha_beta(sm.SEED, sm.N_DEVICES, 1.0, 1.0,
+                                 mean_size=60), seed=sm.SEED)
+        fl = FLConfig(algo="folb", n_selected=10, lr=0.05, seed=sm.SEED,
+                      mu=1.0, telemetry=True)
+        res = fed_api.run(MCLR, data, fl, scn["rounds"], engine="scan",
+                          eval_every=1,
+                          fleet=sm._cell_fleet(0.15, "always_on"),
+                          scenario=ScenarioConfig(seed=99))   # null
+        assert rounds_to_accuracy(res, scn["target_acc"]) \
+            == committed["rounds_to_acc"]
+        assert seconds_to_accuracy(res, scn["target_acc"]) \
+            == committed["secs_to_acc"]
+        assert float(np.asarray(res["test_acc"])[-1]) \
+            == committed["final_acc"]
