@@ -42,6 +42,14 @@ baseline and fails (exit 1) on regression:
     headline comparison under zero transmission failure).  Cell *values*
     stay ungated: they move with intentional algorithm changes; the
     ordering and the schema are what must not silently rot.
+  * resilience: schema + value gate on the guarded-vs-unguarded
+    corruption matrix — once a baseline records it, every baseline cell
+    must stay in the current artifact with a numeric ``final_acc``, the
+    guarded run may never land below the unguarded run at a nonzero
+    corruption rate, and at the 5% rate the guarded run must stay within
+    ``--resilience-acc-drop`` of the clean baseline while the unguarded
+    run must NOT (otherwise the injected corruption is too weak for the
+    cell to prove anything).
   * kernel: each micro-bench's *calibration-relative* ratio (kernel time
     divided by a fixed jnp workload timed in the same run — see
     ``kernel_bench.calibration_us``) may not grow more than
@@ -75,7 +83,8 @@ def compare(baseline: dict, current: dict, tolerance: float,
             kernel_tolerance: float = 0.75,
             min_async_speedup: float = 1.0,
             min_sweep_speedup: float = 1.0,
-            min_profile_coverage: float = 0.9) -> List[str]:
+            min_profile_coverage: float = 0.9,
+            resilience_acc_drop: float = 0.05) -> List[str]:
     """Return the list of regression messages (empty == gate passes)."""
     failures: List[str] = []
     cur_by_name = {r["name"]: r for r in current.get("results", [])}
@@ -248,6 +257,57 @@ def compare(baseline: dict, current: dict, tolerance: float,
                     f"time-to-accuracy ordering changed (baseline winner "
                     f"{'folb' if bw else 'fedavg'} -> current {cur_desc})")
 
+    base_res = baseline.get("resilience")
+    cur_res = current.get("resilience")
+    if base_res is not None:
+        if cur_res is None:
+            failures.append(
+                "resilience: section missing from current artifact")
+        else:
+            cur_cells = cur_res.get("cells", {})
+            for key, bc in base_res.get("cells", {}).items():
+                cc = cur_cells.get(key)
+                if cc is None:
+                    failures.append(
+                        f"resilience: cell {key} missing from current "
+                        f"artifact")
+                elif not isinstance(cc.get("final_acc"), (int, float)):
+                    failures.append(
+                        f"resilience: {key} lacks numeric final_acc")
+
+            # value gates on the CURRENT artifact: the guard must be
+            # demonstrably rescuing accuracy, not riding a corruption
+            # level too weak to matter
+            def _acc(rate, guarded):
+                cell = cur_cells.get(
+                    f"rate{rate:g}_{'guard' if guarded else 'noguard'}")
+                acc = None if cell is None else cell.get("final_acc")
+                return acc if isinstance(acc, (int, float)) else None
+
+            base_acc = cur_res.get("baseline_final_acc")
+            for rate in cur_res.get("axes", {}).get("rate", []):
+                if not rate:
+                    continue
+                ga, ua = _acc(rate, True), _acc(rate, False)
+                if ga is not None and ua is not None and ga < ua:
+                    failures.append(
+                        f"resilience: guarded final_acc {ga:.3f} < "
+                        f"unguarded {ua:.3f} at corruption rate {rate:g}")
+            if isinstance(base_acc, (int, float)):
+                floor = base_acc - resilience_acc_drop
+                ga, ua = _acc(0.05, True), _acc(0.05, False)
+                if ga is not None and ga < floor:
+                    failures.append(
+                        f"resilience: guarded final_acc {ga:.3f} at 5% "
+                        f"corruption below clean baseline {base_acc:.3f} "
+                        f"- {resilience_acc_drop} allowed drop")
+                if ua is not None and ua >= floor:
+                    failures.append(
+                        f"resilience: unguarded final_acc {ua:.3f} at 5% "
+                        f"corruption within {resilience_acc_drop} of the "
+                        f"clean baseline {base_acc:.3f} — the injected "
+                        f"corruption is too weak to demonstrate the guard")
+
     base_kern = baseline.get("kernel")
     cur_kern = current.get("kernel")
     if base_kern is not None:
@@ -297,6 +357,10 @@ def main() -> int:
     ap.add_argument("--min-profile-coverage", type=float, default=0.9,
                     help="required host-phase timer coverage of the "
                          "profiled run's wall time")
+    ap.add_argument("--resilience-acc-drop", type=float, default=0.05,
+                    help="final-accuracy drop from the clean baseline the "
+                         "guarded run may show at 5%% corruption (the "
+                         "unguarded run must exceed it)")
     args = ap.parse_args()
 
     failures = compare(_load(args.baseline), _load(args.current),
@@ -304,7 +368,8 @@ def main() -> int:
                        args.kernel_tolerance,
                        min_async_speedup=args.min_async_speedup,
                        min_sweep_speedup=args.min_sweep_speedup,
-                       min_profile_coverage=args.min_profile_coverage)
+                       min_profile_coverage=args.min_profile_coverage,
+                       resilience_acc_drop=args.resilience_acc_drop)
     if failures:
         print("BENCHMARK REGRESSION GATE: FAIL")
         for msg in failures:

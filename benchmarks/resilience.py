@@ -1,0 +1,128 @@
+"""Resilience benchmark: guarded vs unguarded FOLB under payload corruption.
+
+Sweeps the payload-corruption rate (split evenly between the NaN and the
+norm-inflation channels) and runs compiled sync FOLB twice per rate —
+with the update-validation guard off and on — recording final accuracy
+and the guard's rejection counters.  The payload lands in
+BENCH_fed.json's ``resilience`` section (merged by ``benchmarks.run
+--only resilience``) and is value-gated by ``check_regression.py``:
+
+  * at every nonzero rate the guarded run's final accuracy must be at
+    least the unguarded run's;
+  * at the 5% rate the guarded run must stay within ``--resilience-acc-
+    drop`` (default 0.05) of the clean baseline while the unguarded run
+    must NOT — i.e. the guard has to be demonstrably doing the rescuing,
+    not riding a corruption level too weak to matter.
+
+The rate-0 unguarded cell doubles as the clean baseline
+(``scenario=None``, ``guard=None``) whose final accuracy anchors the
+gate.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+N_DEVICES = 30
+ROUNDS = 40                 # fixed regardless of --quick: artifact comparability
+SEED = 0
+STRAGGLER_FRAC = 0.15
+STRAGGLER_SLOWDOWN = 25.0
+
+RATE_AXIS = (0.0, 0.05, 0.10)
+SCALE_MAG = 100.0
+
+# multipliers picked for a <0.01 clean-accuracy cost (false rejections)
+# while still killing the 100x norm-inflation rows via the score gate —
+# clipping alone cannot: the inflated row's score dominates the weight
+# normalization even after its delta is clipped
+GUARD_KW = {"nonfinite": True, "clip_mult": 5.0, "gate_mult": 20.0}
+
+
+def _cell_key(rate: float, guarded: bool) -> str:
+    return f"rate{rate:g}_{'guard' if guarded else 'noguard'}"
+
+
+def _counters(res) -> Dict[str, float]:
+    out = {}
+    for k in ("n_nonfinite", "n_clipped", "n_gated"):
+        out[k] = float(np.asarray(res.metrics[k], np.float64).sum())
+    return out
+
+
+def resilience_results(rounds: int = ROUNDS) -> Dict:
+    """The (rate × guard) matrix on compiled sync FOLB.  Returns the
+    BENCH_fed.json ``resilience`` section payload."""
+    from repro import fed as fed_api
+    from repro.configs.paper_models import MCLR
+    from repro.data.federated import stack_devices
+    from repro.data.synthetic import synthetic_alpha_beta
+    from repro.fed.simulator import FLConfig
+    from repro.kernels import GuardConfig
+    from repro.sysmodel import ScenarioConfig, heterogeneous_fleet
+
+    data = stack_devices(
+        synthetic_alpha_beta(SEED, N_DEVICES, 1.0, 1.0, mean_size=60),
+        seed=SEED)
+    fleet = heterogeneous_fleet(SEED, N_DEVICES,
+                                straggler_frac=STRAGGLER_FRAC,
+                                straggler_slowdown=STRAGGLER_SLOWDOWN)
+    guard = GuardConfig(**GUARD_KW)
+
+    cells = {}
+    for rate in RATE_AXIS:
+        # rate 0 → scenario=None: the unguarded cell IS the pre-guard
+        # engine run (bit-invisibility), and its final accuracy is the
+        # clean baseline the gate measures degradation against
+        sc = None if rate == 0.0 else ScenarioConfig(
+            nan_prob=rate / 2, scale_prob=rate / 2, scale_mag=SCALE_MAG,
+            seed=SEED)
+        for guarded in (False, True):
+            fl = FLConfig(algo="folb", n_selected=10, lr=0.05, seed=SEED,
+                          mu=1.0, telemetry=True,
+                          guard=guard if guarded else None)
+            t0 = time.time()
+            res = fed_api.run(MCLR, data, fl, rounds, engine="scan",
+                              eval_every=1, fleet=fleet, scenario=sc)
+            acc = np.asarray(res["test_acc"], np.float64)
+            cells[_cell_key(rate, guarded)] = {
+                "rate": rate, "guard": guarded,
+                "final_acc": float(acc[-1]),
+                "best_acc": float(acc.max()),
+                **_counters(res),
+                "host_seconds": round(time.time() - t0, 2),
+            }
+    return {
+        "axes": {"rate": list(RATE_AXIS), "guard": [False, True]},
+        "rounds": rounds,
+        "n_devices": N_DEVICES,
+        "scale_mag": SCALE_MAG,
+        "guard_config": dict(GUARD_KW),
+        "baseline_final_acc": cells[_cell_key(0.0, False)]["final_acc"],
+        "engine": "sync_scan folb (repro.fed.run engine='scan')",
+        "cells": cells,
+    }
+
+
+def resilience_rows(rounds: int = ROUNDS
+                    ) -> Tuple[List[Tuple[str, float, str]], Dict]:
+    """(CSV rows, json payload) for the ``resilience`` section."""
+    payload = resilience_results(rounds)
+    rows = []
+    for key, cell in payload["cells"].items():
+        rows.append((
+            f"resilience/{key}",
+            cell["host_seconds"] / rounds * 1e6,
+            f"final_acc={cell['final_acc']:.3f};"
+            f"n_nonfinite={cell['n_nonfinite']:.0f};"
+            f"n_clipped={cell['n_clipped']:.0f};"
+            f"n_gated={cell['n_gated']:.0f}"))
+    return rows, payload
+
+
+if __name__ == "__main__":
+    rows, payload = resilience_rows()
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -32,7 +32,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (dispatch_bench, kernel_bench, paper_tables,
-                            roofline, scenario_matrix, time_to_accuracy)
+                            resilience, roofline, scenario_matrix,
+                            time_to_accuracy)
 
     rounds = 30 if args.quick else 100
     fig_rounds = 20 if args.quick else 60
@@ -110,6 +111,27 @@ def main() -> None:
               file=sys.stderr)
         return rows
 
+    def resilience_rows():
+        """Guarded-vs-unguarded corruption matrix, merged into the
+        artifact's ``resilience`` section (same merge-into-existing
+        contract as kernel_rows, so CI can run it as its own
+        invocation)."""
+        import json
+        import os
+        rows, payload = resilience.resilience_rows()
+        data = {}
+        if os.path.exists(args.bench_json):
+            with open(args.bench_json) as f:
+                data = json.load(f)
+        data["resilience"] = payload
+        with open(args.bench_json, "w") as f:
+            json.dump(data, f, indent=2)
+            f.write("\n")
+        print(f"# merged resilience section into {args.bench_json} "
+              f"(baseline_final_acc="
+              f"{payload['baseline_final_acc']:.3f})", file=sys.stderr)
+        return rows
+
     def profile_rows():
         """Host-phase profile + trace export, merged into the artifact's
         ``profile`` section (same merge-into-existing contract as
@@ -143,6 +165,7 @@ def main() -> None:
         ("tta", tta_rows),
         ("kernel", kernel_rows),
         ("scenario", scenario_rows),
+        ("resilience", resilience_rows),
         ("profile", profile_rows),
         ("roofline", lambda: roofline.bench_rows(args.reports)),
     ]

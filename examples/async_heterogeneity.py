@@ -24,6 +24,12 @@ virtual-event scan engine (``run_async_compiled``): the same event
 timeline compiled into one XLA program, bit-for-bit identical histories,
 with the python-loop vs scan host-time comparison printed per mode.
 
+``--corrupt`` injects payload corruption (NaN + 100x norm inflation on
+5% of uploads) into the deadline run and prints the accuracy damage;
+adding ``--guard`` also runs the same corrupted timeline through the
+in-kernel update-validation guard, showing the rescue side by side with
+the guard's rejection counters.
+
 ``--telemetry`` turns on the observability layer for the deadline run
 and prints the per-round metric summary (FOLB scores, staleness
 histogram, modeled network bytes, straggler pool) plus the host-phase
@@ -82,6 +88,46 @@ def compiled_comparison(rounds: int = ROUNDS) -> None:
         assert same, f"{name}: compiled history diverged from the loop"
 
 
+def corruption_demo(rounds: int = ROUNDS, guard: bool = False) -> None:
+    """Deadline-FOLB on one corrupted timeline (5% of payloads NaN'd or
+    norm-inflated 100x), unguarded — and, with ``guard``, rescued by the
+    in-kernel update-validation layer on the same realized corruption."""
+    import numpy as np
+
+    from repro import fed as fed_api
+    from repro.fed.async_engine import AsyncFLConfig
+    from repro.kernels import GuardConfig
+    from repro.sysmodel import ScenarioConfig
+
+    model_cfg, fed, fleet, deadline = setup_sweep()
+    sc = ScenarioConfig(nan_prob=0.025, scale_prob=0.025, scale_mag=100.0,
+                        seed=SEED)
+    variants = [("clean", None, None), ("corrupt", sc, None)]
+    if guard:
+        variants.append(("corrupt+guard", sc,
+                         GuardConfig(nonfinite=True, clip_mult=5.0,
+                                     gate_mult=20.0)))
+    print(f"\ncorruption (deadline-FOLB, {rounds} rounds, 5% payloads "
+          f"NaN/100x-inflated):")
+    print(f"{'run':>15} {'final acc':>10} {'best acc':>9} "
+          f"{'n_nonfinite':>12} {'n_gated':>8} {'n_clipped':>10}")
+    for name, scenario, g in variants:
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=10,
+                            mu=1.0, lr=0.05, deadline=deadline,
+                            staleness_alpha=0.5, seed=SEED,
+                            telemetry=True, guard=g)
+        res = fed_api.run(model_cfg, fed, afl, rounds, fleet=fleet,
+                          scenario=scenario)
+        acc = np.asarray(res["test_acc"], np.float64)
+        m = res.metrics
+        print(f"{name:>15} {acc[-1]:>10.3f} {acc.max():>9.3f} "
+              f"{np.sum(m['n_nonfinite']):>12.0f} "
+              f"{np.sum(m['n_gated']):>8.0f} "
+              f"{np.sum(m['n_clipped']):>10.0f}")
+    if not guard:
+        print("  (rerun with --guard to see the in-kernel rescue)")
+
+
 def telemetry_demo(rounds: int = ROUNDS, trace_path: str = None) -> None:
     """Deadline-FOLB with the observability layer on: per-round metric
     summary, straggler/network accounting, host-phase profile, and
@@ -138,6 +184,12 @@ def main():
     ap.add_argument("--compiled", action="store_true",
                     help="also run the virtual-event scan engine and "
                          "print the loop-vs-scan host-time comparison")
+    ap.add_argument("--corrupt", action="store_true",
+                    help="inject payload corruption into the deadline run "
+                         "and print the accuracy damage")
+    ap.add_argument("--guard", action="store_true",
+                    help="with --corrupt: also run the corrupted timeline "
+                         "through the in-kernel update-validation guard")
     ap.add_argument("--telemetry", action="store_true",
                     help="run the deadline config with the observability "
                          "layer on and print metric/profile summaries")
@@ -160,6 +212,8 @@ def main():
               f"{r['final_wall_clock']:>10.1f}s")
     if args.compiled:
         compiled_comparison()
+    if args.corrupt or args.guard:
+        corruption_demo(guard=args.guard)
     if args.telemetry or args.trace:
         telemetry_demo(trace_path=args.trace)
 

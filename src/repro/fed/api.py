@@ -113,8 +113,13 @@ def run(model_cfg, fed, cfg: RunConfig, rounds: int, *,
         engine (``key`` is the ``init_key``).
     telemetry : None respects ``cfg.telemetry``; a bool overrides it
         (via ``dataclasses.replace``).
-    scenario : ``repro.sysmodel.ScenarioConfig`` failure channels; a
-        RUN-level knob, applied identically by loop and scan engines.
+    scenario : ``repro.sysmodel.ScenarioConfig`` failure channels —
+        including the payload-corruption channels (``nan_prob`` /
+        ``scale_prob`` / ``flip_prob``); a RUN-level knob, applied
+        identically by loop and scan engines.  The defense side is the
+        config's ``guard`` field (``repro.kernels.GuardConfig``), which
+        is static — jit-cache-keyed, never sweepable — and validated by
+        the config itself (FOLB algos on the flat backend only).
 
     Returns ``FedRunResult`` for solo configs, ``SweepResult`` for
     sweeps.
@@ -122,6 +127,14 @@ def run(model_cfg, fed, cfg: RunConfig, rounds: int, *,
     if engine not in _ENGINES:
         raise ValueError(
             f"engine must be one of {_ENGINES}, got {engine!r}")
+    if scenario is not None:
+        from repro.sysmodel import scenario as _scenario_mod
+        if not isinstance(scenario, _scenario_mod.ScenarioConfig):
+            raise TypeError(
+                f"scenario= must be a repro.sysmodel.ScenarioConfig "
+                f"(failure-injection channels), got "
+                f"{type(scenario).__name__}; the defense knob is the "
+                f"config's guard field (repro.kernels.GuardConfig)")
 
     if isinstance(cfg, _sweep.SweepSpec) or sweep is not None:
         spec = _as_sweep_spec(cfg, sweep)

@@ -94,6 +94,10 @@ class AsyncFLConfig:
     # observability: per-round metrics from the jitted steps + host-phase
     # profile (see FLConfig.telemetry — same static, never-sweepable flag)
     telemetry: bool = False
+    # robust aggregation (repro.kernels.guard.GuardConfig) inside the
+    # fused flat kernel — static, jit-cache-keyed, never sweepable; None
+    # is bit-for-bit the unguarded program (see FLConfig.guard)
+    guard: Optional[object] = None
     seed: int = 0
 
     def __post_init__(self):
@@ -101,6 +105,17 @@ class AsyncFLConfig:
         assert self.algo in ASYNC_ALGOS, self.algo
         assert self.agg_backend in simulator.AGG_BACKENDS, self.agg_backend
         assert self.agg_dtype in simulator.AGG_DTYPES, self.agg_dtype
+        if self.guard is not None:
+            from repro.kernels.guard import as_guard
+            as_guard(self.guard)
+            if self.algo not in ("folb", "folb_het"):
+                raise ValueError(
+                    f"guard requires algo 'folb' or 'folb_het' (the guard "
+                    f"runs inside the fused FOLB kernel), got {self.algo!r}")
+            if self.agg_backend != "flat":
+                raise ValueError(
+                    "guard requires agg_backend='flat' — the defenses are "
+                    "streaming passes over the flat (K, D) buffers")
 
     def sync_config(self) -> simulator.FLConfig:
         """The synchronous FLConfig whose round math this config reduces to
@@ -110,7 +125,7 @@ class AsyncFLConfig:
             lr=self.lr, max_local_steps=self.max_local_steps,
             het_steps=self.het_steps, psi=self.psi,
             agg_backend=self.agg_backend, agg_dtype=self.agg_dtype,
-            telemetry=self.telemetry, seed=self.seed)
+            telemetry=self.telemetry, guard=self.guard, seed=self.seed)
 
     def timeline_config(self) -> "AsyncFLConfig":
         """The jit-cache key: this config with every SWEEPABLE field
@@ -141,6 +156,11 @@ def _apply_aggregation(afl: AsyncFLConfig, params, deltas, grads, gammas,
     all-masked budget returns `params` unchanged, bit-exact.  ``hypers``
     carries the traced staleness_alpha / psi (``None`` falls back to the
     config's floats for direct callers).
+
+    Returns ``(new_params, ginfo)``: ``ginfo`` is the guarded kernel's
+    info dict (post-guard mask + rejection counters) when ``afl.guard``
+    is set, else None — ``guard=None`` keeps every traced program exactly
+    as before.
     """
     h = hypers if hypers is not None else hypers_of(afl)
     alpha = h["staleness_alpha"]
@@ -155,17 +175,30 @@ def _apply_aggregation(afl: AsyncFLConfig, params, deltas, grads, gammas,
         # kernel treats psi_gammas=None as exact zeros, so psi == 0 is
         # bit-identical either way.
         pg = h["psi"] * gammas if afl.algo == "folb_het" else None
+        if afl.guard is not None:
+            if mask is not None:
+                new, _, ginfo = ops.folb_staleness_slots_tree(
+                    params, deltas, grads, mask, tau,
+                    alpha=alpha, psi_gammas=pg,
+                    buf_dtype=jnp.dtype(afl.agg_dtype), mesh=mesh,
+                    guard=afl.guard)
+            else:
+                new, _, ginfo = ops.folb_staleness_tree(
+                    params, deltas, grads, tau, alpha=alpha, psi_gammas=pg,
+                    buf_dtype=jnp.dtype(afl.agg_dtype), mesh=mesh,
+                    guard=afl.guard)
+            return new, ginfo
         if mask is not None:
             new, _ = ops.folb_staleness_slots_tree(
                 params, deltas, grads, mask, tau,
                 alpha=alpha, psi_gammas=pg,
                 buf_dtype=jnp.dtype(afl.agg_dtype), mesh=mesh)
-            return new
+            return new, None
         new, _ = ops.folb_staleness_tree(params, deltas, grads, tau,
                                          alpha=alpha, psi_gammas=pg,
                                          buf_dtype=jnp.dtype(afl.agg_dtype),
                                          mesh=mesh)
-        return new
+        return new, None
     else:
         new = aggregation.folb_staleness(
             params, deltas, grads, tau, alpha=alpha,
@@ -174,7 +207,7 @@ def _apply_aggregation(afl: AsyncFLConfig, params, deltas, grads, gammas,
     if mask is not None:  # empty budget: params unchanged, bit-exact
         alive = jnp.sum(mask) > 0.0
         new = jax.tree.map(lambda n, w: jnp.where(alive, n, w), new, params)
-    return new
+    return new, None
 
 
 # ------------------------------------------------------------- event plans
@@ -212,6 +245,7 @@ class DeadlinePlan:
     lost_mask: Optional[np.ndarray] = None    # (R, K) bool device offline
     n_failed_up: Optional[np.ndarray] = None  # (R,) int64 failed uploads
     #   landing (paying their bytes) inside each round's window
+    corrupt: Optional[np.ndarray] = None      # (R, K) f32 payload factor
 
 
 @dataclasses.dataclass(frozen=True)
@@ -240,12 +274,21 @@ class FedBuffPlan:
     arrival_clock: Optional[np.ndarray] = None   # (C + R*M,) float64
     all_ids: Optional[np.ndarray] = None         # (C + R*M,) int32
     all_steps: Optional[np.ndarray] = None       # (C + R*M,) int32
-    # scenario channels (None on scenario-free plans): flushes count
-    # arrival ATTEMPTS, so a dropped upload occupies its flush position
-    # but is masked out of the aggregation by `flush_mask`
+    # scenario channels (None on scenario-free plans): flushes count real
+    # arrivals only, and a dropped upload occupies its flush position but
+    # is masked out of the aggregation by `flush_mask`.  A *lost* (dropout)
+    # dispatch frees its slot at the loss event and fires a replacement
+    # dispatch, so rounds can dispatch MORE than M devices: the dispatch
+    # arrays above pad to the widest round (pad rows: id 0, 1 step, the
+    # dump slot at index n_slots−1, corruption 1.0) and `n_disp` records
+    # each round's real dispatch count.  The per-dispatch arrays are
+    # sliced to the dispatches actually made.
     flush_mask: Optional[np.ndarray] = None      # (R, M) float32
-    drop_mask: Optional[np.ndarray] = None       # (C + R*M,) bool
-    lost_mask: Optional[np.ndarray] = None       # (C + R*M,) bool
+    drop_mask: Optional[np.ndarray] = None       # (n_dispatched,) bool
+    lost_mask: Optional[np.ndarray] = None       # (n_dispatched,) bool
+    n_disp: Optional[np.ndarray] = None          # (R,) int64 real dispatches
+    seed_corrupt: Optional[np.ndarray] = None    # (C,) f32 payload factor
+    corrupt: Optional[np.ndarray] = None         # (R, W) f32 payload factor
 
 
 @functools.partial(jax.jit, static_argnums=(2,))
@@ -301,7 +344,8 @@ def build_deadline_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
     uploads arrive on schedule but are excluded from aggregation and the
     straggler pool (they are charged as failed-upload bytes in the round
     their arrival lands in).  ``plan.arrived`` remains the aggregation
-    mask; `drop_mask`/`lost_mask`/`n_failed_up` record the failures.
+    mask; `drop_mask`/`lost_mask`/`n_failed_up` record the failures, and
+    `corrupt` carries the payload channels' per-dispatch factors.
     """
     from repro.fed.scan_engine import _split_chain
     K = afl.n_selected
@@ -401,7 +445,13 @@ def build_deadline_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
         due_tau=due_tau, n_arrived=n_arrived, stale_mean=stale_mean,
         n_slots=pool, n_due=S,
         drop_mask=drop, lost_mask=lost,
-        n_failed_up=None if sc is None else n_failed)
+        n_failed_up=None if sc is None else n_failed,
+        corrupt=None if sc is None else g.corrupt)
+
+
+class _FedBuffCapacity(Exception):
+    """Internal: a fedbuff plan-build attempt ran out of pre-drawn
+    dispatches (lost-dispatch replacements outgrew the draw grid)."""
 
 
 def build_fedbuff_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
@@ -418,17 +468,43 @@ def build_fedbuff_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
 
     An active ``scenario`` draws one failure realization over the whole
     dispatch stream: completeness rescales per-dispatch steps, jitter
-    multiplies latencies, a *dropped* dispatch still arrives (it counts
+    multiplies latencies, the payload channels stamp per-dispatch
+    corruption factors, and a *dropped* dispatch still arrives (it counts
     toward the M-arrival flush trigger and spends its upload bytes) but
-    is masked out of the aggregation via ``flush_mask``, and a *lost*
-    dispatch never arrives — its pool slot leaks, permanently shrinking
-    the in-flight fleet (no replacement dispatch fires, matching a
-    server that never learns the device died).  A scenario that loses
-    every in-flight dispatch raises (the queue runs dry).
+    is masked out of the aggregation via ``flush_mask``.  A *lost*
+    (dropout) dispatch never arrives: the server notices at the would-be
+    arrival time, reclaims the in-flight slot, and fires a replacement
+    dispatch — the in-flight fleet stays at ``concurrency`` forever
+    instead of leaking slots until the queue runs dry.
+
+    Replacements consume dispatch draws beyond the loss-free
+    ``C + R·M``, and the per-channel streams are drawn over the whole
+    dispatch grid at once (a longer grid is a different realization, not
+    an extension), so the builder rebuilds from scratch with doubled
+    draw capacity until the timeline fits; pathological loss rates that
+    outrun every doubling raise an actionable error.
     """
-    from repro.fed.scan_engine import _split_chain
     M, C = afl.buffer_size, afl.concurrency
     total = C + rounds * M
+    for _ in range(5):
+        try:
+            return _build_fedbuff_attempt(afl, fleet, cost, sizes, rounds,
+                                          init_key, scenario, total)
+        except _FedBuffCapacity:
+            total *= 2
+    raise ValueError(
+        f"fedbuff scenario: dropout losses depleted the dispatch budget — "
+        f"even {total // 2} pre-drawn dispatches (16x the loss-free "
+        f"{C + rounds * M}) were consumed by lost-dispatch replacements "
+        f"for {rounds} flushes of {M} at concurrency {C}; lower "
+        f"dropout_prob or raise concurrency")
+
+
+def _build_fedbuff_attempt(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
+                           sizes: np.ndarray, rounds: int, init_key,
+                           scenario, total: int) -> FedBuffPlan:
+    from repro.fed.scan_engine import _split_chain
+    M, C = afl.buffer_size, afl.concurrency
     subs = _split_chain(init_key, total)
     sc = scenario_mod.as_active(scenario)
     g = scenario_mod.realize(sc, (total,)) if sc is not None else None
@@ -470,9 +546,14 @@ def build_fedbuff_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
     if g is None:
         events.push_batch(begin0 + lats[:C], "arrival", "d", range(C))
     else:
-        # lost seed dispatches occupy their slots but never arrive
-        keep = np.flatnonzero(~g.lost[:C])
-        events.push_batch((begin0 + lats[:C])[keep], "arrival", "d", keep)
+        # a lost seed dispatch occupies its slot until the server notices
+        # at the would-be arrival — the loss event that reclaims it
+        arr0 = begin0 + lats[:C]
+        live0 = np.flatnonzero(~g.lost[:C])
+        events.push_batch(arr0[live0], "arrival", "d", live0)
+        lost0 = np.flatnonzero(g.lost[:C])
+        if len(lost0):
+            events.push_batch(arr0[lost0], "lost", "d", lost0)
     pool = C
     n_dispatched = C
     # per-dispatch clocks, recorded for the telemetry trace export
@@ -482,6 +563,8 @@ def build_fedbuff_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
 
     def do_dispatch(at: float, version: int) -> int:
         nonlocal n_dispatched, pool
+        if n_dispatched >= total:
+            raise _FedBuffCapacity
         d = n_dispatched
         n_dispatched += 1
         begin = at if always_on \
@@ -495,19 +578,20 @@ def build_fedbuff_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
         disp_clock[d], arr_clock[d] = at, begin + lats[d]
         if g is None or not g.lost[d]:
             events.push(begin + lats[d], "arrival", d=d)
-        # a lost dispatch pushes no arrival: the update sits in its slot
-        # forever (the slot leaks) and the in-flight fleet shrinks by one
+        else:
+            # a lost dispatch never uploads: the server times it out at
+            # the would-be arrival, reclaiming the slot and replacing it
+            events.push(begin + lats[d], "lost", d=d)
         return d
-    ids = np.empty((rounds, M), np.int64)
-    n_steps = np.empty((rounds, M), np.int64)
-    store_slot = np.empty((rounds, M), np.int64)
     flush_slot = np.empty((rounds, M), np.int64)
     tau = np.empty((rounds, M), np.float32)
     flush_clock = np.empty(rounds, np.float64)
     flush_mask = None if g is None else np.ones((rounds, M), np.float32)
+    disp_rounds: List[List[int]] = []
     for t in range(rounds):
         flush_d: List[int] = []
         disp_d: List[int] = []
+        quarantine: List[int] = []
         clock = 0.0
         while len(flush_d) < M:
             if len(events) == 0:
@@ -517,11 +601,16 @@ def build_fedbuff_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
                     f"lost; lower dropout_prob or raise concurrency")
             ev = events.pop()
             clock = ev.time
+            if ev.kind == "lost":
+                # reclaim the leaked slot — quarantined until the round
+                # closes so a same-round replacement can never land in a
+                # slot another of this round's dispatches already stored
+                # to (duplicate .at[].set indices have unspecified order)
+                quarantine.append(int(slot_of[ev.payload["d"]]))
+                disp_d.append(do_dispatch(clock, t))  # keep C in flight
+                continue
             flush_d.append(ev.payload["d"])
             disp_d.append(do_dispatch(clock, t))  # keep C in flight
-        ids[t] = cids[disp_d]
-        n_steps[t] = steps[disp_d]
-        store_slot[t] = slot_of[disp_d]
         flush_slot[t] = slot_of[flush_d]
         tau[t] = t - version_of[flush_d]
         flush_clock[t] = clock
@@ -529,10 +618,32 @@ def build_fedbuff_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
             # a dropped arrival triggered its flush position (and its
             # replacement dispatch) but carries no usable update
             flush_mask[t] = (~g.drop[flush_d]).astype(np.float32)
+        disp_rounds.append(disp_d)
         # slots free only AFTER the flush: a dispatch made during this
         # round can never steal a slot the flush still needs
         for d in flush_d:
             heapq.heappush(free, slot_of[d])
+        for s in quarantine:
+            heapq.heappush(free, s)
+    # rounds dispatch M + (losses noticed that round) devices: pad the
+    # dispatch arrays to the widest round.  Pad rows are inert — device 0
+    # at 1 step, stored to the dump row (index n_slots − 1, never
+    # flushed), corruption factor exactly 1.0
+    n_disp = np.array([len(d) for d in disp_rounds], np.int64)
+    W = int(n_disp.max()) if sc is not None else M
+    ids = np.zeros((rounds, W), np.int64)
+    n_steps = np.ones((rounds, W), np.int64)
+    store_slot = np.full((rounds, W), pool, np.int64)
+    corrupt = None if g is None or g.corrupt is None \
+        else np.ones((rounds, W), np.float32)
+    for t, dd in enumerate(disp_rounds):
+        n = len(dd)
+        ids[t, :n] = cids[dd]
+        n_steps[t, :n] = steps[dd]
+        store_slot[t, :n] = slot_of[dd]
+        if corrupt is not None:
+            corrupt[t, :n] = g.corrupt[dd]
+    used = n_dispatched    # replacements may leave draw capacity unused
     return FedBuffPlan(
         seed_ids=cids[:C].astype(np.int32),
         seed_steps=steps[:C].astype(np.int32),
@@ -541,11 +652,17 @@ def build_fedbuff_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
         store_slot=store_slot.astype(np.int32),
         flush_slot=flush_slot.astype(np.int32), tau=tau,
         flush_clock=flush_clock, stale_mean=tau.mean(axis=1).astype(float),
-        n_slots=pool, dispatch_clock=disp_clock, arrival_clock=arr_clock,
-        all_ids=cids.astype(np.int32), all_steps=steps.astype(np.int32),
+        n_slots=pool + 1 if sc is not None else pool,
+        dispatch_clock=disp_clock[:used], arrival_clock=arr_clock[:used],
+        all_ids=cids[:used].astype(np.int32),
+        all_steps=steps[:used].astype(np.int32),
         flush_mask=flush_mask,
-        drop_mask=None if g is None else g.drop,
-        lost_mask=None if g is None else g.lost)
+        drop_mask=None if g is None else g.drop[:used],
+        lost_mask=None if g is None else g.lost[:used],
+        n_disp=None if sc is None else n_disp,
+        seed_corrupt=None if g is None or g.corrupt is None
+        else g.corrupt[:C],
+        corrupt=corrupt)
 
 
 def build_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
@@ -603,7 +720,8 @@ def pool_init(model_cfg, fl: simulator.FLConfig, params, data, n_rows: int):
 @functools.partial(jax.jit, static_argnums=(0, 1), static_argnames=("mesh",))
 def deadline_slow_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
                        ids, n_steps, arrived_mask, store_slot, due_slot,
-                       due_mask, due_tau, hypers=None, *, mesh=None):
+                       due_mask, due_tau, hypers=None, corrupt=None, *,
+                       mesh=None):
     """One non-fast deadline round: compute the K dispatched updates,
     gather this round's due stragglers from the pool, stash this round's
     misses, and run the fixed-budget masked staleness aggregation.
@@ -613,11 +731,18 @@ def deadline_slow_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
     `run_async_compiled` rests on both replaying this exact program
     (separate jit graphs of the "same" math are not guaranteed
     bit-identical).  ``hypers`` carries the traced sweepable scalars.
+
+    ``corrupt`` (scenario payload channels, (K,) f32) multiplies the K
+    dispatched payloads before they are stored or aggregated — a
+    corrupted straggler parks its corrupted payload and poisons the
+    round it lands in, not the round that computed it.  ``None`` keeps
+    the pre-corruption trace exactly.
     """
     h = hypers if hypers is not None else hypers_of(afl)
     fl = afl.sync_config()
     deltas, grads, gammas = simulator._local_updates(
         model_cfg, params, data, ids, n_steps, fl, h)
+    deltas, grads = simulator.apply_corruption(deltas, grads, corrupt)
     pend_d, pend_g, pend_gam = pend
     # gather due rows BEFORE storing: a slot aggregated this round may be
     # reallocated to one of this round's stragglers
@@ -637,7 +762,18 @@ def deadline_slow_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
     deltas_all = _concat0(deltas, due_d)
     grads_all = _concat0(grads, due_g)
     gammas_all = jnp.concatenate([gammas, due_gam])
-    new_params = _apply_aggregation(
+    if corrupt is not None:
+        # corruption breaks the masked-row contract the aggregation rules
+        # rely on (a NaN row enters the reductions as 0·NaN = NaN): a
+        # corrupted straggler still in flight — and the dump row read
+        # through masked due slots — must contribute true zeros, arriving
+        # only in the round its due slot unmasks
+        def _mrow(x):
+            m = mask.reshape((-1,) + (1,) * (x.ndim - 1))
+            return jnp.where(m > 0.0, x, jnp.zeros((), x.dtype))
+        deltas_all = jax.tree.map(_mrow, deltas_all)
+        grads_all = jax.tree.map(_mrow, grads_all)
+    new_params, ginfo = _apply_aggregation(
         afl, params, deltas_all, grads_all, gammas_all, tau, mask=mask,
         mesh=mesh, hypers=h)
     if afl.telemetry:
@@ -645,19 +781,21 @@ def deadline_slow_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
         m = tmetrics.metrics_for_algo(
             afl.algo, params, new_params, deltas_all, grads_all,
             psi=h["psi"], gammas=gammas_all, tau=tau,
-            alpha=h["staleness_alpha"], mask=mask)
+            alpha=h["staleness_alpha"], mask=mask, guard=ginfo)
         return new_params, (pend_d, pend_g, pend_gam), m
     return new_params, (pend_d, pend_g, pend_gam)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1))
 def fedbuff_seed_pool(model_cfg, afl: AsyncFLConfig, params, pend, data,
-                      ids, n_steps, store_slot, hypers=None):
+                      ids, n_steps, store_slot, hypers=None, corrupt=None):
     """Compute the initial `concurrency` dispatches on the initial params
-    and stash them in their pool slots (one batched update call)."""
+    and stash them in their pool slots (one batched update call).
+    ``corrupt`` stamps the scenario payload factors on the seed uploads."""
     h = hypers if hypers is not None else hypers_of(afl)
     deltas, grads, gammas = simulator._local_updates(
         model_cfg, params, data, ids, n_steps, afl.sync_config(), h)
+    deltas, grads = simulator.apply_corruption(deltas, grads, corrupt)
     pend_d, pend_g, pend_gam = pend
     pend_d = jax.tree.map(lambda b, x: b.at[store_slot].set(x),
                           pend_d, deltas)
@@ -670,8 +808,9 @@ def fedbuff_seed_pool(model_cfg, afl: AsyncFLConfig, params, pend, data,
 @functools.partial(jax.jit, static_argnums=(0, 1), static_argnames=("mesh",))
 def fedbuff_round_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
                        ids, n_steps, store_slot, flush_slot, tau,
-                       hypers=None, flush_mask=None, *, mesh=None):
-    """One fedbuff flush round: batch-compute the M dispatches made during
+                       hypers=None, flush_mask=None, corrupt=None, *,
+                       mesh=None):
+    """One fedbuff flush round: batch-compute the dispatches made during
     this round (all reference the current params — the server version only
     bumps at the flush), store them, then aggregate the M flushed rows.
 
@@ -682,11 +821,14 @@ def fedbuff_round_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
 
     ``flush_mask`` (scenario drop channel, (M,) f32) excludes flushed
     rows whose upload failed in transit; ``None`` keeps the pre-scenario
-    trace exactly.
+    trace exactly.  ``corrupt`` ((W,) f32, the plan's padded dispatch
+    width) stamps the payload-corruption factors on this round's
+    dispatches before they are stored; pad rows carry exactly 1.0.
     """
     h = hypers if hypers is not None else hypers_of(afl)
     deltas, grads, gammas = simulator._local_updates(
         model_cfg, params, data, ids, n_steps, afl.sync_config(), h)
+    deltas, grads = simulator.apply_corruption(deltas, grads, corrupt)
     pend_d, pend_g, pend_gam = pend
     pend_d = jax.tree.map(lambda b, x: b.at[store_slot].set(x),
                           pend_d, deltas)
@@ -696,15 +838,15 @@ def fedbuff_round_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
     flush_d = jax.tree.map(lambda x: x[flush_slot], pend_d)
     flush_g = jax.tree.map(lambda x: x[flush_slot], pend_g)
     flush_gam = pend_gam[flush_slot]
-    new_params = _apply_aggregation(afl, params, flush_d, flush_g,
-                                    flush_gam, tau, mask=flush_mask,
-                                    mesh=mesh, hypers=h)
+    new_params, ginfo = _apply_aggregation(afl, params, flush_d, flush_g,
+                                           flush_gam, tau, mask=flush_mask,
+                                           mesh=mesh, hypers=h)
     if afl.telemetry:
         from repro.telemetry import metrics as tmetrics
         m = tmetrics.metrics_for_algo(
             afl.algo, params, new_params, flush_d, flush_g, psi=h["psi"],
             gammas=flush_gam, tau=tau, alpha=h["staleness_alpha"],
-            mask=flush_mask)
+            mask=flush_mask, guard=ginfo)
         return new_params, (pend_d, pend_g, pend_gam), m
     return new_params, (pend_d, pend_g, pend_gam)
 
@@ -837,6 +979,7 @@ def _run_deadline(model_cfg, afl, fleet, cost, sizes, train, p, key, params,
 def _deadline_round(model_cfg, afl_t, sync_fl, params, pend, train, p, plan,
                     t, sel_probs, hypers, mlist, mesh):
     n_steps = jnp.asarray(plan.n_steps[t])
+    corrupt = None if plan.corrupt is None else jnp.asarray(plan.corrupt[t])
     if plan.fast[t]:
         # sync-parity fast path: every dispatched device made the
         # deadline and no stale upload joins, so every τ is 0 and the
@@ -850,7 +993,7 @@ def _deadline_round(model_cfg, afl_t, sync_fl, params, pend, train, p, plan,
         params, diag = simulator.fl_round(
             model_cfg, sync_fl, params, train, p,
             jnp.asarray(plan.keys[t]), n_steps, sel_probs, hypers,
-            mesh=mesh)
+            None, corrupt, mesh=mesh)
         if sync_fl.telemetry:
             mlist.append(diag["metrics"])
         return params, pend
@@ -861,7 +1004,7 @@ def _deadline_round(model_cfg, afl_t, sync_fl, params, pend, train, p, plan,
         jnp.asarray(plan.store_slot[t]),
         jnp.asarray(plan.due_slot[t]),
         jnp.asarray(plan.due_mask[t]),
-        jnp.asarray(plan.due_tau[t]), hypers, mesh=mesh)
+        jnp.asarray(plan.due_tau[t]), hypers, corrupt, mesh=mesh)
     if afl_t.telemetry:
         params, pend, m = out
         mlist.append(m)
@@ -889,7 +1032,9 @@ def _run_fedbuff(model_cfg, afl, fleet, cost, sizes, train, key, params,
         pend = fedbuff_seed_pool(model_cfg, afl_t, params, pend, train,
                                  jnp.asarray(plan.seed_ids),
                                  jnp.asarray(plan.seed_steps),
-                                 jnp.asarray(plan.seed_slots), hypers)
+                                 jnp.asarray(plan.seed_slots), hypers,
+                                 corrupt=None if plan.seed_corrupt is None
+                                 else jnp.asarray(plan.seed_corrupt))
     for t in range(rounds):
         with prof.phase("rounds"):
             out = fedbuff_round_step(
@@ -899,7 +1044,9 @@ def _run_fedbuff(model_cfg, afl, fleet, cost, sizes, train, key, params,
                 jnp.asarray(plan.flush_slot[t]),
                 jnp.asarray(plan.tau[t]), hypers,
                 flush_mask=None if plan.flush_mask is None
-                else jnp.asarray(plan.flush_mask[t]), mesh=mesh)
+                else jnp.asarray(plan.flush_mask[t]),
+                corrupt=None if plan.corrupt is None
+                else jnp.asarray(plan.corrupt[t]), mesh=mesh)
             if afl_t.telemetry:
                 params, pend, m = out
                 mlist.append(m)

@@ -95,11 +95,12 @@ def make_sync_round_step(model_cfg, fl: simulator.FLConfig,
     """
     so_cfg = sopt.ServerOptConfig(kind=fl.server_opt, lr=1.0)
 
-    def step(w_flat, so_state, sub, n_steps, hypers, up_mask=None):
+    def step(w_flat, so_state, sub, n_steps, hypers, up_mask=None,
+             corrupt=None):
         params = flat_lib.unravel(spec, w_flat)
         new_params, diag = simulator.fl_round(
             model_cfg, fl, params, data, p_weights, sub, n_steps,
-            sel_probs, hypers, up_mask, mesh=mesh)
+            sel_probs, hypers, up_mask, corrupt, mesh=mesh)
         if use_so:
             new_params, so_state = sopt.server_round_update(
                 so_cfg, params, so_state, new_params, hypers["server_lr"])
@@ -118,7 +119,8 @@ def make_sync_round_step(model_cfg, fl: simulator.FLConfig,
                    static_argnames=("mesh",))
 def scan_rounds(model_cfg, fl: simulator.FLConfig, spec: flat_lib.FlatSpec,
                 w0_flat, data, p_weights, keys, steps, hypers,
-                sel_probs=None, so_state0=None, up_mask=None, *, mesh=None):
+                sel_probs=None, so_state0=None, up_mask=None, corrupt=None,
+                *, mesh=None):
     """The whole-run XLA program: scan ``fl_round`` over pre-drawn inputs.
 
     Returns (final flat params, ys) where ys carries the per-round
@@ -131,7 +133,9 @@ def scan_rounds(model_cfg, fl: simulator.FLConfig, spec: flat_lib.FlatSpec,
     round applies the same jitted ``server_round_update`` the python loop
     uses.  ``up_mask`` (optional, (rounds, K) f32) is the scenario drop
     channel: each round's row forwards to ``fl_round`` as the arrived-
-    upload mask; None is the exact pre-scenario program.
+    upload mask; ``corrupt`` (optional, (rounds, K) f32) the realized
+    payload-corruption factors.  None for each is the exact pre-scenario
+    program.
     """
     # the caller encodes the use-a-server-optimizer decision in so_state0
     # (one source of truth with run_federated_compiled's predicate)
@@ -141,18 +145,21 @@ def scan_rounds(model_cfg, fl: simulator.FLConfig, spec: flat_lib.FlatSpec,
 
     def body(carry, xs):
         w_flat, so_state = carry if use_so else (carry, None)
-        if up_mask is None:
-            sub, n_steps = xs
-            um = None
-        else:
-            sub, n_steps, um = xs
+        parts = list(xs)
+        corr = parts.pop() if corrupt is not None else None
+        um = parts.pop() if up_mask is not None else None
+        sub, n_steps = parts
         w_new, so_state, extras = step(w_flat, so_state, sub, n_steps,
-                                       hypers, um)
+                                       hypers, um, corr)
         ys = {"params": w_new, **extras}
         return ((w_new, so_state) if use_so else w_new), ys
 
     carry0 = (w0_flat, so_state0) if use_so else w0_flat
-    xs = (keys, steps) if up_mask is None else (keys, steps, up_mask)
+    xs = (keys, steps)
+    if up_mask is not None:
+        xs = xs + (up_mask,)
+    if corrupt is not None:
+        xs = xs + (corrupt,)
     carry, ys = jax.lax.scan(body, carry0, xs)
     return (carry[0] if use_so else carry), ys
 
@@ -285,15 +292,17 @@ def run_federated_compiled(model_cfg, fed: FederatedData,
     with prof.phase("plan_build"):
         if sc is None:
             keys, steps = draw_round_inputs(fl, rounds, key)
-            up_mask = sc_lat = None
+            up_mask = sc_lat = corrupt = None
         else:
             # same key chain as the unmodified program; steps/mask carry
-            # the realized completeness + drop channels
-            sc_steps, sc_mask, sc_lat = simulator.scenario_round_inputs(
-                fl, rounds, sc)
+            # the realized completeness + drop channels, corrupt the
+            # payload-corruption factors (None when those channels are off)
+            sc_steps, sc_mask, sc_lat, sc_corr = \
+                simulator.scenario_round_inputs(fl, rounds, sc)
             keys = _split_chain(key, rounds)
             steps = jnp.asarray(sc_steps)
             up_mask = jnp.asarray(sc_mask)
+            corrupt = None if sc_corr is None else jnp.asarray(sc_corr)
         so_cfg = sopt.ServerOptConfig(kind=fl.server_opt, lr=1.0)
         use_so = fl.server_opt != "sgd" or fl.server_lr != 1.0
         so_state0 = sopt.init_server_state(so_cfg, params) if use_so \
@@ -302,7 +311,7 @@ def run_federated_compiled(model_cfg, fed: FederatedData,
         w_final, ys = scan_rounds(
             model_cfg, fl.timeline_config(), spec, w0, train, p, keys,
             steps, simulator.hypers_of(fl), sel_probs, so_state0, up_mask,
-            mesh=mesh)
+            corrupt, mesh=mesh)
         if fl.telemetry:
             # attribute device time honestly when profiling (jax dispatch
             # is async); the telemetry-off path never adds a barrier
@@ -347,7 +356,7 @@ def make_deadline_step(model_cfg, afl, spec: flat_lib.FlatSpec, data,
     slot pool.  ``afl`` must be the canonical ``timeline_config()``."""
     fl = afl.sync_config()
 
-    def step(w_flat, pend, xs, hypers):
+    def step(w_flat, pend, xs, hypers, corrupt=None):
         sub, ids_t, steps_t, arr_t, store_t, due_s, due_m, due_t, fast_t = xs
         params = flat_lib.unravel(spec, w_flat)
 
@@ -357,7 +366,8 @@ def make_deadline_step(model_cfg, afl, spec: flat_lib.FlatSpec, data,
         def fast_fn(params, pend):
             new, diag = simulator.fl_round(model_cfg, fl, params, data,
                                            p_weights, sub, steps_t,
-                                           sel_probs, hypers, mesh=mesh)
+                                           sel_probs, hypers, None, corrupt,
+                                           mesh=mesh)
             if fl.telemetry:
                 return flat_lib.ravel(spec, new), pend, diag["metrics"]
             return flat_lib.ravel(spec, new), pend
@@ -365,7 +375,7 @@ def make_deadline_step(model_cfg, afl, spec: flat_lib.FlatSpec, data,
         def slow_fn(params, pend):
             out = async_lib.deadline_slow_step(
                 model_cfg, afl, params, pend, data, ids_t, steps_t, arr_t,
-                store_t, due_s, due_m, due_t, hypers, mesh=mesh)
+                store_t, due_s, due_m, due_t, hypers, corrupt, mesh=mesh)
             if afl.telemetry:
                 new, pend2, m = out
                 return flat_lib.ravel(spec, new), pend2, m
@@ -382,24 +392,33 @@ def make_deadline_step(model_cfg, afl, spec: flat_lib.FlatSpec, data,
 def scan_async_deadline(model_cfg, afl, spec: flat_lib.FlatSpec, w0_flat,
                         pend0, data, p_weights, keys, ids, steps, arrived,
                         store_slot, due_slot, due_mask, due_tau, fast,
-                        hypers, sel_probs=None, *, mesh=None):
+                        hypers, sel_probs=None, corrupt=None, *, mesh=None):
     """Whole-run deadline-mode XLA program: scan ``make_deadline_step``
-    over the planned timeline, carrying the straggler pool."""
+    over the planned timeline, carrying the straggler pool.  ``corrupt``
+    (optional, (R, K) f32 — the realized payload-corruption factors)
+    forwards per round to both cond branches; None is the exact
+    pre-scenario program."""
     step = make_deadline_step(model_cfg, afl, spec, data, p_weights,
                               sel_probs, mesh)
 
     def body(carry, xs):
-        out = step(carry[0], carry[1], xs, hypers)
+        if corrupt is None:
+            corr = None
+        else:
+            *xs, corr = xs
+            xs = tuple(xs)
+        out = step(carry[0], carry[1], xs, hypers, corr)
         if afl.telemetry:
             w_new, pend, m = out
             return (w_new, pend), {"params": w_new, "metrics": m}
         w_new, pend = out
         return (w_new, pend), w_new
 
-    (w_final, _), ws = jax.lax.scan(
-        body, (w0_flat, pend0),
-        (keys, ids, steps, arrived, store_slot, due_slot, due_mask, due_tau,
-         fast))
+    xs = (keys, ids, steps, arrived, store_slot, due_slot, due_mask,
+          due_tau, fast)
+    if corrupt is not None:
+        xs = xs + (corrupt,)
+    (w_final, _), ws = jax.lax.scan(body, (w0_flat, pend0), xs)
     return w_final, ws
 
 
@@ -407,12 +426,13 @@ def make_fedbuff_step(model_cfg, afl, spec: flat_lib.FlatSpec, data, mesh):
     """One planned fedbuff flush as a flat-carry transition (shared by the
     solo scan and the vmapped sweep engine).  ``afl`` must be the
     canonical ``timeline_config()``."""
-    def step(w_flat, pend, xs, hypers, flush_mask=None):
+    def step(w_flat, pend, xs, hypers, flush_mask=None, corrupt=None):
         ids_t, steps_t, store_t, flush_t, tau_t = xs
         params = flat_lib.unravel(spec, w_flat)
         out = async_lib.fedbuff_round_step(
             model_cfg, afl, params, pend, data, ids_t, steps_t, store_t,
-            flush_t, tau_t, hypers, flush_mask=flush_mask, mesh=mesh)
+            flush_t, tau_t, hypers, flush_mask=flush_mask, corrupt=corrupt,
+            mesh=mesh)
         if afl.telemetry:
             new, pend, m = out
             return flat_lib.ravel(spec, new), pend, m
@@ -426,21 +446,21 @@ def make_fedbuff_step(model_cfg, afl, spec: flat_lib.FlatSpec, data, mesh):
                    static_argnames=("mesh",))
 def scan_async_fedbuff(model_cfg, afl, spec: flat_lib.FlatSpec, w0_flat,
                        pend0, data, ids, steps, store_slot, flush_slot, tau,
-                       hypers, flush_mask=None, *, mesh=None):
+                       hypers, flush_mask=None, corrupt=None, *, mesh=None):
     """Whole-run fedbuff XLA program: scan the shared
     ``async_engine.fedbuff_round_step`` over the planned flush schedule,
     carrying the in-flight update pool.  ``flush_mask`` (optional,
     (R, M) f32 — the scenario drop channel) excludes failed uploads from
-    each flush's aggregation; None is the exact pre-scenario program."""
+    each flush's aggregation; ``corrupt`` (optional, (R, W) f32) scales
+    each planned dispatch's stored payload.  None for each is the exact
+    pre-scenario program."""
     step = make_fedbuff_step(model_cfg, afl, spec, data, mesh)
 
     def body(carry, xs):
-        if flush_mask is None:
-            fm = None
-        else:
-            *xs, fm = xs
-            xs = tuple(xs)
-        out = step(carry[0], carry[1], xs, hypers, fm)
+        parts = list(xs)
+        corr = parts.pop() if corrupt is not None else None
+        fm = parts.pop() if flush_mask is not None else None
+        out = step(carry[0], carry[1], tuple(parts), hypers, fm, corr)
         if afl.telemetry:
             w_new, pend, m = out
             return (w_new, pend), {"params": w_new, "metrics": m}
@@ -450,6 +470,8 @@ def scan_async_fedbuff(model_cfg, afl, spec: flat_lib.FlatSpec, w0_flat,
     xs = (ids, steps, store_slot, flush_slot, tau)
     if flush_mask is not None:
         xs = xs + (flush_mask,)
+    if corrupt is not None:
+        xs = xs + (corrupt,)
     (w_final, _), ws = jax.lax.scan(body, (w0_flat, pend0), xs)
     return w_final, ws
 
@@ -523,7 +545,9 @@ def run_async_compiled(model_cfg, fed: FederatedData, afl,
                 jnp.asarray(plan.arrived, jnp.float32),
                 jnp.asarray(plan.store_slot), jnp.asarray(plan.due_slot),
                 jnp.asarray(plan.due_mask), jnp.asarray(plan.due_tau),
-                jnp.asarray(plan.fast), hypers, sel_probs, mesh=mesh)
+                jnp.asarray(plan.fast), hypers, sel_probs,
+                None if plan.corrupt is None
+                else jnp.asarray(plan.corrupt), mesh=mesh)
             if afl.telemetry:
                 jax.block_until_ready(ws)
         clocks, n_arr = plan.round_end, plan.n_arrived
@@ -538,7 +562,9 @@ def run_async_compiled(model_cfg, fed: FederatedData, afl,
             pend0 = async_lib.fedbuff_seed_pool(
                 model_cfg, afl_t, params, pend0, train,
                 jnp.asarray(plan.seed_ids), jnp.asarray(plan.seed_steps),
-                jnp.asarray(plan.seed_slots), hypers)
+                jnp.asarray(plan.seed_slots), hypers,
+                None if plan.seed_corrupt is None
+                else jnp.asarray(plan.seed_corrupt))
         with prof.phase("scan"):
             w_final, ws = scan_async_fedbuff(
                 model_cfg, afl_t, spec, w0, pend0, train,
@@ -546,7 +572,9 @@ def run_async_compiled(model_cfg, fed: FederatedData, afl,
                 jnp.asarray(plan.store_slot), jnp.asarray(plan.flush_slot),
                 jnp.asarray(plan.tau), hypers,
                 None if plan.flush_mask is None
-                else jnp.asarray(plan.flush_mask), mesh=mesh)
+                else jnp.asarray(plan.flush_mask),
+                None if plan.corrupt is None
+                else jnp.asarray(plan.corrupt), mesh=mesh)
             if afl.telemetry:
                 jax.block_until_ready(ws)
         clocks = plan.flush_clock

@@ -86,12 +86,29 @@ class FLConfig:
     # timeline_config, never sweepable); off is bit-for-bit the pre-
     # telemetry program.
     telemetry: bool = False
+    # robust aggregation (repro.kernels.guard.GuardConfig): non-finite
+    # rejection / norm clipping / score gating inside the fused flat
+    # aggregation kernel.  STATIC like `telemetry` (jit-cache-keyed,
+    # preserved by timeline_config, never sweepable); None is bit-for-bit
+    # the unguarded program.
+    guard: Optional[Any] = None
     seed: int = 0
 
     def __post_init__(self):
         assert self.algo in ALGOS, self.algo
         assert self.agg_backend in AGG_BACKENDS, self.agg_backend
         assert self.agg_dtype in AGG_DTYPES, self.agg_dtype
+        if self.guard is not None:
+            from repro.kernels.guard import as_guard
+            as_guard(self.guard)
+            if self.algo not in ("folb", "folb_het"):
+                raise ValueError(
+                    f"guard requires algo 'folb' or 'folb_het' (the guard "
+                    f"runs inside the fused FOLB kernel), got {self.algo!r}")
+            if self.agg_backend != "flat":
+                raise ValueError(
+                    "guard requires agg_backend='flat' — the defenses are "
+                    "streaming passes over the flat (K, D) buffers")
 
     def timeline_config(self) -> "FLConfig":
         """The jit-cache key: this config with every SWEEPABLE field
@@ -126,10 +143,12 @@ def local_step_draws(t: int, k: int, cfg) -> jnp.ndarray:
 def scenario_round_inputs(fl, rounds: int, scenario):
     """Realize an ACTIVE scenario over a sync schedule: the per-round
     step draws with the completeness channel applied, the f32 upload
-    mask (0.0 = transmission failed), and the per-dispatch latency
-    multiplier (None when jitter is off).  Shared by the python loop and
-    the scan engine so both replay the identical realization.
-    Returns (steps (R, K) int32, up_mask (R, K) f32, lat_scale or None).
+    mask (0.0 = transmission failed), the per-dispatch latency
+    multiplier (None when jitter is off), and the per-dispatch payload
+    corruption factor (None when every payload channel is off).  Shared
+    by the python loop and the scan engine so both replay the identical
+    realization.  Returns (steps (R, K) int32, up_mask (R, K) f32,
+    lat_scale or None, corrupt (R, K) f32 or None).
     """
     from repro.sysmodel import scenario as scenario_mod
     base = np.stack([np.asarray(local_step_draws(t, fl.n_selected, fl))
@@ -137,7 +156,7 @@ def scenario_round_inputs(fl, rounds: int, scenario):
     g = scenario_mod.realize(scenario, (rounds, fl.n_selected))
     steps = scenario_mod.scale_steps(base, g.comp)
     up_mask = (~g.drop).astype(np.float32)
-    return steps, up_mask, g.lat_scale
+    return steps, up_mask, g.lat_scale, g.corrupt
 
 
 def _client_batch(data, ids):
@@ -178,6 +197,23 @@ def _local_updates(model_cfg, params, data, ids, n_steps, fl: FLConfig,
     return jax.vmap(one)(batch["x"], batch["y"], batch["mask"], n_steps)
 
 
+def apply_corruption(deltas, grads, corrupt):
+    """Scenario payload corruption: multiply every leaf of device k's
+    delta AND gradient by the per-dispatch factor ``corrupt[k]`` (NaN,
+    ±scale_mag, −1, or exactly 1.0 for benign payloads — a float multiply
+    by 1.0 is bit-exact, so benign rows are unchanged).  ``corrupt=None``
+    keeps the traced program identical to the pre-corruption one.  Shared
+    by every engine so loop and scan corrupt identically."""
+    if corrupt is None:
+        return deltas, grads
+
+    def mul(x):
+        c = corrupt.reshape((-1,) + (1,) * (x.ndim - 1))
+        return x * c.astype(x.dtype)
+
+    return jax.tree.map(mul, deltas), jax.tree.map(mul, grads)
+
+
 def _mask_guard(new, params, up_mask):
     """All-uploads-failed guard for the masked pytree rules: keep the old
     parameters bit-for-bit when every selected upload dropped (mirrors
@@ -190,7 +226,8 @@ def _mask_guard(new, params, up_mask):
 @functools.partial(jax.jit, static_argnums=(0, 1),
                    static_argnames=("mesh",))
 def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps,
-             sel_probs=None, hypers=None, up_mask=None, *, mesh=None):
+             sel_probs=None, hypers=None, up_mask=None, corrupt=None, *,
+             mesh=None):
     """One communication round.  Returns (new_params, diagnostics).
 
     ``sel_probs`` overrides the uniform selection distribution (e.g. the
@@ -207,6 +244,14 @@ def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps,
     were waited for — the wall-clock is plan-side) but are excluded from
     aggregation via each rule's staleness-mask form at τ = 0, α = 0, so
     ``up_mask=None`` leaves the traced program exactly as before.
+
+    ``corrupt`` is the scenario payload-corruption channel: a traced (K,)
+    f32 factor (NaN / ±scale_mag / −1, exactly 1.0 when benign) applied
+    multiplicatively to each device's uploaded delta and gradient.  With
+    ``fl.guard`` set (static GuardConfig; folb/folb_het + flat backend
+    only) the fused aggregation kernel rejects non-finite rows, clips
+    inflated norms, and gates outlier scores; the diagnostics then carry
+    the guard's post-rejection info dict under ``diag["guard"]``.
     """
     h = hypers if hypers is not None else hypers_of(fl)
     k_sel, k_sel2 = jax.random.split(key)
@@ -228,6 +273,7 @@ def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps,
         ids = selection.sample_multiset(k_sel, probs, K)
         deltas, grads, gammas = _local_updates(
             model_cfg, params, data, ids, n_steps, fl, h)
+        deltas, grads = apply_corruption(deltas, grads, corrupt)
         if fl.algo == "fednu_signed":
             new = aggregation.signed_aggregate(params, deltas, grads, gg,
                                                mask=up_mask)
@@ -251,6 +297,7 @@ def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps,
     ids = selection.sample_multiset(k_sel, probs, K)
     deltas, grads, gammas = _local_updates(
         model_cfg, params, data, ids, n_steps, fl, h)
+    deltas, grads = apply_corruption(deltas, grads, corrupt)
 
     if fl.algo in ("fedavg", "fedprox"):
         if up_mask is None:
@@ -265,7 +312,19 @@ def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps,
         # fused Pallas aggregation (2 streaming passes instead of ~2K
         # leafwise reductions), D-sharded when a mesh is given
         pg = h["psi"] * gammas if fl.algo == "folb_het" else None
-        if up_mask is None:
+        if fl.guard is not None:
+            if up_mask is None:
+                new, _, ginfo = ops.folb_aggregate_tree(
+                    params, deltas, grads, psi_gammas=pg,
+                    buf_dtype=jnp.dtype(fl.agg_dtype), mesh=mesh,
+                    guard=fl.guard)
+            else:
+                new, _, ginfo = ops.folb_staleness_slots_tree(
+                    params, deltas, grads, up_mask, tau0, alpha=0.0,
+                    psi_gammas=pg, buf_dtype=jnp.dtype(fl.agg_dtype),
+                    mesh=mesh, guard=fl.guard)
+            diag["guard"] = ginfo
+        elif up_mask is None:
             new, _ = ops.folb_aggregate_tree(
                 params, deltas, grads, psi_gammas=pg,
                 buf_dtype=jnp.dtype(fl.agg_dtype), mesh=mesh)
@@ -314,7 +373,7 @@ def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps,
         from repro.telemetry import metrics as tmetrics
         diag["metrics"] = tmetrics.metrics_for_algo(
             fl.algo, params, new, deltas, grads, psi=h["psi"],
-            gammas=gammas, mask=up_mask)
+            gammas=gammas, mask=up_mask, guard=diag.get("guard"))
     return new, diag
 
 
@@ -444,7 +503,9 @@ def run_federated(model_cfg, fed: FederatedData, fl: FLConfig, rounds: int,
     ``scenario`` (`repro.sysmodel.ScenarioConfig`) activates the seeded
     failure channels: drop masks uploads out of aggregation (the fleet
     clock still waits — and charges bytes — for them), completeness
-    rescales the local-step draws, jitter multiplies latencies.  Dropout
+    rescales the local-step draws, jitter multiplies latencies, and the
+    payload channels (nan/scale/flip) corrupt arrived updates before
+    aggregation (pair with ``fl.guard`` for the robust kernel).  Dropout
     is rejected (the sync barrier would wait forever).  A null/None
     scenario is bit-for-bit the scenario-free program.
     """
@@ -454,10 +515,11 @@ def run_federated(model_cfg, fed: FederatedData, fl: FLConfig, rounds: int,
     with prof.phase("setup"):
         from repro.sysmodel import scenario as scenario_mod
         sc = scenario_mod.as_active(scenario)
-        sc_steps = sc_mask = sc_lat = None
+        sc_steps = sc_mask = sc_lat = sc_corr = None
         if sc is not None:
             scenario_mod.check_sync(sc)
-            sc_steps, sc_mask, sc_lat = scenario_round_inputs(fl, rounds, sc)
+            sc_steps, sc_mask, sc_lat, sc_corr = scenario_round_inputs(
+                fl, rounds, sc)
         key = init_key if init_key is not None \
             else jax.random.PRNGKey(fl.seed)
         params = small.init_small(model_cfg, key)
@@ -493,14 +555,16 @@ def run_federated(model_cfg, fed: FederatedData, fl: FLConfig, rounds: int,
         with prof.phase("rounds"):
             if sc is None:
                 n_steps = local_step_draws(t, fl.n_selected, fl)
-                up_mask = None
+                up_mask = corrupt = None
             else:
                 n_steps = jnp.asarray(sc_steps[t])
                 up_mask = jnp.asarray(sc_mask[t])
+                corrupt = None if sc_corr is None \
+                    else jnp.asarray(sc_corr[t])
             key, sub = jax.random.split(key)
             new_params, diag = fl_round(model_cfg, fl_t, params, train, p,
                                         sub, n_steps, sel_probs, hypers,
-                                        up_mask, mesh=mesh)
+                                        up_mask, corrupt, mesh=mesh)
             ids_all.append(diag["ids"])
             if fl.telemetry:
                 mlist.append(diag["metrics"])

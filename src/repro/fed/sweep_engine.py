@@ -176,7 +176,8 @@ class SweepResult:
                    static_argnames=("mesh",))
 def sweep_scan_rounds(model_cfg, fl, spec: flat_lib.FlatSpec, w0_S, data,
                       p_weights, keys, steps, hypers_S, sel_probs=None,
-                      so_state0_S=None, up_mask=None, *, mesh=None):
+                      so_state0_S=None, up_mask=None, corrupt=None,
+                      *, mesh=None):
     """The whole-sweep XLA program: one ``lax.scan`` over rounds whose
     body vmaps the SAME per-round step the solo scan uses
     (``scan_engine.make_sync_round_step``) over the stacked (S, D) carry
@@ -199,15 +200,15 @@ def sweep_scan_rounds(model_cfg, fl, spec: flat_lib.FlatSpec, w0_S, data,
 
     def body(carry, xs):
         w_S, so_S = carry if use_so else (carry, None)
-        if up_mask is None:
-            sub, n_steps = xs
-            um = None
-        else:
-            # the scenario mask is timeline-shared: one row per round,
-            # closed over unbatched so every member drops the same uploads
-            sub, n_steps, um = xs
+        # the scenario mask/corruption rows are timeline-shared: one row
+        # per round, closed over unbatched so every member drops (and
+        # corrupts) the same uploads
+        parts = list(xs)
+        corr = parts.pop() if corrupt is not None else None
+        um = parts.pop() if up_mask is not None else None
+        sub, n_steps = parts
         vstep = jax.vmap(
-            lambda w, so, h: step(w, so, sub, n_steps, h, um),
+            lambda w, so, h: step(w, so, sub, n_steps, h, um, corr),
             in_axes=(0, 0 if use_so else None, 0),
             out_axes=(0, 0 if use_so else None, extras_axes))
         w_new, so_S, extras = vstep(w_S, so_S, hypers_S)
@@ -215,7 +216,11 @@ def sweep_scan_rounds(model_cfg, fl, spec: flat_lib.FlatSpec, w0_S, data,
         return ((w_new, so_S) if use_so else w_new), ys
 
     carry0 = (w0_S, so_state0_S) if use_so else w0_S
-    xs = (keys, steps) if up_mask is None else (keys, steps, up_mask)
+    xs = (keys, steps)
+    if up_mask is not None:
+        xs = xs + (up_mask,)
+    if corrupt is not None:
+        xs = xs + (corrupt,)
     carry, ys = jax.lax.scan(body, carry0, xs)
     return (carry[0] if use_so else carry), ys
 
@@ -265,13 +270,14 @@ def run_sweep_compiled(model_cfg, fed: FederatedData, spec: SweepSpec,
     with prof.phase("plan_build"):
         if sc is None:
             keys, steps = scan_engine.draw_round_inputs(base, rounds, key)
-            up_mask = sc_lat = None
+            up_mask = sc_lat = corrupt = None
         else:
-            sc_steps, sc_mask, sc_lat = simulator.scenario_round_inputs(
-                base, rounds, sc)
+            sc_steps, sc_mask, sc_lat, sc_corr = \
+                simulator.scenario_round_inputs(base, rounds, sc)
             keys = scan_engine._split_chain(key, rounds)
             steps = jnp.asarray(sc_steps)
             up_mask = jnp.asarray(sc_mask)
+            corrupt = None if sc_corr is None else jnp.asarray(sc_corr)
         # uniform across members (SweepSpec validates), so member 0
         # decides — the same predicate each member's solo run applies
         use_so = _uses_server_opt(spec.member(0))
@@ -285,7 +291,7 @@ def run_sweep_compiled(model_cfg, fed: FederatedData, spec: SweepSpec,
         w_final_S, ys = sweep_scan_rounds(
             model_cfg, base.timeline_config(), fspec, w0_S, train, p, keys,
             steps, spec.stacked_hypers(), sel_probs, so_state0_S, up_mask,
-            mesh=mesh)
+            corrupt, mesh=mesh)
         if base.telemetry:
             jax.block_until_ready(ys)
 
@@ -335,28 +341,38 @@ def run_sweep_compiled(model_cfg, fed: FederatedData, spec: SweepSpec,
 def sweep_scan_deadline(model_cfg, afl, spec: flat_lib.FlatSpec, w0_S,
                         pend0_S, data, p_weights, keys, ids, steps, arrived,
                         store_slot, due_slot, due_mask, due_tau, fast,
-                        hypers_S, sel_probs=None, *, mesh=None):
+                        hypers_S, sel_probs=None, corrupt=None,
+                        *, mesh=None):
     """Whole-sweep deadline program: scan over the ONE shared event plan,
     vmapping ``scan_engine.make_deadline_step`` over the stacked carries
-    (flat params + per-member straggler pools) and hypers."""
+    (flat params + per-member straggler pools) and hypers.  ``corrupt``
+    ((R, K) f32 payload factors) is timeline-shared: the per-round row is
+    closed over unbatched so every member corrupts the same uploads."""
     step = scan_engine.make_deadline_step(model_cfg, afl, spec, data,
                                           p_weights, sel_probs, mesh)
 
     def body(carry, xs):
         w_S, pend_S = carry
+        if corrupt is None:
+            corr = None
+        else:
+            *xs, corr = xs
+            xs = tuple(xs)
         if afl.telemetry:
             w_new, pend_S, m = jax.vmap(
-                lambda w, pend, h: step(w, pend, xs, h))(w_S, pend_S,
-                                                         hypers_S)
+                lambda w, pend, h: step(w, pend, xs, h, corr))(w_S, pend_S,
+                                                               hypers_S)
             return (w_new, pend_S), {"params": w_new, "metrics": m}
         w_new, pend_S = jax.vmap(
-            lambda w, pend, h: step(w, pend, xs, h))(w_S, pend_S, hypers_S)
+            lambda w, pend, h: step(w, pend, xs, h, corr))(w_S, pend_S,
+                                                           hypers_S)
         return (w_new, pend_S), w_new
 
-    (w_final, _), ws = jax.lax.scan(
-        body, (w0_S, pend0_S),
-        (keys, ids, steps, arrived, store_slot, due_slot, due_mask, due_tau,
-         fast))
+    xs = (keys, ids, steps, arrived, store_slot, due_slot, due_mask,
+          due_tau, fast)
+    if corrupt is not None:
+        xs = xs + (corrupt,)
+    (w_final, _), ws = jax.lax.scan(body, (w0_S, pend0_S), xs)
     return w_final, ws
 
 
@@ -364,35 +380,38 @@ def sweep_scan_deadline(model_cfg, afl, spec: flat_lib.FlatSpec, w0_S,
                    static_argnames=("mesh",))
 def sweep_scan_fedbuff(model_cfg, afl, spec: flat_lib.FlatSpec, w0_S,
                        pend0_S, data, ids, steps, store_slot, flush_slot,
-                       tau, hypers_S, flush_mask=None, *, mesh=None):
+                       tau, hypers_S, flush_mask=None, corrupt=None,
+                       *, mesh=None):
     """Whole-sweep fedbuff program: scan the shared flush schedule,
     vmapping ``scan_engine.make_fedbuff_step`` over the stacked carries
     (flat params + per-member in-flight pools) and hypers.
-    ``flush_mask`` ((R, M) f32, the scenario drop channel) is timeline-
-    shared: the per-round row is closed over unbatched so every member
-    drops the same uploads."""
+    ``flush_mask`` ((R, M) f32, the scenario drop channel) and ``corrupt``
+    ((R, W) f32 payload factors) are timeline-shared: the per-round rows
+    are closed over unbatched so every member drops/corrupts the same
+    uploads."""
     step = scan_engine.make_fedbuff_step(model_cfg, afl, spec, data, mesh)
 
     def body(carry, xs):
         w_S, pend_S = carry
-        if flush_mask is None:
-            fm = None
-        else:
-            *xs, fm = xs
-            xs = tuple(xs)
+        parts = list(xs)
+        corr = parts.pop() if corrupt is not None else None
+        fm = parts.pop() if flush_mask is not None else None
+        xs = tuple(parts)
         if afl.telemetry:
             w_new, pend_S, m = jax.vmap(
-                lambda w, pend, h: step(w, pend, xs, h, fm))(w_S, pend_S,
-                                                             hypers_S)
+                lambda w, pend, h: step(w, pend, xs, h, fm, corr))(
+                    w_S, pend_S, hypers_S)
             return (w_new, pend_S), {"params": w_new, "metrics": m}
         w_new, pend_S = jax.vmap(
-            lambda w, pend, h: step(w, pend, xs, h, fm))(w_S, pend_S,
-                                                         hypers_S)
+            lambda w, pend, h: step(w, pend, xs, h, fm, corr))(w_S, pend_S,
+                                                               hypers_S)
         return (w_new, pend_S), w_new
 
     xs = (ids, steps, store_slot, flush_slot, tau)
     if flush_mask is not None:
         xs = xs + (flush_mask,)
+    if corrupt is not None:
+        xs = xs + (corrupt,)
     (w_final, _), ws = jax.lax.scan(body, (w0_S, pend0_S), xs)
     return w_final, ws
 
@@ -465,7 +484,9 @@ def run_async_sweep_compiled(model_cfg, fed: FederatedData,
                 jnp.asarray(plan.arrived, jnp.float32),
                 jnp.asarray(plan.store_slot), jnp.asarray(plan.due_slot),
                 jnp.asarray(plan.due_mask), jnp.asarray(plan.due_tau),
-                jnp.asarray(plan.fast), hypers_S, sel_probs, mesh=mesh)
+                jnp.asarray(plan.fast), hypers_S, sel_probs,
+                None if plan.corrupt is None
+                else jnp.asarray(plan.corrupt), mesh=mesh)
             if base.telemetry:
                 jax.block_until_ready(ws)
         clocks, n_arr = plan.round_end, plan.n_arrived
@@ -479,11 +500,14 @@ def run_async_sweep_compiled(model_cfg, fed: FederatedData,
                                         plan.n_slots)
             # the seed dispatches all start from the SAME initial params
             # but member-specific lr/mu: vmap the shared jitted seeding step
+            seed_corr = (None if plan.seed_corrupt is None
+                         else jnp.asarray(plan.seed_corrupt))
             pend0_S = jax.vmap(
                 lambda pend, h: async_lib.fedbuff_seed_pool(
                     model_cfg, afl_t, params, pend, train,
                     jnp.asarray(plan.seed_ids), jnp.asarray(plan.seed_steps),
-                    jnp.asarray(plan.seed_slots), h))(bcast(pend0), hypers_S)
+                    jnp.asarray(plan.seed_slots), h,
+                    seed_corr))(bcast(pend0), hypers_S)
         with prof.phase("scan"):
             w_final_S, ws = sweep_scan_fedbuff(
                 model_cfg, afl_t, fspec, w0_S, pend0_S, train,
@@ -491,7 +515,9 @@ def run_async_sweep_compiled(model_cfg, fed: FederatedData,
                 jnp.asarray(plan.store_slot), jnp.asarray(plan.flush_slot),
                 jnp.asarray(plan.tau), hypers_S,
                 None if plan.flush_mask is None
-                else jnp.asarray(plan.flush_mask), mesh=mesh)
+                else jnp.asarray(plan.flush_mask),
+                None if plan.corrupt is None
+                else jnp.asarray(plan.corrupt), mesh=mesh)
             if base.telemetry:
                 jax.block_until_ready(ws)
         clocks = plan.flush_clock

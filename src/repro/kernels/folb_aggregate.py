@@ -80,6 +80,27 @@ def _apply_kernel(w_ref, deltas_ref, weights_ref, out_ref):
                     + upd[None, :]).astype(out_ref.dtype)
 
 
+def _guard_stats_kernel(deltas_ref, grads_ref, norm_ref, fin_ref):
+    """One D-tile of the guard's streaming stats pass: per-row delta
+    sqnorm accumulation plus a per-row finite flag (min-accumulated, so
+    one bad tile poisons the row's flag but never the accumulators —
+    non-finite lanes are zeroed before the square)."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        norm_ref[...] = jnp.zeros_like(norm_ref)
+        fin_ref[...] = jnp.ones_like(fin_ref)
+
+    d = deltas_ref[...].astype(jnp.float32)       # (K, TILE)
+    g = grads_ref[...].astype(jnp.float32)        # (K, TILE)
+    fin_t = (jnp.all(jnp.isfinite(d), axis=1, keepdims=True)
+             & jnp.all(jnp.isfinite(g), axis=1, keepdims=True))
+    fin_ref[...] = jnp.minimum(fin_ref[...], fin_t.astype(jnp.float32))
+    d2 = jnp.where(jnp.isfinite(d), d, 0.0)
+    norm_ref[...] += jnp.sum(d2 * d2, axis=1, keepdims=True)
+
+
 def folb_scores(grads: jnp.ndarray, g1: jnp.ndarray,
                 interpret: bool = False) -> jnp.ndarray:
     """(K, D), (D,) -> (K,) inner products, single HBM pass.
@@ -138,6 +159,53 @@ def folb_apply(w: jnp.ndarray, deltas: jnp.ndarray, weights: jnp.ndarray,
     return out[0]
 
 
+def guard_stats(deltas: jnp.ndarray, grads: jnp.ndarray,
+                interpret: bool = False
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(K, D), (K, D) -> ((K,) delta sqnorms, (K,) finite flags), one
+    fused HBM pass.  Non-finite lanes are zeroed before squaring so the
+    norm accumulator stays finite even on corrupted rows; the finite
+    flag is 1.0 iff every delta AND grad lane of the row is finite.
+    """
+    K, D = deltas.shape
+    tile = _pick_tile(D)
+    assert D % tile == 0, (D, tile)
+    if interpret and D // tile > _INTERPRET_MAX_GRID:
+        d = deltas.astype(jnp.float32)
+        g = grads.astype(jnp.float32)
+        fin = (jnp.all(jnp.isfinite(d), axis=1)
+               & jnp.all(jnp.isfinite(g), axis=1)).astype(jnp.float32)
+        d2 = jnp.where(jnp.isfinite(d), d, 0.0)
+        return jnp.sum(d2 * d2, axis=1), fin
+    norms, fin = pl.pallas_call(
+        _guard_stats_kernel,
+        grid=(D // tile,),
+        in_specs=[
+            pl.BlockSpec((K, tile), lambda i: (0, i)),
+            pl.BlockSpec((K, tile), lambda i: (0, i)),
+        ],
+        out_specs=[pl.BlockSpec((K, 1), lambda i: (0, 0)),
+                   pl.BlockSpec((K, 1), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((K, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((K, 1), jnp.float32)],
+        interpret=interpret,
+    )(deltas, grads)
+    return norms[:, 0], fin[:, 0]
+
+
+def masked_median(x: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
+    """Median of ``x`` over entries with ``m > 0`` (midpoint of the two
+    central order statistics); 0.0 on an empty set.  ``x`` must be
+    finite and non-negative where masked-in (|scores|, norms)."""
+    K = x.shape[0]
+    s = jnp.sort(jnp.where(m > 0.0, x, jnp.inf))
+    n = jnp.sum((m > 0.0).astype(jnp.int32))
+    lo = jnp.clip((n - 1) // 2, 0, K - 1)
+    hi = jnp.clip(n // 2, 0, K - 1)
+    med = 0.5 * (s[lo] + s[hi])
+    return jnp.where(n > 0, med, 0.0)
+
+
 def folb_aggregate(w: jnp.ndarray, deltas: jnp.ndarray, grads: jnp.ndarray,
                    g1: jnp.ndarray, psi_gamma: jnp.ndarray,
                    g1_sq: jnp.ndarray, interpret: bool = False
@@ -173,6 +241,83 @@ def folb_aggregate_stale(w: jnp.ndarray, deltas: jnp.ndarray,
     denom = jnp.maximum(jnp.sum(jnp.abs(scores)), 1e-30)
     new_w = folb_apply(w, deltas, scores / denom, interpret=interpret)
     return new_w, scores
+
+
+# ------------------------------------------------------------ guarded path
+
+def _guard_algebra(inner, g1_sq, norms_sq, finite, m_in, tau, alpha,
+                   psi_gamma, guard):
+    """Shared post-stats guard algebra (K-sized scalar work, replicated
+    under sharding): scores from the globally reduced inner products,
+    score gating and norm clipping against masked medians, rejection
+    counters.  Returns (weights, scores, m0, n_nonfinite, n_clipped,
+    n_gated); ``guard`` is static so the disabled defenses trace away.
+    """
+    fin = finite if guard.nonfinite else jnp.ones_like(finite)
+    m0 = m_in * fin
+    scores = inner - psi_gamma.astype(jnp.float32) * g1_sq
+    scores = scores * jnp.power(1.0 + tau.astype(jnp.float32), -alpha) * m0
+    n_nonfinite = jnp.sum(m_in * (1.0 - finite))
+    n_gated = jnp.zeros((), jnp.float32)
+    if guard.gate_mult > 0.0:
+        med = masked_median(jnp.abs(scores), m0)
+        keep = (jnp.abs(scores) <= guard.gate_mult * med).astype(jnp.float32)
+        # a zero median means no meaningful score spread to trim against
+        keep = jnp.where(med > 0.0, keep, jnp.ones_like(keep))
+        n_gated = jnp.sum(m0 * (1.0 - keep))
+        m0 = m0 * keep
+        scores = scores * keep
+    clipf = jnp.ones_like(m0)
+    n_clipped = jnp.zeros((), jnp.float32)
+    if guard.clip_mult > 0.0:
+        norms = jnp.sqrt(norms_sq)
+        thresh = guard.clip_mult * masked_median(norms, m0)
+        do_clip = (norms > thresh) & (thresh > 0.0)
+        clipf = jnp.where(do_clip, thresh / jnp.maximum(norms, 1e-30), 1.0)
+        n_clipped = jnp.sum(m0 * do_clip.astype(jnp.float32))
+    denom = jnp.maximum(jnp.sum(jnp.abs(scores)), 1e-30)
+    weights = scores / denom * clipf
+    return weights, scores, m0, n_nonfinite, n_clipped, n_gated
+
+
+def _scrub(x: jnp.ndarray) -> jnp.ndarray:
+    """Zero non-finite lanes so no downstream reduction ever sees them
+    (0·NaN would otherwise break the masked-row exact-cancellation
+    contract).  Elementwise — whole-row rejection is the mask's job."""
+    return jnp.where(jnp.isfinite(x), x, jnp.zeros((), x.dtype))
+
+
+def folb_aggregate_stale_guarded(w: jnp.ndarray, deltas: jnp.ndarray,
+                                 grads: jnp.ndarray, tau: jnp.ndarray,
+                                 alpha: jnp.ndarray, psi_gamma: jnp.ndarray,
+                                 mask: jnp.ndarray, guard,
+                                 interpret: bool = False):
+    """Guarded staleness FOLB: ``folb_aggregate_stale`` plus the update-
+    validation defenses of ``kernels.guard.GuardConfig`` (static).
+
+    Adds one streaming stats pass (per-row delta sqnorms + finite flags)
+    ahead of the two aggregation phases; rejected rows leave the masked
+    set exactly like deadline-cut ones, and an all-rejected aggregation
+    returns ``w`` bit-exact.  Returns ``(new_w, scores, ginfo)`` with
+    ginfo = {mask, n_nonfinite, n_clipped, n_gated} (post-guard mask).
+    Matches ``kernels.guard.reference_guard`` on the weight algebra.
+    """
+    m_in = mask.astype(jnp.float32)
+    norms_sq, finite = guard_stats(deltas, grads, interpret=interpret)
+    fin = finite if guard.nonfinite else jnp.ones_like(finite)
+    m0 = m_in * fin
+    g_clean = _scrub(grads)
+    d_clean = _scrub(deltas)
+    n = jnp.maximum(jnp.sum(m0), 1.0)
+    g1 = jnp.tensordot(m0, g_clean.astype(jnp.float32), axes=1) / n
+    g1_sq = jnp.sum(g1 * g1)
+    inner = folb_scores(g_clean, g1, interpret=interpret)
+    weights, scores, m0, nf, nc, ng = _guard_algebra(
+        inner, g1_sq, norms_sq, finite, m_in, tau, alpha, psi_gamma, guard)
+    new_w = folb_apply(w, d_clean, weights, interpret=interpret)
+    new_w = jnp.where(jnp.sum(m0) > 0.0, new_w, w)
+    ginfo = {"mask": m0, "n_nonfinite": nf, "n_clipped": nc, "n_gated": ng}
+    return new_w, scores, ginfo
 
 
 # ------------------------------------------------------------ D-sharded path
@@ -252,3 +397,60 @@ def folb_aggregate_stale_sharded(w: jnp.ndarray, deltas: jnp.ndarray,
                    out_specs=(P(axis), P(None)),
                    check_rep=False)
     return fn(w, deltas, grads, tau, alpha, psi_gamma, mask)
+
+
+def folb_aggregate_stale_guarded_sharded(w: jnp.ndarray, deltas: jnp.ndarray,
+                                         grads: jnp.ndarray,
+                                         tau: jnp.ndarray, alpha: jnp.ndarray,
+                                         psi_gamma: jnp.ndarray,
+                                         mask: jnp.ndarray, guard, mesh,
+                                         axis: str = "d",
+                                         interpret: bool = False):
+    """D-sharded ``folb_aggregate_stale_guarded``.
+
+    The guard needs one extra collective: a row that is non-finite in
+    ANY shard must be scrubbed from EVERY shard's g1 slice, so the
+    finite flags (as per-shard non-finite counts) and the per-shard
+    partial delta sqnorms ride a (2K,)-sized psum BEFORE g1, then the
+    inner products take the existing (K+1,)-sized psum.  The guard
+    algebra between psum B and the apply sweep is replicated K-sized
+    scalar work, identical to the single-device path — bit-identical on
+    a 1-shard mesh.
+    """
+    K, D = grads.shape
+    assert D % shard_alignment(mesh, axis) == 0, (D, dict(mesh.shape))
+
+    def body(w_l, d_l, g_l, tau_, alpha_, pg, mask_):
+        m_in = mask_.astype(jnp.float32)
+        norms_l, fin_l = guard_stats(d_l, g_l, interpret=interpret)
+        partA = jnp.concatenate([1.0 - fin_l, norms_l])
+        totA = jax.lax.psum(partA, axis)
+        finite = (totA[:K] == 0.0).astype(jnp.float32)
+        norms_sq = totA[K:]
+        fin = finite if guard.nonfinite else jnp.ones_like(finite)
+        m0 = m_in * fin
+        g_clean = _scrub(g_l)
+        d_clean = _scrub(d_l)
+        n = jnp.maximum(jnp.sum(m0), 1.0)
+        g1_l = jnp.tensordot(m0, g_clean.astype(jnp.float32), axes=1) / n
+        partB = jnp.concatenate(
+            [folb_scores(g_clean, g1_l, interpret=interpret),
+             jnp.sum(g1_l * g1_l)[None]])
+        totB = jax.lax.psum(partB, axis)
+        inner, g1_sq = totB[:-1], totB[-1]
+        weights, scores, m0, nf, nc, ng = _guard_algebra(
+            inner, g1_sq, norms_sq, finite, m_in, tau_, alpha_, pg, guard)
+        new_w_l = folb_apply(w_l, d_clean, weights, interpret=interpret)
+        new_w_l = jnp.where(jnp.sum(m0) > 0.0, new_w_l, w_l)
+        return new_w_l, scores, m0, jnp.stack([nf, nc, ng])
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(axis), P(None, axis), P(None, axis),
+                             P(None), P(), P(None), P(None)),
+                   out_specs=(P(axis), P(None), P(None), P(None)),
+                   check_rep=False)
+    new_w, scores, m0, counters = fn(w, deltas, grads, tau, alpha,
+                                     psi_gamma, mask)
+    ginfo = {"mask": m0, "n_nonfinite": counters[0],
+             "n_clipped": counters[1], "n_gated": counters[2]}
+    return new_w, scores, ginfo

@@ -58,19 +58,29 @@ def slstm_scan(xg, r, n_heads: int, chunk: int = 256):
                              interpret=INTERPRET)
 
 
-@functools.partial(jax.jit, static_argnames=("mesh",))
-def folb_aggregate_buffers(w, deltas, grads, psi_gamma=None, mesh=None
-                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+@functools.partial(jax.jit, static_argnames=("mesh", "guard"))
+def folb_aggregate_buffers(w, deltas, grads, psi_gamma=None, mesh=None,
+                           guard=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Single-set FOLB on flat buffers; ``mesh`` (static) shards D.
 
     w: (D,) fp32; deltas/grads: (K, D) fp32 or bf16; psi_gamma: (K,) or
     None.  Matches ``kernels.ref.folb_aggregate_ref`` up to reduction
     order; on a 1-shard mesh the sharded path is bit-identical to
     ``mesh=None``.
+
+    ``guard`` (static ``kernels.guard.GuardConfig`` or None) switches to
+    the guarded kernel — the plain rule is its τ = 0, full-mask special
+    case — and the return grows a third ``ginfo`` element (post-guard
+    mask + rejection counters).  ``guard=None`` is the exact pre-guard
+    program.
     """
     K = grads.shape[0]
     pg = (jnp.zeros((K,), jnp.float32) if psi_gamma is None
           else psi_gamma.astype(jnp.float32))
+    if guard is not None:
+        return folb_staleness_buffers(
+            w, deltas, grads, jnp.zeros((K,), jnp.float32),
+            jnp.zeros((), jnp.float32), psi_gamma=pg, mesh=mesh, guard=guard)
     if mesh is not None:
         return _folb.folb_aggregate_sharded(w, deltas, grads, pg, mesh,
                                             interpret=INTERPRET)
@@ -80,18 +90,30 @@ def folb_aggregate_buffers(w, deltas, grads, psi_gamma=None, mesh=None
                                 interpret=INTERPRET)
 
 
-@functools.partial(jax.jit, static_argnames=("mesh",))
+@functools.partial(jax.jit, static_argnames=("mesh", "guard"))
 def folb_staleness_buffers(w, deltas, grads, tau, alpha, psi_gamma=None,
-                           mask=None, mesh=None
+                           mask=None, mesh=None, guard=None
                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Staleness-discounted flat FOLB (masked g1, (1+τ)^{−α} scores);
-    matches core.aggregation.folb_staleness on the flattened problem."""
+    matches core.aggregation.folb_staleness on the flattened problem.
+
+    ``guard`` (static) selects the guarded kernel and adds a third
+    ``ginfo`` return element; see ``folb_aggregate_buffers``.
+    """
     K = grads.shape[0]
     pg = (jnp.zeros((K,), jnp.float32) if psi_gamma is None
           else psi_gamma.astype(jnp.float32))
     m = jnp.ones((K,), jnp.float32) if mask is None else mask
     tau = tau.astype(jnp.float32)
     alpha = jnp.asarray(alpha, jnp.float32)
+    if guard is not None:
+        if mesh is not None:
+            return _folb.folb_aggregate_stale_guarded_sharded(
+                w, deltas, grads, tau, alpha, pg, m, guard, mesh,
+                interpret=INTERPRET)
+        return _folb.folb_aggregate_stale_guarded(
+            w, deltas, grads, tau, alpha, pg, m, guard,
+            interpret=INTERPRET)
     if mesh is not None:
         return _folb.folb_aggregate_stale_sharded(
             w, deltas, grads, tau, alpha, pg, m, mesh, interpret=INTERPRET)
@@ -116,15 +138,20 @@ def _ravel_problem(params, deltas_stacked, grads_stacked, buf_dtype, mesh):
 
 def folb_aggregate_tree(params, deltas_stacked, grads_stacked,
                         psi_gammas=None, buf_dtype=DEFAULT_BUF_DTYPE,
-                        mesh=None) -> Tuple:
+                        mesh=None, guard=None) -> Tuple:
     """Pytree front-end: ravel the pytrees into flat (K, D) buffers (bf16
     by default, padding D to the kernel tile / shard boundary), run the
     fused — optionally D-sharded — kernel, unravel.  Matches
     repro.core.aggregation.folb_single_set / folb_het to the buffer
-    dtype's rounding."""
+    dtype's rounding.  With ``guard`` (static) the return grows a third
+    ``ginfo`` element; ``guard=None`` is the exact pre-guard program."""
     from repro.core import flat as flat_lib
     spec, w, deltas, grads = _ravel_problem(
         params, deltas_stacked, grads_stacked, buf_dtype, mesh)
+    if guard is not None:
+        new_flat, scores, ginfo = folb_aggregate_buffers(
+            w, deltas, grads, psi_gamma=psi_gammas, mesh=mesh, guard=guard)
+        return flat_lib.unravel(spec, new_flat), scores, ginfo
     new_flat, scores = folb_aggregate_buffers(w, deltas, grads,
                                               psi_gamma=psi_gammas,
                                               mesh=mesh)
@@ -133,12 +160,20 @@ def folb_aggregate_tree(params, deltas_stacked, grads_stacked,
 
 def folb_staleness_tree(params, deltas_stacked, grads_stacked, tau,
                         alpha: float = 0.0, psi_gammas=None, mask=None,
-                        buf_dtype=DEFAULT_BUF_DTYPE, mesh=None) -> Tuple:
+                        buf_dtype=DEFAULT_BUF_DTYPE, mesh=None,
+                        guard=None) -> Tuple:
     """Pytree front-end for the staleness rule (async engines): ravel, run
-    the fused kernel, unravel.  Matches core.aggregation.folb_staleness."""
+    the fused kernel, unravel.  Matches core.aggregation.folb_staleness.
+    With ``guard`` (static) the return grows a third ``ginfo`` element."""
     from repro.core import flat as flat_lib
     spec, w, deltas, grads = _ravel_problem(
         params, deltas_stacked, grads_stacked, buf_dtype, mesh)
+    if guard is not None:
+        new_flat, scores, ginfo = folb_staleness_buffers(
+            w, deltas, grads, tau.astype(jnp.float32),
+            jnp.asarray(alpha, jnp.float32), psi_gamma=psi_gammas,
+            mask=mask, mesh=mesh, guard=guard)
+        return flat_lib.unravel(spec, new_flat), scores, ginfo
     new_flat, scores = folb_staleness_buffers(
         w, deltas, grads, tau.astype(jnp.float32),
         jnp.asarray(alpha, jnp.float32), psi_gamma=psi_gammas, mask=mask,
@@ -148,8 +183,8 @@ def folb_staleness_tree(params, deltas_stacked, grads_stacked, tau,
 
 def folb_staleness_slots_tree(params, deltas_slots, grads_slots, slot_mask,
                               slot_tau, alpha: float = 0.0, psi_gammas=None,
-                              buf_dtype=DEFAULT_BUF_DTYPE, mesh=None
-                              ) -> Tuple:
+                              buf_dtype=DEFAULT_BUF_DTYPE, mesh=None,
+                              guard=None) -> Tuple:
     """Fixed-budget masked-slot stale aggregation (compiled async engines).
 
     The stacked client axis here is a *static slot budget* (K dispatched
@@ -164,10 +199,21 @@ def folb_staleness_slots_tree(params, deltas_slots, grads_slots, slot_mask,
       * an all-masked budget (a deadline round where nothing arrived)
         returns ``params`` unchanged, bit-exact — not ``params + 0.0``,
         which would flip negative zeros.
+
+    With ``guard`` (static) the guarded kernel extends the same contract
+    to *rejected* slots — its all-rejected return is handled inside the
+    kernel against the POST-guard mask — and the return grows a third
+    ``ginfo`` element.
     """
     from repro.core import flat as flat_lib
     spec, w, deltas, grads = _ravel_problem(
         params, deltas_slots, grads_slots, buf_dtype, mesh)
+    if guard is not None:
+        new_flat, scores, ginfo = folb_staleness_buffers(
+            w, deltas, grads, slot_tau.astype(jnp.float32),
+            jnp.asarray(alpha, jnp.float32), psi_gamma=psi_gammas,
+            mask=slot_mask, mesh=mesh, guard=guard)
+        return flat_lib.unravel(spec, new_flat), scores, ginfo
     new_flat, scores = folb_staleness_buffers(
         w, deltas, grads, slot_tau.astype(jnp.float32),
         jnp.asarray(alpha, jnp.float32), psi_gamma=psi_gammas,

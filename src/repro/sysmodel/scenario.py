@@ -26,6 +26,22 @@ unreliable-network model:
   jitter       — response time is multiplied by ``exp(sigma * N(0,1))``
                  per dispatch (log-normal multiplicative noise).
 
+Three more channels corrupt the *payload* itself (the update arrives on
+time but its numbers are wrong — Salehi & Hossain's unreliable links
+truncate and garble payloads in exactly this way):
+
+  nan    — the upload decodes to non-finite values (every leaf NaN).
+  scale  — the update's norm is inflated by ``scale_mag`` (a gain bug or
+           fixed-point overflow on the device).
+  flip   — the update arrives sign-flipped (bf16 sign-bit corruption).
+
+Corruption is realized as one multiplicative per-dispatch factor
+(``ScenarioDraws.corrupt``): NaN, ``±scale_mag``, or ``−1``; benign
+dispatches carry exactly ``1.0``.  Dispatches whose payload never
+reaches aggregation (drop / dropout) are forced back to ``1.0`` so the
+engines' masked-row machinery (exact ``0.0 · x`` cancellation) never
+multiplies a NaN.
+
 Everything is sampled *at plan-build time* from numpy streams keyed as
 ``default_rng([seed, CHANNEL_ID])`` — enabling one channel never shifts
 another channel's draws — and folded into the precomputed plan arrays
@@ -46,11 +62,14 @@ _CH_DROP = 1
 _CH_DROPOUT = 2
 _CH_COMPLETE = 3
 _CH_JITTER = 4
+_CH_NAN = 5
+_CH_SCALE = 6
+_CH_FLIP = 7
 
 
 @dataclasses.dataclass(frozen=True)
 class ScenarioConfig:
-    """Four orthogonal failure channels, all off by default.
+    """Seven orthogonal failure channels, all off by default.
 
     A config with every rate at zero is *inactive*: engines treat it
     exactly like ``scenario=None`` and run the unmodified program.
@@ -60,10 +79,15 @@ class ScenarioConfig:
     partial_prob: float = 0.0     # P[dispatch returns partial work]
     completeness_min: float = 0.5  # c ~ U[completeness_min, 1) when partial
     jitter_sigma: float = 0.0     # latency *= exp(sigma * N(0,1))
+    nan_prob: float = 0.0         # P[payload decodes to non-finite]
+    scale_prob: float = 0.0       # P[payload norm inflated by scale_mag]
+    scale_mag: float = 100.0      # norm-inflation factor when scale fires
+    flip_prob: float = 0.0        # P[payload arrives sign-flipped]
     seed: int = 0
 
     def __post_init__(self):
-        for name in ("drop_prob", "dropout_prob", "partial_prob"):
+        for name in ("drop_prob", "dropout_prob", "partial_prob",
+                     "nan_prob", "scale_prob", "flip_prob"):
             p = getattr(self, name)
             if not 0.0 <= p <= 1.0:
                 raise ValueError(f"{name} must be in [0, 1], got {p}")
@@ -72,11 +96,21 @@ class ScenarioConfig:
                              "steps is not a partial result, it is dropout")
         if self.jitter_sigma < 0.0:
             raise ValueError("jitter_sigma must be >= 0")
+        if not self.scale_mag > 0.0:
+            raise ValueError("scale_mag must be > 0 — a zero factor is a "
+                             "drop, not a corruption")
+
+    @property
+    def corrupting(self) -> bool:
+        """True when any payload-corruption channel can fire."""
+        return (self.nan_prob > 0.0 or self.scale_prob > 0.0
+                or self.flip_prob > 0.0)
 
     @property
     def active(self) -> bool:
         return (self.drop_prob > 0.0 or self.dropout_prob > 0.0
-                or self.partial_prob > 0.0 or self.jitter_sigma > 0.0)
+                or self.partial_prob > 0.0 or self.jitter_sigma > 0.0
+                or self.corrupting)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,12 +120,14 @@ class ScenarioDraws:
     ``lost`` wins over ``drop``: a device that went offline never sent
     its upload, so it cannot also be charged a failed transmission.
     ``lat_scale`` is None when jitter is off so the scheduler's latency
-    math stays byte-identical for jitter-free scenarios.
+    math stays byte-identical for jitter-free scenarios; ``corrupt`` is
+    None when every payload channel is off for the same reason.
     """
     drop: np.ndarray                    # bool — upload sent but failed
     lost: np.ndarray                    # bool — device offline, no upload
     comp: np.ndarray                    # float64 in (0, 1] — work fraction
     lat_scale: Optional[np.ndarray]     # float64 > 0, or None
+    corrupt: Optional[np.ndarray] = None  # float32 factor (NaN/±mag/−1/1)
 
 
 def realize(sc: ScenarioConfig, shape: Tuple[int, ...]) -> ScenarioDraws:
@@ -110,8 +146,22 @@ def realize(sc: ScenarioConfig, shape: Tuple[int, ...]) -> ScenarioDraws:
     if sc.jitter_sigma > 0.0:
         lat_scale = np.exp(sc.jitter_sigma * np.random.default_rng(
             [seed, _CH_JITTER]).standard_normal(shape))
+    corrupt = None
+    if sc.corrupting:
+        nan = (np.random.default_rng([seed, _CH_NAN]).random(shape)
+               < sc.nan_prob)
+        scl = (np.random.default_rng([seed, _CH_SCALE]).random(shape)
+               < sc.scale_prob)
+        flp = (np.random.default_rng([seed, _CH_FLIP]).random(shape)
+               < sc.flip_prob)
+        corrupt = np.where(flp, -1.0, 1.0)
+        corrupt = np.where(scl, corrupt * sc.scale_mag, corrupt)
+        corrupt = np.where(nan, np.nan, corrupt)
+        # a payload that never reaches aggregation must stay benign: the
+        # engines cancel masked rows as exact 0·x, which NaN would break
+        corrupt = np.where(drop | lost, 1.0, corrupt).astype(np.float32)
     return ScenarioDraws(drop=drop, lost=lost, comp=comp,
-                         lat_scale=lat_scale)
+                         lat_scale=lat_scale, corrupt=corrupt)
 
 
 # package-level export name (repro.sysmodel.realize_scenario); inside

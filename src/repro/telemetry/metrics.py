@@ -32,15 +32,18 @@ from repro.core import aggregation, tree
 STALE_BINS = 8
 
 # the in-scan schema, in emission order (tests and consumers rely on the
-# key set, not the order)
+# key set, not the order).  The guard rejection counters are ALWAYS
+# emitted — zeros for unguarded programs — so every engine keeps the one
+# uniform schema the deadline scan's lax.cond requires.
 METRIC_KEYS = ("score_min", "score_mean", "score_max", "weight_entropy",
                "grad_norm", "delta_norm", "update_norm", "n_contrib",
-               "stale_hist")
+               "n_nonfinite", "n_clipped", "n_gated", "stale_hist")
 
 
 def round_metrics(params_old, params_new, deltas, grads, *,
                   folb: bool = True, psi=0.0, gammas=None,
-                  tau=None, alpha=0.0, mask=None) -> Dict[str, jnp.ndarray]:
+                  tau=None, alpha=0.0, mask=None,
+                  guard=None) -> Dict[str, jnp.ndarray]:
     """Per-round aggregation metrics from one step's stacked client sets.
 
     ``folb`` selects the score family: FOLB-style gradient-informed scores
@@ -48,8 +51,26 @@ def round_metrics(params_old, params_new, deltas, grads, *,
     or the discounted-mean weights of `mean_staleness` for the
     fedavg/fedprox family.  ``mask`` marks contributing clients (1.0);
     masked rows score 0 and are excluded from the min/max/histogram.
+
+    ``guard`` is the guarded kernel's info dict (post-guard ``mask`` plus
+    the three rejection counters).  When given, the metrics are computed
+    over the post-guard survivor set — rejected rows are masked out and
+    non-finite lanes scrubbed so a corrupted payload cannot NaN-poison
+    the telemetry — and the counters report the kernel's decisions; the
+    conservation identity ``n_arrived == n_contrib + n_nonfinite +
+    n_gated`` holds by construction (clipped rows still contribute).
     """
     K = jax.tree.leaves(deltas)[0].shape[0]
+    n_nonfinite = n_clipped = n_gated = jnp.zeros((), jnp.float32)
+    if guard is not None:
+        mask = guard["mask"]
+        n_nonfinite = guard["n_nonfinite"].astype(jnp.float32)
+        n_clipped = guard["n_clipped"].astype(jnp.float32)
+        n_gated = guard["n_gated"].astype(jnp.float32)
+        scrub = lambda x: jnp.where(  # noqa: E731 — local lane scrubber
+            jnp.isfinite(x), x, jnp.zeros((), x.dtype))
+        deltas = jax.tree.map(scrub, deltas)
+        grads = jax.tree.map(scrub, grads)
     m = jnp.ones((K,), jnp.float32) if mask is None \
         else mask.astype(jnp.float32)
     t = jnp.zeros((K,), jnp.float32) if tau is None \
@@ -94,12 +115,16 @@ def round_metrics(params_old, params_new, deltas, grads, *,
         "delta_norm": tree.tree_norm(mean_delta).astype(jnp.float32),
         "update_norm": tree.tree_norm(upd).astype(jnp.float32),
         "n_contrib": n.astype(jnp.float32),
+        "n_nonfinite": n_nonfinite,
+        "n_clipped": n_clipped,
+        "n_gated": n_gated,
         "stale_hist": hist,
     }
 
 
 def metrics_for_algo(algo: str, params_old, params_new, deltas, grads, *,
-                     psi=0.0, gammas=None, tau=None, alpha=0.0, mask=None):
+                     psi=0.0, gammas=None, tau=None, alpha=0.0, mask=None,
+                     guard=None):
     """`round_metrics` with the score family picked from the algo name.
 
     folb/folb2/folb_het report gradient-informed FOLB scores (folb2 is
@@ -110,7 +135,7 @@ def metrics_for_algo(algo: str, params_old, params_new, deltas, grads, *,
         params_old, params_new, deltas, grads,
         folb=algo.startswith("folb"), psi=psi,
         gammas=gammas if algo == "folb_het" else None,
-        tau=tau, alpha=alpha, mask=mask)
+        tau=tau, alpha=alpha, mask=mask, guard=guard)
 
 
 def stack_metrics(mlist: List[Dict[str, Any]]) -> Dict[str, np.ndarray]:
@@ -199,15 +224,24 @@ def deadline_network_series(D: int, afl, plan) -> Dict[str, np.ndarray]:
 
 
 def fedbuff_network_series(D: int, afl, plan) -> Dict[str, np.ndarray]:
-    """Per-round modeled bytes for a fedbuff run: M dispatches and M
-    buffered arrivals per flush; the C concurrency seeds are charged to
-    round 0's downlink."""
+    """Per-round modeled bytes for a fedbuff run: per-round dispatches
+    (M per flush, plus replacements for dropout-lost slots on scenario
+    plans — `plan.n_disp`) and M buffered arrivals per flush; the C
+    concurrency seeds are charged to round 0's downlink."""
     pay = payload_bytes(D, afl.agg_dtype,
                         uploads_gradient="folb" in afl.algo)
     R, M = plan.ids.shape
-    down = np.full(R, M * pay["down"])
+    n_disp = getattr(plan, "n_disp", None)
+    if n_disp is None:
+        down = np.full(R, M * pay["down"])
+        flushed = np.full(R, float(M))
+    else:
+        # ids is padded to the widest dispatch round (W >= M); the true
+        # flush size is the flush_slot width
+        down = np.asarray(n_disp, np.float64) * pay["down"]
+        flushed = np.full(R, float(plan.flush_slot.shape[1]))
     down[0] += plan.seed_ids.shape[0] * pay["down"]
-    up = np.full(R, M * pay["up"])
+    up = flushed * pay["up"]
     return {"bytes_down": down, "bytes_up": up}
 
 

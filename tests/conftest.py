@@ -7,3 +7,15 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_executable_cache():
+    """Drop compiled programs when a test module finishes.  The suite
+    compiles thousands of distinct programs (every engine x algo x dtype
+    x guard variant, with interpret-mode Pallas bodies unrolled into very
+    large HLO), and letting them all stay live in the single CPU client
+    for the whole run eventually crashes it.  Modules recompile what they
+    share, which costs a little wall-clock and keeps the process bounded."""
+    yield
+    jax.clear_caches()

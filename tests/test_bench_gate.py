@@ -21,9 +21,35 @@ def _scenario_cell(drop, folb_secs=4.0, fedavg_secs=6.0):
     }
 
 
-def _artifact(kernel_ratio=1.0, async_speedup=1.3, sweep_speedup=3.0,
-              profile_coverage=0.97, scenario_folb_secs=4.0):
+def _resilience_cell(rate, guard, acc):
+    return {"rate": rate, "guard": guard, "final_acc": acc,
+            "best_acc": acc, "n_nonfinite": 0.0, "n_clipped": 0.0,
+            "n_gated": 0.0, "host_seconds": 1.0}
+
+
+def _resilience_section(guard05=0.88, noguard05=0.10, guard10=0.80,
+                        baseline=0.90):
     return {
+        "axes": {"rate": [0.0, 0.05, 0.10], "guard": [False, True]},
+        "rounds": 40,
+        "baseline_final_acc": baseline,
+        "cells": {
+            "rate0_noguard": _resilience_cell(0.0, False, baseline),
+            "rate0_guard": _resilience_cell(0.0, True, baseline),
+            "rate0.05_noguard": _resilience_cell(0.05, False, noguard05),
+            "rate0.05_guard": _resilience_cell(0.05, True, guard05),
+            "rate0.1_noguard": _resilience_cell(0.10, False, 0.05),
+            "rate0.1_guard": _resilience_cell(0.10, True, guard10),
+        },
+    }
+
+
+def _artifact(kernel_ratio=1.0, async_speedup=1.3, sweep_speedup=3.0,
+              profile_coverage=0.97, scenario_folb_secs=4.0,
+              resilience_guard05=0.88, resilience_noguard05=0.10):
+    return {
+        "resilience": _resilience_section(guard05=resilience_guard05,
+                                          noguard05=resilience_noguard05),
         "results": [{"name": "folb/sync", "secs_to_acc": 5.0,
                      "rounds_to_acc": 10, "final_acc": 0.9}],
         "network": {
@@ -342,6 +368,77 @@ class TestScenarioGate:
         base = _artifact()
         del base["scenario"]
         assert compare(base, _artifact(scenario_folb_secs=99.0),
+                       0.15, 0.05, 1.0) == []
+
+    def test_other_gates_unaffected(self):
+        fails = compare(_artifact(), _artifact(async_speedup=0.1),
+                        0.15, 0.05, 1.0, min_async_speedup=0.85)
+        assert len(fails) == 2 and all("async" in f for f in fails)
+
+
+class TestResilienceGate:
+    """Schema + value gate on the guarded-vs-unguarded corruption matrix:
+    cells stay with numeric final_acc, the guard never loses to no-guard
+    at a nonzero rate, and at 5% the guard stays near the clean baseline
+    while no-guard must not."""
+
+    def test_passes_when_guard_rescues(self):
+        assert compare(_artifact(), _artifact(), 0.15, 0.05, 1.0) == []
+
+    def test_fails_on_missing_section(self):
+        cur = _artifact()
+        del cur["resilience"]
+        fails = compare(_artifact(), cur, 0.15, 0.05, 1.0)
+        assert any("resilience: section missing" in f for f in fails)
+
+    def test_fails_on_missing_cell(self):
+        cur = _artifact()
+        del cur["resilience"]["cells"]["rate0.05_guard"]
+        fails = compare(_artifact(), cur, 0.15, 0.05, 1.0)
+        # missing cell AND the 5%-rate guard floor can no longer be shown
+        assert any("cell rate0.05_guard missing" in f for f in fails)
+
+    def test_fails_on_non_numeric_final_acc(self):
+        cur = _artifact()
+        cur["resilience"]["cells"]["rate0.1_guard"]["final_acc"] = None
+        fails = compare(_artifact(), cur, 0.15, 0.05, 1.0)
+        assert any("rate0.1_guard lacks numeric final_acc" in f
+                   for f in fails)
+
+    def test_fails_when_guard_loses_to_noguard(self):
+        """A guarded run landing below the unguarded one at the same
+        nonzero rate means the guard is destroying signal."""
+        cur = _artifact(resilience_guard05=0.05, resilience_noguard05=0.60)
+        fails = compare(_artifact(), cur, 0.15, 0.05, 1.0)
+        assert any("guarded final_acc 0.050 < unguarded" in f
+                   for f in fails)
+
+    def test_fails_when_guard_drops_below_baseline_floor(self):
+        """baseline 0.90, allowed drop 0.05: a guarded 5%-rate run at
+        0.80 is a regression even though it beats the unguarded run."""
+        fails = compare(_artifact(), _artifact(resilience_guard05=0.80),
+                        0.15, 0.05, 1.0)
+        assert any("below clean baseline" in f for f in fails)
+        assert compare(_artifact(), _artifact(resilience_guard05=0.86),
+                       0.15, 0.05, 1.0) == []
+
+    def test_fails_when_corruption_too_weak(self):
+        """If the unguarded run ALSO stays near the baseline, the cell
+        proves nothing about the guard and the bench must be re-tuned."""
+        fails = compare(_artifact(),
+                        _artifact(resilience_noguard05=0.89),
+                        0.15, 0.05, 1.0)
+        assert any("too weak" in f for f in fails)
+
+    def test_custom_drop_threshold(self):
+        assert compare(_artifact(), _artifact(resilience_guard05=0.80),
+                       0.15, 0.05, 1.0, resilience_acc_drop=0.12) == []
+
+    def test_old_baseline_without_resilience_is_fine(self):
+        base = _artifact()
+        del base["resilience"]
+        assert compare(base, _artifact(resilience_guard05=0.0,
+                                       resilience_noguard05=0.0),
                        0.15, 0.05, 1.0) == []
 
     def test_other_gates_unaffected(self):

@@ -1,0 +1,182 @@
+"""Update-validation guard layer (repro.kernels.guard + guarded kernels).
+
+Three contracts:
+
+  1. ``GuardConfig`` is validated at construction, and the engine configs
+     reject guard combinations that cannot run inside the fused FOLB
+     kernel (non-FOLB algos, the pytree backend).
+  2. The guarded kernel's weight algebra, post-guard mask and rejection
+     counters replay the pure-numpy ``reference_guard`` oracle —
+     property-tested over injected NaN/Inf rows, norm-inflated rows and
+     sign flips, for both (K, D) buffer dtypes.
+  3. An all-rejected aggregation returns the parameters bit-exact,
+     including −0.0 (the masked-slot exact ``0.0 · x`` convention).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _propcheck import given, settings, st
+
+from repro.fed.async_engine import AsyncFLConfig
+from repro.fed.simulator import FLConfig
+from repro.kernels import ops
+from repro.kernels.guard import GuardConfig, as_guard, reference_guard
+
+D = 1024    # one kernel tile
+GUARD = GuardConfig(nonfinite=True, clip_mult=3.0, gate_mult=6.0)
+
+
+class TestGuardConfig:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="clip_mult"):
+            GuardConfig(clip_mult=-1.0)
+        with pytest.raises(ValueError, match="gate_mult"):
+            GuardConfig(gate_mult=-0.5)
+        with pytest.raises(ValueError, match="guard=None"):
+            GuardConfig(nonfinite=False)
+        assert as_guard(None) is None
+        assert as_guard(GUARD) is GUARD
+        with pytest.raises(TypeError, match="GuardConfig"):
+            as_guard({"nonfinite": True})
+
+    def test_static_and_hashable(self):
+        # the guard is a jit cache key: it must hash and compare by value
+        assert GuardConfig(clip_mult=3.0) == GuardConfig(clip_mult=3.0)
+        assert len({GuardConfig(clip_mult=3.0),
+                    GuardConfig(clip_mult=3.0),
+                    GuardConfig(gate_mult=2.0)}) == 2
+
+    def test_sync_config_rejects_bad_combinations(self):
+        with pytest.raises(ValueError, match="guard requires algo"):
+            FLConfig(algo="fedavg", n_selected=4, guard=GUARD)
+        with pytest.raises(ValueError, match="agg_backend='flat'"):
+            FLConfig(algo="folb", n_selected=4, agg_backend="pytree",
+                     guard=GUARD)
+        FLConfig(algo="folb_het", n_selected=4, psi=0.5, guard=GUARD)
+
+    def test_async_config_rejects_bad_combinations(self):
+        with pytest.raises(ValueError, match="guard requires algo"):
+            AsyncFLConfig(mode="fedbuff", algo="fedavg", guard=GUARD)
+        with pytest.raises(ValueError, match="agg_backend='flat'"):
+            AsyncFLConfig(mode="deadline", algo="folb",
+                          agg_backend="pytree", guard=GUARD)
+        afl = AsyncFLConfig(mode="deadline", algo="folb", guard=GUARD)
+        assert afl.sync_config().guard is GUARD
+
+
+def _problem(rng, K, corrupt_kind):
+    """A (K, D) staleness-FOLB problem with one corrupted row."""
+    w = rng.standard_normal(D).astype(np.float32)
+    deltas = (0.1 * rng.standard_normal((K, D))).astype(np.float32)
+    grads = (0.1 * rng.standard_normal((K, D))).astype(np.float32)
+    row = int(rng.integers(0, K))
+    if corrupt_kind == "nan":
+        deltas[row, rng.integers(0, D)] = np.nan
+    elif corrupt_kind == "inf":
+        grads[row, rng.integers(0, D)] = np.inf
+    elif corrupt_kind == "inflate":
+        deltas[row] *= 200.0
+        grads[row] *= 200.0
+    elif corrupt_kind == "flip":
+        deltas[row] *= -1.0
+        grads[row] *= -1.0
+    mask = (rng.random(K) < 0.8).astype(np.float32)
+    mask[int(rng.integers(0, K))] = 1.0   # at least one live row
+    tau = rng.integers(0, 4, size=K).astype(np.float32)
+    pg = (0.1 * rng.random(K)).astype(np.float32)
+    return w, deltas, grads, mask, tau, pg
+
+
+class TestKernelVsReference:
+    @settings(max_examples=12, deadline=None)
+    @given(st.integers(min_value=2, max_value=6),
+           st.sampled_from(["nan", "inf", "inflate", "flip", "none"]),
+           st.sampled_from(["bfloat16", "float32"]),
+           st.integers(min_value=0, max_value=10_000))
+    def test_guarded_kernel_matches_reference(self, K, kind, buf_dtype,
+                                              seed):
+        rng = np.random.default_rng(seed)
+        w, deltas, grads, mask, tau, pg = _problem(rng, K, kind)
+        bd = jnp.dtype(buf_dtype)
+        d_b = jnp.asarray(deltas).astype(bd)
+        g_b = jnp.asarray(grads).astype(bd)
+        new_w, scores, ginfo = ops.folb_staleness_buffers(
+            jnp.asarray(w), d_b, g_b, jnp.asarray(tau),
+            jnp.asarray(0.5, jnp.float32), psi_gamma=jnp.asarray(pg),
+            mask=jnp.asarray(mask), guard=GUARD)
+        # the oracle replays the SAME buffer-dtype-rounded payloads
+        d_ref = np.asarray(d_b).astype(np.float32)
+        g_ref = np.asarray(g_b).astype(np.float32)
+        ref = reference_guard(d_ref, g_ref, tau, 0.5, pg, mask, GUARD)
+        assert (np.asarray(ginfo["mask"]) == ref["mask"]).all()
+        assert float(ginfo["n_nonfinite"]) == ref["n_nonfinite"]
+        assert float(ginfo["n_clipped"]) == ref["n_clipped"]
+        assert float(ginfo["n_gated"]) == ref["n_gated"]
+        np.testing.assert_allclose(np.asarray(scores), ref["scores"],
+                                   rtol=1e-4, atol=1e-5)
+        d_clean = np.where(np.isfinite(d_ref), d_ref, np.float32(0.0))
+        expect = w + ref["weights"] @ d_clean
+        if ref["mask"].sum() == 0.0:
+            expect = w
+        np.testing.assert_allclose(np.asarray(new_w), expect,
+                                   rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(min_value=2, max_value=5),
+           st.integers(min_value=0, max_value=10_000))
+    def test_nonfinite_rows_never_reach_the_aggregate(self, K, seed):
+        """A NaN row must be excluded whole — the finite survivors'
+        aggregate equals the run with that row hard-masked out."""
+        rng = np.random.default_rng(seed)
+        w, deltas, grads, mask, tau, pg = _problem(rng, K, "none")
+        mask[:] = 1.0
+        bad = int(rng.integers(0, K))
+        deltas_bad = deltas.copy()
+        deltas_bad[bad] = np.nan
+        guard = GuardConfig(nonfinite=True)
+        got, _, ginfo = ops.folb_staleness_buffers(
+            jnp.asarray(w), jnp.asarray(deltas_bad), jnp.asarray(grads),
+            jnp.asarray(tau), jnp.asarray(0.5, jnp.float32),
+            psi_gamma=jnp.asarray(pg), mask=jnp.asarray(mask), guard=guard)
+        hard = mask.copy()
+        hard[bad] = 0.0
+        want, _, _ = ops.folb_staleness_buffers(
+            jnp.asarray(w), jnp.asarray(deltas), jnp.asarray(grads),
+            jnp.asarray(tau), jnp.asarray(0.5, jnp.float32),
+            psi_gamma=jnp.asarray(pg), mask=jnp.asarray(hard), guard=guard)
+        assert np.isfinite(np.asarray(got)).all()
+        assert float(ginfo["n_nonfinite"]) == 1.0
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestAllRejected:
+    def test_returns_params_bit_exact_including_negative_zero(self):
+        K = 4
+        w = np.array([0.0, -0.0, 1.5, -2.25] + [0.0] * (D - 4), np.float32)
+        deltas = np.full((K, D), np.nan, np.float32)
+        grads = np.ones((K, D), np.float32)
+        new_w, _, ginfo = ops.folb_staleness_buffers(
+            jnp.asarray(w), jnp.asarray(deltas), jnp.asarray(grads),
+            jnp.zeros((K,), jnp.float32), jnp.asarray(0.0, jnp.float32),
+            mask=jnp.ones((K,), jnp.float32), guard=GUARD)
+        got = np.asarray(new_w)
+        assert (np.asarray(ginfo["mask"]) == 0.0).all()
+        assert float(ginfo["n_nonfinite"]) == float(K)
+        np.testing.assert_array_equal(got, w)
+        np.testing.assert_array_equal(np.signbit(got), np.signbit(w))
+
+    def test_tree_front_end_all_rejected(self):
+        params = {"a": jnp.asarray([[-0.0, 1.0], [2.0, -0.0]]),
+                  "b": jnp.asarray([0.5, -0.5, -0.0])}
+        K = 3
+        bad = jax.tree.map(
+            lambda x: jnp.full((K,) + x.shape, jnp.nan, x.dtype), params)
+        new, _, ginfo = ops.folb_staleness_slots_tree(
+            params, bad, bad, jnp.ones((K,), jnp.float32),
+            jnp.zeros((K,), jnp.float32), alpha=0.0, guard=GUARD)
+        for a, b in zip(jax.tree.leaves(new), jax.tree.leaves(params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            np.testing.assert_array_equal(np.signbit(np.asarray(a)),
+                                          np.signbit(np.asarray(b)))
+        assert float(jnp.sum(ginfo["mask"])) == 0.0

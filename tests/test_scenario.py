@@ -19,6 +19,7 @@ from repro.data.synthetic import synthetic_alpha_beta
 from repro.fed.async_engine import AsyncFLConfig, build_plan, plan_digest
 from repro.fed.simulator import ALGOS, FLConfig
 from repro.fed.sweep_engine import SweepSpec
+from repro.kernels.guard import GuardConfig
 from repro.models import small
 from repro.sysmodel import (ScenarioConfig, expected_latencies,
                             heterogeneous_fleet, realize_scenario,
@@ -35,6 +36,21 @@ SYNC_SC = ScenarioConfig(drop_prob=0.3, partial_prob=0.5,
                          jitter_sigma=0.2, seed=7)
 ASYNC_SC = ScenarioConfig(drop_prob=0.25, dropout_prob=0.1,
                           partial_prob=0.5, jitter_sigma=0.2, seed=7)
+
+# payload-corruption variants: FIN_* keeps every payload finite (scale +
+# flip only) so unguarded runs stay NaN-free and histories comparable;
+# CORR_* adds the NaN channel and is meant for guarded runs
+FIN_SYNC_SC = ScenarioConfig(drop_prob=0.3, partial_prob=0.5,
+                             jitter_sigma=0.2, scale_prob=0.1,
+                             scale_mag=50.0, flip_prob=0.1, seed=7)
+CORR_SYNC_SC = ScenarioConfig(drop_prob=0.3, partial_prob=0.5,
+                              jitter_sigma=0.2, nan_prob=0.05,
+                              scale_prob=0.05, scale_mag=50.0,
+                              flip_prob=0.05, seed=7)
+CORR_ASYNC_SC = ScenarioConfig(drop_prob=0.25, dropout_prob=0.1,
+                               partial_prob=0.5, jitter_sigma=0.2,
+                               nan_prob=0.05, scale_prob=0.05,
+                               scale_mag=50.0, flip_prob=0.05, seed=7)
 
 
 @pytest.fixture(scope="module")
@@ -131,6 +147,38 @@ class TestRealize:
         assert (same == steps).all() and same.dtype == steps.dtype
         scaled = scale_steps(steps, np.array([0.55, 0.5, 0.01]))
         assert (scaled == np.array([6, 4, 1])).all()   # ceil, min 1
+
+    def test_corruption_off_realizes_none(self):
+        """corrupt must be None (not all-ones) when every corruption
+        channel is off — the None routes engines to the exact
+        pre-corruption traced program."""
+        assert realize_scenario(ASYNC_SC, (6, 5)).corrupt is None
+        assert not ASYNC_SC.corrupting and CORR_ASYNC_SC.corrupting
+
+    def test_corruption_realization(self):
+        sc = ScenarioConfig(nan_prob=0.2, scale_prob=0.2, scale_mag=40.0,
+                            flip_prob=0.2, dropout_prob=0.3,
+                            drop_prob=0.3, seed=3)
+        g = realize_scenario(sc, (40, 8))
+        c = g.corrupt
+        assert c.shape == (40, 8) and c.dtype == np.float32
+        # each channel realized: NaN rows, ±scale_mag rows, −1 flips
+        assert np.isnan(c).any()
+        assert (np.abs(c[np.isfinite(c)]) == 40.0).any()
+        assert (c[np.isfinite(c)] == -1.0).any()
+        # dropped/lost dispatches never carry a corrupted payload — the
+        # masked-row 0·x machinery must never see NaN
+        assert (c[g.drop | g.lost] == 1.0).all()
+        # benign rows are exactly 1.0 (multiplying by them is bit-exact)
+        benign = np.isfinite(c) & (c != -1.0) & (np.abs(c) != 40.0)
+        assert (c[benign] == 1.0).all()
+
+    def test_corruption_channels_independently_seeded(self):
+        base = realize_scenario(CORR_ASYNC_SC, (8, 4))
+        plain = realize_scenario(ASYNC_SC, (8, 4))
+        assert (base.drop == plain.drop).all()
+        assert (base.lost == plain.lost).all()
+        assert (base.comp == plain.comp).all()
 
 
 class TestSyncParity:
@@ -329,6 +377,191 @@ class TestSweepParity:
                         scenario=ScenarioConfig(dropout_prob=0.1))
 
 
+GUARD = GuardConfig(nonfinite=True, clip_mult=3.0, gate_mult=6.0)
+
+
+class TestCorruptionParity:
+    """The corruption channels are plan content like every other channel:
+    loop and scan replay the identical realized payload factors, with and
+    without the guard."""
+
+    @pytest.mark.parametrize("algo", ALGOS)
+    def test_finite_corruption_all_algos(self, fed_data, fleet, algo):
+        """Scale + flip corruption (payloads stay finite) on every sync
+        algorithm, unguarded: loop == scan bit-for-bit."""
+        fl = FLConfig(algo=algo, n_selected=8, lr=0.05, seed=0,
+                      mu=0.0 if algo == "fedavg" else 1.0,
+                      psi=0.5 if algo == "folb_het" else 0.0)
+        h_loop = fed_api.run(MCLR, fed_data, fl, 4, engine="loop",
+                             fleet=fleet, scenario=FIN_SYNC_SC)
+        h_scan = fed_api.run(MCLR, fed_data, fl, 4, engine="scan",
+                             fleet=fleet, scenario=FIN_SYNC_SC)
+        _assert_bit_for_bit(h_loop, h_scan)
+
+    @pytest.mark.parametrize("agg_dtype", ["bfloat16", "float32"])
+    def test_guarded_sync(self, fed_data, fleet, agg_dtype):
+        fl = FLConfig(algo="folb", n_selected=8, lr=0.05, mu=1.0, seed=0,
+                      agg_dtype=agg_dtype, guard=GUARD)
+        h_loop = fed_api.run(MCLR, fed_data, fl, 5, engine="loop",
+                             fleet=fleet, scenario=CORR_SYNC_SC)
+        h_scan = fed_api.run(MCLR, fed_data, fl, 5, engine="scan",
+                             fleet=fleet, scenario=CORR_SYNC_SC)
+        # the guard keeps every history entry finite despite NaN payloads
+        assert np.isfinite(np.asarray(h_loop["train_loss"])).all()
+        _assert_bit_for_bit(h_loop, h_scan)
+
+    @pytest.mark.parametrize("agg_dtype", ["bfloat16", "float32"])
+    def test_guarded_deadline(self, fed_data, fleet, agg_dtype):
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=8,
+                            mu=1.0, deadline=_deadline(fed_data, fleet),
+                            staleness_alpha=0.5, seed=0,
+                            agg_dtype=agg_dtype, guard=GUARD)
+        h_loop = fed_api.run(MCLR, fed_data, afl, 6, engine="loop",
+                             fleet=fleet, scenario=CORR_ASYNC_SC)
+        h_scan = fed_api.run(MCLR, fed_data, afl, 6, engine="scan",
+                             fleet=fleet, scenario=CORR_ASYNC_SC)
+        assert np.isfinite(np.asarray(h_loop["train_loss"])).all()
+        _assert_bit_for_bit(h_loop, h_scan, keys=AHIST)
+
+    @pytest.mark.parametrize("agg_dtype", ["bfloat16", "float32"])
+    def test_guarded_fedbuff(self, fed_data, fleet, agg_dtype):
+        afl = AsyncFLConfig(mode="fedbuff", algo="folb", mu=1.0,
+                            buffer_size=4, concurrency=10,
+                            staleness_alpha=0.5, seed=0,
+                            agg_dtype=agg_dtype, guard=GUARD)
+        h_loop = fed_api.run(MCLR, fed_data, afl, 6, engine="loop",
+                             fleet=fleet, scenario=CORR_ASYNC_SC)
+        h_scan = fed_api.run(MCLR, fed_data, afl, 6, engine="scan",
+                             fleet=fleet, scenario=CORR_ASYNC_SC)
+        assert np.isfinite(np.asarray(h_loop["train_loss"])).all()
+        _assert_bit_for_bit(h_loop, h_scan, keys=AHIST)
+
+    def test_guarded_sweep_member_vs_solo(self, fed_data, fleet):
+        fl = FLConfig(algo="folb", n_selected=8, lr=0.05, mu=1.0, seed=0,
+                      guard=GUARD)
+        spec = SweepSpec.from_grid(fl, lr=(0.05, 0.1))
+        sw = fed_api.run(MCLR, fed_data, spec, 4, fleet=fleet,
+                         scenario=CORR_SYNC_SC)
+        for i in range(spec.n_configs):
+            solo = fed_api.run(MCLR, fed_data, spec.member(i), 4,
+                               engine="scan", fleet=fleet,
+                               scenario=CORR_SYNC_SC)
+            _assert_bit_for_bit(sw[i], solo)
+
+    def test_guard_never_sweepable(self, fed_data):
+        fl = FLConfig(algo="folb", n_selected=8, mu=1.0, seed=0)
+        with pytest.raises(ValueError, match="non-sweepable"):
+            SweepSpec(base=fl, overrides=({"guard": GUARD},))
+
+    def test_corruption_changes_the_run(self, fed_data, fleet):
+        fl = FLConfig(algo="folb", n_selected=8, lr=0.05, mu=1.0, seed=0)
+        h_plain = fed_api.run(MCLR, fed_data, fl, 4, fleet=fleet,
+                              scenario=SYNC_SC)
+        h_corr = fed_api.run(MCLR, fed_data, fl, 4, fleet=fleet,
+                             scenario=FIN_SYNC_SC)
+        assert h_plain["train_loss"] != h_corr["train_loss"]
+
+
+class TestGuardConservation:
+    """Every arrived update is accounted for exactly once:
+    ``n_arrived == n_contrib + n_nonfinite + n_gated`` (clipped rows
+    still contribute) — per round and over the whole run, replayed from
+    the guarded telemetry counters."""
+
+    @staticmethod
+    def _check(n_arrived, metrics, rounds):
+        contrib = np.asarray(metrics["n_contrib"])
+        nonfin = np.asarray(metrics["n_nonfinite"])
+        gated = np.asarray(metrics["n_gated"])
+        arrived = np.asarray(n_arrived, np.float64)
+        assert contrib.shape == (rounds,)
+        per_round = contrib + nonfin + gated
+        np.testing.assert_array_equal(per_round, arrived)
+        assert per_round.sum() == arrived.sum()
+        # the run must actually reject something, or this test is vacuous
+        assert nonfin.sum() + gated.sum() > 0
+
+    def test_sync(self, fed_data, fleet):
+        fl = FLConfig(algo="folb", n_selected=8, lr=0.05, mu=1.0, seed=0,
+                      guard=GUARD, telemetry=True)
+        res = fed_api.run(MCLR, fed_data, fl, 6, fleet=fleet,
+                          scenario=CORR_SYNC_SC)
+        g = realize_scenario(CORR_SYNC_SC, (6, 8))
+        self._check((~g.drop).sum(1), res.metrics, 6)
+
+    def test_deadline(self, fed_data, fleet):
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=8,
+                            mu=1.0, deadline=_deadline(fed_data, fleet),
+                            staleness_alpha=0.5, seed=0, guard=GUARD,
+                            telemetry=True)
+        res = fed_api.run(MCLR, fed_data, afl, 8, fleet=fleet,
+                          scenario=CORR_ASYNC_SC)
+        self._check(res["n_arrived"], res.metrics, 8)
+
+    def test_fedbuff(self, fed_data, fleet):
+        afl = AsyncFLConfig(mode="fedbuff", algo="folb", mu=1.0,
+                            buffer_size=4, concurrency=10,
+                            staleness_alpha=0.5, seed=0, guard=GUARD,
+                            telemetry=True)
+        res = fed_api.run(MCLR, fed_data, afl, 8, fleet=fleet,
+                          scenario=CORR_ASYNC_SC)
+        self._check(res["n_arrived"], res.metrics, 8)
+
+
+class TestFedBuffSlotLeak:
+    """Regression: the PR 7 builder never reclaimed the pool slot of a
+    dropout-lost dispatch, so sustained loss rates depleted the
+    concurrency pool and the event queue ran dry.  The builder now frees
+    the slot at the loss event and dispatches a replacement."""
+
+    SC = ScenarioConfig(dropout_prob=0.5, seed=5)
+
+    def test_sustained_loss_completes(self, fed_data, fleet):
+        """20 flushes at 50% dispatch loss with a 6-slot pool: the old
+        builder depleted within the first couple of flushes."""
+        afl = AsyncFLConfig(mode="fedbuff", algo="folb", mu=1.0,
+                            buffer_size=3, concurrency=6,
+                            staleness_alpha=0.5, seed=0)
+        h_loop = fed_api.run(MCLR, fed_data, afl, 20, engine="loop",
+                             fleet=fleet, scenario=self.SC)
+        h_scan = fed_api.run(MCLR, fed_data, afl, 20, engine="scan",
+                             fleet=fleet, scenario=self.SC)
+        _assert_bit_for_bit(h_loop, h_scan, keys=AHIST)
+
+    def test_replacements_are_dispatched(self, fed_data, fleet):
+        afl = AsyncFLConfig(mode="fedbuff", algo="folb", mu=1.0,
+                            buffer_size=3, concurrency=6,
+                            staleness_alpha=0.5, seed=0)
+        cost, sizes = _plan_inputs(fed_data, fleet)
+        plan = build_plan(afl, fleet, cost, sizes, 20,
+                          jax.random.PRNGKey(afl.seed), scenario=self.SC)
+        R, C, M = 20, 6, 3
+        used = plan.all_ids.shape[0]
+        # every lost dispatch got a replacement: strictly more dispatches
+        # than the loss-free C + R*M, and the per-flush counts add up
+        assert plan.lost_mask.sum() > 0
+        assert used > C + R * M
+        assert used == C + int(plan.n_disp.sum())
+        # per-dispatch arrays stay aligned after capacity slicing
+        for f in ("dispatch_clock", "arrival_clock", "all_steps",
+                  "drop_mask", "lost_mask"):
+            assert getattr(plan, f).shape[0] == used, f
+
+    def test_plan_digest_deterministic_across_rebuilds(self, fed_data,
+                                                       fleet):
+        """Capacity-doubling rebuilds draw fresh channel grids; the final
+        plan must still be a pure function of (config, scenario, seed)."""
+        afl = AsyncFLConfig(mode="fedbuff", algo="folb", mu=1.0,
+                            buffer_size=3, concurrency=6,
+                            staleness_alpha=0.5, seed=0)
+        cost, sizes = _plan_inputs(fed_data, fleet)
+        a = plan_digest(build_plan(afl, fleet, cost, sizes, 20,
+                                   jax.random.PRNGKey(0), scenario=self.SC))
+        b = plan_digest(build_plan(afl, fleet, cost, sizes, 20,
+                                   jax.random.PRNGKey(0), scenario=self.SC))
+        assert a == b
+
+
 def _plan_inputs(fed_data, fleet):
     params = small.init_small(MCLR, jax.random.PRNGKey(0))
     cost = round_cost_for(MCLR, params)
@@ -378,7 +611,9 @@ class TestConservation:
         sc = TestFedBuffParity.SC
         plan = build_plan(afl, fleet, cost, sizes, 10,
                           jax.random.PRNGKey(afl.seed), scenario=sc)
-        R, M = plan.ids.shape
+        # dispatch rows pad to the widest round (lost dispatches fire
+        # replacements); each flush still consumes exactly buffer_size
+        R, M = plan.flush_slot.shape
         drop, lost = plan.drop_mask, plan.lost_mask
         arr = plan.arrival_clock
         # independent replay: non-lost dispatches arrive in (clock, push

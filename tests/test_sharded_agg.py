@@ -23,7 +23,10 @@ from repro.data.federated import stack_devices
 from repro.data.synthetic import synthetic_alpha_beta
 from repro.fed.simulator import FLConfig
 from repro.kernels import ops
+from repro.kernels.guard import GuardConfig
 from repro.sharding.specs import folb_mesh
+
+GUARD = GuardConfig(nonfinite=True, clip_mult=3.0, gate_mult=6.0)
 
 
 @pytest.fixture(scope="module")
@@ -58,6 +61,28 @@ class TestOneShardBitParity:
                                             pg, mask)
         wm, sm = ops.folb_staleness_buffers(w, deltas, grads, tau, 0.5,
                                             pg, mask, mesh=mesh)
+        assert (np.asarray(ws) == np.asarray(wm)).all()
+        assert (np.asarray(ss) == np.asarray(sm)).all()
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_stale_guarded(self, mesh, dtype):
+        """The guard's stats pass (per-row sqnorms + finite flags) is a
+        cross-shard reduction: on the 1-shard mesh it must still be
+        bit-identical to the unsharded kernel, rejections included."""
+        w, deltas, grads, pg = _problem(3, 6, 2048, dtype)
+        deltas = deltas.at[1, 7].set(jnp.nan)       # nonfinite row
+        deltas = deltas.at[4].mul(jnp.asarray(300.0, dtype))  # norm outlier
+        tau = jnp.asarray([0.0, 2.0, 1.0, 0.0, 4.0, 1.0])
+        mask = jnp.asarray([1.0, 1.0, 0.0, 1.0, 1.0, 1.0])
+        ws, ss, gs = ops.folb_staleness_buffers(w, deltas, grads, tau, 0.5,
+                                                pg, mask, guard=GUARD)
+        wm, sm, gm = ops.folb_staleness_buffers(w, deltas, grads, tau, 0.5,
+                                                pg, mask, guard=GUARD,
+                                                mesh=mesh)
+        assert float(gs["n_nonfinite"]) == 1.0
+        assert float(gs["n_clipped"]) + float(gs["n_gated"]) >= 1.0
+        for k in ("mask", "n_nonfinite", "n_clipped", "n_gated"):
+            assert (np.asarray(gs[k]) == np.asarray(gm[k])).all(), k
         assert (np.asarray(ws) == np.asarray(wm)).all()
         assert (np.asarray(ss) == np.asarray(sm)).all()
 
@@ -208,6 +233,22 @@ _MULTI_SHARD_SCRIPT = textwrap.dedent("""
     wm2, _ = ops.folb_staleness_buffers(w, deltas, grads, tau, 0.5, pg,
                                         mask, mesh=mesh)
     assert float(jnp.max(jnp.abs(ws2 - wm2))) < 1e-5
+    # guarded: row sqnorms + finite flags reduce ACROSS shards, so the
+    # rejection verdicts must agree between 1-device and 2-shard runs
+    from repro.kernels.guard import GuardConfig
+    guard = GuardConfig(nonfinite=True, clip_mult=3.0, gate_mult=6.0)
+    bad = deltas.at[0, 3].set(jnp.nan).at[4].mul(
+        jnp.asarray(300.0, deltas.dtype))
+    ws3, ss3, gs = ops.folb_staleness_buffers(w, bad, grads, tau, 0.5,
+                                              pg, mask, guard=guard)
+    wm3, sm3, gm = ops.folb_staleness_buffers(w, bad, grads, tau, 0.5,
+                                              pg, mask, guard=guard,
+                                              mesh=mesh)
+    assert float(gs["n_nonfinite"]) == 1.0, gs
+    for k in ("mask", "n_nonfinite", "n_clipped", "n_gated"):
+        assert (np.asarray(gs[k]) == np.asarray(gm[k])).all(), k
+    assert float(jnp.max(jnp.abs(ws3 - wm3))) < 1e-5
+    assert np.isfinite(np.asarray(wm3)).all()
     print("MULTI_SHARD_OK")
 """)
 
