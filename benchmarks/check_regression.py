@@ -50,6 +50,14 @@ baseline and fails (exit 1) on regression:
     ``--resilience-acc-drop`` of the clean baseline while the unguarded
     run must NOT (otherwise the injected corruption is too weak for the
     cell to prove anything).
+  * fleet_scale: schema + value gate on the population-scale section —
+    once a baseline records it, the current artifact must carry it with
+    numeric host timings, the 1M-device lazy run's host time may not
+    exceed ``--max-fleet-host-ratio`` times the 30-device resident
+    reference run, and the fixed-(K, R) 10^4-vs-10^6-device pair must
+    stay within the same ratio (per-round host cost independent of N).
+    Both are within-run ratios, so shared runners can't fake a
+    regression; absolute seconds stay ungated.
   * kernel: each micro-bench's *calibration-relative* ratio (kernel time
     divided by a fixed jnp workload timed in the same run — see
     ``kernel_bench.calibration_us``) may not grow more than
@@ -84,7 +92,8 @@ def compare(baseline: dict, current: dict, tolerance: float,
             min_async_speedup: float = 1.0,
             min_sweep_speedup: float = 1.0,
             min_profile_coverage: float = 0.9,
-            resilience_acc_drop: float = 0.05) -> List[str]:
+            resilience_acc_drop: float = 0.05,
+            max_fleet_host_ratio: float = 2.0) -> List[str]:
     """Return the list of regression messages (empty == gate passes)."""
     failures: List[str] = []
     cur_by_name = {r["name"]: r for r in current.get("results", [])}
@@ -308,6 +317,47 @@ def compare(baseline: dict, current: dict, tolerance: float,
                         f"clean baseline {base_acc:.3f} — the injected "
                         f"corruption is too weak to demonstrate the guard")
 
+    base_fs = baseline.get("fleet_scale")
+    cur_fs = current.get("fleet_scale")
+    if base_fs is not None:
+        if cur_fs is None:
+            failures.append(
+                "fleet_scale: section missing from current artifact")
+        else:
+            for section in ("reference", "million"):
+                entry = cur_fs.get(section)
+                if not isinstance(entry, dict) \
+                        or not isinstance(entry.get("host_seconds"),
+                                          (int, float)) \
+                        or entry.get("host_seconds", 0.0) <= 0.0:
+                    failures.append(
+                        f"fleet_scale: {section} lacks positive numeric "
+                        f"host_seconds")
+            ratio = cur_fs.get("host_ratio_vs_reference")
+            if not isinstance(ratio, (int, float)):
+                failures.append(
+                    "fleet_scale: host_ratio_vs_reference missing")
+            elif ratio > max_fleet_host_ratio:
+                failures.append(
+                    f"fleet_scale: 1M-device lazy run costs {ratio:.2f}x "
+                    f"the {cur_fs.get('reference', {}).get('n_devices')}"
+                    f"-device resident reference "
+                    f"(> {max_fleet_host_ratio:.2f} allowed)")
+            ni = cur_fs.get("n_independence")
+            if not isinstance(ni, dict) \
+                    or not isinstance(ni.get("per_round_ratio"),
+                                      (int, float)):
+                failures.append(
+                    "fleet_scale: n_independence.per_round_ratio missing")
+            elif ni["per_round_ratio"] > max_fleet_host_ratio:
+                failures.append(
+                    f"fleet_scale: host cost grew "
+                    f"{ni['per_round_ratio']:.2f}x from "
+                    f"{ni.get('n_small')} to {ni.get('n_large')} devices "
+                    f"at fixed (K, R) "
+                    f"(> {max_fleet_host_ratio:.2f} allowed — per-round "
+                    f"cost must be independent of N)")
+
     base_kern = baseline.get("kernel")
     cur_kern = current.get("kernel")
     if base_kern is not None:
@@ -361,6 +411,10 @@ def main() -> int:
                     help="final-accuracy drop from the clean baseline the "
                          "guarded run may show at 5%% corruption (the "
                          "unguarded run must exceed it)")
+    ap.add_argument("--max-fleet-host-ratio", type=float, default=2.0,
+                    help="allowed host-time ratio of the 1M-device lazy "
+                         "run over the 30-device resident reference (and "
+                         "of the fixed-(K,R) 10^6-vs-10^4-device pair)")
     args = ap.parse_args()
 
     failures = compare(_load(args.baseline), _load(args.current),
@@ -369,7 +423,8 @@ def main() -> int:
                        min_async_speedup=args.min_async_speedup,
                        min_sweep_speedup=args.min_sweep_speedup,
                        min_profile_coverage=args.min_profile_coverage,
-                       resilience_acc_drop=args.resilience_acc_drop)
+                       resilience_acc_drop=args.resilience_acc_drop,
+                       max_fleet_host_ratio=args.max_fleet_host_ratio)
     if failures:
         print("BENCHMARK REGRESSION GATE: FAIL")
         for msg in failures:

@@ -1,0 +1,131 @@
+"""Population-scale benchmark: the O(K) lazy engines vs the resident
+stack at million-device fleet sizes.
+
+Two claims, both recorded in the ``fleet_scale`` section of
+``BENCH_fed.json`` and gated by ``check_regression.py``:
+
+  * headline — a 1M-device deadline-FOLB run (lazy population + lazy
+    data, ``eval_cohort`` bounding global eval) costs host time within
+    ``--max-fleet-host-ratio`` (default 2x) of the SAME config on the
+    30-device resident stack.  Both runs pay their own compile, plan
+    build and eval, so the ratio is end-to-end and machine-independent.
+  * N-independence — two lazy runs at fixed (K, R) differing only in
+    fleet size (10^4 vs 10^6 devices) must cost about the same: compiled
+    shapes, plan build and per-round host work never see N.  A shared
+    warmup run compiles the (N-free) programs once so the pair times
+    pure steady-state host cost.
+
+Timings are wall seconds of ``fed.run`` (which blocks on results).  The
+value gate is a ratio, not absolute seconds, so shared CI runners can't
+fake a regression.
+"""
+from __future__ import annotations
+
+import time
+
+N_REFERENCE = 30
+N_SMALL = 10_000
+N_MILLION = 1_000_000
+K_SELECTED = 10
+SEED = 0
+
+
+def _deadline_cfg():
+    from repro.fed.async_engine import AsyncFLConfig
+    # indexed sampler on BOTH sides so the selection math is identical;
+    # a finite deadline the straggler tail misses keeps the pending-pool
+    # machinery in the measured program
+    return AsyncFLConfig(mode="deadline", algo="folb",
+                         n_selected=K_SELECTED, deadline=50.0,
+                         staleness_alpha=0.5, sampler="indexed", seed=SEED)
+
+
+def _timed_run(model_cfg, data, cfg, rounds, fleet, eval_every):
+    from repro import fed
+    t0 = time.perf_counter()
+    res = fed.run(model_cfg, data, cfg, rounds, fleet=fleet,
+                  eval_every=eval_every)
+    return time.perf_counter() - t0, res
+
+
+def fleet_scale_results(quick: bool = False) -> dict:
+    from repro.configs.paper_models import MCLR
+    from repro.data.federated import LazyFederatedData
+    from repro.sysmodel import PopulationSpec
+
+    rounds = 200 if quick else 1000
+    eval_every = max(1, rounds // 10)
+    cfg = _deadline_cfg()
+
+    def pop(n):
+        return PopulationSpec(n_devices=n, seed=SEED)
+
+    def data(n):
+        return LazyFederatedData(n_devices=n, seed=SEED,
+                                 eval_cohort=N_REFERENCE)
+
+    # ---- headline: resident 30-device reference vs lazy 1M ----------
+    ref_spec, ref_data = pop(N_REFERENCE), data(N_REFERENCE)
+    ref_s, ref_res = _timed_run(MCLR, ref_data.materialize(), cfg, rounds,
+                                ref_spec.materialize(), eval_every)
+    big_s, big_res = _timed_run(MCLR, data(N_MILLION), cfg, rounds,
+                                pop(N_MILLION), eval_every)
+    ratio = big_s / ref_s
+
+    # ---- N-independence: 10^4 vs 10^6 at fixed (K, R) ---------------
+    # same compiled shapes for any N: one throwaway warmup compiles for
+    # the whole pair, leaving two pure steady-state host-cost timings
+    ni_rounds = 60
+    _timed_run(MCLR, data(1000), cfg, ni_rounds, pop(1000), ni_rounds)
+    small_s, _ = _timed_run(MCLR, data(N_SMALL), cfg, ni_rounds,
+                            pop(N_SMALL), ni_rounds)
+    large_s, _ = _timed_run(MCLR, data(N_MILLION), cfg, ni_rounds,
+                            pop(N_MILLION), ni_rounds)
+
+    return {
+        "mode": cfg.mode,
+        "algo": cfg.algo,
+        "n_selected": K_SELECTED,
+        "rounds": rounds,
+        "eval_cohort": N_REFERENCE,
+        "reference": {"n_devices": N_REFERENCE,
+                      "host_seconds": round(ref_s, 3),
+                      "final_acc": float(ref_res.history["test_acc"][-1])},
+        "million": {"n_devices": N_MILLION,
+                    "host_seconds": round(big_s, 3),
+                    "final_acc": float(big_res.history["test_acc"][-1])},
+        "host_ratio_vs_reference": round(ratio, 3),
+        "n_independence": {
+            "rounds": ni_rounds,
+            "n_small": N_SMALL,
+            "n_large": N_MILLION,
+            "host_seconds_small": round(small_s, 3),
+            "host_seconds_large": round(large_s, 3),
+            "per_round_ratio": round(large_s / small_s, 3),
+        },
+    }
+
+
+def fleet_rows(quick: bool = False):
+    """(rows, payload) in the benchmark harness's CSV/JSON convention."""
+    payload = fleet_scale_results(quick)
+    rounds = payload["rounds"]
+    rows = [
+        (f"fleet/reference_n{N_REFERENCE}",
+         payload["reference"]["host_seconds"] / rounds * 1e6,
+         f"host_s={payload['reference']['host_seconds']};"
+         f"final_acc={payload['reference']['final_acc']:.3f}"),
+        (f"fleet/lazy_n{N_MILLION}",
+         payload["million"]["host_seconds"] / rounds * 1e6,
+         f"host_s={payload['million']['host_seconds']};"
+         f"final_acc={payload['million']['final_acc']:.3f};"
+         f"ratio_vs_ref={payload['host_ratio_vs_reference']}"),
+        ("fleet/n_independence",
+         payload["n_independence"]["host_seconds_large"]
+         / payload["n_independence"]["rounds"] * 1e6,
+         f"n1e4_s={payload['n_independence']['host_seconds_small']};"
+         f"n1e6_s={payload['n_independence']['host_seconds_large']};"
+         f"per_round_ratio="
+         f"{payload['n_independence']['per_round_ratio']}"),
+    ]
+    return rows, payload

@@ -31,9 +31,9 @@ def main() -> None:
                     help="path of the cross-PR perf artifact")
     args = ap.parse_args()
 
-    from benchmarks import (dispatch_bench, kernel_bench, paper_tables,
-                            resilience, roofline, scenario_matrix,
-                            time_to_accuracy)
+    from benchmarks import (dispatch_bench, fleet_scale, kernel_bench,
+                            paper_tables, resilience, roofline,
+                            scenario_matrix, time_to_accuracy)
 
     rounds = 30 if args.quick else 100
     fig_rounds = 20 if args.quick else 60
@@ -153,6 +153,28 @@ def main() -> None:
               f"trace={payload['trace_path']})", file=sys.stderr)
         return rows
 
+    def fleet_rows():
+        """Population-scale host-cost comparison, merged into the
+        artifact's ``fleet_scale`` section (same merge-into-existing
+        contract as kernel_rows, so CI can run it as its own
+        invocation).  NOT named ``fleet`` — that key already describes
+        the tta suite's 30-device fleet."""
+        import json
+        import os
+        rows, payload = fleet_scale.fleet_rows(quick=args.quick)
+        data = {}
+        if os.path.exists(args.bench_json):
+            with open(args.bench_json) as f:
+                data = json.load(f)
+        data["fleet_scale"] = payload
+        with open(args.bench_json, "w") as f:
+            json.dump(data, f, indent=2)
+            f.write("\n")
+        print(f"# merged fleet_scale section into {args.bench_json} "
+              f"(host_ratio_vs_reference="
+              f"{payload['host_ratio_vs_reference']})", file=sys.stderr)
+        return rows
+
     suites = [
         ("table1", lambda: paper_tables.table1_rounds_to_accuracy(rounds)),
         ("fig2", lambda: paper_tables.fig2_naive_baselines(
@@ -167,6 +189,7 @@ def main() -> None:
         ("scenario", scenario_rows),
         ("resilience", resilience_rows),
         ("profile", profile_rows),
+        ("fleet", fleet_rows),
         ("roofline", lambda: roofline.bench_rows(args.reports)),
     ]
 

@@ -13,6 +13,11 @@ across the grid, and each member bit-for-bit identical to a solo
 The table shows what the paper's Sec. V tuning loop actually looks at:
 final accuracy and simulated seconds-to-target per grid point — here the
 whole grid costs roughly one solo run of host time.
+
+Eval is sweep-native too: every (round, member) metric row comes out of
+two batched ``eval_traj`` dispatches (train + test) instead of
+S × n_eval × 2 separate ``eval_global`` calls, and the ``eval`` phase
+line below shows what that costs on the host.
 """
 import pathlib
 import sys
@@ -33,6 +38,7 @@ def main():
     from repro.fed.simulator import seconds_to_accuracy
     from repro.fed.sweep_engine import SweepSpec
     from repro.sysmodel import fleet_summary
+    from repro.telemetry import PhaseProfiler
 
     model_cfg, fed, fleet, deadline = setup_sweep()
     print(fleet_summary(fleet))
@@ -46,9 +52,12 @@ def main():
           f"(lr x staleness_alpha) over ONE shared event plan, "
           f"{ROUNDS} rounds each")
 
+    prof = PhaseProfiler()
     t0 = time.time()
-    sweep = fed_api.run(model_cfg, fed, spec, ROUNDS, fleet=fleet)
+    sweep = fed_api.run(model_cfg, fed, spec, ROUNDS, fleet=fleet,
+                        profiler=prof)
     sweep_s = time.time() - t0
+    phases = prof.finish()["phases"]
 
     # one solo compiled run for the host-time comparison (it rebuilds the
     # plan and pays its own dispatch — the cost every extra grid point
@@ -71,6 +80,13 @@ def main():
           f"({per_cfg:.2f}s/config) vs one solo compiled run "
           f"{solo_s:.2f}s — per-config cost "
           f"{solo_s / per_cfg:.1f}x lower in the sweep")
+
+    n_eval = len(sweep[0]["round"])
+    n_naive = spec.n_configs * n_eval * 2
+    print(f"eval phase: {phases.get('eval', 0.0) * 1e3:.1f}ms host time "
+          f"for all {spec.n_configs * n_eval} (round, member) metric rows "
+          f"— 2 batched eval_traj dispatches instead of "
+          f"{n_naive} separate eval_global calls")
 
 
 if __name__ == "__main__":

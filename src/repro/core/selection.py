@@ -82,3 +82,16 @@ def sample_multiset(key, probs: jnp.ndarray, k: int) -> jnp.ndarray:
     """K categorical draws with replacement -> (K,) int32 client ids."""
     return jax.random.categorical(
         key, jnp.log(jnp.maximum(probs, 1e-30)), shape=(k,)).astype(jnp.int32)
+
+
+def sample_uniform_ids(key, n: int, k: int) -> jnp.ndarray:
+    """K uniform-with-replacement draws -> (K,) int32 client ids.
+
+    Same distribution as ``sample_multiset(key, uniform_probs(n), k)`` but
+    O(K) work and no (N,) probability vector, so selection cost is
+    independent of fleet size — the ``sampler="indexed"`` path that makes
+    million-device populations viable.  (Different bits from the
+    categorical sampler for the same key: the two are separate,
+    self-consistent timelines.)
+    """
+    return jax.random.randint(key, (k,), 0, n, dtype=jnp.int32)

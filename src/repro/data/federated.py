@@ -2,13 +2,28 @@
 whole cohort can live in one stacked array (vmap simulator), with masks for
 correctness, plus train/test splitting and device-weighted global metrics
 (p_k = |D_k| / |D|, Sec. II-A).
+
+``FederatedData`` is the resident form — all N devices stacked into
+``(N, M, ...)`` arrays.  ``LazyFederatedData`` is the population-scale
+form: every device's examples are a pure function of
+``(population_seed, device_id)``, synthesized on demand, so a round
+gathers ``(K, M, ...)`` batches for the selected cohort and per-round
+data cost is O(K·M) no matter how large the fleet is.
+``LazyFederatedData.materialize()`` produces the equivalent resident
+``FederatedData`` by gathering ``arange(N)`` — the same computation, so
+lazy cohort rows are bit-for-bit rows of the materialized stack (the
+foundation of the lazy-vs-materialized engine equivalence tests).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+import functools
+from typing import Dict, List, Optional
 
 import numpy as np
+
+from repro.data import partition
+from repro.sysmodel import population as _pop
 
 
 @dataclasses.dataclass
@@ -67,3 +82,163 @@ def minibatch_indices(rng: np.random.Generator, mask_row: np.ndarray,
     """Sample `batch` valid indices (with replacement if needed)."""
     valid = np.flatnonzero(mask_row > 0)
     return rng.choice(valid, size=batch, replace=len(valid) < batch)
+
+
+# --------------------------------------------------------------------------
+# lazy population data
+# --------------------------------------------------------------------------
+
+# hash channel for per-device dataset sizes (vectorized, loop-free: the
+# plan builders gather R·K sizes without synthesizing any examples)
+_CH_SIZE = 7
+
+
+@functools.lru_cache(maxsize=32)
+def _class_prototypes(seed: int, n_classes: int, n_features: int,
+                      proto_scale: float):
+    """Shared class means of the gaussian mixture (population-level, O(C·F):
+    independent of both N and the cohort)."""
+    rng = np.random.default_rng(
+        np.random.SeedSequence([0x9107_0CA5, int(seed)]))
+    return rng.normal(0.0, proto_scale,
+                      (n_classes, n_features)).astype(np.float32)
+
+
+class SizesView:
+    """Lazy per-device train-size vector: supports exactly the fancy
+    indexing the plan builders use (``sizes[ids]``) but synthesizes only
+    the requested rows — the O(K) stand-in for ``mask.sum(axis=1)``."""
+
+    def __init__(self, data: "LazyFederatedData"):
+        self._data = data
+
+    def __getitem__(self, ids) -> np.ndarray:
+        return self._data.gather_sizes(ids)
+
+
+@dataclasses.dataclass(frozen=True)
+class LazyFederatedData:
+    """Generative federated dataset: gaussian mixture features around
+    shared class prototypes, labels from a non-IID partitioner
+    (``dirichlet`` / ``shard`` / ``iid``), sizes from a counter hash.
+
+    Device k's examples come from its own ``(seed, k)``-keyed stream
+    (``partition.device_rng``): identical across processes, independent
+    of fleet size and of which cohort requests them.
+
+    ``eval_cohort`` bounds global-eval cost at population scale: when
+    set, compiled engines evaluate on a deterministic stride sample of
+    that many devices instead of all N (leave ``None`` — evaluate
+    everyone — for small-N equivalence runs).
+    """
+    n_devices: int
+    seed: int = 0
+    partition: str = "dirichlet"     # "dirichlet" | "shard" | "iid"
+    alpha: float = 0.5               # dirichlet concentration
+    shards_per_device: int = 2
+    n_classes: int = 10
+    n_features: int = 60
+    min_size: int = 10
+    max_size: int = 30
+    test_size: int = 5
+    noise: float = 0.5
+    proto_scale: float = 1.0
+    eval_cohort: Optional[int] = None
+
+    def __post_init__(self):
+        if self.n_devices <= 0:
+            raise ValueError(f"n_devices must be positive, got "
+                             f"{self.n_devices}")
+        if self.partition not in ("dirichlet", "shard", "iid"):
+            raise ValueError(f"unknown partition {self.partition!r}")
+        if not (0 < self.min_size <= self.max_size):
+            raise ValueError("need 0 < min_size <= max_size")
+
+    # ------------------------------------------------------------ sizes
+    def gather_sizes(self, ids) -> np.ndarray:
+        """Train-set sizes for ``ids`` (any shape) — vectorized hash
+        draw, no example synthesis."""
+        u = _pop.hash_uniform(self.seed, _CH_SIZE, np.asarray(ids))
+        span = self.max_size - self.min_size + 1
+        return (self.min_size + np.floor(u * span)).astype(np.int64)
+
+    @property
+    def sizes(self) -> SizesView:
+        return SizesView(self)
+
+    # --------------------------------------------------------- synthesis
+    def _device_labels(self, rng: np.random.Generator, did: int,
+                       n_train: int):
+        C = self.n_classes
+        if self.partition == "dirichlet":
+            pi = partition.dirichlet_proportions(rng, C, self.alpha)
+            y_tr = rng.choice(C, size=n_train, p=pi)
+            y_te = rng.choice(C, size=self.test_size, p=pi)
+        elif self.partition == "shard":
+            owned = partition.shard_labels(
+                self.seed, np.asarray([did]), self.n_devices,
+                self.shards_per_device, C)[0]
+            y_tr = owned[np.arange(n_train) % len(owned)]
+            y_te = owned[np.arange(self.test_size) % len(owned)]
+        else:  # iid
+            y_tr = rng.integers(0, C, size=n_train)
+            y_te = rng.integers(0, C, size=self.test_size)
+        return y_tr.astype(np.int32), y_te.astype(np.int32)
+
+    def gather(self, ids) -> Dict[str, np.ndarray]:
+        """Cohort batch for ``ids`` (any shape): dict with
+        x (..., M, F) f32 / y (..., M) i32 / mask (..., M) f32 and the
+        test_* equivalents, rows bit-for-bit equal to the materialized
+        stack's rows.  Cost O(#unique ids · M); duplicate ids (a device
+        selected in many rounds) are synthesized once."""
+        ids = np.asarray(ids, dtype=np.int64)
+        flat = ids.reshape(-1)
+        uniq, inv = np.unique(flat, return_inverse=True)
+        M, T, F = self.max_size, self.test_size, self.n_features
+        proto = _class_prototypes(self.seed, self.n_classes, F,
+                                  self.proto_scale)
+        sizes = self.gather_sizes(uniq)
+        U = len(uniq)
+        x = np.zeros((U, M, F), np.float32)
+        y = np.zeros((U, M), np.int32)
+        mask = np.zeros((U, M), np.float32)
+        tx = np.zeros((U, T, F), np.float32)
+        ty = np.zeros((U, T), np.int32)
+        for i, did in enumerate(uniq):
+            n = int(sizes[i])
+            rng = partition.device_rng(self.seed, did)
+            y_tr, y_te = self._device_labels(rng, int(did), n)
+            x[i, :n] = proto[y_tr] + self.noise * rng.standard_normal(
+                (n, F)).astype(np.float32)
+            y[i, :n] = y_tr
+            mask[i, :n] = 1.0
+            tx[i] = proto[y_te] + self.noise * rng.standard_normal(
+                (T, F)).astype(np.float32)
+            ty[i] = y_te
+        lead = ids.shape
+        out = {"x": x[inv], "y": y[inv], "mask": mask[inv],
+               "test_x": tx[inv], "test_y": ty[inv],
+               "test_mask": np.ones(flat.shape + (T,), np.float32)}
+        return {k: v.reshape(lead + v.shape[1:]) for k, v in out.items()}
+
+    # ------------------------------------------------------------- eval
+    def eval_ids(self) -> np.ndarray:
+        """Deterministic global-eval cohort: everyone when small/unset, a
+        stride sample (unbiased — device streams are iid in id) when
+        ``eval_cohort`` bounds it."""
+        n = self.n_devices
+        if self.eval_cohort is None or self.eval_cohort >= n:
+            return np.arange(n, dtype=np.int64)
+        e = int(self.eval_cohort)
+        return (np.arange(e, dtype=np.int64) * n) // e
+
+    def materialize(self) -> FederatedData:
+        """Resident ``FederatedData`` over the full fleet — one gather of
+        ``arange(N)``; rows are bit-for-bit the lazy cohort gathers."""
+        d = self.gather(np.arange(self.n_devices, dtype=np.int64))
+        sizes = d["mask"].sum(axis=1)
+        p = sizes / sizes.sum()
+        return FederatedData(x=d["x"], y=d["y"], mask=d["mask"],
+                             p=p.astype(np.float32),
+                             test_x=d["test_x"], test_y=d["test_y"],
+                             test_mask=d["test_mask"])

@@ -1,0 +1,91 @@
+"""Non-IID partitioners for lazy populations.
+
+A partitioner describes how class labels are distributed across an
+arbitrarily large device population *without* materializing the
+partition: everything is a pure function of ``(seed, device_id)``.
+
+  dirichlet — device k's class proportions π_k ~ Dir(α·1_C), the standard
+              non-IID knob (small α → near-single-class devices); drawn
+              from the device's own counter-keyed generator so any cohort
+              can be synthesized independently and identically in any
+              process.
+  shard     — the FedAvg-paper pathological split: a global pool of
+              ``n_devices · shards_per_device`` label-sorted shards is
+              permuted by a seeded Feistel network (a bijection evaluable
+              pointwise in O(1)), and device k owns shards
+              ``perm(k·S), …, perm(k·S + S - 1)`` — so shard assignment
+              for a K-cohort costs O(K), never O(N).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sysmodel.population import hash_u64
+
+_U64 = np.uint64
+
+# rng-stream domain separator: device data streams must never collide
+# with other (seed, id)-keyed draws
+_DATA_STREAM = 0x5EED_DA7A
+
+
+def device_rng(seed: int, device_id: int) -> np.random.Generator:
+    """Device ``device_id``'s private data stream.  Keyed by
+    ``(population_seed, device_id)`` through a SeedSequence, so it is
+    identical in every process and independent of which cohort (or how
+    large a fleet) it is requested from."""
+    return np.random.default_rng(
+        np.random.SeedSequence([_DATA_STREAM, int(seed), int(device_id)]))
+
+
+def feistel_permutation(seed: int, idx: np.ndarray, domain: int) -> np.ndarray:
+    """Seeded bijection on ``[0, domain)`` evaluated pointwise.
+
+    4-round Feistel network over the smallest even-bit-width power of two
+    covering ``domain``, with cycle-walking for out-of-range outputs
+    (expected < 4 extra rounds since the cover is < 4·domain).  O(1) per
+    index — the property that lets the shard partitioner assign shards to
+    a cohort without touching the other N-K devices.
+    """
+    if domain <= 0:
+        raise ValueError(f"domain must be positive, got {domain}")
+    total_bits = max(2, (int(domain) - 1).bit_length())
+    total_bits += total_bits % 2
+    half = total_bits // 2
+    hmask = _U64((1 << half) - 1)
+    hshift = _U64(half)
+    dom = _U64(domain)
+
+    def enc(x):
+        left, right = x >> hshift, x & hmask
+        for rnd in range(4):
+            f = hash_u64(seed, 0xF0 + rnd, right) & hmask
+            left, right = right, left ^ f
+        return (left << hshift) | right
+
+    y = enc(np.asarray(idx).astype(np.uint64))
+    out = y >= dom
+    while out.any():
+        y = np.where(out, enc(y), y)
+        out = y >= dom
+    return y.astype(np.int64)
+
+
+def shard_labels(seed: int, device_ids: np.ndarray, n_devices: int,
+                 shards_per_device: int, n_classes: int) -> np.ndarray:
+    """(len(ids), shards_per_device) int32 class labels of each device's
+    shards.  Shard ``s`` of the label-sorted global pool has class
+    ``(s · C) // total``; devices own Feistel-permuted slots."""
+    device_ids = np.asarray(device_ids, dtype=np.int64)
+    total = int(n_devices) * int(shards_per_device)
+    slots = device_ids[:, None] * shards_per_device \
+        + np.arange(shards_per_device, dtype=np.int64)[None, :]
+    shards = feistel_permutation(seed, slots, total)
+    return ((shards * n_classes) // total).astype(np.int32)
+
+
+def dirichlet_proportions(rng: np.random.Generator, n_classes: int,
+                          alpha: float) -> np.ndarray:
+    """π ~ Dir(α·1_C) from the device's stream (first draw, so size-only
+    gathers that skip label synthesis never disturb it)."""
+    return rng.dirichlet(np.full(n_classes, float(alpha)))

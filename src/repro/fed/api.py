@@ -36,6 +36,7 @@ import functools
 import warnings
 from typing import Mapping, Optional, Union
 
+from repro.data.federated import LazyFederatedData as _LazyData
 from repro.fed import async_engine as _async
 from repro.fed import scan_engine as _scan
 from repro.fed import simulator as _sim
@@ -93,7 +94,10 @@ def run(model_cfg, fed, cfg: RunConfig, rounds: int, *,
     Parameters
     ----------
     model_cfg, fed : the model config and ``FederatedData`` every engine
-        takes as its first two arguments.
+        takes as its first two arguments.  A ``LazyFederatedData``
+        routes to the population-scale cohort engines (O(K) per-round
+        cost at any fleet size; requires ``sampler="indexed"`` configs,
+        and ``fleet`` may be a ``PopulationSpec``).
     cfg : ``FLConfig`` (sync), ``AsyncFLConfig`` (async), or
         ``SweepSpec`` (batched hyper-parameter sweep; its base config
         picks sync vs async).
@@ -135,6 +139,55 @@ def run(model_cfg, fed, cfg: RunConfig, rounds: int, *,
                 f"(failure-injection channels), got "
                 f"{type(scenario).__name__}; the defense knob is the "
                 f"config's guard field (repro.kernels.GuardConfig)")
+
+    if isinstance(fed, _LazyData):
+        # population-scale path: O(K) per-round cost, shapes never in N
+        from repro.fed import lazy_engine as _lazy
+        if isinstance(cfg, _sweep.SweepSpec) or sweep is not None:
+            raise ValueError(
+                "lazy populations cannot run sweeps yet: the sweep "
+                "engines vmap over resident (N, M, ...) stacks — "
+                "materialize() the data, or run solo lazy runs per "
+                "member")
+        if scenario is not None:
+            raise ValueError(
+                "lazy populations do not support failure scenarios: "
+                "the scenario channels are realized over resident "
+                "plans — materialize() and use the resident engines")
+        if sel_probs is not None:
+            raise ValueError(
+                "sel_probs= is an (N,)-vector knob, exactly the O(N) "
+                "state lazy populations avoid — lazy runs use "
+                "sampler='indexed' uniform selection")
+        if engine == "loop":
+            raise ValueError(
+                "lazy populations run on the compiled cohort engines "
+                "only (engine='scan'/'auto'): the python-loop "
+                "reference engines gather from resident stacks — "
+                "materialize() to compare against them")
+        cfg = _with_telemetry(cfg, telemetry)
+        if isinstance(cfg, _async.AsyncFLConfig):
+            if fleet is None:
+                raise ValueError(
+                    "async configs need fleet=: pass the "
+                    "PopulationSpec (or a DeviceFleet) the event "
+                    "timeline is built from")
+            return _lazy.run_async_lazy(
+                model_cfg, fed, cfg, fleet, rounds, init_key=key,
+                eval_every=eval_every, mesh=mesh, plan=plan,
+                profiler=profiler)
+        if not isinstance(cfg, _sim.FLConfig):
+            raise TypeError(
+                f"cfg must be FLConfig or AsyncFLConfig for lazy "
+                f"populations, got {type(cfg).__name__}")
+        if plan is not None:
+            raise ValueError(
+                "plan= is an async-engine knob (a pre-built event "
+                "plan); sync runs have no event plan")
+        return _lazy.run_federated_lazy(
+            model_cfg, fed, cfg, rounds, init_key=key,
+            eval_every=eval_every, fleet=fleet, mesh=mesh,
+            profiler=profiler)
 
     if isinstance(cfg, _sweep.SweepSpec) or sweep is not None:
         spec = _as_sweep_spec(cfg, sweep)

@@ -98,6 +98,12 @@ class AsyncFLConfig:
     # fused flat kernel — static, jit-cache-keyed, never sweepable; None
     # is bit-for-bit the unguarded program (see FLConfig.guard)
     guard: Optional[object] = None
+    # uniform-selection sampler (see FLConfig.sampler): "indexed" draws
+    # O(K) ids with no (N,) probability vector — required for lazy
+    # populations; incompatible with latency_aware (expected latencies
+    # over all N are inherently O(N)).  Timeline-affecting, never
+    # sweepable.
+    sampler: str = "categorical"
     seed: int = 0
 
     def __post_init__(self):
@@ -105,6 +111,13 @@ class AsyncFLConfig:
         assert self.algo in ASYNC_ALGOS, self.algo
         assert self.agg_backend in simulator.AGG_BACKENDS, self.agg_backend
         assert self.agg_dtype in simulator.AGG_DTYPES, self.agg_dtype
+        if self.sampler not in ("categorical", "indexed"):
+            raise ValueError(f"unknown sampler {self.sampler!r}")
+        if self.sampler == "indexed" and self.latency_aware:
+            raise ValueError(
+                "sampler='indexed' is uniform-only: latency-aware "
+                "selection needs expected latencies for every device "
+                "(O(N)) — use sampler='categorical' or drop latency_aware")
         if self.guard is not None:
             from repro.kernels.guard import as_guard
             as_guard(self.guard)
@@ -125,7 +138,8 @@ class AsyncFLConfig:
             lr=self.lr, max_local_steps=self.max_local_steps,
             het_steps=self.het_steps, psi=self.psi,
             agg_backend=self.agg_backend, agg_dtype=self.agg_dtype,
-            telemetry=self.telemetry, guard=self.guard, seed=self.seed)
+            telemetry=self.telemetry, guard=self.guard,
+            sampler=self.sampler, seed=self.seed)
 
     def timeline_config(self) -> "AsyncFLConfig":
         """The jit-cache key: this config with every SWEEPABLE field
@@ -309,6 +323,25 @@ def _draw_cids_chain(subs, probs):
     return jax.vmap(lambda s: selection.sample_multiset(s, probs, 1)[0])(subs)
 
 
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _draw_ids_chain_indexed(subs, n: int, k: int):
+    """`_draw_ids_chain` for ``sampler="indexed"``: the same
+    split-then-draw key discipline, but an O(K) uniform id draw with no
+    (N,) probability vector — host selection cost per round is
+    independent of fleet size."""
+    def one(sub):
+        k_sel, _ = jax.random.split(sub)
+        return selection.sample_uniform_ids(k_sel, n, k)
+    return jax.vmap(one)(subs)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _draw_cids_chain_indexed(subs, n: int):
+    """`_draw_cids_chain` for ``sampler="indexed"`` (O(1) per dispatch)."""
+    return jax.vmap(
+        lambda s: selection.sample_uniform_ids(s, n, 1)[0])(subs)
+
+
 def deadline_selection_probs(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
                              sizes: np.ndarray):
     """The static latency-aware selection distribution (or None for
@@ -350,9 +383,14 @@ def build_deadline_plan(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
     from repro.fed.scan_engine import _split_chain
     K = afl.n_selected
     subs = _split_chain(init_key, rounds)
-    probs = sel_probs if sel_probs is not None \
-        else selection.uniform_probs(fleet.n_devices)
-    ids = np.asarray(_draw_ids_chain(subs, probs, K), np.int32)
+    if sel_probs is None and afl.sampler == "indexed":
+        # O(K) per round: never build the (N,) uniform vector
+        ids = np.asarray(
+            _draw_ids_chain_indexed(subs, fleet.n_devices, K), np.int32)
+    else:
+        probs = sel_probs if sel_probs is not None \
+            else selection.uniform_probs(fleet.n_devices)
+        ids = np.asarray(_draw_ids_chain(subs, probs, K), np.int32)
     n_steps = np.stack([np.asarray(simulator.local_step_draws(t, K, afl))
                         for t in range(rounds)]).astype(np.int32)
     sc = scenario_mod.as_active(scenario)
@@ -514,9 +552,13 @@ def _build_fedbuff_attempt(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
             n_examples=sizes))
         probs = selection.latency_aware_probs(
             jnp.ones((fleet.n_devices,)), exp_lat, afl.deadline)
+        cids = np.asarray(_draw_cids_chain(subs, probs), np.int64)
+    elif afl.sampler == "indexed":
+        cids = np.asarray(
+            _draw_cids_chain_indexed(subs, fleet.n_devices), np.int64)
     else:
         probs = selection.uniform_probs(fleet.n_devices)
-    cids = np.asarray(_draw_cids_chain(subs, probs), np.int64)
+        cids = np.asarray(_draw_cids_chain(subs, probs), np.int64)
     steps = np.empty(total, np.int64)
     for d in range(total):
         step_rng = np.random.default_rng(20_000 + d)
@@ -530,7 +572,7 @@ def _build_fedbuff_attempt(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
     lats = device_latencies(fleet, cids, steps, cost, n_examples=sizes[cids])
     if g is not None and g.lat_scale is not None:
         lats = lats * g.lat_scale
-    always_on = bool((np.asarray(fleet.avail_period) <= 0.0).all())
+    always_on = fleet.always_on
 
     events = EventQueue()
     free: List[int] = []
@@ -717,6 +759,21 @@ def pool_init(model_cfg, fl: simulator.FLConfig, params, data, n_rows: int):
             jnp.zeros((n_rows,), gam_s.dtype))
 
 
+def pool_init_batch(model_cfg, fl: simulator.FLConfig, params, batch,
+                    n_rows: int):
+    """`pool_init` for the lazy cohort path: probes shapes through
+    `_local_updates_batch` on a width-1 slice of a pre-gathered batch, so
+    no resident (N, M, ...) stack is ever needed."""
+    one = {k: batch[k][:1] for k in ("x", "y", "mask")}
+    steps = jnp.ones((1,), jnp.int32)
+    d_s, g_s, gam_s = jax.eval_shape(
+        lambda p, b: simulator._local_updates_batch(model_cfg, p, b,
+                                                    steps, fl), params, one)
+    row = lambda s: jnp.zeros((n_rows,) + s.shape[1:], s.dtype)
+    return (jax.tree.map(row, d_s), jax.tree.map(row, g_s),
+            jnp.zeros((n_rows,), gam_s.dtype))
+
+
 @functools.partial(jax.jit, static_argnums=(0, 1), static_argnames=("mesh",))
 def deadline_slow_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
                        ids, n_steps, arrived_mask, store_slot, due_slot,
@@ -743,6 +800,21 @@ def deadline_slow_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
     deltas, grads, gammas = simulator._local_updates(
         model_cfg, params, data, ids, n_steps, fl, h)
     deltas, grads = simulator.apply_corruption(deltas, grads, corrupt)
+    return _deadline_after_updates(
+        afl, params, pend, deltas, grads, gammas, arrived_mask, store_slot,
+        due_slot, due_mask, due_tau, h, corrupt is not None, mesh)
+
+
+def _deadline_after_updates(afl, params, pend, deltas, grads, gammas,
+                            arrived_mask, store_slot, due_slot, due_mask,
+                            due_tau, h, corrupted: bool, mesh):
+    """Everything after the local solves of a non-fast deadline round:
+    due-slot gather, straggler stash, fixed-budget masked staleness
+    aggregation, telemetry.  Factored so `deadline_slow_step` (resident
+    data, gather inside the jit) and `deadline_slow_step_cohort`
+    (host-gathered lazy batch) run the identical traced ops —
+    ``corrupted`` is the (trace-static) None-ness of the corruption
+    channel."""
     pend_d, pend_g, pend_gam = pend
     # gather due rows BEFORE storing: a slot aggregated this round may be
     # reallocated to one of this round's stragglers
@@ -756,13 +828,13 @@ def deadline_slow_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
     pend_g = jax.tree.map(lambda b, x: b.at[store_slot].set(x),
                           pend_g, grads)
     pend_gam = pend_gam.at[store_slot].set(gammas)
-    K = ids.shape[0]
+    K = gammas.shape[0]
     tau = jnp.concatenate([jnp.zeros((K,), jnp.float32), due_tau])
     mask = jnp.concatenate([arrived_mask.astype(jnp.float32), due_mask])
     deltas_all = _concat0(deltas, due_d)
     grads_all = _concat0(grads, due_g)
     gammas_all = jnp.concatenate([gammas, due_gam])
-    if corrupt is not None:
+    if corrupted:
         # corruption breaks the masked-row contract the aggregation rules
         # rely on (a NaN row enters the reductions as 0·NaN = NaN): a
         # corrupted straggler still in flight — and the dump row read
@@ -786,6 +858,25 @@ def deadline_slow_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
     return new_params, (pend_d, pend_g, pend_gam)
 
 
+@functools.partial(jax.jit, static_argnums=(0, 1), static_argnames=("mesh",))
+def deadline_slow_step_cohort(model_cfg, afl: AsyncFLConfig, params, pend,
+                              batch, n_steps, arrived_mask, store_slot,
+                              due_slot, due_mask, due_tau, hypers=None,
+                              corrupt=None, *, mesh=None):
+    """`deadline_slow_step` for lazy populations: the cohort batch is
+    pre-gathered on the host (``data.gather(plan.ids[t])``), so the traced
+    program's shapes depend on K and the pool width — never on N.  Runs
+    `_local_updates_batch` + `_deadline_after_updates`, the exact units of
+    the resident step."""
+    h = hypers if hypers is not None else hypers_of(afl)
+    deltas, grads, gammas = simulator._local_updates_batch(
+        model_cfg, params, batch, n_steps, afl.sync_config(), h)
+    deltas, grads = simulator.apply_corruption(deltas, grads, corrupt)
+    return _deadline_after_updates(
+        afl, params, pend, deltas, grads, gammas, arrived_mask, store_slot,
+        due_slot, due_mask, due_tau, h, corrupt is not None, mesh)
+
+
 @functools.partial(jax.jit, static_argnums=(0, 1))
 def fedbuff_seed_pool(model_cfg, afl: AsyncFLConfig, params, pend, data,
                       ids, n_steps, store_slot, hypers=None, corrupt=None):
@@ -796,6 +887,11 @@ def fedbuff_seed_pool(model_cfg, afl: AsyncFLConfig, params, pend, data,
     deltas, grads, gammas = simulator._local_updates(
         model_cfg, params, data, ids, n_steps, afl.sync_config(), h)
     deltas, grads = simulator.apply_corruption(deltas, grads, corrupt)
+    return _pool_store(pend, store_slot, deltas, grads, gammas)
+
+
+def _pool_store(pend, store_slot, deltas, grads, gammas):
+    """Stash a batch of updates into their plan-assigned pool slots."""
     pend_d, pend_g, pend_gam = pend
     pend_d = jax.tree.map(lambda b, x: b.at[store_slot].set(x),
                           pend_d, deltas)
@@ -803,6 +899,19 @@ def fedbuff_seed_pool(model_cfg, afl: AsyncFLConfig, params, pend, data,
                           pend_g, grads)
     pend_gam = pend_gam.at[store_slot].set(gammas)
     return (pend_d, pend_g, pend_gam)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def fedbuff_seed_pool_cohort(model_cfg, afl: AsyncFLConfig, params, pend,
+                             batch, n_steps, store_slot, hypers=None,
+                             corrupt=None):
+    """`fedbuff_seed_pool` over a host-gathered seed-cohort batch (lazy
+    populations): shapes depend on `concurrency`, never on N."""
+    h = hypers if hypers is not None else hypers_of(afl)
+    deltas, grads, gammas = simulator._local_updates_batch(
+        model_cfg, params, batch, n_steps, afl.sync_config(), h)
+    deltas, grads = simulator.apply_corruption(deltas, grads, corrupt)
+    return _pool_store(pend, store_slot, deltas, grads, gammas)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1), static_argnames=("mesh",))
@@ -829,12 +938,19 @@ def fedbuff_round_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
     deltas, grads, gammas = simulator._local_updates(
         model_cfg, params, data, ids, n_steps, afl.sync_config(), h)
     deltas, grads = simulator.apply_corruption(deltas, grads, corrupt)
+    return _fedbuff_after_updates(afl, params, pend, deltas, grads, gammas,
+                                  store_slot, flush_slot, tau, h,
+                                  flush_mask, mesh)
+
+
+def _fedbuff_after_updates(afl, params, pend, deltas, grads, gammas,
+                           store_slot, flush_slot, tau, h, flush_mask, mesh):
+    """Everything after the local solves of a fedbuff flush round: store,
+    flush gather, staleness aggregation, telemetry.  Shared by
+    `fedbuff_round_step` (resident) and `fedbuff_round_step_cohort`
+    (lazy, host-gathered batch) so both run identical traced ops."""
+    pend = _pool_store(pend, store_slot, deltas, grads, gammas)
     pend_d, pend_g, pend_gam = pend
-    pend_d = jax.tree.map(lambda b, x: b.at[store_slot].set(x),
-                          pend_d, deltas)
-    pend_g = jax.tree.map(lambda b, x: b.at[store_slot].set(x),
-                          pend_g, grads)
-    pend_gam = pend_gam.at[store_slot].set(gammas)
     flush_d = jax.tree.map(lambda x: x[flush_slot], pend_d)
     flush_g = jax.tree.map(lambda x: x[flush_slot], pend_g)
     flush_gam = pend_gam[flush_slot]
@@ -849,6 +965,23 @@ def fedbuff_round_step(model_cfg, afl: AsyncFLConfig, params, pend, data,
             mask=flush_mask, guard=ginfo)
         return new_params, (pend_d, pend_g, pend_gam), m
     return new_params, (pend_d, pend_g, pend_gam)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1), static_argnames=("mesh",))
+def fedbuff_round_step_cohort(model_cfg, afl: AsyncFLConfig, params, pend,
+                              batch, n_steps, store_slot, flush_slot, tau,
+                              hypers=None, flush_mask=None, corrupt=None, *,
+                              mesh=None):
+    """`fedbuff_round_step` for lazy populations: this round's dispatch
+    cohort arrives pre-gathered, so shapes depend on the plan's dispatch
+    width W and pool size — never on N."""
+    h = hypers if hypers is not None else hypers_of(afl)
+    deltas, grads, gammas = simulator._local_updates_batch(
+        model_cfg, params, batch, n_steps, afl.sync_config(), h)
+    deltas, grads = simulator.apply_corruption(deltas, grads, corrupt)
+    return _fedbuff_after_updates(afl, params, pend, deltas, grads, gammas,
+                                  store_slot, flush_slot, tau, h,
+                                  flush_mask, mesh)
 
 
 # ----------------------------------------------------------- python driver

@@ -1,0 +1,344 @@
+"""Population-scale federated engines: O(K) per-round cost at any N.
+
+The resident engines hold every device's data as an (N, M, ...) stack
+and (for selection) an (N,) probability vector, so host plan-build cost,
+device memory, and compiled-program shapes all grow with the fleet.  At
+production scale (K ≈ 10–100 sampled from N ≈ 10⁶) almost all of that is
+wasted: a run only ever touches the ~R·K dispatched devices.
+
+These engines take the lazy descriptions instead — a
+``repro.sysmodel.PopulationSpec`` (generative fleet) and a
+``repro.data.LazyFederatedData`` (generative per-device datasets) — and
+restructure the run so nothing scales with N:
+
+  * selection uses ``sampler="indexed"`` (O(K) uniform id draws, no (N,)
+    vector) — the plan's pre-drawn ``(R, K)`` id grid is the only record
+    of who participates;
+  * the host gathers the ``(R, K, M, ...)`` cohort batches once, up
+    front, and the ``lax.scan`` consumes them as scan inputs — the
+    traced programs (``simulator.fl_round_cohort``,
+    ``async_engine.deadline_slow_step_cohort`` /
+    ``fedbuff_round_step_cohort``) have shapes in K, R and the pool
+    width only;
+  * plan builders run on the lazy gather protocol
+    (``PopulationSpec.gather_caps`` / ``gather_avail`` /
+    ``LazyFederatedData.sizes``), so event-plan construction is O(R·K);
+  * global evaluation runs over ``data.eval_ids()`` — everyone at small
+    N, a bounded stride cohort (``eval_cohort``) at population scale.
+
+Equivalence contract (tests/test_population.py): on the SAME config with
+``sampler="indexed"``, a lazy run and a resident run over
+``spec.materialize()`` / ``data.materialize()`` produce bit-for-bit
+identical params, history, wall clocks, and plan digests — the lazy
+gathers are literally rows of the materialized arrays, and the round
+math runs the same shared units (``_local_updates_batch``,
+``_sync_aggregate``, ``_deadline_after_updates``,
+``_fedbuff_after_updates``) as the resident steps.
+
+Scope: cohort-shaped algorithms only (``simulator.COHORT_ALGOS`` — the
+all-N-scoring fednu baselines and folb2's second draw are inherently
+O(N)), no telemetry, no failure scenarios; the validations raise with
+the resident-engine alternative spelled out.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flat as flat_lib
+from repro.data.federated import LazyFederatedData
+from repro.fed import async_engine as async_lib
+from repro.fed import scan_engine
+from repro.fed import server_opt as sopt
+from repro.fed import simulator
+from repro.models import small
+from repro.sysmodel import round_cost_for
+
+
+def _check_lazy_config(cfg, kind: str) -> None:
+    """The lazy engines' envelope, with actionable errors."""
+    if cfg.sampler != "indexed":
+        raise ValueError(
+            f"lazy {kind} runs need sampler='indexed': the categorical "
+            f"sampler draws from an (N,) probability vector, which is "
+            f"exactly the O(N) state lazy populations exist to avoid — "
+            f"set sampler='indexed' on the config (a different, "
+            f"self-consistent id timeline), or materialize() the "
+            f"population and use the resident engines")
+    if cfg.algo not in simulator.COHORT_ALGOS:
+        raise ValueError(
+            f"lazy runs support the cohort-shaped algorithms "
+            f"{simulator.COHORT_ALGOS}, not {cfg.algo!r}: fednu* probes "
+            f"every device's gradient and folb2 draws a second scored "
+            f"cohort — both inherently O(N); materialize() for those")
+    if cfg.telemetry:
+        raise ValueError(
+            "lazy runs do not support telemetry=True yet (the network/"
+            "pool series assume a resident plan over a materialized "
+            "fleet); run with telemetry=False, or materialize()")
+
+
+def _eval_arrays(data: LazyFederatedData):
+    """Gather the evaluation cohort once: train/test batches plus the
+    size weights, computed from the gathered mask exactly as
+    ``materialize()`` computes ``fed.p`` — so at ``eval_cohort=None``
+    and small N the arrays (and every eval result) are bit-for-bit the
+    resident engines' inputs."""
+    d = data.gather(data.eval_ids())
+    train = {"x": jnp.asarray(d["x"]), "y": jnp.asarray(d["y"]),
+             "mask": jnp.asarray(d["mask"])}
+    test = {"x": jnp.asarray(d["test_x"]), "y": jnp.asarray(d["test_y"]),
+            "mask": jnp.asarray(d["test_mask"])}
+    sizes = d["mask"].sum(axis=1)
+    p = jnp.asarray((sizes / sizes.sum()).astype(np.float32))
+    return train, test, p
+
+
+def _round_batches(data: LazyFederatedData, ids: np.ndarray):
+    """The scan's per-round cohort inputs: train arrays only, stacked
+    (R, K, M, ...) jnp arrays."""
+    d = data.gather(ids)
+    return {"x": jnp.asarray(d["x"]), "y": jnp.asarray(d["y"]),
+            "mask": jnp.asarray(d["mask"])}
+
+
+# ------------------------------------------------------------- sync engine
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2),
+                   static_argnames=("mesh",))
+def scan_rounds_cohort(model_cfg, fl: simulator.FLConfig,
+                       spec: flat_lib.FlatSpec, w0_flat, batches, steps,
+                       hypers, so_state0=None, *, mesh=None):
+    """Whole-run XLA program over pre-gathered cohorts: scan
+    ``fl_round_cohort`` (plus the same jitted server-optimizer update the
+    resident engines apply) over the (R, K, ...) batch stack.  Shapes
+    depend on R and K only."""
+    use_so = so_state0 is not None
+    so_cfg = sopt.ServerOptConfig(kind=fl.server_opt, lr=1.0)
+
+    def body(carry, xs):
+        w_flat, so_state = carry if use_so else (carry, None)
+        batch_t, steps_t = xs
+        params = flat_lib.unravel(spec, w_flat)
+        new_params, _ = simulator.fl_round_cohort(
+            model_cfg, fl, params, batch_t, steps_t, hypers, mesh=mesh)
+        if use_so:
+            new_params, so_state = sopt.server_round_update(
+                so_cfg, params, so_state, new_params, hypers["server_lr"])
+        w_new = flat_lib.ravel(spec, new_params)
+        return ((w_new, so_state) if use_so else w_new), w_new
+
+    carry0 = (w0_flat, so_state0) if use_so else w0_flat
+    carry, ws = jax.lax.scan(body, carry0, (batches, steps))
+    return (carry[0] if use_so else carry), ws
+
+
+def run_federated_lazy(model_cfg, data: LazyFederatedData,
+                       fl: simulator.FLConfig, rounds: int,
+                       init_key: Optional[jax.Array] = None,
+                       eval_every: int = 1, fleet=None, mesh=None,
+                       profiler=None) -> simulator.FedRunResult:
+    """Synchronous federated run over a lazy population.
+
+    The id timeline is ``sampler="indexed"``'s: the same key chain and
+    O(K) uniform draws ``simulator.fl_round`` makes in-program, pre-drawn
+    on the host so the cohort batches can be gathered up front.  History,
+    params, ids, and (with ``fleet``, a ``PopulationSpec`` or
+    ``DeviceFleet``) wall clocks are bit-for-bit the resident engines'
+    on the materialized data.
+    """
+    from repro.telemetry import profiler_for
+    _check_lazy_config(fl, "sync")
+    prof = profiler_for(False, profiler)
+    with prof.phase("setup"):
+        key = init_key if init_key is not None \
+            else jax.random.PRNGKey(fl.seed)
+        params = small.init_small(model_cfg, key)
+        spec = flat_lib.spec_of(params)
+        w0 = flat_lib.ravel(spec, params)
+    with prof.phase("plan_build"):
+        subs, steps = scan_engine.draw_round_inputs(fl, rounds, key)
+        ids = np.asarray(async_lib._draw_ids_chain_indexed(
+            subs, data.n_devices, fl.n_selected))
+        use_so = fl.server_opt != "sgd" or fl.server_lr != 1.0
+        so_state0 = sopt.init_server_state(
+            sopt.ServerOptConfig(kind=fl.server_opt, lr=1.0), params) \
+            if use_so else None
+    with prof.phase("gather"):
+        batches = _round_batches(data, ids)
+    with prof.phase("scan"):
+        w_final, ws = scan_rounds_cohort(
+            model_cfg, fl.timeline_config(), spec, w0, batches, steps,
+            simulator.hypers_of(fl), so_state0, mesh=mesh)
+    with prof.phase("eval"):
+        train, test, p = _eval_arrays(data)
+        clocks = None
+        if fleet is not None:
+            assert fleet.n_devices == data.n_devices, \
+                (fleet.n_devices, data.n_devices)
+            clocks = scan_engine.sync_clock_replay(
+                model_cfg, params, data, fl.algo, fleet, ids, None,
+                np.asarray(steps), rounds)
+        hist = scan_engine.eval_history_replay(
+            model_cfg, spec, train, test, p, ws, rounds, eval_every, clocks)
+    return simulator.FedRunResult(
+        history=hist, params=flat_lib.unravel(spec, w_final), ids=ids,
+        metrics=None, profile=prof.finish())
+
+
+# ------------------------------------------------------------ async engine
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2),
+                   static_argnames=("mesh",))
+def scan_deadline_cohort(model_cfg, afl, spec: flat_lib.FlatSpec, w0_flat,
+                         pend0, batches, steps, arrived, store_slot,
+                         due_slot, due_mask, due_tau, fast, hypers, *,
+                         mesh=None):
+    """Whole-run deadline-mode program over pre-gathered cohorts:
+    sync-parity fast rounds run ``fl_round_cohort`` (the τ = 0 full-mask
+    case), every other round ``deadline_slow_step_cohort`` against the
+    straggler pool — the cohort forms of exactly the two branches the
+    resident scan conds between."""
+    fl = afl.sync_config()
+
+    def body(carry, xs):
+        batch_t, steps_t, arr_t, store_t, due_s, due_m, due_t, fast_t = xs
+        w_flat, pend = carry
+        params = flat_lib.unravel(spec, w_flat)
+
+        def fast_fn(params, pend):
+            new, _ = simulator.fl_round_cohort(
+                model_cfg, fl, params, batch_t, steps_t, hypers, mesh=mesh)
+            return flat_lib.ravel(spec, new), pend
+
+        def slow_fn(params, pend):
+            new, pend2 = async_lib.deadline_slow_step_cohort(
+                model_cfg, afl, params, pend, batch_t, steps_t, arr_t,
+                store_t, due_s, due_m, due_t, hypers, mesh=mesh)
+            return flat_lib.ravel(spec, new), pend2
+
+        w_new, pend = jax.lax.cond(fast_t, fast_fn, slow_fn, params, pend)
+        return (w_new, pend), w_new
+
+    (w_final, _), ws = jax.lax.scan(
+        body, (w0_flat, pend0),
+        (batches, steps, arrived, store_slot, due_slot, due_mask, due_tau,
+         fast))
+    return w_final, ws
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2),
+                   static_argnames=("mesh",))
+def scan_fedbuff_cohort(model_cfg, afl, spec: flat_lib.FlatSpec, w0_flat,
+                        pend0, batches, steps, store_slot, flush_slot, tau,
+                        hypers, *, mesh=None):
+    """Whole-run fedbuff program over pre-gathered dispatch cohorts."""
+    def body(carry, xs):
+        batch_t, steps_t, store_t, flush_t, tau_t = xs
+        w_flat, pend = carry
+        params = flat_lib.unravel(spec, w_flat)
+        new, pend = async_lib.fedbuff_round_step_cohort(
+            model_cfg, afl, params, pend, batch_t, steps_t, store_t,
+            flush_t, tau_t, hypers, mesh=mesh)
+        w_new = flat_lib.ravel(spec, new)
+        return (w_new, pend), w_new
+
+    (w_final, _), ws = jax.lax.scan(
+        body, (w0_flat, pend0),
+        (batches, steps, store_slot, flush_slot, tau))
+    return w_final, ws
+
+
+def run_async_lazy(model_cfg, data: LazyFederatedData, afl, fleet,
+                   rounds: int, init_key: Optional[jax.Array] = None,
+                   eval_every: int = 1, mesh=None, plan=None,
+                   profiler=None) -> simulator.FedRunResult:
+    """Async (deadline / fedbuff) federated run over a lazy population.
+
+    ``fleet`` is a ``PopulationSpec`` (or any fleet implementing the
+    gather protocol — a materialized ``DeviceFleet`` produces the
+    bit-identical plan and run).  The event plan is built through the
+    O(R·K) lazy gathers, the R cohort batches are gathered once on the
+    host, and one ``lax.scan`` replays the plan through the cohort step
+    functions.  ``plan`` replays a pre-built event plan instead (it must
+    come from this (afl, fleet, rounds, key) timeline).
+    """
+    from repro.telemetry import profiler_for
+    _check_lazy_config(afl, "async")
+    if plan is not None and any(
+            getattr(plan, f, None) is not None
+            for f in ("corrupt", "drop_mask", "lost_mask", "flush_mask",
+                      "seed_corrupt")):
+        raise ValueError(
+            "lazy runs do not support failure scenarios: the supplied "
+            "plan embeds scenario channels — rebuild it without a "
+            "scenario, or materialize() and use the resident engines")
+    prof = profiler_for(False, profiler)
+    with prof.phase("setup"):
+        assert fleet.n_devices == data.n_devices, \
+            (fleet.n_devices, data.n_devices)
+        key = init_key if init_key is not None \
+            else jax.random.PRNGKey(afl.seed)
+        params = small.init_small(model_cfg, key)
+        cost = round_cost_for(model_cfg, params,
+                              uploads_gradient="folb" in afl.algo)
+        afl_t = afl.timeline_config()
+        sync_fl = afl_t.sync_config()
+        hypers = async_lib.hypers_of(afl)
+        spec = flat_lib.spec_of(params)
+        w0 = flat_lib.ravel(spec, params)
+
+    if afl.mode == "deadline":
+        with prof.phase("plan_build"):
+            if plan is None:
+                plan = async_lib.build_deadline_plan(
+                    afl, fleet, cost, data.sizes, rounds, key)
+        with prof.phase("gather"):
+            batches = _round_batches(data, plan.ids)
+            pend0 = async_lib.pool_init_batch(
+                model_cfg, sync_fl, params,
+                {k: v[0] for k, v in batches.items()}, plan.n_slots + 1)
+        with prof.phase("scan"):
+            w_final, ws = scan_deadline_cohort(
+                model_cfg, afl_t, spec, w0, pend0, batches,
+                jnp.asarray(plan.n_steps),
+                jnp.asarray(plan.arrived, jnp.float32),
+                jnp.asarray(plan.store_slot), jnp.asarray(plan.due_slot),
+                jnp.asarray(plan.due_mask), jnp.asarray(plan.due_tau),
+                jnp.asarray(plan.fast), hypers, mesh=mesh)
+        clocks, n_arr = plan.round_end, plan.n_arrived
+    else:
+        with prof.phase("plan_build"):
+            if plan is None:
+                plan = async_lib.build_fedbuff_plan(
+                    afl, fleet, cost, data.sizes, rounds, key)
+        with prof.phase("gather"):
+            seed_batch = _round_batches(data, plan.seed_ids)
+            batches = _round_batches(data, plan.ids)
+            pend0 = async_lib.pool_init_batch(
+                model_cfg, sync_fl, params, seed_batch, plan.n_slots)
+            pend0 = async_lib.fedbuff_seed_pool_cohort(
+                model_cfg, afl_t, params, pend0, seed_batch,
+                jnp.asarray(plan.seed_steps), jnp.asarray(plan.seed_slots),
+                hypers)
+        with prof.phase("scan"):
+            w_final, ws = scan_fedbuff_cohort(
+                model_cfg, afl_t, spec, w0, pend0, batches,
+                jnp.asarray(plan.n_steps), jnp.asarray(plan.store_slot),
+                jnp.asarray(plan.flush_slot), jnp.asarray(plan.tau),
+                hypers, mesh=mesh)
+        clocks = plan.flush_clock
+        n_arr = np.full(rounds, afl.buffer_size)
+
+    with prof.phase("eval"):
+        train, test, p = _eval_arrays(data)
+        hist = scan_engine.eval_history_replay(
+            model_cfg, spec, train, test, p, ws, rounds, eval_every,
+            clocks=clocks, n_arrived=n_arr, stale_mean=plan.stale_mean)
+    return simulator.FedRunResult(
+        history=hist, params=flat_lib.unravel(spec, w_final),
+        ids=np.asarray(plan.ids), metrics=None, profile=prof.finish())

@@ -214,35 +214,104 @@ def sync_clock_replay(model_cfg, params, fed: FederatedData, algo: str,
     return clocks
 
 
+# rows vmapped together inside one dispatch.  A full vmap over E·S rows
+# materializes an (E·S, N, M, C) logits tensor and goes memory-bound on
+# wide sweeps; chunking keeps the working set ~CHUNK× one eval while the
+# whole trajectory stays a single dispatch (lax.map over row chunks).
+_EVAL_CHUNK = 8
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _eval_traj_chunks(model_cfg, spec: flat_lib.FlatSpec, traj_chunks,
+                      data, p_weights):
+    def one(w_flat):
+        return simulator.eval_global(
+            model_cfg, flat_lib.unravel(spec, w_flat), data, p_weights)
+    return jax.lax.map(lambda rows: jax.vmap(one)(rows), traj_chunks)
+
+
+def eval_traj(model_cfg, spec: flat_lib.FlatSpec, traj, data, p_weights):
+    """``eval_global`` over a stack of flat parameter vectors ->
+    ((E,) losses, (E,) accs) in ONE dispatch instead of one per
+    (round, member).  Bit-identical per row to the unbatched call (the
+    loop-vs-scan and sweep-vs-solo parity suites pin this; vmap batch
+    size does not change a row's result, so neither does the chunking)."""
+    E = traj.shape[0]
+    chunk = min(_EVAL_CHUNK, E)
+    pad = (-E) % chunk
+    if pad:
+        tail = jnp.broadcast_to(traj[-1:], (pad,) + traj.shape[1:])
+        traj = jnp.concatenate([jnp.asarray(traj), tail])
+    chunks = jnp.asarray(traj).reshape((-1, chunk) + traj.shape[1:])
+    out = _eval_traj_chunks(model_cfg, spec, chunks, data, p_weights)
+    return jax.tree.map(
+        lambda a: a.reshape((-1,) + a.shape[2:])[:E], out)
+
+
+def _eval_points(rounds: int, eval_every: int):
+    return [t for t in range(rounds)
+            if t % eval_every == 0 or t == rounds - 1]
+
+
 def eval_history_replay(model_cfg, spec: flat_lib.FlatSpec, train, test, p,
                         params_traj, rounds: int, eval_every: int,
                         clocks=None, n_arrived=None, stale_mean=None):
     """Post-hoc history evaluation on an emitted (rounds, D_pad) parameter
-    trajectory through the same jitted ``eval_global`` every engine uses —
-    shared by the solo compiled runs (sync and async) and, per member, the
-    sweep engine.  ``clocks``/``n_arrived``/``stale_mean`` are optional
-    per-round timeline series to record alongside (the async engines pass
-    all three from their plan)."""
-    hist = {"round": [], "train_loss": [], "test_acc": [], "train_acc": []}
+    trajectory through the same jitted eval math every engine uses —
+    shared by the solo compiled runs (sync and async); the sweep engine
+    batches further via ``eval_history_replay_sweep``.  The eval-point
+    rows are evaluated in one vmapped dispatch (``eval_traj``), row-wise
+    bit-identical to the python loops' per-round ``eval_global`` calls.
+    ``clocks``/``n_arrived``/``stale_mean`` are optional per-round
+    timeline series to record alongside (the async engines pass all three
+    from their plan)."""
+    ts = _eval_points(rounds, eval_every)
+    traj = jnp.asarray(params_traj)[jnp.asarray(ts)]
+    tr_loss, tr_acc = eval_traj(model_cfg, spec, traj, train, p)
+    _, te_acc = eval_traj(model_cfg, spec, traj, test, p)
+    hist = {"round": list(ts),
+            "train_loss": [float(v) for v in tr_loss],
+            "test_acc": [float(v) for v in te_acc],
+            "train_acc": [float(v) for v in tr_acc]}
     extras = {"wall_clock": clocks, "n_arrived": n_arrived,
               "stale_mean": stale_mean}
     for k, series in extras.items():
         if series is not None:
-            hist[k] = []
-    for t in range(rounds):
-        if t % eval_every == 0 or t == rounds - 1:
-            params_t = flat_lib.unravel(spec, params_traj[t])
-            tr_loss, tr_acc = simulator.eval_global(model_cfg, params_t,
-                                                    train, p)
-            _, te_acc = simulator.eval_global(model_cfg, params_t, test, p)
-            hist["round"].append(t)
-            hist["train_loss"].append(float(tr_loss))
-            hist["train_acc"].append(float(tr_acc))
-            hist["test_acc"].append(float(te_acc))
-            for k, series in extras.items():
-                if series is not None:
-                    hist[k].append(float(series[t]))
+            hist[k] = [float(series[t]) for t in ts]
     return hist
+
+
+def eval_history_replay_sweep(model_cfg, spec: flat_lib.FlatSpec, train,
+                              test, p, params_traj_RS, rounds: int,
+                              eval_every: int, clocks=None, n_arrived=None,
+                              stale_mean=None):
+    """Sweep-native history evaluation: ONE batched dispatch over every
+    (eval round, member) pair of an (R, S, D_pad) trajectory instead of
+    R·S separate ``eval_global`` dispatches.  Returns S history dicts,
+    member i row-wise bit-identical to
+    ``eval_history_replay(..., params_traj_RS[:, i], ...)``."""
+    ts = _eval_points(rounds, eval_every)
+    traj = jnp.asarray(params_traj_RS)[jnp.asarray(ts)]
+    E, S = traj.shape[0], traj.shape[1]
+    flat = traj.reshape((E * S,) + traj.shape[2:])
+    tr_loss, tr_acc = eval_traj(model_cfg, spec, flat, train, p)
+    _, te_acc = eval_traj(model_cfg, spec, flat, test, p)
+    tr_loss = np.asarray(tr_loss).reshape(E, S)
+    tr_acc = np.asarray(tr_acc).reshape(E, S)
+    te_acc = np.asarray(te_acc).reshape(E, S)
+    extras = {"wall_clock": clocks, "n_arrived": n_arrived,
+              "stale_mean": stale_mean}
+    hists = []
+    for i in range(S):
+        hist = {"round": list(ts),
+                "train_loss": [float(v) for v in tr_loss[:, i]],
+                "test_acc": [float(v) for v in te_acc[:, i]],
+                "train_acc": [float(v) for v in tr_acc[:, i]]}
+        for k, series in extras.items():
+            if series is not None:
+                hist[k] = [float(series[t]) for t in ts]
+        hists.append(hist)
+    return hists
 
 
 def run_federated_compiled(model_cfg, fed: FederatedData,

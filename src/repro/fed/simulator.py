@@ -92,12 +92,26 @@ class FLConfig:
     # preserved by timeline_config, never sweepable); None is bit-for-bit
     # the unguarded program.
     guard: Optional[Any] = None
+    # uniform-selection sampler: "categorical" draws K ids from an (N,)
+    # probability vector (needed whenever sel_probs overrides uniform);
+    # "indexed" draws K uniform ids directly — O(K) work, no (N,) vector,
+    # REQUIRED for lazy populations where N may be 10⁶.  Timeline-
+    # affecting and program-static: the two samplers are separate,
+    # self-consistent id timelines (never sweepable).
+    sampler: str = "categorical"
     seed: int = 0
 
     def __post_init__(self):
         assert self.algo in ALGOS, self.algo
         assert self.agg_backend in AGG_BACKENDS, self.agg_backend
         assert self.agg_dtype in AGG_DTYPES, self.agg_dtype
+        if self.sampler not in ("categorical", "indexed"):
+            raise ValueError(f"unknown sampler {self.sampler!r}")
+        if self.sampler == "indexed" and self.algo.startswith("fednu"):
+            raise ValueError(
+                "sampler='indexed' is uniform-only; the fednu baselines "
+                "derive their own selection distribution from all N "
+                "gradients (inherently O(N)) — use sampler='categorical'")
         if self.guard is not None:
             from repro.kernels.guard import as_guard
             as_guard(self.guard)
@@ -178,13 +192,14 @@ def _global_grad(grads_all, p_weights):
         grads_all)
 
 
-def _local_updates(model_cfg, params, data, ids, n_steps, fl: FLConfig,
-                   hypers=None):
-    """vmapped device updates for the sampled multiset -> stacked
-    (deltas, grads, gammas).  ``hypers`` carries the traced lr/mu (the
-    engines always pass it; ``None`` falls back to the config's floats for
-    direct callers and shape-only ``eval_shape`` probes)."""
-    batch = _client_batch(data, ids)
+def _local_updates_batch(model_cfg, params, batch, n_steps, fl: FLConfig,
+                         hypers=None):
+    """vmapped device updates over a pre-gathered (K, M, ...) cohort
+    batch -> stacked (deltas, grads, gammas).  The shared local-solve
+    unit of both the resident path (`_local_updates`, which gathers from
+    the (N, M, ...) stack first) and the lazy-population cohort steps
+    (which receive host-gathered batches) — one function, so the two
+    paths run the identical math."""
     lr = fl.lr if hypers is None else hypers["lr"]
     mu = fl.mu if hypers is None else hypers["mu"]
 
@@ -195,6 +210,16 @@ def _local_updates(model_cfg, params, data, ids, n_steps, fl: FLConfig,
             lr=lr, mu=mu, n_steps=steps, max_steps=fl.max_local_steps)
 
     return jax.vmap(one)(batch["x"], batch["y"], batch["mask"], n_steps)
+
+
+def _local_updates(model_cfg, params, data, ids, n_steps, fl: FLConfig,
+                   hypers=None):
+    """vmapped device updates for the sampled multiset -> stacked
+    (deltas, grads, gammas).  ``hypers`` carries the traced lr/mu (the
+    engines always pass it; ``None`` falls back to the config's floats for
+    direct callers and shape-only ``eval_shape`` probes)."""
+    return _local_updates_batch(model_cfg, params, _client_batch(data, ids),
+                                n_steps, fl, hypers)
 
 
 def apply_corruption(deltas, grads, corrupt):
@@ -221,6 +246,69 @@ def _mask_guard(new, params, up_mask):
     the sign of negative zeros)."""
     alive = jnp.sum(up_mask) > 0.0
     return jax.tree.map(lambda n, w: jnp.where(alive, n, w), new, params)
+
+
+def _sync_aggregate(fl: FLConfig, params, deltas, grads, gammas, h,
+                    up_mask, tau0, mesh, diag):
+    """Shared sync-round aggregation for the cohort-shaped algorithms
+    (fedavg / fedprox / folb / folb_het): everything after the local
+    updates, factored out of `fl_round` so the lazy-population cohort
+    step (`fl_round_cohort`) runs the identical traced ops.  Writes the
+    guard info dict into ``diag`` when the robust kernel is active."""
+    if fl.algo in ("fedavg", "fedprox"):
+        if up_mask is None:
+            new = aggregation.fedavg_aggregate(params, deltas)
+        else:
+            new = _mask_guard(aggregation.mean_staleness(
+                params, deltas, tau0, alpha=0.0, mask=up_mask),
+                params, up_mask)
+    elif fl.algo in ("folb", "folb_het") and fl.agg_backend == "flat":
+        # default hot path: stack everything into flat (K, D) buffers
+        # (bf16 grads/deltas unless agg_dtype says otherwise) and run the
+        # fused Pallas aggregation (2 streaming passes instead of ~2K
+        # leafwise reductions), D-sharded when a mesh is given
+        pg = h["psi"] * gammas if fl.algo == "folb_het" else None
+        if fl.guard is not None:
+            if up_mask is None:
+                new, _, ginfo = ops.folb_aggregate_tree(
+                    params, deltas, grads, psi_gammas=pg,
+                    buf_dtype=jnp.dtype(fl.agg_dtype), mesh=mesh,
+                    guard=fl.guard)
+            else:
+                new, _, ginfo = ops.folb_staleness_slots_tree(
+                    params, deltas, grads, up_mask, tau0, alpha=0.0,
+                    psi_gammas=pg, buf_dtype=jnp.dtype(fl.agg_dtype),
+                    mesh=mesh, guard=fl.guard)
+            diag["guard"] = ginfo
+        elif up_mask is None:
+            new, _ = ops.folb_aggregate_tree(
+                params, deltas, grads, psi_gammas=pg,
+                buf_dtype=jnp.dtype(fl.agg_dtype), mesh=mesh)
+        else:
+            # the masked-slot staleness kernel at τ = 0 IS masked folb
+            # (disc == 1 exactly); it self-guards the all-masked case
+            new, _ = ops.folb_staleness_slots_tree(
+                params, deltas, grads, up_mask, tau0, alpha=0.0,
+                psi_gammas=pg, buf_dtype=jnp.dtype(fl.agg_dtype),
+                mesh=mesh)
+    elif fl.algo == "folb":
+        if up_mask is None:
+            new = aggregation.folb_single_set(params, deltas, grads)
+        else:
+            new = _mask_guard(aggregation.folb_staleness(
+                params, deltas, grads, tau0, alpha=0.0, mask=up_mask),
+                params, up_mask)
+    elif fl.algo == "folb_het":
+        if up_mask is None:
+            new = aggregation.folb_het(params, deltas, grads, gammas,
+                                       h["psi"])
+        else:
+            new = _mask_guard(aggregation.folb_staleness(
+                params, deltas, grads, tau0, alpha=0.0, gammas=gammas,
+                psi=h["psi"], mask=up_mask), params, up_mask)
+    else:
+        raise ValueError(fl.algo)
+    return new
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1),
@@ -293,57 +381,22 @@ def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps,
                 gammas=gammas, mask=up_mask)
         return new, diag
 
-    probs = selection.uniform_probs(N) if sel_probs is None else sel_probs
-    ids = selection.sample_multiset(k_sel, probs, K)
+    if sel_probs is None and fl.sampler == "indexed":
+        # O(K) uniform draw, no (N,) probability vector; sel_probs
+        # overrides (latency-aware selection is inherently O(N) and
+        # validated against the indexed sampler upstream)
+        ids = selection.sample_uniform_ids(k_sel, N, K)
+        probs = None
+    else:
+        probs = selection.uniform_probs(N) if sel_probs is None else sel_probs
+        ids = selection.sample_multiset(k_sel, probs, K)
     deltas, grads, gammas = _local_updates(
         model_cfg, params, data, ids, n_steps, fl, h)
     deltas, grads = apply_corruption(deltas, grads, corrupt)
 
-    if fl.algo in ("fedavg", "fedprox"):
-        if up_mask is None:
-            new = aggregation.fedavg_aggregate(params, deltas)
-        else:
-            new = _mask_guard(aggregation.mean_staleness(
-                params, deltas, tau0, alpha=0.0, mask=up_mask),
-                params, up_mask)
-    elif fl.algo in ("folb", "folb_het") and fl.agg_backend == "flat":
-        # default hot path: stack everything into flat (K, D) buffers
-        # (bf16 grads/deltas unless agg_dtype says otherwise) and run the
-        # fused Pallas aggregation (2 streaming passes instead of ~2K
-        # leafwise reductions), D-sharded when a mesh is given
-        pg = h["psi"] * gammas if fl.algo == "folb_het" else None
-        if fl.guard is not None:
-            if up_mask is None:
-                new, _, ginfo = ops.folb_aggregate_tree(
-                    params, deltas, grads, psi_gammas=pg,
-                    buf_dtype=jnp.dtype(fl.agg_dtype), mesh=mesh,
-                    guard=fl.guard)
-            else:
-                new, _, ginfo = ops.folb_staleness_slots_tree(
-                    params, deltas, grads, up_mask, tau0, alpha=0.0,
-                    psi_gammas=pg, buf_dtype=jnp.dtype(fl.agg_dtype),
-                    mesh=mesh, guard=fl.guard)
-            diag["guard"] = ginfo
-        elif up_mask is None:
-            new, _ = ops.folb_aggregate_tree(
-                params, deltas, grads, psi_gammas=pg,
-                buf_dtype=jnp.dtype(fl.agg_dtype), mesh=mesh)
-        else:
-            # the masked-slot staleness kernel at τ = 0 IS masked folb
-            # (disc == 1 exactly); it self-guards the all-masked case
-            new, _ = ops.folb_staleness_slots_tree(
-                params, deltas, grads, up_mask, tau0, alpha=0.0,
-                psi_gammas=pg, buf_dtype=jnp.dtype(fl.agg_dtype),
-                mesh=mesh)
-    elif fl.algo == "folb":
-        if up_mask is None:
-            new = aggregation.folb_single_set(params, deltas, grads)
-        else:
-            new = _mask_guard(aggregation.folb_staleness(
-                params, deltas, grads, tau0, alpha=0.0, mask=up_mask),
-                params, up_mask)
-    elif fl.algo == "folb2":
-        ids2 = selection.sample_multiset(k_sel2, probs, K)
+    if fl.algo == "folb2":
+        ids2 = selection.sample_uniform_ids(k_sel2, N, K) if probs is None \
+            else selection.sample_multiset(k_sel2, probs, K)
         batch2 = _client_batch(data, ids2)
         grads_s2 = jax.vmap(
             lambda x, y, m: jax.grad(lambda p: small.small_loss(
@@ -354,22 +407,50 @@ def fl_round(model_cfg, fl: FLConfig, params, data, p_weights, key, n_steps,
         if up_mask is not None:
             new = _mask_guard(new, params, up_mask)
         diag["ids2"] = ids2
-    elif fl.algo == "folb_het":
-        if up_mask is None:
-            new = aggregation.folb_het(params, deltas, grads, gammas,
-                                       h["psi"])
-        else:
-            new = _mask_guard(aggregation.folb_staleness(
-                params, deltas, grads, tau0, alpha=0.0, gammas=gammas,
-                psi=h["psi"], mask=up_mask), params, up_mask)
     else:
-        raise ValueError(fl.algo)
+        new = _sync_aggregate(fl, params, deltas, grads, gammas, h,
+                              up_mask, tau0, mesh, diag)
     diag["gamma_mean"] = jnp.mean(gammas)
     diag["ids"] = ids
     if fl.telemetry:
         # a sync round is the τ = 0, full-mask case of the async metrics
         # schema, so every engine's metric pytrees are structurally
         # identical (required by the deadline scan's lax.cond)
+        from repro.telemetry import metrics as tmetrics
+        diag["metrics"] = tmetrics.metrics_for_algo(
+            fl.algo, params, new, deltas, grads, psi=h["psi"],
+            gammas=gammas, mask=up_mask, guard=diag.get("guard"))
+    return new, diag
+
+
+# algorithms whose round math touches only the selected cohort — the ones
+# the lazy-population engines support (fednu probes all N gradients and
+# folb2 contacts a second in-jit-sampled set; both need resident data)
+COHORT_ALGOS = ("fedavg", "fedprox", "folb", "folb_het")
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1),
+                   static_argnames=("mesh",))
+def fl_round_cohort(model_cfg, fl: FLConfig, params, batch, n_steps,
+                    hypers=None, up_mask=None, corrupt=None, *, mesh=None):
+    """Cohort form of `fl_round` for lazy populations: selection already
+    happened on the host (the plan's pre-drawn ids) and ``batch`` is the
+    pre-gathered (K, M, ...) cohort, so the traced program's shapes
+    depend on K — never on N — and device memory is O(K·M·D).  Runs the
+    same `_local_updates_batch` + `_sync_aggregate` units as `fl_round`,
+    which is what makes a lazy run bit-for-bit a materialized run.
+    ``COHORT_ALGOS`` only (validated by the lazy engine front door)."""
+    h = hypers if hypers is not None else hypers_of(fl)
+    K = batch["x"].shape[0]
+    diag: Dict[str, Any] = {}
+    tau0 = None if up_mask is None else jnp.zeros((K,), jnp.float32)
+    deltas, grads, gammas = _local_updates_batch(
+        model_cfg, params, batch, n_steps, fl, h)
+    deltas, grads = apply_corruption(deltas, grads, corrupt)
+    new = _sync_aggregate(fl, params, deltas, grads, gammas, h,
+                          up_mask, tau0, mesh, diag)
+    diag["gamma_mean"] = jnp.mean(gammas)
+    if fl.telemetry:
         from repro.telemetry import metrics as tmetrics
         diag["metrics"] = tmetrics.metrics_for_algo(
             fl.algo, params, new, deltas, grads, psi=h["psi"],
@@ -427,10 +508,12 @@ class FedRunResult:
         return self.history.keys()
 
 
-def fleet_cost_setup(model_cfg, params, fed: FederatedData, algo: str):
+def fleet_cost_setup(model_cfg, params, fed, algo: str):
     """Cost model pieces for fleet-timestamped runs: (round cost, gradient
     probe cost, per-device dataset sizes).  Shared by the python-loop and
-    scan-compiled engines so both replay identical wall-clocks."""
+    scan-compiled engines so both replay identical wall-clocks.  For a
+    lazy ``LazyFederatedData`` the sizes come back as its O(K)-indexable
+    view instead of an (N,) reduction over the resident mask."""
     from repro.sysmodel import RoundCost, round_cost_for
     cost = round_cost_for(model_cfg, params,
                           uploads_gradient="folb" in algo or "fednu" in algo)
@@ -439,7 +522,8 @@ def fleet_cost_setup(model_cfg, params, fed: FederatedData, algo: str):
     probe_cost = RoundCost(
         flops_per_step_example=cost.flops_per_step_example,
         down_bytes=cost.down_bytes, up_bytes=cost.down_bytes)
-    sizes = np.asarray(fed.mask.sum(axis=1))
+    sizes = fed.sizes if hasattr(fed, "gather_sizes") \
+        else np.asarray(fed.mask.sum(axis=1))
     return cost, probe_cost, sizes
 
 

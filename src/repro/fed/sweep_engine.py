@@ -292,7 +292,9 @@ def run_sweep_compiled(model_cfg, fed: FederatedData, spec: SweepSpec,
             model_cfg, base.timeline_config(), fspec, w0_S, train, p, keys,
             steps, spec.stacked_hypers(), sel_probs, so_state0_S, up_mask,
             corrupt, mesh=mesh)
-        if base.telemetry:
+        if base.telemetry or profiler is not None:
+            # an explicit profiler wants honest phase attribution: block
+            # here so the async scan's compute doesn't land in `eval`
             jax.block_until_ready(ys)
 
     with prof.phase("eval"):
@@ -305,9 +307,9 @@ def run_sweep_compiled(model_cfg, fed: FederatedData, spec: SweepSpec,
                 np.asarray(ys["ids"]),
                 np.asarray(ys["ids2"]) if "ids2" in ys else None,
                 np.asarray(steps), rounds, lat_scale=sc_lat)
-        hists = [scan_engine.eval_history_replay(
-            model_cfg, fspec, train, test, p, ys["params"][:, i], rounds,
-            eval_every, clocks) for i in range(S)]
+        hists = scan_engine.eval_history_replay_sweep(
+            model_cfg, fspec, train, test, p, ys["params"], rounds,
+            eval_every, clocks)
     with prof.phase("collect"):
         ids_np = np.asarray(ys["ids"])
         shared = None
@@ -487,7 +489,7 @@ def run_async_sweep_compiled(model_cfg, fed: FederatedData,
                 jnp.asarray(plan.fast), hypers_S, sel_probs,
                 None if plan.corrupt is None
                 else jnp.asarray(plan.corrupt), mesh=mesh)
-            if base.telemetry:
+            if base.telemetry or profiler is not None:
                 jax.block_until_ready(ws)
         clocks, n_arr = plan.round_end, plan.n_arrived
     else:
@@ -518,7 +520,7 @@ def run_async_sweep_compiled(model_cfg, fed: FederatedData,
                 else jnp.asarray(plan.flush_mask),
                 None if plan.corrupt is None
                 else jnp.asarray(plan.corrupt), mesh=mesh)
-            if base.telemetry:
+            if base.telemetry or profiler is not None:
                 jax.block_until_ready(ws)
         clocks = plan.flush_clock
         n_arr = (np.full(rounds, base.buffer_size)
@@ -527,10 +529,10 @@ def run_async_sweep_compiled(model_cfg, fed: FederatedData,
 
     params_traj = ws["params"] if base.telemetry else ws
     with prof.phase("eval"):
-        hists = [scan_engine.eval_history_replay(
-            model_cfg, fspec, train, test, p, params_traj[:, i], rounds,
+        hists = scan_engine.eval_history_replay_sweep(
+            model_cfg, fspec, train, test, p, params_traj, rounds,
             eval_every, clocks=clocks, n_arrived=n_arr,
-            stale_mean=plan.stale_mean) for i in range(S)]
+            stale_mean=plan.stale_mean)
     with prof.phase("collect"):
         shared = None
         if base.telemetry:

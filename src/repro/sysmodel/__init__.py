@@ -22,6 +22,8 @@ from repro.sysmodel.latency import (RoundCost, device_latencies,
                                     expected_latencies, flops_per_local_step,
                                     latency_components, param_bytes,
                                     round_cost_for)
+from repro.sysmodel.population import (PopulationSpec, hash_normal,
+                                       hash_u64, hash_uniform)
 from repro.sysmodel.profiles import (DeviceFleet, DeviceProfile,
                                      fleet_summary, heterogeneous_fleet,
                                      uniform_fleet)
@@ -31,10 +33,12 @@ from repro.sysmodel.scheduler import (RoundPlan, plan_deadline_run,
                                       plan_sync_round)
 
 __all__ = [
-    "DeviceFleet", "DeviceProfile", "Event", "EventQueue", "RoundCost",
+    "DeviceFleet", "DeviceProfile", "Event", "EventQueue",
+    "PopulationSpec", "RoundCost",
     "RoundPlan", "ScenarioConfig", "ScenarioDraws", "VirtualClock",
     "device_latencies", "expected_latencies",
-    "fleet_summary", "flops_per_local_step", "heterogeneous_fleet",
+    "fleet_summary", "flops_per_local_step",
+    "hash_normal", "hash_u64", "hash_uniform", "heterogeneous_fleet",
     "latency_components",
     "param_bytes", "plan_deadline_run", "plan_sync_round",
     "realize_scenario", "round_cost_for", "scale_steps", "uniform_fleet",

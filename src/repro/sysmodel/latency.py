@@ -56,11 +56,14 @@ def round_cost_for(model_cfg: SmallModelConfig, params,
         up_bytes=pb * (2.0 if uploads_gradient else 1.0))
 
 
-def device_latencies(fleet: DeviceFleet, ids: np.ndarray,
+def device_latencies(fleet, ids: np.ndarray,
                      n_steps: np.ndarray, cost: RoundCost,
                      n_examples: Optional[np.ndarray] = None) -> np.ndarray:
     """Seconds from dispatch to upload completion for each selected device.
 
+    `fleet` is anything implementing the gather protocol — a materialized
+    `DeviceFleet` or a lazy `PopulationSpec` — and only the `ids` rows are
+    ever touched, so the call is O(len(ids)) regardless of fleet size.
     `n_examples[i]` is device ids[i]'s local dataset size (defaults to 1 —
     cost per step already includes the per-example factor).  Availability
     gaps are handled by the scheduler, not here.
@@ -69,12 +72,13 @@ def device_latencies(fleet: DeviceFleet, ids: np.ndarray,
     n_steps = np.asarray(n_steps, dtype=np.float64)
     ex = np.ones_like(n_steps) if n_examples is None \
         else np.asarray(n_examples, dtype=np.float64)
-    compute = n_steps * ex * cost.flops_per_step_example / fleet.flops[ids]
-    comm = cost.down_bytes / fleet.down_bw[ids] + cost.up_bytes / fleet.up_bw[ids]
+    flops, up_bw, down_bw = fleet.gather_caps(ids)
+    compute = n_steps * ex * cost.flops_per_step_example / flops
+    comm = cost.down_bytes / down_bw + cost.up_bytes / up_bw
     return compute + comm
 
 
-def latency_components(fleet: DeviceFleet, ids: np.ndarray,
+def latency_components(fleet, ids: np.ndarray,
                        n_steps: np.ndarray, cost: RoundCost,
                        n_examples: Optional[np.ndarray] = None):
     """Per-phase latency decomposition (download, compute, upload) for each
@@ -89,10 +93,10 @@ def latency_components(fleet: DeviceFleet, ids: np.ndarray,
     n_steps = np.asarray(n_steps, dtype=np.float64)
     ex = np.ones_like(n_steps) if n_examples is None \
         else np.asarray(n_examples, dtype=np.float64)
-    down = np.broadcast_to(cost.down_bytes / fleet.down_bw[ids],
-                           n_steps.shape)
-    compute = n_steps * ex * cost.flops_per_step_example / fleet.flops[ids]
-    up = np.broadcast_to(cost.up_bytes / fleet.up_bw[ids], n_steps.shape)
+    flops, up_bw, down_bw = fleet.gather_caps(ids)
+    down = np.broadcast_to(cost.down_bytes / down_bw, n_steps.shape)
+    compute = n_steps * ex * cost.flops_per_step_example / flops
+    up = np.broadcast_to(cost.up_bytes / up_bw, n_steps.shape)
     return down, compute, up
 
 

@@ -1,0 +1,192 @@
+"""Lazy device populations: O(K)-cost fleets of arbitrary size.
+
+``DeviceFleet`` materializes N capability rows; production FL samples
+K ≈ 10–100 devices per round out of N ≈ 10⁶, so every full-fleet array
+is wasted work.  ``PopulationSpec`` is the compact generative
+description instead: capability / availability distributions plus a
+seed, from which any device id's profile is reconstructed **on demand**
+by a counter-based hash RNG — ``gather_caps(ids)`` /
+``gather_avail(ids)`` / ``next_online(ids, t)`` cost O(len(ids))
+regardless of ``n_devices``.
+
+Design rule: device i's draws are a pure vectorized function of
+``(seed, channel, i)`` (splitmix64 hash → uniforms → Box–Muller), never
+of a sequential RNG stream.  That makes the lazy gathers and the
+materialized fleet *the same computation*: ``materialize()`` simply
+gathers ``arange(N)``, so a gather from the materialized ``DeviceFleet``
+is bit-for-bit identical to the direct lazy gather — the property the
+lazy-population equivalence tests (tests/test_population.py) and the
+plan builders' ``PopulationSpec``-vs-``DeviceFleet`` parity rest on.
+
+The distribution family mirrors ``heterogeneous_fleet`` (log-normal
+compute/bandwidth with a correlated straggler tail, periodic
+availability windows); the *values* differ from ``heterogeneous_fleet``
+for the same ``(seed, n)`` because that generator draws sequentially —
+it remains the seeded-fleet generator for the existing benches, while
+``PopulationSpec`` is the scale-out path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.sysmodel.profiles import DeviceFleet
+
+# hash channels: each independent per-device draw stream gets its own
+# channel id so adding a stream never perturbs the others
+_CH_FLOPS_U1 = 0
+_CH_FLOPS_U2 = 1
+_CH_BW_U1 = 2
+_CH_BW_U2 = 3
+_CH_STRAGGLER = 4
+_CH_CYCLED = 5
+_CH_PHASE = 6
+_CH_SIZE = 7          # reserved for data-size draws (data.federated)
+_CH_LABEL = 8         # reserved for partitioner draws (data.partition)
+
+_U64 = np.uint64
+_MASK = _U64(0xFFFFFFFFFFFFFFFF)
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 finalizer over uint64 arrays (mod-2^64
+    wraparound is the algorithm, hence the errstate guard)."""
+    with np.errstate(over="ignore"):
+        x = (x + _U64(0x9E3779B97F4A7C15)) & _MASK
+        x = ((x ^ (x >> _U64(30))) * _U64(0xBF58476D1CE4E5B9)) & _MASK
+        x = ((x ^ (x >> _U64(27))) * _U64(0x94D049BB133111EB)) & _MASK
+        return x ^ (x >> _U64(31))
+
+
+def hash_u64(seed: int, channel: int, ids: np.ndarray) -> np.ndarray:
+    """Stateless per-id uint64 stream: mixes (seed, channel) into a key,
+    then finalizes each id against it.  Any-shaped integer ``ids``."""
+    with np.errstate(over="ignore"):
+        key = _splitmix64(np.asarray(
+            (_U64(np.uint64(seed & 0xFFFFFFFFFFFFFFFF))
+             * _U64(0xD1342543DE82EF95)
+             + _U64(channel) * _U64(0x9E3779B97F4A7C15)) & _MASK))
+        x = np.asarray(ids).astype(np.uint64)
+        return _splitmix64(x ^ key)
+
+
+def hash_uniform(seed: int, channel: int, ids: np.ndarray) -> np.ndarray:
+    """Per-id uniform float64 in [0, 1) (53-bit mantissa)."""
+    return (hash_u64(seed, channel, ids) >> _U64(11)).astype(np.float64) \
+        * (2.0 ** -53)
+
+
+def hash_normal(seed: int, ch1: int, ch2: int, ids: np.ndarray) -> np.ndarray:
+    """Per-id standard normal via Box–Muller over two hash channels."""
+    u1 = hash_uniform(seed, ch1, ids)
+    u2 = hash_uniform(seed, ch2, ids)
+    # 1 - u1 ∈ (0, 1]: log never sees 0
+    return np.sqrt(-2.0 * np.log1p(-u1)) * np.cos(2.0 * np.pi * u2)
+
+
+@dataclasses.dataclass(frozen=True)
+class PopulationSpec:
+    """Compact generative fleet: every ``DeviceFleet`` capability row is a
+    pure function of ``(seed, device_id)``.
+
+    Implements the same gather protocol as ``DeviceFleet``
+    (``gather_caps`` / ``gather_avail`` / ``online_at`` / ``next_online``
+    / ``always_on``), so ``device_latencies``, ``plan_sync_round``,
+    ``plan_deadline_run`` and ``build_fedbuff_plan`` run unchanged on
+    either — a ``DeviceFleet`` is just the materialized special case
+    (``materialize()``).
+    """
+    n_devices: int
+    seed: int = 0
+    flops_median: float = 1e9
+    flops_sigma: float = 0.8
+    up_bw_median: float = 1.25e6
+    bw_sigma: float = 0.7
+    down_up_ratio: float = 4.0
+    straggler_frac: float = 0.15
+    straggler_slowdown: float = 8.0
+    avail_frac: float = 0.0
+    avail_period: float = 600.0
+    avail_duty: float = 0.7
+
+    def __post_init__(self):
+        if self.n_devices <= 0:
+            raise ValueError(f"n_devices must be positive, got "
+                             f"{self.n_devices}")
+
+    # ------------------------------------------------------------ gathers
+    def gather_caps(self, ids):
+        """(flops, up_bw, down_bw) float64 arrays shaped like ``ids``."""
+        ids = np.asarray(ids)
+        flops = self.flops_median * np.exp(
+            self.flops_sigma * hash_normal(self.seed, _CH_FLOPS_U1,
+                                           _CH_FLOPS_U2, ids))
+        up_bw = self.up_bw_median * np.exp(
+            self.bw_sigma * hash_normal(self.seed, _CH_BW_U1,
+                                        _CH_BW_U2, ids))
+        strag = hash_uniform(self.seed, _CH_STRAGGLER, ids) \
+            < self.straggler_frac
+        flops = np.where(strag, flops / self.straggler_slowdown, flops)
+        up_bw = np.where(strag, up_bw / self.straggler_slowdown, up_bw)
+        return flops, up_bw, up_bw * self.down_up_ratio
+
+    def gather_avail(self, ids):
+        """(period, duty, phase) float64 arrays shaped like ``ids``."""
+        ids = np.asarray(ids)
+        cycled = hash_uniform(self.seed, _CH_CYCLED, ids) < self.avail_frac
+        period = np.where(cycled, self.avail_period, 0.0)
+        duty = np.where(cycled, self.avail_duty, 1.0)
+        phase = np.where(
+            cycled,
+            hash_uniform(self.seed, _CH_PHASE, ids) * self.avail_period,
+            0.0)
+        return period, duty, phase
+
+    @property
+    def always_on(self) -> bool:
+        """Static: no per-device scan needed to know nobody cycles."""
+        return self.avail_frac <= 0.0
+
+    # ------------------------------------------------------ availability
+    def online_at(self, ids, t: float) -> np.ndarray:
+        period, duty, phase = self.gather_avail(ids)
+        always = period <= 0.0
+        safe = np.where(always, 1.0, period)
+        pos = np.mod(t + phase, safe)
+        return always | (pos < duty * safe)
+
+    def next_online(self, ids, t: float) -> np.ndarray:
+        """Earliest time >= t at which each device is online (the same
+        modular-window arithmetic as ``DeviceFleet.next_online``)."""
+        period, duty, phase = self.gather_avail(ids)
+        always = period <= 0.0
+        safe = np.where(always, 1.0, period)
+        pos = np.mod(t + phase, safe)
+        wait = np.where(pos < duty * safe, 0.0, safe - pos)
+        return t + np.where(always, 0.0, wait)
+
+    # ---------------------------------------------------- materialization
+    def materialize(self) -> DeviceFleet:
+        """The full-fleet array view: one vectorized gather over
+        ``arange(N)`` — no per-device python objects or loops, so even
+        100k-device fleets build in milliseconds.  Gathers from the
+        result are bit-for-bit the lazy gathers."""
+        ids = np.arange(self.n_devices, dtype=np.int64)
+        flops, up_bw, down_bw = self.gather_caps(ids)
+        period, duty, phase = self.gather_avail(ids)
+        return DeviceFleet(flops=flops, up_bw=up_bw, down_bw=down_bw,
+                           avail_period=period, avail_duty=duty,
+                           avail_phase=phase)
+
+    def summary(self, sample: int = 4096) -> str:
+        """Fleet-summary string from a deterministic stride sample (full
+        materialization would defeat the point at N = 10⁶)."""
+        n = min(sample, self.n_devices)
+        ids = (np.arange(n, dtype=np.int64) * self.n_devices) // n
+        flops, up_bw, _ = self.gather_caps(ids)
+        q = np.quantile(flops, [0.1, 0.5, 0.9])
+        return (f"population n={self.n_devices} (sampled {n}) "
+                f"flops p10/p50/p90={q[0]:.2e}/{q[1]:.2e}/{q[2]:.2e} "
+                f"up_bw p50={np.median(up_bw):.2e} "
+                f"cycled_frac={self.avail_frac:g}")

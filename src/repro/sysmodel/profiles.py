@@ -47,6 +47,26 @@ class DeviceFleet:
             avail_duty=float(self.avail_duty[k]),
             avail_phase=float(self.avail_phase[k]))
 
+    # ------------------------------------------------- gather protocol
+    # The latency model and plan builders address fleets only through
+    # these per-cohort gathers, so a lazy `PopulationSpec` (which
+    # synthesizes rows on demand) and a materialized `DeviceFleet` are
+    # interchangeable; here they are plain fancy indexing.
+    def gather_caps(self, ids):
+        """(flops, up_bw, down_bw) rows for ``ids`` (any shape)."""
+        ids = np.asarray(ids)
+        return self.flops[ids], self.up_bw[ids], self.down_bw[ids]
+
+    def gather_avail(self, ids):
+        """(period, duty, phase) rows for ``ids`` (any shape)."""
+        ids = np.asarray(ids)
+        return (self.avail_period[ids], self.avail_duty[ids],
+                self.avail_phase[ids])
+
+    @property
+    def always_on(self) -> bool:
+        return bool((self.avail_period <= 0.0).all())
+
     # ------------------------------------------------------ availability
     def online_at(self, ids: np.ndarray, t: float) -> np.ndarray:
         """Boolean mask: is device `ids[i]` online at absolute time t?"""

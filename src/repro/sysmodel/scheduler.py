@@ -23,7 +23,6 @@ from typing import Optional
 import numpy as np
 
 from repro.sysmodel.latency import RoundCost, device_latencies
-from repro.sysmodel.profiles import DeviceFleet
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,7 +38,7 @@ class RoundPlan:
         return int(self.arrived.sum())
 
 
-def plan_sync_round(fleet: DeviceFleet, ids: np.ndarray, n_steps: np.ndarray,
+def plan_sync_round(fleet, ids: np.ndarray, n_steps: np.ndarray,
                     cost: RoundCost, start: float,
                     deadline: float = math.inf,
                     n_examples: Optional[np.ndarray] = None,
@@ -69,7 +68,7 @@ def plan_sync_round(fleet: DeviceFleet, ids: np.ndarray, n_steps: np.ndarray,
                      round_end=round_end)
 
 
-def plan_deadline_run(fleet: DeviceFleet, ids: np.ndarray,
+def plan_deadline_run(fleet, ids: np.ndarray,
                       n_steps: np.ndarray, cost: RoundCost,
                       deadline: float = math.inf,
                       n_examples: Optional[np.ndarray] = None,
@@ -101,22 +100,24 @@ def plan_deadline_run(fleet: DeviceFleet, ids: np.ndarray,
     ids = np.asarray(ids)
     n_steps = np.asarray(n_steps)
     R, K = ids.shape
+    # n_examples[flat_ids] then cast (rather than cast-then-index) so a
+    # lazy sizes view — which synthesizes only the requested rows — works
+    # here too; for an ndarray the two orders are elementwise identical
     ex = None if n_examples is None else \
-        np.asarray(n_examples, dtype=np.float64)[ids.reshape(-1)]
+        np.asarray(n_examples[ids.reshape(-1)], dtype=np.float64)
     lat = device_latencies(fleet, ids.reshape(-1), n_steps.reshape(-1),
                            cost, n_examples=ex).reshape(R, K)
     if lat_scale is not None:
         lat = lat * lat_scale
-    always_on = bool((np.asarray(fleet.avail_period) <= 0.0).all())
+    always_on = fleet.always_on
     if not always_on:
         # one gather per capability table for the whole schedule; the
         # arithmetic below replicates DeviceFleet.next_online exactly
         # (same ops on the same float64 values => identical bits)
-        period = fleet.avail_period[ids]              # (R, K)
+        period, duty, phase = fleet.gather_avail(ids)  # (R, K) each
         always = period <= 0.0
         safe = np.where(always, 1.0, period)
-        duty_win = fleet.avail_duty[ids] * safe
-        phase = fleet.avail_phase[ids]
+        duty_win = duty * safe
     arrival = np.empty((R, K), np.float64)
     arrived = np.empty((R, K), bool)
     round_end = np.empty(R, np.float64)

@@ -44,10 +44,30 @@ def _resilience_section(guard05=0.88, noguard05=0.10, guard10=0.80,
     }
 
 
+def _fleet_scale_section(host_ratio=0.8, ni_ratio=0.95):
+    return {
+        "mode": "deadline", "algo": "folb", "n_selected": 10,
+        "rounds": 1000, "eval_cohort": 30,
+        "reference": {"n_devices": 30, "host_seconds": 5.0,
+                      "final_acc": 0.95},
+        "million": {"n_devices": 1_000_000,
+                    "host_seconds": 5.0 * host_ratio, "final_acc": 0.95},
+        "host_ratio_vs_reference": host_ratio,
+        "n_independence": {"rounds": 60, "n_small": 10_000,
+                           "n_large": 1_000_000,
+                           "host_seconds_small": 1.0,
+                           "host_seconds_large": ni_ratio,
+                           "per_round_ratio": ni_ratio},
+    }
+
+
 def _artifact(kernel_ratio=1.0, async_speedup=1.3, sweep_speedup=3.0,
               profile_coverage=0.97, scenario_folb_secs=4.0,
-              resilience_guard05=0.88, resilience_noguard05=0.10):
+              resilience_guard05=0.88, resilience_noguard05=0.10,
+              fleet_host_ratio=0.8, fleet_ni_ratio=0.95):
     return {
+        "fleet_scale": _fleet_scale_section(fleet_host_ratio,
+                                            fleet_ni_ratio),
         "resilience": _resilience_section(guard05=resilience_guard05,
                                           noguard05=resilience_noguard05),
         "results": [{"name": "folb/sync", "secs_to_acc": 5.0,
@@ -470,3 +490,48 @@ class TestBytesModel:
             for b in (2, 4):
                 assert (folb_stale_agg_bytes(K, D, b)
                         == folb_agg_bytes(K, D, b) + K * D * b)
+
+
+class TestFleetScaleGate:
+    """Population-scale gate: the 1M-device lazy run must stay within
+    --max-fleet-host-ratio of the 30-device resident reference, and host
+    cost at fixed (K, R) must not grow with fleet size."""
+
+    def test_passes_when_ratios_hold(self):
+        assert compare(_artifact(), _artifact(fleet_host_ratio=1.9),
+                       0.15, 0.05, 1.0, max_fleet_host_ratio=2.0) == []
+
+    def test_fails_when_million_run_too_slow(self):
+        fails = compare(_artifact(), _artifact(fleet_host_ratio=2.5),
+                        0.15, 0.05, 1.0, max_fleet_host_ratio=2.0)
+        assert any("fleet_scale" in f and "2.50x" in f for f in fails)
+
+    def test_fails_when_host_cost_grows_with_n(self):
+        fails = compare(_artifact(), _artifact(fleet_ni_ratio=3.0),
+                        0.15, 0.05, 1.0, max_fleet_host_ratio=2.0)
+        assert any("independent of N" in f for f in fails)
+
+    def test_fails_on_missing_section(self):
+        cur = _artifact()
+        del cur["fleet_scale"]
+        fails = compare(_artifact(), cur, 0.15, 0.05, 1.0)
+        assert any("fleet_scale: section missing" in f for f in fails)
+
+    def test_fails_on_missing_timings(self):
+        cur = _artifact()
+        del cur["fleet_scale"]["million"]["host_seconds"]
+        del cur["fleet_scale"]["n_independence"]["per_round_ratio"]
+        fails = compare(_artifact(), cur, 0.15, 0.05, 1.0)
+        assert any("million" in f for f in fails)
+        assert any("per_round_ratio" in f for f in fails)
+
+    def test_old_baseline_without_section_is_fine(self):
+        base = _artifact()
+        del base["fleet_scale"]
+        assert compare(base, _artifact(fleet_host_ratio=9.0),
+                       0.15, 0.05, 1.0) == []
+
+    def test_other_gates_unaffected_by_fleet_section(self):
+        fails = compare(_artifact(), _artifact(async_speedup=0.1),
+                        0.15, 0.05, 1.0, min_async_speedup=0.85)
+        assert len(fails) == 2 and all("async" in f for f in fails)

@@ -1,0 +1,343 @@
+"""Lazy-population tests: PopulationSpec gather/materialize parity, the
+partitioners' determinism and non-IID shape, fleet-construction speed at
+100k devices, and the headline equivalence contract — a lazy run over
+``(PopulationSpec, LazyFederatedData)`` is bit-for-bit the materialized
+run of the same config at small N, for sync / deadline / fedbuff and
+both aggregation dtypes."""
+import subprocess
+import sys
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import fed
+from repro.configs.paper_models import MCLR
+from repro.data import partition
+from repro.data.federated import LazyFederatedData
+from repro.fed.async_engine import AsyncFLConfig, build_plan, plan_digest
+from repro.fed.simulator import FLConfig
+from repro.models import small
+from repro.sysmodel import (PopulationSpec, ScenarioConfig,
+                            heterogeneous_fleet, round_cost_for)
+
+N = 24
+SPEC = PopulationSpec(n_devices=N, seed=7, straggler_frac=0.4,
+                      straggler_slowdown=20.0, avail_frac=0.3)
+DATA = LazyFederatedData(n_devices=N, seed=3)
+
+
+# --------------------------------------------------------------------------
+# PopulationSpec: lazy gathers == materialized fancy indexing
+# --------------------------------------------------------------------------
+
+class TestPopulationSpec:
+    def _ids(self):
+        rng = np.random.default_rng(0)
+        # duplicates and a 2-D shape on purpose: gathers must be pure
+        # elementwise functions of the id
+        return rng.integers(0, 500, size=(3, 7))
+
+    def test_gather_caps_matches_materialize(self):
+        spec = PopulationSpec(n_devices=500, seed=11, straggler_frac=0.3)
+        fleet = spec.materialize()
+        ids = self._ids()
+        flops, up_bw, down_bw = spec.gather_caps(ids)
+        assert np.array_equal(flops, fleet.flops[ids])
+        assert np.array_equal(up_bw, fleet.up_bw[ids])
+        assert np.array_equal(down_bw, fleet.down_bw[ids])
+
+    def test_gather_avail_matches_materialize(self):
+        spec = PopulationSpec(n_devices=500, seed=11, avail_frac=0.5)
+        fleet = spec.materialize()
+        ids = self._ids()
+        period, duty, phase = spec.gather_avail(ids)
+        assert np.array_equal(period, fleet.avail_period[ids])
+        assert np.array_equal(duty, fleet.avail_duty[ids])
+        assert np.array_equal(phase, fleet.avail_phase[ids])
+        assert not spec.always_on
+        # some but not all devices cycle at avail_frac=0.5
+        assert 0 < (period > 0).sum() < period.size
+
+    @pytest.mark.parametrize("t", [0.0, 137.5, 4242.0])
+    def test_online_windows_match_fleet(self, t):
+        spec = PopulationSpec(n_devices=500, seed=11, avail_frac=0.5)
+        fleet = spec.materialize()
+        ids = self._ids().reshape(-1)
+        assert np.array_equal(spec.online_at(ids, t), fleet.online_at(ids, t))
+        assert np.array_equal(spec.next_online(ids, t),
+                              fleet.next_online(ids, t))
+
+    def test_always_on_skips_cycling(self):
+        spec = PopulationSpec(n_devices=100, seed=1)
+        assert spec.always_on
+        ids = np.arange(100)
+        assert spec.online_at(ids, 999.0).all()
+        assert np.array_equal(spec.next_online(ids, 7.0), np.full(100, 7.0))
+
+    def test_gathers_deterministic_across_instances(self):
+        a = PopulationSpec(n_devices=10**6, seed=5)
+        b = PopulationSpec(n_devices=10**6, seed=5)
+        ids = np.array([0, 1, 999_999, 123_456])
+        assert all(np.array_equal(x, y) for x, y in
+                   zip(a.gather_caps(ids), b.gather_caps(ids)))
+
+    def test_seed_changes_fleet(self):
+        ids = np.arange(64)
+        f5 = PopulationSpec(n_devices=64, seed=5).gather_caps(ids)[0]
+        f6 = PopulationSpec(n_devices=64, seed=6).gather_caps(ids)[0]
+        assert not np.array_equal(f5, f6)
+
+
+class TestFleetConstructionSpeed:
+    """The satellite bar: 100k-device fleets build in milliseconds —
+    fully vectorized, no per-device python objects."""
+
+    BUDGET_S = 2.0  # generous CI headroom; measured ~50ms
+
+    def test_materialize_100k(self):
+        spec = PopulationSpec(n_devices=100_000, seed=3, avail_frac=0.2)
+        t0 = time.perf_counter()
+        fleet = spec.materialize()
+        dt = time.perf_counter() - t0
+        assert fleet.n_devices == 100_000
+        assert dt < self.BUDGET_S, f"materialize took {dt:.2f}s"
+
+    def test_heterogeneous_fleet_100k(self):
+        t0 = time.perf_counter()
+        fleet = heterogeneous_fleet(0, 100_000, avail_frac=0.2)
+        dt = time.perf_counter() - t0
+        assert fleet.n_devices == 100_000
+        assert dt < self.BUDGET_S, f"heterogeneous_fleet took {dt:.2f}s"
+
+
+# --------------------------------------------------------------------------
+# partitioners
+# --------------------------------------------------------------------------
+
+class TestPartitioners:
+    def test_feistel_is_bijection(self):
+        for domain in (10, 48, 1000):
+            perm = partition.feistel_permutation(9, np.arange(domain), domain)
+            assert np.array_equal(np.sort(perm), np.arange(domain))
+
+    def test_shard_labels_bounded_classes(self):
+        labels = partition.shard_labels(3, np.arange(200), 200,
+                                        shards_per_device=2, n_classes=10)
+        assert labels.shape == (200, 2)
+        assert labels.min() >= 0 and labels.max() < 10
+        # pool is label-sorted: every class appears across the fleet
+        assert len(np.unique(labels)) == 10
+
+    def test_device_rng_deterministic_in_process(self):
+        a = partition.device_rng(3, 17).standard_normal(8)
+        b = partition.device_rng(3, 17).standard_normal(8)
+        assert np.array_equal(a, b)
+        c = partition.device_rng(3, 18).standard_normal(8)
+        assert not np.array_equal(a, c)
+
+    def test_gather_deterministic_across_processes(self):
+        """Same (seed, alpha) must give identical partitions in a fresh
+        interpreter — the property that lets two hosts of a simulation
+        agree on any device's data without coordination."""
+        code = (
+            "import numpy as np, hashlib, sys\n"
+            "from repro.data.federated import LazyFederatedData\n"
+            "d = LazyFederatedData(n_devices=64, seed=3, alpha=0.5)\n"
+            "g = d.gather([0, 7, 63])\n"
+            "h = hashlib.sha256()\n"
+            "for k in sorted(g):\n"
+            "    h.update(np.ascontiguousarray(g[k]).tobytes())\n"
+            "sys.stdout.write(h.hexdigest())\n"
+        )
+        import os
+        import pathlib
+        src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+        env = dict(os.environ, PYTHONPATH=src)
+        out = subprocess.run([sys.executable, "-c", code],
+                             capture_output=True, text=True, check=True,
+                             env=env).stdout.strip()
+        import hashlib
+        d = LazyFederatedData(n_devices=64, seed=3, alpha=0.5)
+        g = d.gather([0, 7, 63])
+        h = hashlib.sha256()
+        for k in sorted(g):
+            h.update(np.ascontiguousarray(g[k]).tobytes())
+        assert out == h.hexdigest()
+
+    def test_dirichlet_concentration_controls_skew(self):
+        """Small alpha -> near-single-class devices; large alpha -> flat
+        label histograms.  Checked via the mean max-class share."""
+        def mean_top_share(alpha):
+            d = LazyFederatedData(n_devices=40, seed=3, alpha=alpha)
+            shares = []
+            for dev in range(40):
+                g = d.gather([dev])
+                y, m = g["y"][0], g["mask"][0] > 0
+                counts = np.bincount(y[m], minlength=d.n_classes)
+                shares.append(counts.max() / counts.sum())
+            return float(np.mean(shares))
+
+        skewed = mean_top_share(0.1)
+        mid = mean_top_share(0.5)
+        flat = mean_top_share(100.0)
+        # with 10-30 samples/device the multinomial noise floor for a
+        # uniform π is ~0.2; Dir(0.1) concentrates most mass on 1-2
+        # classes per device
+        assert skewed > 0.55, skewed
+        assert flat < 0.3, flat
+        assert skewed > mid > flat
+
+    def test_shard_partition_bounded_classes_per_device(self):
+        d = LazyFederatedData(n_devices=30, seed=3, partition="shard",
+                              shards_per_device=2)
+        for dev in range(30):
+            g = d.gather([dev])
+            y, m = g["y"][0], g["mask"][0] > 0
+            assert len(np.unique(y[m])) <= 2
+
+    def test_sizes_view_matches_materialize(self):
+        mat = DATA.materialize()
+        ids = np.array([0, 5, 23, 5])
+        assert np.array_equal(DATA.sizes[ids],
+                              mat.mask.sum(axis=1)[ids].astype(np.int64))
+        sizes = DATA.gather_sizes(np.arange(N))
+        assert sizes.min() >= DATA.min_size
+        assert sizes.max() <= DATA.max_size
+
+    def test_gather_matches_materialize(self):
+        mat = DATA.materialize()
+        ids = [2, 19, 7]
+        g = DATA.gather(ids)
+        assert np.array_equal(g["x"], mat.x[ids])
+        assert np.array_equal(g["y"], mat.y[ids])
+        assert np.array_equal(g["mask"], mat.mask[ids])
+
+    def test_eval_cohort_strides_population(self):
+        d = LazyFederatedData(n_devices=1000, seed=3, eval_cohort=10)
+        ids = d.eval_ids()
+        assert len(ids) == 10
+        assert len(np.unique(ids)) == 10
+        full = LazyFederatedData(n_devices=50, seed=3)
+        assert np.array_equal(full.eval_ids(), np.arange(50))
+
+
+# --------------------------------------------------------------------------
+# lazy run == materialized run, bit for bit
+# --------------------------------------------------------------------------
+
+def _assert_runs_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    assert set(a.history) == set(b.history)
+    for k in a.history:
+        assert a.history[k] == b.history[k], k
+    assert np.array_equal(a.ids, b.ids)
+
+
+@pytest.mark.parametrize("agg_dtype", ["bfloat16", "float32"])
+class TestLazyEquivalence:
+    """Same seeds, same config, sampler='indexed' on both sides: the lazy
+    cohort engines must replay the materialized run exactly — params,
+    every history series (including wall clock), id timeline, and (for
+    the async modes) the event-plan digest."""
+
+    def test_sync(self, agg_dtype):
+        fl = FLConfig(algo="folb", n_selected=6, sampler="indexed",
+                      agg_dtype=agg_dtype)
+        lazy = fed.run(MCLR, DATA, fl, rounds=8, fleet=SPEC)
+        mat = fed.run(MCLR, DATA.materialize(), fl, rounds=8,
+                      fleet=SPEC.materialize())
+        _assert_runs_equal(lazy, mat)
+        assert "wall_clock" in lazy.history
+
+    def test_deadline(self, agg_dtype):
+        # deadline=40.0 with the 20x straggler tail forces a mix of
+        # fast and slow rounds, exercising the pending-pool path
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=6,
+                            deadline=40.0, staleness_alpha=0.5,
+                            sampler="indexed", agg_dtype=agg_dtype)
+        lazy = fed.run(MCLR, DATA, afl, rounds=8, fleet=SPEC)
+        mat = fed.run(MCLR, DATA.materialize(), afl, rounds=8,
+                      fleet=SPEC.materialize())
+        _assert_runs_equal(lazy, mat)
+        n_arr = np.asarray(lazy.history["n_arrived"])
+        assert (n_arr < 6).any(), "deadline never bound — test too easy"
+
+    def test_fedbuff(self, agg_dtype):
+        afl = AsyncFLConfig(mode="fedbuff", algo="folb", buffer_size=5,
+                            concurrency=8, staleness_alpha=0.3,
+                            sampler="indexed", agg_dtype=agg_dtype)
+        lazy = fed.run(MCLR, DATA, afl, rounds=6, fleet=SPEC)
+        mat = fed.run(MCLR, DATA.materialize(), afl, rounds=6,
+                      fleet=SPEC.materialize())
+        _assert_runs_equal(lazy, mat)
+
+    def test_plan_digest_matches(self, agg_dtype):
+        params = small.init_small(MCLR, jax.random.PRNGKey(0))
+        cost = round_cost_for(MCLR, params, uploads_gradient=True)
+        mat_sizes = np.asarray(DATA.materialize().mask.sum(axis=1))
+        key = jax.random.PRNGKey(0)
+        for afl in (
+                AsyncFLConfig(mode="deadline", algo="folb", n_selected=6,
+                              deadline=40.0, sampler="indexed",
+                              agg_dtype=agg_dtype),
+                AsyncFLConfig(mode="fedbuff", algo="folb", buffer_size=5,
+                              concurrency=8, sampler="indexed",
+                              agg_dtype=agg_dtype)):
+            lazy_plan = build_plan(afl, SPEC, cost, DATA.sizes, 6, key)
+            mat_plan = build_plan(afl, SPEC.materialize(), cost,
+                                  mat_sizes, 6, key)
+            assert plan_digest(lazy_plan) == plan_digest(mat_plan)
+
+
+# --------------------------------------------------------------------------
+# front-door validation
+# --------------------------------------------------------------------------
+
+class TestLazyApiValidation:
+    def test_categorical_sampler_rejected(self):
+        fl = FLConfig(algo="folb", n_selected=6)  # default categorical
+        with pytest.raises(ValueError, match="indexed"):
+            fed.run(MCLR, DATA, fl, rounds=2, fleet=SPEC)
+
+    def test_loop_engine_rejected(self):
+        fl = FLConfig(algo="folb", n_selected=6, sampler="indexed")
+        with pytest.raises(ValueError, match="loop"):
+            fed.run(MCLR, DATA, fl, rounds=2, fleet=SPEC, engine="loop")
+
+    def test_sweep_rejected(self):
+        fl = FLConfig(algo="folb", n_selected=6, sampler="indexed")
+        with pytest.raises(ValueError, match="sweep"):
+            fed.run(MCLR, DATA, fl, rounds=2, fleet=SPEC,
+                    sweep={"lr": (0.01, 0.1)})
+
+    def test_scenario_rejected(self):
+        fl = FLConfig(algo="folb", n_selected=6, sampler="indexed")
+        with pytest.raises(ValueError, match="scenario"):
+            fed.run(MCLR, DATA, fl, rounds=2, fleet=SPEC,
+                    scenario=ScenarioConfig(drop_prob=0.1))
+
+    def test_sel_probs_rejected(self):
+        fl = FLConfig(algo="folb", n_selected=6, sampler="indexed")
+        with pytest.raises(ValueError, match="sel_probs"):
+            fed.run(MCLR, DATA, fl, rounds=2, fleet=SPEC,
+                    sel_probs=np.full(N, 1.0 / N))
+
+    def test_async_needs_fleet(self):
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=6,
+                            sampler="indexed")
+        with pytest.raises(ValueError, match="fleet"):
+            fed.run(MCLR, DATA, afl, rounds=2)
+
+    def test_indexed_sampler_excludes_latency_aware(self):
+        with pytest.raises(ValueError, match="latency_aware"):
+            AsyncFLConfig(mode="deadline", algo="folb", n_selected=6,
+                          sampler="indexed", latency_aware=True)
+
+    def test_indexed_sampler_excludes_fednu(self):
+        # fednu's selection distribution is built from per-device
+        # gradients — inherently O(N), so the config itself refuses
+        with pytest.raises(ValueError, match="fednu"):
+            FLConfig(algo="fednu_direct", n_selected=6, sampler="indexed")
