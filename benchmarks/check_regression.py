@@ -42,6 +42,14 @@ baseline and fails (exit 1) on regression:
     headline comparison under zero transmission failure).  Cell *values*
     stay ungated: they move with intentional algorithm changes; the
     ordering and the schema are what must not silently rot.
+  * scenario_grid: the batched scenario-grid engine's reason to exist —
+    once a baseline records the section, each baseline entry's
+    grid-vs-S-solo-runs host-time ratio (``grid_vs_solo_speedup``) must
+    stay at least ``--min-scenario-grid-speedup`` (a ratio, so shared
+    runners can't fake a regression), and the committed grid must keep
+    running in at least 2x fewer compiled program dispatches than the
+    solo path (``program_reduction``).  Absolute host seconds stay
+    ungated (machine-dependent).
   * resilience: schema + value gate on the guarded-vs-unguarded
     corruption matrix — once a baseline records it, every baseline cell
     must stay in the current artifact with a numeric ``final_acc``, the
@@ -91,6 +99,7 @@ def compare(baseline: dict, current: dict, tolerance: float,
             kernel_tolerance: float = 0.75,
             min_async_speedup: float = 1.0,
             min_sweep_speedup: float = 1.0,
+            min_scenario_grid_speedup: float = 1.0,
             min_profile_coverage: float = 0.9,
             resilience_acc_drop: float = 0.05,
             max_fleet_host_ratio: float = 2.0) -> List[str]:
@@ -171,6 +180,40 @@ def compare(baseline: dict, current: dict, tolerance: float,
                     failures.append(
                         f"sweep: {name} sweep_vs_solo_speedup {sp:.2f} "
                         f"< required {min_sweep_speedup:.2f}")
+
+    base_grid = baseline.get("scenario_grid")
+    cur_grid = current.get("scenario_grid")
+    if base_grid is not None:
+        if cur_grid is None:
+            failures.append(
+                "scenario_grid: section missing from current artifact")
+        else:
+            red = cur_grid.get("program_reduction")
+            if not isinstance(red, (int, float)):
+                failures.append(
+                    "scenario_grid: program_reduction missing")
+            elif red < 2.0:
+                failures.append(
+                    f"scenario_grid: committed grid runs in only "
+                    f"{red:.2f}x fewer compiled programs than the solo "
+                    f"path (>= 2x required)")
+            cur_entries = cur_grid.get("entries", {})
+            for name, be in base_grid.get("entries", {}).items():
+                if not isinstance(be, dict) \
+                        or "grid_vs_solo_speedup" not in be:
+                    continue
+                ce = cur_entries.get(name)
+                if ce is None:
+                    failures.append(
+                        f"scenario_grid: {name} missing from current "
+                        f"artifact")
+                    continue
+                sp = ce.get("grid_vs_solo_speedup", 0.0)
+                if sp < min_scenario_grid_speedup:
+                    failures.append(
+                        f"scenario_grid: {name} grid_vs_solo_speedup "
+                        f"{sp:.2f} < required "
+                        f"{min_scenario_grid_speedup:.2f}")
 
     base_net = baseline.get("network")
     cur_net = current.get("network")
@@ -404,6 +447,9 @@ def main() -> int:
     ap.add_argument("--min-sweep-speedup", type=float, default=1.0,
                     help="required S-config-sweep vs S-solo-runs host-time "
                          "speedup (plan-reuse sweep engine)")
+    ap.add_argument("--min-scenario-grid-speedup", type=float, default=1.0,
+                    help="required S-cell-grid vs S-solo-runs host-time "
+                         "speedup (batched scenario-grid engine)")
     ap.add_argument("--min-profile-coverage", type=float, default=0.9,
                     help="required host-phase timer coverage of the "
                          "profiled run's wall time")
@@ -422,6 +468,8 @@ def main() -> int:
                        args.kernel_tolerance,
                        min_async_speedup=args.min_async_speedup,
                        min_sweep_speedup=args.min_sweep_speedup,
+                       min_scenario_grid_speedup=(
+                           args.min_scenario_grid_speedup),
                        min_profile_coverage=args.min_profile_coverage,
                        resilience_acc_drop=args.resilience_acc_drop,
                        max_fleet_host_ratio=args.max_fleet_host_ratio)

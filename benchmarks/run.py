@@ -111,6 +111,30 @@ def main() -> None:
               file=sys.stderr)
         return rows
 
+    def grid_rows():
+        """Scenario-grid engine solo-vs-grid comparison, merged into the
+        artifact's ``scenario_grid`` section (same merge-into-existing
+        contract as kernel_rows, so CI can run it as its own
+        invocation).  Suite prefix is ``grid`` — NOT ``scenario_grid``
+        — because --only does prefix matching and ``--only scenario``
+        must keep selecting only the failure-matrix suite."""
+        import json
+        import os
+        rows, payload = scenario_matrix.grid_rows()
+        data = {}
+        if os.path.exists(args.bench_json):
+            with open(args.bench_json) as f:
+                data = json.load(f)
+        data["scenario_grid"] = payload
+        with open(args.bench_json, "w") as f:
+            json.dump(data, f, indent=2)
+            f.write("\n")
+        print(f"# merged scenario_grid section into {args.bench_json} "
+              f"({payload['n_programs_solo']} solo programs -> "
+              f"{payload['n_programs_grid']} grid programs)",
+              file=sys.stderr)
+        return rows
+
     def resilience_rows():
         """Guarded-vs-unguarded corruption matrix, merged into the
         artifact's ``resilience`` section (same merge-into-existing
@@ -187,6 +211,7 @@ def main() -> None:
         ("tta", tta_rows),
         ("kernel", kernel_rows),
         ("scenario", scenario_rows),
+        ("grid", grid_rows),
         ("resilience", resilience_rows),
         ("profile", profile_rows),
         ("fleet", fleet_rows),

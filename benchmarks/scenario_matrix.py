@@ -14,6 +14,15 @@ BENCH_fed.json's ``scenario`` section (merged by ``benchmarks.run
 --only scenario``) and is schema-gated by ``check_regression.py``,
 including preservation of each drop=0 cell's recorded FOLB-vs-FedAvg
 seconds-to-accuracy ordering.
+
+``grid_results`` is the companion bench for the batched scenario-grid
+engine: the committed drop grid runs once as S solo ``fed.run`` calls
+(one compiled program dispatch per cell) and once as a single
+``ScenarioGrid`` call (ONE vmapped program for all S cells), per
+engine.  The host-time ratio and the program-count reduction land in
+the artifact's ``scenario_grid`` section (merged by ``benchmarks.run
+--only grid``) and are gated by ``check_regression.py
+--min-scenario-grid-speedup`` once a baseline records them.
 """
 from __future__ import annotations
 
@@ -139,6 +148,129 @@ def scenario_rows(rounds: int = ROUNDS
                 f"bytes_to_{TARGET_ACC}={r['bytes_to_acc']:.0f};"
                 f"rounds_to_{TARGET_ACC}={r['rounds_to_acc']};"
                 f"final_acc={r['final_acc']:.3f}"))
+    return rows, payload
+
+
+GRID_DROP_AXIS = (0.05, 0.15, 0.25, 0.35)   # the committed S=4 grid
+GRID_ROUNDS = 40            # fixed regardless of --quick: artifact comparability
+_GRID_REPS = 3              # each rep is S solos or one grid call; keep CI bounded
+
+
+def grid_results(rounds: int = GRID_ROUNDS) -> Dict:
+    """Solo-vs-grid host-time comparison on the committed drop grid.
+
+    Per engine (sync scan, async deadline scan): S solo ``fed.run``
+    calls — one compiled program dispatch per cell — against ONE
+    ``ScenarioGrid`` call that runs all S cells in a single vmapped
+    program.  Both sides measured warm (the grid's one-off compile is
+    reported separately as ``grid_first_call_seconds``), so the
+    speedup is the steady-state host-dispatch + per-cell-plan-build
+    saving, a machine-independent ratio the CI gate can hold.  Rounds
+    are deliberately light (K = 5, ≤ 2 local steps — same policy as
+    ``dispatch_bench``): that is the dispatch-bound regime of large
+    scenario matrices the grid engine exists for; with heavy rounds the
+    CPU round math dominates both sides and the ratio tends to 1x."""
+    import jax
+
+    from benchmarks.dispatch_bench import _median_seconds
+    from repro import fed as fed_api
+    from repro.configs.paper_models import MCLR
+    from repro.data.federated import stack_devices
+    from repro.data.synthetic import synthetic_alpha_beta
+    from repro.fed.async_engine import AsyncFLConfig
+    from repro.fed.simulator import FLConfig
+    from repro.models import small
+    from repro.sysmodel import (ScenarioConfig, ScenarioGrid,
+                                expected_latencies, round_cost_for)
+
+    data = stack_devices(
+        synthetic_alpha_beta(SEED, N_DEVICES, 1.0, 1.0, mean_size=60),
+        seed=SEED)
+    fleet = _cell_fleet(STRAGGLER_AXIS[0], "always_on")
+    cells = tuple(ScenarioConfig(drop_prob=d, seed=SEED)
+                  for d in GRID_DROP_AXIS)
+    grid = ScenarioGrid(cells)
+    S = len(cells)
+
+    params = small.init_small(MCLR, jax.random.PRNGKey(SEED))
+    cost = round_cost_for(MCLR, params)
+    lat = expected_latencies(fleet, cost, mean_steps=1.5,
+                             n_examples=np.asarray(data.mask.sum(1)))
+    deadline = float(np.quantile(lat, 0.7))
+
+    sync_fl = FLConfig(algo="folb", n_selected=5, lr=0.05, mu=1.0,
+                       max_local_steps=2, seed=SEED)
+    dl_afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=5,
+                           lr=0.05, mu=1.0, max_local_steps=2,
+                           deadline=deadline, staleness_alpha=0.5,
+                           seed=SEED)
+
+    def _measure(run_solo, run_grid):
+        run_solo()          # warm the shared jitted round steps
+        t0 = time.time()
+        run_grid()          # first grid call compiles the vmapped program
+        compile_s = time.time() - t0
+        solo_s = _median_seconds(run_solo, reps=_GRID_REPS)
+        grid_s = _median_seconds(run_grid, reps=_GRID_REPS)
+        return {
+            "s_cells": S,
+            "solo_host_seconds": round(solo_s, 3),
+            "grid_host_seconds": round(grid_s, 3),
+            "grid_first_call_seconds": round(compile_s, 3),
+            "grid_vs_solo_speedup": solo_s / grid_s,
+        }
+
+    # eval only at the endpoints: measure plan build + round dispatch,
+    # not evaluation (same policy as dispatch_bench)
+    def sync_solo():
+        return [fed_api.run(MCLR, data, sync_fl, rounds, engine="scan",
+                            eval_every=rounds, fleet=fleet, scenario=c)
+                for c in cells]
+
+    def sync_grid():
+        return fed_api.run(MCLR, data, sync_fl, rounds, engine="scan",
+                           eval_every=rounds, fleet=fleet, scenario=grid)
+
+    def dl_solo():
+        return [fed_api.run(MCLR, data, dl_afl, rounds, engine="scan",
+                            eval_every=rounds, fleet=fleet, scenario=c)
+                for c in cells]
+
+    def dl_grid():
+        return fed_api.run(MCLR, data, dl_afl, rounds, engine="scan",
+                           eval_every=rounds, fleet=fleet, scenario=grid)
+
+    entries = {
+        "sync_folb": _measure(sync_solo, sync_grid),
+        "deadline_folb": _measure(dl_solo, dl_grid),
+    }
+    n_solo = sum(e["s_cells"] for e in entries.values())
+    n_grid = len(entries)
+    return {
+        "drop_axis": list(GRID_DROP_AXIS),
+        "rounds": rounds,
+        "n_devices": N_DEVICES,
+        "n_programs_solo": n_solo,
+        "n_programs_grid": n_grid,
+        "program_reduction": n_solo / n_grid,
+        "entries": entries,
+    }
+
+
+def grid_rows(rounds: int = GRID_ROUNDS
+              ) -> Tuple[List[Tuple[str, float, str]], Dict]:
+    """(CSV rows, json payload) for the ``scenario_grid`` section: one
+    row per engine with the grid-vs-solo host-time columns."""
+    payload = grid_results(rounds)
+    rows = []
+    for name, e in payload["entries"].items():
+        rows.append((
+            f"grid/{name}",
+            e["grid_host_seconds"] / rounds * 1e6,
+            f"s_cells={e['s_cells']};"
+            f"grid_vs_solo_speedup={e['grid_vs_solo_speedup']:.2f};"
+            f"grid_first_call_s={e['grid_first_call_seconds']:.2f};"
+            f"solo_host_s={e['solo_host_seconds']:.2f}"))
     return rows, payload
 
 

@@ -120,23 +120,30 @@ def run(model_cfg, fed, cfg: RunConfig, rounds: int, *,
     scenario : ``repro.sysmodel.ScenarioConfig`` failure channels —
         including the payload-corruption channels (``nan_prob`` /
         ``scale_prob`` / ``flip_prob``); a RUN-level knob, applied
-        identically by loop and scan engines.  The defense side is the
-        config's ``guard`` field (``repro.kernels.GuardConfig``), which
-        is static — jit-cache-keyed, never sweepable — and validated by
+        identically by loop and scan engines.  A
+        ``repro.sysmodel.ScenarioGrid`` batches S scenarios into ONE
+        compiled program (scan engine, resident data only), each cell
+        bit-for-bit its solo run.  The defense side is the config's
+        ``guard`` field (``repro.kernels.GuardConfig``), which is
+        static — jit-cache-keyed, never sweepable — and validated by
         the config itself (FOLB algos on the flat backend only).
 
     Returns ``FedRunResult`` for solo configs, ``SweepResult`` for
-    sweeps.
+    sweeps, ``ScenarioGridResult`` for scenario grids.
     """
     if engine not in _ENGINES:
         raise ValueError(
             f"engine must be one of {_ENGINES}, got {engine!r}")
+    scenario_grid = None
     if scenario is not None:
         from repro.sysmodel import scenario as _scenario_mod
-        if not isinstance(scenario, _scenario_mod.ScenarioConfig):
+        if isinstance(scenario, _scenario_mod.ScenarioGrid):
+            scenario_grid, scenario = scenario, None
+        elif not isinstance(scenario, _scenario_mod.ScenarioConfig):
             raise TypeError(
                 f"scenario= must be a repro.sysmodel.ScenarioConfig "
-                f"(failure-injection channels), got "
+                f"(failure-injection channels) or a ScenarioGrid "
+                f"(batched cells), got "
                 f"{type(scenario).__name__}; the defense knob is the "
                 f"config's guard field (repro.kernels.GuardConfig)")
 
@@ -149,6 +156,17 @@ def run(model_cfg, fed, cfg: RunConfig, rounds: int, *,
                 "engines vmap over resident (N, M, ...) stacks — "
                 "materialize() the data, or run solo lazy runs per "
                 "member")
+        if scenario_grid is not None:
+            raise ValueError(
+                "lazy populations do not support scenario grids: the "
+                "grid engine stacks resident per-cell event plans — "
+                "materialize() the data, or run the cells solo on a "
+                "resident dataset")
+        if scenario is not None:
+            # a null scenario is bit-invisible everywhere, including
+            # here: only an ACTIVE scenario needs the resident plans
+            from repro.sysmodel import scenario as _scenario_mod
+            scenario = _scenario_mod.as_active(scenario)
         if scenario is not None:
             raise ValueError(
                 "lazy populations do not support failure scenarios: "
@@ -190,6 +208,12 @@ def run(model_cfg, fed, cfg: RunConfig, rounds: int, *,
             profiler=profiler)
 
     if isinstance(cfg, _sweep.SweepSpec) or sweep is not None:
+        if scenario_grid is not None:
+            raise ValueError(
+                "scenario grids cannot combine with hyper sweeps yet "
+                "(the S_scenario x S_hyper cross product is a planned "
+                "follow-on): run the grid once per sweep member, or the "
+                "sweep once per scenario")
         spec = _as_sweep_spec(cfg, sweep)
         if engine == "loop":
             raise ValueError(
@@ -224,6 +248,44 @@ def run(model_cfg, fed, cfg: RunConfig, rounds: int, *,
             model_cfg, fed, spec, rounds, init_key=key,
             eval_every=eval_every, fleet=fleet, sel_probs=sel_probs,
             mesh=mesh, profiler=profiler, scenario=scenario)
+
+    if scenario_grid is not None:
+        if engine == "loop":
+            raise ValueError(
+                "engine='loop' cannot run scenario grids: the grid "
+                "engine is one compiled program (that is the point) — "
+                "use engine='scan'/'auto', or loop over grid.cells with "
+                "solo run() calls")
+        if plan is not None:
+            raise ValueError(
+                "plan= cannot combine with a scenario grid: the grid "
+                "builds one stacked plan per cell from its own scenario "
+                "realizations")
+        cfg = _with_telemetry(cfg, telemetry)
+        if isinstance(cfg, _async.AsyncFLConfig):
+            if fleet is None:
+                raise ValueError(
+                    "async configs need fleet=: the event timeline is "
+                    "built from the device fleet "
+                    "(repro.sysmodel.heterogeneous_fleet / uniform_fleet)")
+            if sel_probs is not None:
+                raise ValueError(
+                    "sel_probs= is a sync-engine knob; the async "
+                    "deadline engine derives its selection distribution "
+                    "from the fleet (latency_aware) or uses uniform "
+                    "sampling")
+            return _sweep.run_async_scenario_grid_compiled(
+                model_cfg, fed, cfg, scenario_grid, fleet, rounds,
+                init_key=key, eval_every=eval_every, mesh=mesh,
+                profiler=profiler)
+        if not isinstance(cfg, _sim.FLConfig):
+            raise TypeError(
+                f"cfg must be FLConfig or AsyncFLConfig for a scenario "
+                f"grid, got {type(cfg).__name__}")
+        return _sweep.run_scenario_grid_compiled(
+            model_cfg, fed, cfg, scenario_grid, rounds, init_key=key,
+            eval_every=eval_every, fleet=fleet, sel_probs=sel_probs,
+            mesh=mesh, profiler=profiler)
 
     if isinstance(cfg, _async.AsyncFLConfig):
         cfg = _with_telemetry(cfg, telemetry)

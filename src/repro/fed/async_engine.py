@@ -44,7 +44,7 @@ import dataclasses
 import functools
 import heapq
 import math
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -742,6 +742,177 @@ def plan_digest(plan) -> str:
         else:
             h.update(repr(v).encode())
     return h.hexdigest()
+
+
+# ------------------------------------------------------- scenario-grid plans
+#
+# A ScenarioGrid's cells share one timeline config (and hence one key
+# chain / selection stream) but realize different failure channels, so
+# their solo plans differ only in the realized arrays AND in their
+# data-dependent static widths (straggler pool, due budget, fedbuff
+# dispatch width).  The grid builders below construct each cell's plan
+# with the EXISTING solo builders — cell digests are the solo digests by
+# construction — then pad every width up to the grid max using the same
+# inert-row conventions the solo builders already rely on (masked due
+# rows aimed at the cell's own dump row, fedbuff pad dispatches of
+# device 0 / 1 step / dump slot / corruption 1.0) and stack along a
+# leading S_scenario axis.  Padding is bit-invisible: masked rows enter
+# the fixed-budget aggregation as exact 0·x terms (the masked-slot
+# contract of tests/test_event_plan.py), and appending them does not
+# perturb the reduction (checked empirically for every aggregation
+# backend × dtype × guard on this XLA build).
+
+@dataclasses.dataclass(frozen=True)
+class DeadlinePlanGrid:
+    """Stacked deadline plans: every realized array of `DeadlinePlan`
+    with a leading S_scenario axis, widths padded to the grid max.
+    ``plans[i]`` keeps cell *i*'s untouched solo plan (same digest as an
+    independent solo build) for byte accounting and telemetry."""
+    plans: Tuple[DeadlinePlan, ...]
+    keys: np.ndarray        # (R, 2) uint32 — shared round subkeys
+    ids: np.ndarray         # (S, R, K) int32
+    n_steps: np.ndarray     # (S, R, K) int32
+    arrived: np.ndarray     # (S, R, K) bool
+    store_slot: np.ndarray  # (S, R, K) int32
+    due_slot: np.ndarray    # (S, R, n_due) int32
+    due_mask: np.ndarray    # (S, R, n_due) float32
+    due_tau: np.ndarray     # (S, R, n_due) float32
+    fast: np.ndarray        # (S, R) bool
+    round_end: np.ndarray   # (S, R) float64
+    n_arrived: np.ndarray   # (S, R) int64
+    stale_mean: np.ndarray  # (S, R) float64
+    n_slots: int            # padded pool rows (max over cells)
+    n_due: int              # padded due budget (max over cells)
+    corrupt: Optional[np.ndarray] = None  # (S, R, K) f32, uniform presence
+
+    @property
+    def n_cells(self) -> int:
+        return len(self.plans)
+
+
+@dataclasses.dataclass(frozen=True)
+class FedBuffPlanGrid:
+    """Stacked fedbuff plans (see `DeadlinePlanGrid`): dispatch width W
+    and the slot pool pad to the grid max with the solo builder's own
+    inert pad rows; the flush geometry (R, M) is width-stable."""
+    plans: Tuple[FedBuffPlan, ...]
+    seed_ids: np.ndarray     # (S, C) int32
+    seed_steps: np.ndarray   # (S, C) int32
+    seed_slots: np.ndarray   # (S, C) int32
+    ids: np.ndarray          # (S, R, W) int32
+    n_steps: np.ndarray      # (S, R, W) int32
+    store_slot: np.ndarray   # (S, R, W) int32
+    flush_slot: np.ndarray   # (S, R, M) int32
+    tau: np.ndarray          # (S, R, M) float32
+    flush_mask: np.ndarray   # (S, R, M) float32 — cells are active
+    flush_clock: np.ndarray  # (S, R) float64
+    stale_mean: np.ndarray   # (S, R) float64
+    n_slots: int             # padded pool rows incl. dump (max over cells)
+    seed_corrupt: Optional[np.ndarray] = None  # (S, C) f32
+    corrupt: Optional[np.ndarray] = None       # (S, R, W) f32
+
+    @property
+    def n_cells(self) -> int:
+        return len(self.plans)
+
+
+def build_deadline_plan_grid(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
+                             sizes: np.ndarray, rounds: int, init_key, grid,
+                             sel_probs=None) -> DeadlinePlanGrid:
+    """Per-cell solo deadline plans, padded and stacked over S_scenario.
+
+    Masked due padding aims at each cell's own dump row (`p.n_slots`,
+    mask 0, τ 0) — exactly the solo builder's masked-slot default — so a
+    padded row gathers real zeros and contributes an exact 0·x term."""
+    plans = tuple(build_deadline_plan(afl, fleet, cost, sizes, rounds,
+                                      init_key, sel_probs, scenario=c)
+                  for c in grid.cells)
+    keys = plans[0].keys
+    for p in plans[1:]:
+        # one timeline config => one key chain; the fast-round path
+        # resamples ids from these subkeys, so sharing them is what lets
+        # the grid keep selection identical to every solo run
+        assert np.array_equal(p.keys, keys)
+    n_due = max(p.n_due for p in plans)
+    n_slots = max(p.n_slots for p in plans)
+    due_slot = np.stack([
+        np.concatenate([p.due_slot, np.full(
+            (rounds, n_due - p.n_due), p.n_slots, np.int32)], axis=1)
+        for p in plans])
+    due_mask = np.stack([
+        np.concatenate([p.due_mask, np.zeros(
+            (rounds, n_due - p.n_due), np.float32)], axis=1)
+        for p in plans])
+    due_tau = np.stack([
+        np.concatenate([p.due_tau, np.zeros(
+            (rounds, n_due - p.n_due), np.float32)], axis=1)
+        for p in plans])
+    corrupt = None if not grid.corrupting \
+        else np.stack([p.corrupt for p in plans])
+    return DeadlinePlanGrid(
+        plans=plans, keys=keys,
+        ids=np.stack([p.ids for p in plans]),
+        n_steps=np.stack([p.n_steps for p in plans]),
+        arrived=np.stack([p.arrived for p in plans]),
+        store_slot=np.stack([p.store_slot for p in plans]),
+        due_slot=due_slot, due_mask=due_mask, due_tau=due_tau,
+        fast=np.stack([p.fast for p in plans]),
+        round_end=np.stack([p.round_end for p in plans]),
+        n_arrived=np.stack([p.n_arrived for p in plans]),
+        stale_mean=np.stack([p.stale_mean for p in plans]),
+        n_slots=n_slots, n_due=n_due, corrupt=corrupt)
+
+
+def build_fedbuff_plan_grid(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
+                            sizes: np.ndarray, rounds: int, init_key,
+                            grid) -> FedBuffPlanGrid:
+    """Per-cell solo fedbuff plans, padded and stacked over S_scenario.
+
+    Dispatch-width padding reuses the solo builder's inert-row recipe
+    (device 0, 1 step, the cell's dump slot `p.n_slots − 1`, corruption
+    1.0): pad dispatches store to a row no flush ever gathers."""
+    plans = tuple(build_fedbuff_plan(afl, fleet, cost, sizes, rounds,
+                                     init_key, scenario=c)
+                  for c in grid.cells)
+    W = max(p.ids.shape[1] for p in plans)
+
+    def pad_disp(p, arr, fill):
+        out = np.full((rounds, W), fill, arr.dtype)
+        out[:, :arr.shape[1]] = arr
+        return out
+
+    corrupt = None
+    seed_corrupt = None
+    if grid.corrupting:
+        corrupt = np.stack([pad_disp(p, p.corrupt, 1.0) for p in plans])
+        seed_corrupt = np.stack([p.seed_corrupt for p in plans])
+    return FedBuffPlanGrid(
+        plans=plans,
+        seed_ids=np.stack([p.seed_ids for p in plans]),
+        seed_steps=np.stack([p.seed_steps for p in plans]),
+        seed_slots=np.stack([p.seed_slots for p in plans]),
+        ids=np.stack([pad_disp(p, p.ids, 0) for p in plans]),
+        n_steps=np.stack([pad_disp(p, p.n_steps, 1) for p in plans]),
+        store_slot=np.stack([pad_disp(p, p.store_slot, p.n_slots - 1)
+                             for p in plans]),
+        flush_slot=np.stack([p.flush_slot for p in plans]),
+        tau=np.stack([p.tau for p in plans]),
+        flush_mask=np.stack([p.flush_mask for p in plans]),
+        flush_clock=np.stack([p.flush_clock for p in plans]),
+        stale_mean=np.stack([p.stale_mean for p in plans]),
+        n_slots=max(p.n_slots for p in plans),
+        seed_corrupt=seed_corrupt, corrupt=corrupt)
+
+
+def build_plan_grid(afl: AsyncFLConfig, fleet: DeviceFleet, cost,
+                    sizes: np.ndarray, rounds: int, init_key, grid,
+                    sel_probs=None):
+    """Mode dispatcher for the grid plan builders."""
+    if afl.mode == "deadline":
+        return build_deadline_plan_grid(afl, fleet, cost, sizes, rounds,
+                                        init_key, grid, sel_probs)
+    return build_fedbuff_plan_grid(afl, fleet, cost, sizes, rounds,
+                                   init_key, grid)
 
 
 # ------------------------------------------------- shared jitted round steps

@@ -289,7 +289,11 @@ def eval_history_replay_sweep(model_cfg, spec: flat_lib.FlatSpec, train,
     (eval round, member) pair of an (R, S, D_pad) trajectory instead of
     R·S separate ``eval_global`` dispatches.  Returns S history dicts,
     member i row-wise bit-identical to
-    ``eval_history_replay(..., params_traj_RS[:, i], ...)``."""
+    ``eval_history_replay(..., params_traj_RS[:, i], ...)``.
+
+    The timeline series (clocks / n_arrived / stale_mean) accept either a
+    shared (R,) vector — hyper sweeps, one plan for all members — or a
+    per-member (S, R) stack (scenario grids, one timeline per cell)."""
     ts = _eval_points(rounds, eval_every)
     traj = jnp.asarray(params_traj_RS)[jnp.asarray(ts)]
     E, S = traj.shape[0], traj.shape[1]
@@ -309,7 +313,8 @@ def eval_history_replay_sweep(model_cfg, spec: flat_lib.FlatSpec, train,
                 "train_acc": [float(v) for v in tr_acc[:, i]]}
         for k, series in extras.items():
             if series is not None:
-                hist[k] = [float(series[t]) for t in ts]
+                row = series[i] if np.asarray(series).ndim == 2 else series
+                hist[k] = [float(row[t]) for t in ts]
         hists.append(hist)
     return hists
 
@@ -416,13 +421,20 @@ def run_federated_compiled(model_cfg, fed: FederatedData,
 # --------------------------------------------------- compiled async engines
 
 def make_deadline_step(model_cfg, afl, spec: flat_lib.FlatSpec, data,
-                       p_weights, sel_probs, mesh):
+                       p_weights, sel_probs, mesh, always_slow=False):
     """One planned deadline round as a flat-carry transition, shared
     VERBATIM by the solo scan and the vmapped sweep engine: sync-parity
     fast rounds run the same jitted ``simulator.fl_round`` the python
     loop calls (under ``lax.cond``), every other round runs the shared
     ``async_engine.deadline_slow_step`` against the pending-straggler
-    slot pool.  ``afl`` must be the canonical ``timeline_config()``."""
+    slot pool.  ``afl`` must be the canonical ``timeline_config()``.
+
+    ``always_slow`` (static): skip the cond and run the slow branch
+    unconditionally.  Bit-identical whenever the caller's entire fast
+    array is False (cond on a False predicate IS the slow branch) — the
+    vmapped grid/sweep engines use it because their batched cond lowers
+    to a select that executes BOTH branches for every member, and any
+    active drop scenario leaves essentially no fast rounds to select."""
     fl = afl.sync_config()
 
     def step(w_flat, pend, xs, hypers, corrupt=None):
@@ -451,6 +463,8 @@ def make_deadline_step(model_cfg, afl, spec: flat_lib.FlatSpec, data,
             new, pend2 = out
             return flat_lib.ravel(spec, new), pend2
 
+        if always_slow:
+            return slow_fn(params, pend)
         return jax.lax.cond(fast_t, fast_fn, slow_fn, params, pend)
 
     return step

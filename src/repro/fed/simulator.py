@@ -173,6 +173,24 @@ def scenario_round_inputs(fl, rounds: int, scenario):
     return steps, up_mask, g.lat_scale, g.corrupt
 
 
+def scenario_grid_round_inputs(fl, rounds: int, grid):
+    """Stacked ``scenario_round_inputs`` over a ``ScenarioGrid``: every
+    array gains a leading S_scenario axis, and slice ``[i]`` is
+    byte-identical to ``scenario_round_inputs(fl, rounds, grid[i])``
+    (same base step draws, independently seeded cell realizations).
+    ``lat_scale`` slices for jitter-free cells are exact ones.  Returns
+    (steps (S, R, K) int32, up_mask (S, R, K) f32, lat_scale (S, R, K)
+    or None, corrupt (S, R, K) f32 or None)."""
+    from repro.sysmodel import scenario as scenario_mod
+    base = np.stack([np.asarray(local_step_draws(t, fl.n_selected, fl))
+                     for t in range(rounds)])
+    g = scenario_mod.realize_grid(grid, (rounds, fl.n_selected))
+    steps = scenario_mod.scale_steps(np.broadcast_to(
+        base, g.comp.shape), g.comp)
+    up_mask = (~g.drop).astype(np.float32)
+    return steps, up_mask, g.lat_scale, g.corrupt
+
+
 def _client_batch(data, ids):
     return {"x": data["x"][ids], "y": data["y"][ids], "mask": data["mask"][ids]}
 

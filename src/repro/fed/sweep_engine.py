@@ -339,19 +339,22 @@ def run_sweep_compiled(model_cfg, fed: FederatedData, spec: SweepSpec,
 # ---------------------------------------------------------- async sweeps
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2),
-                   static_argnames=("mesh",))
+                   static_argnames=("mesh", "always_slow"))
 def sweep_scan_deadline(model_cfg, afl, spec: flat_lib.FlatSpec, w0_S,
                         pend0_S, data, p_weights, keys, ids, steps, arrived,
                         store_slot, due_slot, due_mask, due_tau, fast,
                         hypers_S, sel_probs=None, corrupt=None,
-                        *, mesh=None):
+                        *, mesh=None, always_slow=False):
     """Whole-sweep deadline program: scan over the ONE shared event plan,
     vmapping ``scan_engine.make_deadline_step`` over the stacked carries
     (flat params + per-member straggler pools) and hypers.  ``corrupt``
     ((R, K) f32 payload factors) is timeline-shared: the per-round row is
-    closed over unbatched so every member corrupts the same uploads."""
+    closed over unbatched so every member corrupts the same uploads.
+    ``always_slow`` skips the step's cond (bit-identical when the plan
+    has no fast rounds — see ``grid_scan_deadline``)."""
     step = scan_engine.make_deadline_step(model_cfg, afl, spec, data,
-                                          p_weights, sel_probs, mesh)
+                                          p_weights, sel_probs, mesh,
+                                          always_slow=always_slow)
 
     def body(carry, xs):
         w_S, pend_S = carry
@@ -488,7 +491,8 @@ def run_async_sweep_compiled(model_cfg, fed: FederatedData,
                 jnp.asarray(plan.due_mask), jnp.asarray(plan.due_tau),
                 jnp.asarray(plan.fast), hypers_S, sel_probs,
                 None if plan.corrupt is None
-                else jnp.asarray(plan.corrupt), mesh=mesh)
+                else jnp.asarray(plan.corrupt), mesh=mesh,
+                always_slow=not bool(np.asarray(plan.fast).any()))
             if base.telemetry or profiler is not None:
                 jax.block_until_ready(ws)
         clocks, n_arr = plan.round_end, plan.n_arrived
@@ -559,3 +563,418 @@ def run_async_sweep_compiled(model_cfg, fed: FederatedData,
                 ids=np.asarray(plan.ids), metrics=metrics))
     return SweepResult(spec=spec, results=tuple(results),
                        profile=prof.finish())
+
+
+# ------------------------------------------------------- scenario grids
+#
+# The dual of the hyper sweep: a hyper sweep varies the learning math
+# over ONE shared timeline, a scenario grid varies the TIMELINE (failure
+# realizations, hence masks/arrivals/pools) under one learning config.
+# The same shared round steps are vmapped — here over per-cell xs rows
+# and per-cell pending pools, with the hypers closed over unbatched —
+# so grid cell i stays bit-for-bit identical to a solo run under
+# scenario i (tests/test_scenario_grid.py).
+
+@dataclasses.dataclass
+class ScenarioGridResult:
+    """One ``FedRunResult`` per grid cell, plus the grid that made them.
+    ``plan_digests`` (async modes) are each cell's solo plan digest —
+    identical to an independent solo build's, since the grid builders
+    construct the per-cell plans with the solo builders."""
+    grid: "object"
+    results: Tuple[simulator.FedRunResult, ...]
+    plan_digests: Optional[Tuple[str, ...]] = None
+    profile: Optional[dict] = None
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __getitem__(self, i: int) -> simulator.FedRunResult:
+        return self.results[i]
+
+    def __iter__(self):
+        return iter(self.results)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2),
+                   static_argnames=("mesh",))
+def grid_scan_rounds(model_cfg, fl, spec: flat_lib.FlatSpec, w0_S, data,
+                     p_weights, keys, steps_S, hypers, up_mask_S,
+                     corrupt_S=None, sel_probs=None, so_state0_S=None,
+                     *, mesh=None):
+    """Whole-grid sync program: one ``lax.scan`` over rounds whose body
+    vmaps ``scan_engine.make_sync_round_step`` over the S_scenario axis
+    of the carry and the per-cell step/mask/corrupt rows.  Selection is
+    scenario-independent (ids are drawn before the failure channels
+    apply), so keys and hypers stay unbatched and ``out_axes=None`` on
+    the ids structurally asserts the shared selection stream."""
+    use_so = so_state0_S is not None
+    step = scan_engine.make_sync_round_step(
+        model_cfg, fl, spec, use_so, data, p_weights, sel_probs, mesh)
+
+    extras_axes = {"ids": None}
+    if fl.algo == "folb2":
+        extras_axes["ids2"] = None
+    if fl.telemetry:
+        extras_axes["metrics"] = 0
+
+    def body(carry, xs):
+        w_S, so_S = carry if use_so else (carry, None)
+        parts = list(xs)
+        corr_S = parts.pop() if corrupt_S is not None else None
+        sub, steps_t, um_t = parts
+        vstep = jax.vmap(
+            lambda w, so, ns, um, corr: step(w, so, sub, ns, hypers, um,
+                                             corr),
+            in_axes=(0, 0 if use_so else None, 0, 0,
+                     0 if corrupt_S is not None else None),
+            out_axes=(0, 0 if use_so else None, extras_axes))
+        w_new, so_S, extras = vstep(w_S, so_S, steps_t, um_t, corr_S)
+        ys = {"params": w_new, **extras}
+        return ((w_new, so_S) if use_so else w_new), ys
+
+    carry0 = (w0_S, so_state0_S) if use_so else w0_S
+    xs = (keys, steps_S, up_mask_S)
+    if corrupt_S is not None:
+        xs = xs + (corrupt_S,)
+    carry, ys = jax.lax.scan(body, carry0, xs)
+    return (carry[0] if use_so else carry), ys
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2),
+                   static_argnames=("mesh", "always_slow"))
+def grid_scan_deadline(model_cfg, afl, spec: flat_lib.FlatSpec, w0_S,
+                       pend0_S, data, p_weights, keys, ids_S, steps_S,
+                       arrived_S, store_slot_S, due_slot_S, due_mask_S,
+                       due_tau_S, fast_S, hypers, sel_probs=None,
+                       corrupt_S=None, *, mesh=None, always_slow=False):
+    """Whole-grid deadline program: scan the stacked plan, vmapping
+    ``scan_engine.make_deadline_step`` over each cell's plan rows and
+    straggler pool.  The round subkeys stay unbatched (one timeline
+    config, one key chain); the per-cell ``fast`` flags lower the step's
+    ``lax.cond`` to a select under vmap, which keeps the taken branch's
+    values bit-identical to the solo scan's — but a select executes BOTH
+    branches for every cell, so the driver passes ``always_slow=True``
+    (skip the cond, bit-identical) whenever no cell has a fast round,
+    which is the norm for active drop scenarios."""
+    step = scan_engine.make_deadline_step(model_cfg, afl, spec, data,
+                                          p_weights, sel_probs, mesh,
+                                          always_slow=always_slow)
+
+    def body(carry, xs):
+        w_S, pend_S = carry
+        sub = xs[0]
+        rest = xs[1:]
+        if corrupt_S is not None:
+            *rest, corr = rest
+            rest = tuple(rest)
+        else:
+            corr = None
+        in_ax = (0, 0, 0, 0 if corrupt_S is not None else None)
+
+        def one(w, pend, row, corr_c):
+            return step(w, pend, (sub,) + row, hypers, corr_c)
+
+        if afl.telemetry:
+            w_new, pend_S, m = jax.vmap(one, in_axes=in_ax)(
+                w_S, pend_S, rest, corr)
+            return (w_new, pend_S), {"params": w_new, "metrics": m}
+        w_new, pend_S = jax.vmap(one, in_axes=in_ax)(w_S, pend_S, rest, corr)
+        return (w_new, pend_S), w_new
+
+    xs = (keys, ids_S, steps_S, arrived_S, store_slot_S, due_slot_S,
+          due_mask_S, due_tau_S, fast_S)
+    if corrupt_S is not None:
+        xs = xs + (corrupt_S,)
+    (w_final, _), ws = jax.lax.scan(body, (w0_S, pend0_S), xs)
+    return w_final, ws
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2),
+                   static_argnames=("mesh",))
+def grid_scan_fedbuff(model_cfg, afl, spec: flat_lib.FlatSpec, w0_S,
+                      pend0_S, data, ids_S, steps_S, store_slot_S,
+                      flush_slot_S, tau_S, hypers, flush_mask_S,
+                      corrupt_S=None, *, mesh=None):
+    """Whole-grid fedbuff program: scan the stacked flush schedule,
+    vmapping ``scan_engine.make_fedbuff_step`` over each cell's dispatch
+    rows and in-flight pool.  Active cells always carry a flush mask
+    (the drop channel's per-flush validity), so it is a required
+    per-cell operand here."""
+    step = scan_engine.make_fedbuff_step(model_cfg, afl, spec, data, mesh)
+
+    def body(carry, xs):
+        w_S, pend_S = carry
+        parts = list(xs)
+        corr = parts.pop() if corrupt_S is not None else None
+        fm = parts.pop()
+        rest = tuple(parts)
+        in_ax = (0, 0, 0, 0, 0 if corrupt_S is not None else None)
+
+        def one(w, pend, row, fm_c, corr_c):
+            return step(w, pend, row, hypers, fm_c, corr_c)
+
+        if afl.telemetry:
+            w_new, pend_S, m = jax.vmap(one, in_axes=in_ax)(
+                w_S, pend_S, rest, fm, corr)
+            return (w_new, pend_S), {"params": w_new, "metrics": m}
+        w_new, pend_S = jax.vmap(one, in_axes=in_ax)(w_S, pend_S, rest, fm,
+                                                     corr)
+        return (w_new, pend_S), w_new
+
+    xs = (ids_S, steps_S, store_slot_S, flush_slot_S, tau_S, flush_mask_S)
+    if corrupt_S is not None:
+        xs = xs + (corrupt_S,)
+    (w_final, _), ws = jax.lax.scan(body, (w0_S, pend0_S), xs)
+    return w_final, ws
+
+
+def _stack_to_rows(a, dtype=None):
+    """(S, R, ...) plan array -> (R, S, ...) scan xs."""
+    out = np.moveaxis(np.asarray(a), 0, 1)
+    return jnp.asarray(out) if dtype is None else jnp.asarray(out, dtype)
+
+
+def run_scenario_grid_compiled(model_cfg, fed: FederatedData,
+                               fl: simulator.FLConfig, grid, rounds: int,
+                               init_key: Optional[jax.Array] = None,
+                               eval_every: int = 1, fleet=None,
+                               sel_probs=None, mesh=None,
+                               profiler=None) -> ScenarioGridResult:
+    """All S sync scenarios of ``grid`` in one compiled run.
+
+    Cell i's result is bit-for-bit what a solo
+    ``run_federated_compiled(..., scenario=grid[i])`` produces: params,
+    history including the per-cell wall-clock replay (each cell's jitter
+    realization times its own clock), and byte accounting (sync network
+    series are timeline-length-only, hence cell-independent)."""
+    from repro.sysmodel import scenario as scenario_mod
+    from repro.telemetry import metrics as tmetrics
+    from repro.telemetry import profiler_for
+    if fl.algo in _UNSWEEPABLE_ALGOS:
+        raise ValueError(
+            f"algo {fl.algo!r} derives its selection distribution from "
+            f"the current parameters — grid cells diverge after round 1, "
+            f"so no shared selection stream exists; run the cells solo")
+    for c in grid.cells:
+        scenario_mod.check_sync(c)
+    prof = profiler_for(fl.telemetry, profiler)
+    with prof.phase("setup"):
+        S = len(grid)
+        key = init_key if init_key is not None \
+            else jax.random.PRNGKey(fl.seed)
+        params = small.init_small(model_cfg, key)
+        train = {"x": jnp.asarray(fed.x), "y": jnp.asarray(fed.y),
+                 "mask": jnp.asarray(fed.mask)}
+        test = {"x": jnp.asarray(fed.test_x), "y": jnp.asarray(fed.test_y),
+                "mask": jnp.asarray(fed.test_mask)}
+        p = jnp.asarray(fed.p)
+        fspec = flat_lib.spec_of(params)
+        w0 = flat_lib.ravel(fspec, params)
+        w0_S = jnp.broadcast_to(w0, (S,) + w0.shape)
+    with prof.phase("plan_build"):
+        sc_steps, sc_mask, sc_lat, sc_corr = \
+            simulator.scenario_grid_round_inputs(fl, rounds, grid)
+        keys = scan_engine._split_chain(key, rounds)
+        steps_S = _stack_to_rows(sc_steps)
+        up_mask_S = _stack_to_rows(sc_mask)
+        corrupt_S = None if sc_corr is None else _stack_to_rows(sc_corr)
+        use_so = _uses_server_opt(fl)
+        so_state0_S = None
+        if use_so:
+            so_cfg = sopt.ServerOptConfig(kind=fl.server_opt, lr=1.0)
+            so0 = sopt.init_server_state(so_cfg, params)
+            so_state0_S = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (S,) + x.shape), so0)
+    with prof.phase("scan"):
+        w_final_S, ys = grid_scan_rounds(
+            model_cfg, fl.timeline_config(), fspec, w0_S, train, p, keys,
+            steps_S, simulator.hypers_of(fl), up_mask_S, corrupt_S,
+            sel_probs, so_state0_S, mesh=mesh)
+        if fl.telemetry or profiler is not None:
+            jax.block_until_ready(ys)
+    with prof.phase("eval"):
+        clocks_S = None
+        if fleet is not None:
+            assert fleet.n_devices == fed.n_devices, \
+                (fleet.n_devices, fed.n_devices)
+            ids_all = np.asarray(ys["ids"])
+            ids2_all = np.asarray(ys["ids2"]) if "ids2" in ys else None
+            # per-cell clock replay: each cell's completeness-scaled steps
+            # and jitter realization time its own wall clock (jitter-free
+            # cells take the exact lat_scale=None host path a solo run
+            # takes)
+            clocks_S = np.stack([
+                scan_engine.sync_clock_replay(
+                    model_cfg, params, fed, fl.algo, fleet, ids_all,
+                    ids2_all, np.asarray(sc_steps[i]), rounds,
+                    lat_scale=None if grid[i].jitter_sigma == 0.0
+                    else sc_lat[i])
+                for i in range(S)])
+        hists = scan_engine.eval_history_replay_sweep(
+            model_cfg, fspec, train, test, p, ys["params"], rounds,
+            eval_every, clocks_S)
+    with prof.phase("collect"):
+        ids_np = np.asarray(ys["ids"])
+        shared = None
+        if fl.telemetry:
+            # bytes are spent whether or not an upload decodes, so the
+            # sync network series depend only on the timeline length —
+            # one copy is exactly each cell's solo series
+            D = int(sum(x.size for x in jax.tree.leaves(params)))
+            shared = tmetrics.sync_network_series(D, fl, rounds,
+                                                  fed.n_devices)
+            shared["selection_entropy"] = tmetrics.selection_entropy(
+                ids_np, fed.n_devices)
+        results = []
+        for i in range(S):
+            metrics = None
+            if fl.telemetry:
+                metrics = {k: np.asarray(v[:, i])
+                           for k, v in ys["metrics"].items()}
+                metrics.update(shared)
+            results.append(simulator.FedRunResult(
+                history=hists[i],
+                params=flat_lib.unravel(fspec, w_final_S[i]),
+                ids=ids_np, metrics=metrics))
+    return ScenarioGridResult(grid=grid, results=tuple(results),
+                              profile=prof.finish())
+
+
+def run_async_scenario_grid_compiled(model_cfg, fed: FederatedData, afl,
+                                     grid, fleet, rounds: int,
+                                     init_key: Optional[jax.Array] = None,
+                                     eval_every: int = 1, mesh=None,
+                                     profiler=None) -> ScenarioGridResult:
+    """All S async scenarios of ``grid`` against stacked per-cell plans.
+
+    The grid plan builders construct each cell's plan with the solo
+    builders (``plan_digests[i]`` IS the solo digest), pad the
+    data-dependent widths to the grid max with bit-inert rows, and stack;
+    one compiled scan then replays every cell.  Cell i is bit-for-bit a
+    solo ``run_async_compiled(..., scenario=grid[i])``: params, wall
+    clock, arrival counts, staleness means, and the per-cell plan-derived
+    byte accounting."""
+    from repro.telemetry import metrics as tmetrics
+    from repro.telemetry import profiler_for
+    assert isinstance(afl, async_lib.AsyncFLConfig), \
+        "run_async_scenario_grid_compiled takes an AsyncFLConfig; use " \
+        "run_scenario_grid_compiled for FLConfig"
+    assert fleet.n_devices == fed.n_devices, (fleet.n_devices, fed.n_devices)
+    prof = profiler_for(afl.telemetry, profiler)
+    with prof.phase("setup"):
+        S = len(grid)
+        key = init_key if init_key is not None \
+            else jax.random.PRNGKey(afl.seed)
+        params = small.init_small(model_cfg, key)
+        train = {"x": jnp.asarray(fed.x), "y": jnp.asarray(fed.y),
+                 "mask": jnp.asarray(fed.mask)}
+        test = {"x": jnp.asarray(fed.test_x), "y": jnp.asarray(fed.test_y),
+                "mask": jnp.asarray(fed.test_mask)}
+        p = jnp.asarray(fed.p)
+        sizes = np.asarray(fed.mask.sum(axis=1))
+        cost = round_cost_for(model_cfg, params,
+                              uploads_gradient="folb" in afl.algo)
+        afl_t = afl.timeline_config()
+        sync_fl = afl_t.sync_config()
+        hypers = async_lib.hypers_of(afl)
+        fspec = flat_lib.spec_of(params)
+        w0 = flat_lib.ravel(fspec, params)
+        w0_S = jnp.broadcast_to(w0, (S,) + w0.shape)
+    bcast = lambda tree_: jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (S,) + x.shape), tree_)
+
+    if afl.mode == "deadline":
+        with prof.phase("plan_build"):
+            sel_probs = async_lib.deadline_selection_probs(afl, fleet,
+                                                           cost, sizes)
+            gplan = async_lib.build_deadline_plan_grid(
+                afl, fleet, cost, sizes, rounds, key, grid, sel_probs)
+            pend0_S = bcast(async_lib.pool_init(
+                model_cfg, sync_fl, params, train, gplan.n_slots + 1))
+        with prof.phase("scan"):
+            w_final_S, ws = grid_scan_deadline(
+                model_cfg, afl_t, fspec, w0_S, pend0_S, train, p,
+                jnp.asarray(gplan.keys), _stack_to_rows(gplan.ids),
+                _stack_to_rows(gplan.n_steps),
+                _stack_to_rows(gplan.arrived, jnp.float32),
+                _stack_to_rows(gplan.store_slot),
+                _stack_to_rows(gplan.due_slot),
+                _stack_to_rows(gplan.due_mask),
+                _stack_to_rows(gplan.due_tau),
+                _stack_to_rows(gplan.fast), hypers, sel_probs,
+                None if gplan.corrupt is None
+                else _stack_to_rows(gplan.corrupt), mesh=mesh,
+                always_slow=not bool(np.asarray(gplan.fast).any()))
+            if afl.telemetry or profiler is not None:
+                jax.block_until_ready(ws)
+        clocks_S, n_arr_S = gplan.round_end, gplan.n_arrived
+    else:
+        with prof.phase("plan_build"):
+            gplan = async_lib.build_fedbuff_plan_grid(
+                afl, fleet, cost, sizes, rounds, key, grid)
+            pend0 = async_lib.pool_init(model_cfg, sync_fl, params, train,
+                                        gplan.n_slots)
+            seed_corr = (None if gplan.seed_corrupt is None
+                         else jnp.asarray(gplan.seed_corrupt))
+            # every cell seeds from the same initial params but its own
+            # dispatch stream: vmap the shared jitted seeding step over
+            # the per-cell seed rows
+            pend0_S = jax.vmap(
+                lambda pend, sids, ssteps, sslots, scorr:
+                async_lib.fedbuff_seed_pool(
+                    model_cfg, afl_t, params, pend, train, sids, ssteps,
+                    sslots, hypers, scorr),
+                in_axes=(0, 0, 0, 0,
+                         0 if seed_corr is not None else None))(
+                bcast(pend0), jnp.asarray(gplan.seed_ids),
+                jnp.asarray(gplan.seed_steps),
+                jnp.asarray(gplan.seed_slots), seed_corr)
+        with prof.phase("scan"):
+            w_final_S, ws = grid_scan_fedbuff(
+                model_cfg, afl_t, fspec, w0_S, pend0_S, train,
+                _stack_to_rows(gplan.ids), _stack_to_rows(gplan.n_steps),
+                _stack_to_rows(gplan.store_slot),
+                _stack_to_rows(gplan.flush_slot), _stack_to_rows(gplan.tau),
+                hypers, _stack_to_rows(gplan.flush_mask),
+                None if gplan.corrupt is None
+                else _stack_to_rows(gplan.corrupt), mesh=mesh)
+            if afl.telemetry or profiler is not None:
+                jax.block_until_ready(ws)
+        clocks_S = gplan.flush_clock
+        n_arr_S = gplan.flush_mask.sum(axis=2).astype(np.int64)
+
+    params_traj = ws["params"] if afl.telemetry else ws
+    with prof.phase("eval"):
+        hists = scan_engine.eval_history_replay_sweep(
+            model_cfg, fspec, train, test, p, params_traj, rounds,
+            eval_every, clocks=clocks_S, n_arrived=n_arr_S,
+            stale_mean=gplan.stale_mean)
+    with prof.phase("collect"):
+        D = int(sum(x.size for x in jax.tree.leaves(params)))
+        results = []
+        for i in range(S):
+            plan_i = gplan.plans[i]
+            metrics = None
+            if afl.telemetry:
+                # network/pool series are plan-derived and per-cell: each
+                # cell's solo plan yields exactly its solo series
+                metrics = {k: np.asarray(v[:, i])
+                           for k, v in ws["metrics"].items()}
+                if afl.mode == "deadline":
+                    metrics.update(tmetrics.deadline_network_series(
+                        D, afl, plan_i))
+                    metrics.update(tmetrics.deadline_pool_series(plan_i))
+                else:
+                    metrics.update(tmetrics.fedbuff_network_series(
+                        D, afl, plan_i))
+                metrics["selection_entropy"] = tmetrics.selection_entropy(
+                    plan_i.ids, fed.n_devices)
+            results.append(simulator.FedRunResult(
+                history=hists[i],
+                params=flat_lib.unravel(fspec, w_final_S[i]),
+                ids=np.asarray(plan_i.ids), metrics=metrics))
+    return ScenarioGridResult(
+        grid=grid, results=tuple(results),
+        plan_digests=tuple(async_lib.plan_digest(p) for p in gplan.plans),
+        profile=prof.finish())

@@ -28,6 +28,7 @@ from repro.sysmodel.profiles import (DeviceFleet, DeviceProfile,
                                      fleet_summary, heterogeneous_fleet,
                                      uniform_fleet)
 from repro.sysmodel.scenario import (ScenarioConfig, ScenarioDraws,
+                                     ScenarioGrid, realize_grid,
                                      realize_scenario, scale_steps)
 from repro.sysmodel.scheduler import (RoundPlan, plan_deadline_run,
                                       plan_sync_round)
@@ -35,11 +36,13 @@ from repro.sysmodel.scheduler import (RoundPlan, plan_deadline_run,
 __all__ = [
     "DeviceFleet", "DeviceProfile", "Event", "EventQueue",
     "PopulationSpec", "RoundCost",
-    "RoundPlan", "ScenarioConfig", "ScenarioDraws", "VirtualClock",
+    "RoundPlan", "ScenarioConfig", "ScenarioDraws", "ScenarioGrid",
+    "VirtualClock",
     "device_latencies", "expected_latencies",
     "fleet_summary", "flops_per_local_step",
     "hash_normal", "hash_u64", "hash_uniform", "heterogeneous_fleet",
     "latency_components",
     "param_bytes", "plan_deadline_run", "plan_sync_round",
-    "realize_scenario", "round_cost_for", "scale_steps", "uniform_fleet",
+    "realize_grid", "realize_scenario", "round_cost_for", "scale_steps",
+    "uniform_fleet",
 ]

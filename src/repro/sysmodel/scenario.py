@@ -169,6 +169,95 @@ def realize(sc: ScenarioConfig, shape: Tuple[int, ...]) -> ScenarioDraws:
 realize_scenario = realize
 
 
+@dataclasses.dataclass(frozen=True)
+class ScenarioGrid:
+    """A batch of scenarios evaluated as ONE compiled program.
+
+    The grid engines stack plan construction over the cells (every
+    realized mask/arrival/corrupt/byte array gains a leading
+    ``S_scenario`` axis) and vmap the shared round steps over that axis,
+    so cell *i* stays bit-for-bit identical to a solo run under
+    ``cells[i]``.  Two structural constraints follow from how the
+    engines select traced programs:
+
+      * every cell must be *active* — a null cell selects the exact
+        pre-scenario program, which is a structurally different trace
+        that cannot share the batched axis; run nulls solo.
+      * cells must agree on ``corrupting`` — the payload-corruption
+        operand is trace-static (``None`` vs a factor array), so a mixed
+        grid would need two programs anyway.
+
+    Cells may freely differ in rates, seeds, completeness and jitter
+    (jitter-free cells ride along under an exact ``×1.0`` latency
+    scale).
+    """
+    cells: Tuple[ScenarioConfig, ...]
+
+    def __post_init__(self):
+        cells = tuple(self.cells)
+        object.__setattr__(self, "cells", cells)
+        if not cells:
+            raise ValueError("ScenarioGrid needs at least one cell")
+        for i, c in enumerate(cells):
+            if not isinstance(c, ScenarioConfig):
+                raise TypeError(f"ScenarioGrid cell {i} must be a "
+                                f"ScenarioConfig, got {type(c).__name__}")
+            if not c.active:
+                raise ValueError(
+                    f"ScenarioGrid cell {i} is a null scenario (every "
+                    "channel off): null scenarios take the structurally "
+                    "different pre-scenario program and cannot share the "
+                    "batched grid — run that cell solo with "
+                    "scenario=None.")
+        if len({c.corrupting for c in cells}) > 1:
+            raise ValueError(
+                "ScenarioGrid mixes corrupting and corruption-free "
+                "cells: the payload-corruption operand is trace-static "
+                "(None vs per-dispatch factors select different "
+                "programs).  Split the grid by `corrupting`.")
+
+    @property
+    def n_cells(self) -> int:
+        return len(self.cells)
+
+    @property
+    def corrupting(self) -> bool:
+        return self.cells[0].corrupting
+
+    def __len__(self) -> int:
+        return len(self.cells)
+
+    def __iter__(self):
+        return iter(self.cells)
+
+    def __getitem__(self, i: int) -> ScenarioConfig:
+        return self.cells[i]
+
+
+def realize_grid(grid: ScenarioGrid, shape: Tuple[int, ...]) -> ScenarioDraws:
+    """Stacked realization: per-cell ``realize`` draws with a leading
+    ``S_scenario`` axis.  Each cell's slice is byte-identical to its solo
+    ``realize(cell, shape)`` (cells are seeded independently, so stacking
+    cannot shift any cell's stream).  Jitter-free cells materialize an
+    all-ones ``lat_scale`` slice when any cell jitters (``×1.0`` is exact
+    in the latency math); ``corrupt`` is uniform across cells by the
+    grid's corrupting constraint."""
+    draws = [realize(c, shape) for c in grid.cells]
+    lat_scale = None
+    if any(d.lat_scale is not None for d in draws):
+        lat_scale = np.stack([
+            d.lat_scale if d.lat_scale is not None else np.ones(shape)
+            for d in draws])
+    corrupt = None
+    if grid.corrupting:
+        corrupt = np.stack([d.corrupt for d in draws])
+    return ScenarioDraws(
+        drop=np.stack([d.drop for d in draws]),
+        lost=np.stack([d.lost for d in draws]),
+        comp=np.stack([d.comp for d in draws]),
+        lat_scale=lat_scale, corrupt=corrupt)
+
+
 def scale_steps(n_steps: np.ndarray, comp: np.ndarray) -> np.ndarray:
     """``ceil(c * n_steps)``, at least one step, dtype-preserving.
     ``comp == 1.0`` dispatches come back exactly unchanged."""

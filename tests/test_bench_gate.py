@@ -61,11 +61,29 @@ def _fleet_scale_section(host_ratio=0.8, ni_ratio=0.95):
     }
 
 
+def _grid_section(grid_speedup=2.0, program_reduction=4.0):
+    def entry():
+        return {"s_cells": 4, "solo_host_seconds": 4.0,
+                "grid_host_seconds": 4.0 / grid_speedup,
+                "grid_first_call_seconds": 3.0,
+                "grid_vs_solo_speedup": grid_speedup}
+    return {
+        "drop_axis": [0.05, 0.15, 0.25, 0.35],
+        "rounds": 40, "n_devices": 30,
+        "n_programs_solo": 8, "n_programs_grid": 2,
+        "program_reduction": program_reduction,
+        "entries": {"sync_folb": entry(), "deadline_folb": entry()},
+    }
+
+
 def _artifact(kernel_ratio=1.0, async_speedup=1.3, sweep_speedup=3.0,
               profile_coverage=0.97, scenario_folb_secs=4.0,
               resilience_guard05=0.88, resilience_noguard05=0.10,
-              fleet_host_ratio=0.8, fleet_ni_ratio=0.95):
+              fleet_host_ratio=0.8, fleet_ni_ratio=0.95,
+              grid_speedup=2.0, grid_program_reduction=4.0):
     return {
+        "scenario_grid": _grid_section(grid_speedup,
+                                       grid_program_reduction),
         "fleet_scale": _fleet_scale_section(fleet_host_ratio,
                                             fleet_ni_ratio),
         "resilience": _resilience_section(guard05=resilience_guard05,
@@ -220,6 +238,67 @@ class TestSweepGate:
         fails = compare(_artifact(), _artifact(async_speedup=0.1),
                         0.15, 0.05, 1.0, min_async_speedup=0.85,
                         min_sweep_speedup=1.2)
+        assert len(fails) == 2 and all("async" in f for f in fails)
+
+
+class TestScenarioGridGate:
+    """--min-scenario-grid-speedup: the batched scenario-grid engine's
+    S-cell-grid vs S-solo-runs host-time ratio per recorded engine
+    entry, plus the >= 2x compiled-program reduction on the committed
+    grid."""
+
+    def test_passes_when_grid_speedup_holds(self):
+        assert compare(_artifact(), _artifact(grid_speedup=1.8),
+                       0.15, 0.05, 1.0,
+                       min_scenario_grid_speedup=1.2) == []
+
+    def test_fails_when_grid_slower_than_solos(self):
+        fails = compare(_artifact(), _artifact(grid_speedup=0.9),
+                        0.15, 0.05, 1.0, min_scenario_grid_speedup=1.2)
+        assert len(fails) == 2   # sync AND deadline entries
+        assert all("grid_vs_solo_speedup" in f for f in fails)
+
+    def test_fails_when_program_reduction_below_two(self):
+        fails = compare(_artifact(),
+                        _artifact(grid_program_reduction=1.5),
+                        0.15, 0.05, 1.0)
+        assert any("fewer compiled programs" in f for f in fails)
+
+    def test_fails_on_missing_grid_section(self):
+        """A current artifact that silently dropped the grid bench (e.g.
+        the suite crashed) must fail, not pass vacuously."""
+        cur = _artifact()
+        del cur["scenario_grid"]
+        fails = compare(_artifact(), cur, 0.15, 0.05, 1.0)
+        assert any("scenario_grid: section missing" in f for f in fails)
+
+    def test_fails_on_missing_grid_entry(self):
+        cur = _artifact()
+        del cur["scenario_grid"]["entries"]["deadline_folb"]
+        fails = compare(_artifact(), cur, 0.15, 0.05, 1.0,
+                        min_scenario_grid_speedup=1.2)
+        assert any("scenario_grid: deadline_folb missing" in f
+                   for f in fails)
+
+    def test_old_baseline_without_grid_is_fine(self):
+        """Pre-grid-engine baselines don't fail the new gate."""
+        base = _artifact()
+        del base["scenario_grid"]
+        cur = _artifact(grid_speedup=0.1, grid_program_reduction=1.0)
+        del cur["scenario_grid"]["program_reduction"]
+        assert compare(base, cur, 0.15, 0.05, 1.0,
+                       min_scenario_grid_speedup=1.2) == []
+
+    def test_fails_on_missing_program_reduction(self):
+        cur = _artifact()
+        del cur["scenario_grid"]["program_reduction"]
+        fails = compare(_artifact(), cur, 0.15, 0.05, 1.0)
+        assert any("program_reduction missing" in f for f in fails)
+
+    def test_other_gates_unaffected_by_grid_section(self):
+        fails = compare(_artifact(), _artifact(async_speedup=0.1),
+                        0.15, 0.05, 1.0, min_async_speedup=0.85,
+                        min_scenario_grid_speedup=1.2)
         assert len(fails) == 2 and all("async" in f for f in fails)
 
 

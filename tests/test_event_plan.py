@@ -264,3 +264,78 @@ class TestMaskedSlotsNeverContribute:
         a, b = np.asarray(new["w"]), np.asarray(params["w"])
         assert (a == b).all()
         assert np.signbit(a[0]) == np.signbit(b[0])   # -0.0 preserved
+
+
+class TestScenarioDigestSensitivity:
+    """Satellite: every scenario knob is hashed plan content.  Mutating
+    any single ScenarioConfig field of a realized plan must change
+    ``plan_digest`` (the failure matrix cannot silently alias cells),
+    while sweepable-hyper mutations never touch the plan at all — the
+    digest is a pure function of (timeline config, scenario, seed)."""
+
+    # every channel active so each field's mutation has realized effect
+    # (completeness_min needs partial_prob > 0, scale_mag needs
+    # scale_prob > 0)
+    BASE = dict(drop_prob=0.2, dropout_prob=0.1, partial_prob=0.5,
+                completeness_min=0.4, jitter_sigma=0.2, nan_prob=0.05,
+                scale_prob=0.1, scale_mag=50.0, flip_prob=0.1, seed=7)
+    MUTATIONS = {"drop_prob": 0.3, "dropout_prob": 0.2, "partial_prob": 0.6,
+                 "completeness_min": 0.7, "jitter_sigma": 0.3,
+                 "nan_prob": 0.1, "scale_prob": 0.2, "scale_mag": 25.0,
+                 "flip_prob": 0.2, "seed": 8}
+
+    def _digest(self, mode, scenario, **cfg_overrides):
+        from repro.fed.async_engine import build_plan, plan_digest
+        from repro.sysmodel import ScenarioConfig
+        fleet = _fleet(1)
+        if mode == "deadline":
+            kw = dict(mode="deadline", algo="folb", n_selected=4, mu=1.0,
+                      deadline=_deadline_for(fleet, 0.6),
+                      staleness_alpha=0.5, seed=0)
+        else:
+            kw = dict(mode="fedbuff", algo="folb", mu=1.0, buffer_size=3,
+                      concurrency=6, staleness_alpha=0.5, seed=0)
+        afl = AsyncFLConfig(**dict(kw, **cfg_overrides))
+        plan = build_plan(afl, fleet, _cost, _sizes, ROUNDS,
+                          jax.random.PRNGKey(afl.seed),
+                          scenario=ScenarioConfig(**scenario))
+        return plan_digest(plan)
+
+    @settings(max_examples=4, deadline=None)
+    @given(st.sampled_from(sorted(MUTATIONS)),
+           st.sampled_from(["deadline", "fedbuff"]))
+    def test_single_field_mutation_changes_digest(self, field, mode):
+        base = self._digest(mode, self.BASE)
+        assert base == self._digest(mode, self.BASE)   # deterministic
+        mutated = dict(self.BASE, **{field: self.MUTATIONS[field]})
+        assert self._digest(mode, mutated) != base, field
+
+    @settings(max_examples=4, deadline=None)
+    @given(st.sampled_from(["lr", "mu", "psi", "staleness_alpha"]),
+           st.floats(0.001, 5.0), st.sampled_from(["deadline", "fedbuff"]))
+    def test_sweepable_hyper_mutation_keeps_digest(self, field, value,
+                                                   mode):
+        base = self._digest(mode, self.BASE)
+        assert self._digest(mode, self.BASE, **{field: value}) == base
+
+    def test_corrupt_array_mutation_changes_digest(self):
+        """The realized per-dispatch corruption factors are hashed
+        content too, not just the config that produced them."""
+        import dataclasses
+
+        from repro.fed.async_engine import build_plan, plan_digest
+        from repro.sysmodel import ScenarioConfig
+        fleet = _fleet(1)
+        afl = AsyncFLConfig(mode="deadline", algo="folb", n_selected=4,
+                            mu=1.0, deadline=_deadline_for(fleet, 0.6),
+                            staleness_alpha=0.5, seed=0)
+        plan = build_plan(afl, fleet, _cost, _sizes, ROUNDS,
+                          jax.random.PRNGKey(afl.seed),
+                          scenario=ScenarioConfig(**self.BASE))
+        corrupt = np.array(plan.corrupt)
+        # mutate a finite factor (the NaN channel's entries stay NaN
+        # under arithmetic, which would leave the bytes unchanged)
+        r, c = np.argwhere(np.isfinite(corrupt))[0]
+        corrupt[r, c] += 1.0
+        assert plan_digest(dataclasses.replace(plan, corrupt=corrupt)) \
+            != plan_digest(plan)

@@ -319,6 +319,23 @@ class TestLazyApiValidation:
             fed.run(MCLR, DATA, fl, rounds=2, fleet=SPEC,
                     scenario=ScenarioConfig(drop_prob=0.1))
 
+    def test_scenario_grid_rejected(self):
+        from repro.sysmodel import ScenarioGrid
+        fl = FLConfig(algo="folb", n_selected=6, sampler="indexed")
+        grid = ScenarioGrid((ScenarioConfig(drop_prob=0.1),))
+        with pytest.raises(ValueError, match="scenario grids"):
+            fed.run(MCLR, DATA, fl, rounds=2, fleet=SPEC, scenario=grid)
+
+    def test_null_scenario_accepted_bit_invisible(self):
+        """A ScenarioConfig with every channel off is normalized away
+        BEFORE the lazy-engine rejection: it must run, and take the
+        exact scenario=None program."""
+        fl = FLConfig(algo="folb", n_selected=6, sampler="indexed")
+        h_none = fed.run(MCLR, DATA, fl, rounds=3, fleet=SPEC)
+        h_null = fed.run(MCLR, DATA, fl, rounds=3, fleet=SPEC,
+                         scenario=ScenarioConfig(seed=42))
+        _assert_runs_equal(h_none, h_null)
+
     def test_sel_probs_rejected(self):
         fl = FLConfig(algo="folb", n_selected=6, sampler="indexed")
         with pytest.raises(ValueError, match="sel_probs"):
